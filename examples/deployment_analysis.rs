@@ -1,0 +1,89 @@
+//! §2.1 / Appendix F deployment analytics: regenerates Table 4, Fig. 2a,
+//! Fig. 2b and the Fig. 21 hardware trends, and demonstrates the packed
+//! ternary CPU kernel realizing the memory-wall speedup on this machine.
+//!
+//!     cargo run --release --example deployment_analysis
+
+use spectra::deploy::{self, SizeFamily};
+use spectra::runtime::HostTensor;
+use spectra::ternary::{matvec_dense, matvec_ternary_packed, Packed2Bit,
+                       TernaryTensor};
+use spectra::Result;
+
+fn main() -> Result<()> {
+    // Table 4 — sizes in bits across the paper's 9-size grid.
+    println!("== Table 4: sizes in bits (x1e9) ==");
+    print!("{:<16}", "family");
+    for row in deploy::PAPER_SUITE.iter() {
+        print!("{:>8}", row.label);
+    }
+    println!();
+    for row in deploy::table4() {
+        print!("{:<16}", row.family);
+        for v in row.sizes_gbits {
+            print!("{v:>8.2}");
+        }
+        println!();
+    }
+
+    // Fig 2a — capacity walls.
+    println!("\n== Fig 2a: capacity walls ==");
+    for (gpu, mem) in [("H100 (80GB)", 80.0), ("MI300X (192GB)", 192.0)] {
+        println!("{gpu}: FloatLM {:.1}B | QuantLM4 {:.1}B | TriLM {:.1}B params",
+                 deploy::max_params_fitting(mem, SizeFamily::Float) / 1e9,
+                 deploy::max_params_fitting(mem,
+                     SizeFamily::Quant { bits: 4, group: 128 }) / 1e9,
+                 deploy::max_params_fitting(mem, SizeFamily::Ternary) / 1e9);
+    }
+
+    // Fig 2b — decode-speedup ceilings.
+    println!("\n== Fig 2b: max decode speedup vs FP16 ==");
+    for params in [1e9, 7e9, 70e9, 1e12] {
+        println!("{:>7.0}B params: QuantLM4 {:.2}x | TriLM {:.2}x",
+                 params / 1e9,
+                 deploy::max_speedup_vs_fp16(params,
+                     SizeFamily::Quant { bits: 4, group: 128 }),
+                 deploy::max_speedup_vs_fp16(params, SizeFamily::Ternary));
+    }
+
+    // Fig 21 — hardware trends.
+    println!("\n== Fig 21: memory & bandwidth per TFLOP trends ==");
+    for fit in deploy::memory_per_tflop_trend() {
+        println!("mem/TFLOP  {:?}: slope {:+.4} GB/TFLOP/yr", fit.vendor,
+                 fit.slope);
+    }
+    for fit in deploy::bandwidth_per_tflop_trend() {
+        println!("bw/TFLOP   {:?}: slope {:+.4} (GB/s)/TFLOP/yr", fit.vendor,
+                 fit.slope);
+    }
+
+    // Realized speedup on this machine: memory-bound matvec, f32 vs 2-bit.
+    println!("\n== §2.1 realized on this CPU: ternary matvec vs dense f32 ==");
+    let (rows, cols) = (1024, 1024);
+    let w = HostTensor::randn(vec![rows, cols], 0.05, 1);
+    let t = TernaryTensor::from_latent(&w, 1);
+    let packed = Packed2Bit::pack(&t.states);
+    let x = HostTensor::randn(vec![1, cols], 1.0, 2).data;
+    let dense_w = t.dequant();
+
+    let time = |f: &mut dyn FnMut()| {
+        let reps = 50;
+        f(); // warm
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    let td = time(&mut || {
+        std::hint::black_box(matvec_dense(&dense_w, &x));
+    });
+    let tt = time(&mut || {
+        std::hint::black_box(matvec_ternary_packed(&packed, rows, cols,
+                                                   &t.scales, &x));
+    });
+    println!("dense f32: {:.1} us | packed ternary: {:.1} us | speedup {:.2}x \
+              (bytes ratio 16x; see benches/ternary_matmul.rs)",
+             td * 1e6, tt * 1e6, td / tt);
+    Ok(())
+}

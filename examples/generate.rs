@@ -1,0 +1,55 @@
+//! Appendix-H-style completion demo: greedy decoding from a trained
+//! checkpoint through the AOT `next_logits` graph — the pure-Rust
+//! inference request path.
+//!
+//!     cargo run --release --example generate -- \
+//!         --checkpoint runs/main/930k_ternary.spt --prompt "one day"
+
+use std::path::PathBuf;
+
+use spectra::checkpoint::Checkpoint;
+use spectra::data::Dataset;
+use spectra::runtime::{self, Runtime};
+use spectra::util::args::Args;
+use spectra::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rt = Runtime::new(args.get("artifacts", "artifacts"))?;
+    let ck_path = args.get("checkpoint", "runs/main/930k_ternary.spt");
+    let ck = Checkpoint::load(&PathBuf::from(&ck_path))?;
+    let model = ck.metadata.get("model")
+        .ok_or_else(|| anyhow::anyhow!("checkpoint missing 'model' meta"))?;
+    let data = Dataset::build(&PathBuf::from("runs/data"), 400_000, 0)?;
+
+    let graph = rt.load_graph(model, "next_logits")?;
+    let seq = rt.manifest().seq;
+    let lits: Vec<xla::Literal> = ck.tensor_list().iter()
+        .map(runtime::literal_from_tensor)
+        .collect::<Result<_>>()?;
+
+    for prompt in [args.get("prompt", "one day"),
+                   "the capital of".to_string(),
+                   "if it rains , then".to_string()] {
+        let mut tokens: Vec<i32> = data.bpe.encode(&prompt).iter()
+            .map(|&t| t as i32).collect();
+        for _ in 0..args.get_usize("max-tokens", 24) {
+            let mut window = vec![0i32; seq];
+            let tail = tokens.len().min(seq);
+            window[seq - tail..].copy_from_slice(&tokens[tokens.len() - tail..]);
+            let toks = runtime::literal_i32(&[1, seq], &window)?;
+            let mut gargs: Vec<&xla::Literal> = lits.iter().collect();
+            gargs.push(&toks);
+            let outs = graph.run(&gargs)?;
+            let logits = runtime::tensor_from_literal(&outs[0])?;
+            let next = logits.data.iter().enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32).unwrap();
+            tokens.push(next);
+        }
+        let text = data.bpe.decode(
+            &tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
+        println!("PROMPT: {prompt}\nOUTPUT: {text}\n");
+    }
+    Ok(())
+}

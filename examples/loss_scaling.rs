@@ -1,0 +1,74 @@
+//! Table 5 reproduction: FP16 mixed-precision dynamic loss scaling —
+//! min loss-scale reached and batches skipped per model/family, using
+//! the fp16-gradient train graphs plus the Rust loss-scale state machine.
+//!
+//!     cargo run --release --example loss_scaling -- --steps 120
+
+use std::path::PathBuf;
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::Trainer;
+use spectra::data::{Batcher, Dataset};
+use spectra::runtime::Runtime;
+use spectra::util::args::Args;
+use spectra::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rt = Runtime::new(args.get("artifacts", "artifacts"))?;
+    let steps = args.get_usize("steps", 120);
+    let data = Dataset::build(&PathBuf::from("runs/data"), 1_000_000, 0)?;
+
+    println!("{:<16} {:>10} {:>15} {:>16} {:>12}",
+             "model", "final", "min loss-scale", "skipped batches",
+             "floor >=128");
+    // fp16 graphs exist at the FP16_SIZES study sizes (aot.py).
+    for size in ["160k", "430k", "930k"] {
+        for family in [Family::Float, Family::Ternary] {
+            let model = format!("{size}_{}", family.as_str());
+            let cfg = TrainConfig {
+                fp16: true,
+                ..TrainConfig::for_family(family, steps)
+            };
+            let mut trainer = Trainer::new(&rt, &model, cfg)?;
+            let mut batcher = Batcher::new(data.train.clone(),
+                                           rt.manifest().train_batch,
+                                           rt.manifest().seq, 0);
+            trainer.train(&mut batcher, steps, |_| {})?;
+            println!("{:<16} {:>10.4} {:>15} {:>16} {:>12}",
+                     model, trainer.log.final_loss(15),
+                     trainer.loss_scale.min_seen, trainer.loss_scale.skipped,
+                     trainer.loss_scale.above_recommended_floor());
+        }
+    }
+    // At repro scale the gradients are small enough that 65536 never
+    // overflows f16 (the paper's V100 runs at 99M+ params did overflow —
+    // Table 5's min scales of 128-2048). To exercise the mechanism,
+    // start from an absurd scale and watch the state machine walk down
+    // and recover — the exact halve-and-skip dynamics behind Table 5.
+    println!("\n== overflow-recovery demo (Table 5 mechanism) ==");
+    let model = "160k_float";
+    let cfg = TrainConfig { fp16: true,
+                            ..TrainConfig::for_family(Family::Float, 40) };
+    let mut trainer = Trainer::new(&rt, model, cfg)?;
+    trainer.loss_scale.scale = 2f32.powi(30);
+    trainer.loss_scale.max_scale = 2f32.powi(30);
+    trainer.loss_scale.min_seen = trainer.loss_scale.scale;
+    let mut batcher = Batcher::new(data.train.clone(),
+                                   rt.manifest().train_batch,
+                                   rt.manifest().seq, 0);
+    for _ in 0..40 {
+        let m = trainer.step(&batcher.next_batch())?;
+        if !m.grads_finite {
+            println!("  step {:2}: OVERFLOW at scale 2^{:.0} -> batch \
+                      skipped, scale halved", m.step, m.loss_scale.log2());
+        }
+    }
+    println!("  skipped {} batches; settled at scale {} (min seen {})",
+             trainer.loss_scale.skipped, trainer.loss_scale.scale,
+             trainer.loss_scale.min_seen);
+    println!("\nTable 5's mechanism: scaled grads round-trip through f16 in \
+              the train graph; overflow -> step skipped, scale halved; \
+              200 clean steps -> scale doubled.");
+    Ok(())
+}

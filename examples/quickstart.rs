@@ -1,0 +1,59 @@
+//! Quickstart: train a tiny TriLM from Rust via the AOT-compiled JAX
+//! graphs, watch the loss fall, evaluate it, and ternarize it for
+//! deployment.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::Trainer;
+use spectra::data::{Batcher, Dataset};
+use spectra::eval::Evaluator;
+use spectra::runtime::Runtime;
+use spectra::ternary::TernaryTensor;
+use spectra::Result;
+
+fn main() -> Result<()> {
+    // 1. PJRT runtime over the artifacts directory (python ran once, at
+    //    `make artifacts`; it is not involved from here on).
+    let rt = Runtime::new("artifacts")?;
+    println!("platform: {}", rt.platform());
+
+    // 2. Synthetic corpus + BPE tokenizer (cached under runs/data).
+    let data = Dataset::build(std::path::Path::new("runs/data"), 400_000, 0)?;
+    println!("corpus: {} train tokens, vocab {}", data.train.len(),
+             data.bpe.vocab_size());
+
+    // 3. Train the smallest TriLM for 60 steps with the paper's
+    //    two-intervention schedule.
+    let model = "160k_ternary";
+    let cfg = TrainConfig::for_family(Family::Ternary, 60);
+    let mut trainer = Trainer::new(&rt, model, cfg)?;
+    let mut batcher = Batcher::new(data.train.clone(),
+                                   rt.manifest().train_batch,
+                                   rt.manifest().seq, 0);
+    trainer.train(&mut batcher, 60, |m| {
+        if m.step % 10 == 0 {
+            println!("step {:3}  loss {:.4}  lr {:.2e}", m.step, m.loss, m.lr);
+        }
+    })?;
+
+    // 4. Evaluate perplexity on the held-out tail.
+    let ev = Evaluator::new(&rt, model)?;
+    let nll = ev.nll(trainer.param_literals(), &data.val)?;
+    println!("validation nll {nll:.4} (ppl {:.2})", nll.exp());
+
+    // 5. Ternarize a trained linear layer for deployment: states +
+    //    per-shard scales, 2-bit packed.
+    let params = trainer.params()?;
+    let entry = rt.manifest().model(model)?;
+    let (idx, spec) = entry.params.iter().enumerate()
+        .find(|(_, p)| p.name == "l0.attn_q").unwrap();
+    let t = TernaryTensor::from_latent(&params[idx], entry.config.mp);
+    let packed = spectra::ternary::Packed2Bit::pack(&t.states);
+    println!("{}: {:?} -> {} packed bytes ({:.2} bits/weight), \
+              sparsity {:.1}%",
+             spec.name, spec.shape, packed.bytes.len(),
+             packed.bits_per_weight(), 100.0 * t.sparsity());
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Fig. 6 / Tables 10-11 reproduction: the TriLM optimization-schedule
+//! ablation — both interventions vs only-peak-LR vs only-L2-removal vs
+//! the vanilla baseline — plus (--bitnet) the §A.6 architecture
+//! comparison TriLM vs BitNet vs FloatLM at a fixed size.
+//!
+//!     cargo run --release --example schedule_ablation -- --steps 150
+
+use std::path::PathBuf;
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::{ScheduleVariant, Trainer};
+use spectra::data::{Batcher, Dataset};
+use spectra::eval::Evaluator;
+use spectra::runtime::Runtime;
+use spectra::util::args::Args;
+use spectra::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rt = Runtime::new(args.get("artifacts", "artifacts"))?;
+    let steps = args.get_usize("steps", 150);
+    let size = args.get("size", "430k");
+    let data = Dataset::build(&PathBuf::from("runs/data"), 1_000_000, 0)?;
+    let out_dir = PathBuf::from("runs").join(args.get("tag", "ablation"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    println!("== Fig 6 analog: TriLM {size}, {steps} steps, 4 schedules ==");
+    let mut finals = Vec::new();
+    for variant in ScheduleVariant::ALL {
+        let cfg = variant.apply(TrainConfig::for_family(Family::Ternary, steps));
+        let model = format!("{size}_ternary");
+        let mut trainer = Trainer::new(&rt, &model, cfg)?;
+        let mut batcher = Batcher::new(data.train.clone(),
+                                       rt.manifest().train_batch,
+                                       rt.manifest().seq, 0);
+        trainer.train(&mut batcher, steps, |_| {})?;
+        let final_loss = trainer.log.final_loss(15);
+        trainer.log.write_csv(&out_dir.join(
+            format!("schedule_{}.csv", variant.as_str())))?;
+        println!("  {:<16} final train loss {:.4}", variant.as_str(), final_loss);
+        finals.push((variant, final_loss));
+    }
+    // Paper ordering: both <= only-L2 <= only-peak <= baseline (roughly).
+    let get = |v: ScheduleVariant| finals.iter().find(|(x, _)| *x == v)
+        .unwrap().1;
+    println!("\n  ordering check (paper: both best, baseline worst):");
+    println!("    both {:.4} | only_l2 {:.4} | only_peak {:.4} | baseline {:.4}",
+             get(ScheduleVariant::Both), get(ScheduleVariant::OnlyWdRemoval),
+             get(ScheduleVariant::OnlyPeakLrDrop), get(ScheduleVariant::Baseline));
+
+    if args.has("bitnet") {
+        println!("\n== Fig 14 / §A.6 analog: architecture comparison @930k ==");
+        for family in [Family::Ternary, Family::Float, Family::Bitnet] {
+            let model = format!("930k_{}", family.as_str());
+            let cfg = TrainConfig::for_family(family, steps);
+            let mut trainer = Trainer::new(&rt, &model, cfg)?;
+            let mut batcher = Batcher::new(data.train.clone(),
+                                           rt.manifest().train_batch,
+                                           rt.manifest().seq, 0);
+            trainer.train(&mut batcher, steps, |_| {})?;
+            let ev = Evaluator::new(&rt, &model)?;
+            let nll = ev.nll(trainer.param_literals(), &data.val)?;
+            println!("  {:<14} final train {:.4}  val nll {:.4}",
+                     family.as_str(), trainer.log.final_loss(15), nll);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + manifest.json.
+
+This is the only place Python touches the model after development: every
+graph the Rust coordinator needs is lowered here once (`make artifacts`)
+and executed from Rust via PJRT forever after.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Build plan (mirrors the paper's suite scope):
+  - FloatLM + TriLM at every suite size (train, eval, next_logits)
+  - BiLM at three sizes (App. B trains three BiLMs)
+  - BitNet replication at one size (§A.6 replicates one BitNet)
+  - fp16-grad train variants for the loss-scaling study (Table 5)
+  - activation-capture graphs for FloatLM (GPTQ calibration, §4.2)
+
+Calling convention (shared with rust/src/runtime/manifest.rs): inputs
+and outputs are flat lists of arrays; parameter order is
+model.param_specs order. The manifest records every graph's file name,
+input/output specs, and the model config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TRAIN_BATCH = 8
+EVAL_BATCH = 8
+CAPTURE_BATCH = 4
+
+# Paper scope mapping: which families get which sizes.
+BINARY_SIZES = ("160k", "930k", "6.7m")
+BITNET_SIZES = ("930k",)
+FP16_SIZES = ("160k", "430k", "930k")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _params_as_list(cfg):
+    """abstract args for lowering, in param_specs order."""
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_specs(cfg)]
+
+
+def _dict_from_list(cfg, flat):
+    names = [n for n, _ in M.param_specs(cfg)]
+    return dict(zip(names, flat))
+
+
+def _list_from_dict(cfg, d):
+    return [d[n] for n, _ in M.param_specs(cfg)]
+
+
+def lower_train(cfg, batch, fp16_grads):
+    P = len(M.param_specs(cfg))
+
+    def fn(*args):
+        params = _dict_from_list(cfg, args[:P])
+        m = _dict_from_list(cfg, args[P:2 * P])
+        v = _dict_from_list(cfg, args[2 * P:3 * P])
+        step, tokens, lr, wd, loss_scale = args[3 * P:]
+        p2, m2, v2, step2, loss, gnorm, finite = M.train_step(
+            cfg, fp16_grads, params, m, v, step, tokens, lr, wd, loss_scale)
+        return tuple(_list_from_dict(cfg, p2) + _list_from_dict(cfg, m2)
+                     + _list_from_dict(cfg, v2) + [step2, loss, gnorm, finite])
+
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+    toks = jax.ShapeDtypeStruct((batch, cfg.seq + 1), jnp.int32)
+    args = (_params_as_list(cfg) * 3) + [scal, toks, scal, scal, scal]
+    return jax.jit(fn, keep_unused=True).lower(*args)
+
+
+def lower_eval(cfg, batch):
+    def fn(*args):
+        params = _dict_from_list(cfg, args[:-1])
+        return (M.token_logprobs(cfg, params, args[-1]),)
+
+    toks = jax.ShapeDtypeStruct((batch, cfg.seq + 1), jnp.int32)
+    return jax.jit(fn, keep_unused=True).lower(*(_params_as_list(cfg) + [toks]))
+
+
+def lower_next_logits(cfg, batch):
+    def fn(*args):
+        params = _dict_from_list(cfg, args[:-1])
+        logits = M.forward(cfg, params, args[-1])
+        return (logits[:, -1, :],)
+
+    toks = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    return jax.jit(fn, keep_unused=True).lower(*(_params_as_list(cfg) + [toks]))
+
+
+def lower_capture(cfg, batch):
+    def fn(*args):
+        params = _dict_from_list(cfg, args[:-1])
+        return M.capture_linear_inputs(cfg, params, args[-1])
+
+    toks = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    return jax.jit(fn, keep_unused=True).lower(*(_params_as_list(cfg) + [toks]))
+
+
+def build_plan(sizes, families):
+    """(size, family, graph, lower_fn) entries for the artifact build."""
+    plan = []
+    for size in sizes:
+        for family in families:
+            if family == "binary" and size not in BINARY_SIZES:
+                continue
+            if family == "bitnet" and size not in BITNET_SIZES:
+                continue
+            cfg = M.suite_config(size, family)
+            plan.append((cfg, "train",
+                         lambda c=cfg: lower_train(c, TRAIN_BATCH, False)))
+            plan.append((cfg, "eval",
+                         lambda c=cfg: lower_eval(c, EVAL_BATCH)))
+            plan.append((cfg, "next_logits",
+                         lambda c=cfg: lower_next_logits(c, 1)))
+            if family in ("float", "ternary") and size in FP16_SIZES:
+                plan.append((cfg, "train_fp16",
+                             lambda c=cfg: lower_train(c, TRAIN_BATCH, True)))
+            if family == "float":
+                plan.append((cfg, "capture",
+                             lambda c=cfg: lower_capture(c, CAPTURE_BATCH)))
+    return plan
+
+
+def graph_io_spec(cfg, graph):
+    """Input/output array specs for the manifest (rust sanity checks)."""
+    P = len(M.param_specs(cfg))
+    pspecs = [_spec(s) for _, s in M.param_specs(cfg)]
+    scal = _spec(())
+    if graph in ("train", "train_fp16"):
+        toks = _spec((TRAIN_BATCH, cfg.seq + 1), "s32")
+        return (pspecs * 3 + [scal, toks, scal, scal, scal],
+                pspecs * 3 + [scal, scal, scal, scal])
+    if graph == "eval":
+        toks = _spec((EVAL_BATCH, cfg.seq + 1), "s32")
+        return (pspecs + [toks], [_spec((EVAL_BATCH, cfg.seq))])
+    if graph == "next_logits":
+        toks = _spec((1, cfg.seq), "s32")
+        return (pspecs + [toks], [_spec((1, cfg.vocab))])
+    if graph == "capture":
+        toks = _spec((CAPTURE_BATCH, cfg.seq), "s32")
+        rows = CAPTURE_BATCH * cfg.seq
+        outs = []
+        for _ in range(cfg.layers):
+            outs += [_spec((rows, cfg.hidden)), _spec((rows, cfg.hidden)),
+                     _spec((rows, cfg.hidden)), _spec((rows, cfg.glu))]
+        return (pspecs + [toks], outs)
+    raise ValueError(graph)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(M.SUITE))
+    ap.add_argument("--families", default="float,ternary,binary,bitnet")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = [s for s in args.sizes.split(",") if s]
+    families = [f for f in args.families.split(",") if f]
+
+    manifest = {
+        "seq": 128,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "capture_batch": CAPTURE_BATCH,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "models": {},
+    }
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            manifest["models"] = json.load(f).get("models", {})
+
+    plan = build_plan(sizes, families)
+    t_all = time.time()
+    for cfg, graph, lower in plan:
+        key = cfg.name
+        entry = manifest["models"].setdefault(key, {
+            "size": key.split("_")[0],
+            "family": cfg.family,
+            "config": {k: getattr(cfg, k) for k in
+                       ("vocab", "hidden", "glu", "heads", "layers",
+                        "seq", "mp", "family")},
+            "n_params": M.n_params(cfg),
+            "params": [{"name": n, "shape": list(s)}
+                       for n, s in M.param_specs(cfg)],
+            "graphs": {},
+        })
+        fname = f"{key}_{graph}.hlo.txt"
+        fpath = os.path.join(args.out_dir, fname)
+        if os.path.exists(fpath) and graph in entry["graphs"] and not args.force:
+            continue
+        t0 = time.time()
+        text = to_hlo_text(lower())
+        with open(fpath, "w") as f:
+            f.write(text)
+        ins, outs = graph_io_spec(cfg, graph)
+        entry["graphs"][graph] = {"file": fname, "inputs": ins, "outputs": outs}
+        print(f"lowered {key}/{graph}: {len(text) / 1e6:.1f} MB "
+              f"in {time.time() - t0:.1f}s", flush=True)
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts complete in {time.time() - t_all:.1f}s "
+          f"({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

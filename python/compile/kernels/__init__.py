@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the Spectra quantized-linear hot-spots.
+
+- ternary:  TriLM on-the-fly ternarization matmul (+ inference variant)
+- binary:   BiLM centered-sign matmul
+- bitnet:   BitNet b1.58 fused norm + act-quant + ternary matmul
+- qlinear:  QuantLM k-bit group-dequant matmul
+- ref:      pure-jnp oracles for all of the above
+"""
+
+from . import binary, bitnet, qlinear, ref, ternary, tiling  # noqa: F401

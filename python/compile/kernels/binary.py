@@ -1,0 +1,87 @@
+"""Pallas kernel for the BiLM binary linear layer (Appendix A.1 / B).
+
+Binarization is centered-sign with a per-shard absmean scale of the
+*centered* weights (see ref.py for the Table 1 typo note):
+
+    mu    = mean(W_shard)
+    alpha = eps + mean(|W_shard - mu|)
+    W~    = alpha * sign(W - mu)
+
+Like the ternary kernel, the per-shard statistics (mu, alpha) are tiny
+global reductions computed outside the kernel and passed in as per-row
+vectors so no block crosses a shard boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _binary_mm_kernel(x_ref, w_ref, mu_ref, a_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    centered = w_ref[...] - mu_ref[...]
+    w_b = jnp.where(centered >= 0, 1.0, -1.0) * a_ref[...]
+    o_ref[...] += jnp.dot(x_ref[...], w_b.T, preferred_element_type=jnp.float32)
+
+
+def binary_stats(w: jnp.ndarray, mp: int):
+    """Per-row (N,1) mu and alpha vectors from per-shard stats."""
+    n = w.shape[0]
+    shards = w.reshape(mp, n // mp, w.shape[1])
+    mu = jnp.mean(shards, axis=(1, 2))
+    alpha = 1e-5 + jnp.mean(jnp.abs(shards - mu[:, None, None]), axis=(1, 2))
+    rep = n // mp
+    return (jnp.repeat(mu, rep)[:, None], jnp.repeat(alpha, rep)[:, None])
+
+
+def binary_matmul(x: jnp.ndarray, w: jnp.ndarray, mu_rows: jnp.ndarray,
+                  a_rows: jnp.ndarray) -> jnp.ndarray:
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2
+    bm, bn, bk = tiling.pick_blocks(m, n, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _binary_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, 1), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, mu_rows, a_rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def binary_linear(x: jnp.ndarray, w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    """BiLM linear with STE gradients."""
+    mu, a = binary_stats(w, mp)
+    return binary_matmul(x, w, mu, a)
+
+
+def _binary_linear_fwd(x, w, mp):
+    mu, a = binary_stats(w, mp)
+    y = binary_matmul(x, w, mu, a)
+    w_b = jnp.where(w - mu >= 0, 1.0, -1.0) * a
+    return y, (x, w_b)
+
+
+def _binary_linear_bwd(mp, res, dy):
+    x, w_b = res
+    return dy @ w_b, dy.T @ x
+
+
+binary_linear.defvjp(_binary_linear_fwd, _binary_linear_bwd)

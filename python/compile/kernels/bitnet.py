@@ -1,0 +1,86 @@
+"""Pallas kernel for the BitNet-b1.58-style linear layer (§A.6).
+
+BitNet differs from TriLM by (1) a parameterless RMSNorm immediately
+before every linear, and (2) per-token 8-bit absmax quantization of the
+input activations.  Both happen in-kernel on the activation tile: the
+per-token statistics (rms, absmax) need the full K extent, so this
+kernel requires bk == K (a single K block). Our model hidden sizes are
+well within a VMEM tile, matching BitNet's own fused-kernel constraint.
+
+Weights are ternarized on the fly exactly as in the TriLM kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+from .ternary import gamma_rows
+
+_EPS = 1e-5
+_QMAX = 127.0
+
+
+def _bitnet_mm_kernel(x_ref, w_ref, g_ref, o_ref):
+    x = x_ref[...]
+    # Parameterless RMSNorm over the (full-K) activation tile.
+    x = x * (1.0 / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + _EPS))
+    # 8-bit per-token absmax fake-quant.
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True) / _QMAX, _EPS)
+    x = jnp.round(jnp.clip(x / s, -_QMAX, _QMAX)) * s
+    # Ternarize the weight tile and contract.
+    g = g_ref[...]
+    w_t = jnp.round(jnp.clip(w_ref[...] / g, -1.0, 1.0)) * g
+    o_ref[...] = jnp.dot(x, w_t.T, preferred_element_type=jnp.float32)
+
+
+def bitnet_matmul(x: jnp.ndarray, w: jnp.ndarray, g_rows: jnp.ndarray) -> jnp.ndarray:
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2
+    bm = tiling.largest_divisor(m, tiling.DEFAULT_BM)
+    bn = tiling.largest_divisor(n, tiling.DEFAULT_BN)
+    grid = (m // bm, n // bn)  # full-K blocks: per-token stats need all of K
+    return pl.pallas_call(
+        _bitnet_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, g_rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def bitnet_linear(x: jnp.ndarray, w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    """BitNet b1.58 linear with STE through both quantizers."""
+    return bitnet_matmul(x, w, gamma_rows(w, mp))
+
+
+def _bitnet_fwd(x, w, mp):
+    g = gamma_rows(w, mp)
+    y = bitnet_matmul(x, w, g)
+    # STE saves the normalized/quantized activations and dequantized
+    # weights; the activation quant + norm gradient is passed through
+    # (BitNet trains exactly this way).
+    w_t = jnp.round(jnp.clip(w / g, -1.0, 1.0)) * g
+    xn = x * (1.0 / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + _EPS))
+    s = jnp.maximum(jnp.max(jnp.abs(xn), axis=-1, keepdims=True) / _QMAX, _EPS)
+    xq = jnp.round(jnp.clip(xn / s, -_QMAX, _QMAX)) * s
+    return y, (xq, w_t)
+
+
+def _bitnet_bwd(mp, res, dy):
+    xq, w_t = res
+    return dy @ w_t, dy.T @ xq
+
+
+bitnet_linear.defvjp(_bitnet_fwd, _bitnet_bwd)

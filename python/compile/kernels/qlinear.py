@@ -1,0 +1,63 @@
+"""Pallas kernel for the QuantLM k-bit group-dequant matmul (§4.2).
+
+GPTQ stores each weight row as signed k-bit integers with one FP scale
+per group of 128 input channels (symmetric, no zero offset — matching
+the paper's Marlin-compatible format). The inference hot-spot is
+dequantize-then-contract; the kernel stages the int tile and its scales
+in VMEM, dequantizes there, and issues MXU-shaped dots.
+
+K blocks are chosen as multiples of the group size so a block never
+splits a quantization group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _qmm_kernel(group: int, x_ref, q_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bn, bk = q_ref.shape
+    ng = bk // group
+    # (bn, ng, group) * (bn, ng, 1) -> dequantized (bn, bk)
+    w = (q_ref[...].astype(jnp.float32).reshape(bn, ng, group)
+         * s_ref[...][..., None]).reshape(bn, bk)
+    o_ref[...] += jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+
+
+def quant_matmul(x: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray,
+                 group: int = 128) -> jnp.ndarray:
+    """y = x @ dequant(q, scales).T
+
+    x: (M, K) f32; q: (N, K) int8 (k-bit values); scales: (N, K//group) f32.
+    """
+    m, k = x.shape
+    n, k2 = q.shape
+    group = min(group, k)
+    assert k == k2 and k % group == 0
+    bm = tiling.largest_divisor(m, tiling.DEFAULT_BM)
+    bn = tiling.largest_divisor(n, tiling.DEFAULT_BN)
+    # K blocks aligned to group boundaries.
+    kg = k // group
+    bkg = tiling.largest_divisor(kg, max(1, tiling.DEFAULT_BK // group))
+    bk = bkg * group
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        lambda *refs: _qmm_kernel(group, *refs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bkg), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, q, scales)

@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for the quantized linear layers (Table 1 of the paper).
+
+These are the correctness references the Pallas kernels are tested
+against (python/tests/test_kernels.py). They implement the forward-pass
+equations of Table 1 for TriLM, BiLM and the k-bit group-quantized
+QuantLM dequant path, plus BitNet b1.58's activation quantization.
+
+Notational note: Table 1 prints the TriLM scale as
+``gamma = eps + mean(W)`` and the BiLM scale as ``alpha = mean(W)``;
+both are typos for the *absolute* mean (the text of §3.1 says "the
+scale value to the absolute mean of the latent weights", matching
+BitNet b1.58). We implement the absmean forms.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# TriLM (ternary) — §3.1 / Table 1
+# ---------------------------------------------------------------------------
+
+def ternary_scales(w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    """Per-model-parallel-shard absmean scales, shape (mp,).
+
+    ``w`` is (out_features, in_features).  Megatron-style column
+    parallelism shards the output dimension across ``mp`` devices; each
+    device computes its own scale over its local shard (§A.5), which is
+    what introduces the "mp scalar values per matrix" artifact.
+    """
+    out = w.shape[0]
+    assert out % mp == 0, f"out={out} not divisible by mp={mp}"
+    shards = w.reshape(mp, out // mp, w.shape[1])
+    return EPS + jnp.mean(jnp.abs(shards), axis=(1, 2))
+
+
+def ternarize(w: jnp.ndarray, mp: int = 1):
+    """Round latent weights to {-1, 0, +1} per shard. Returns (w_hat, gamma).
+
+    w_hat has the same shape as w with values in {-1, 0, 1};
+    gamma has shape (mp,).
+    """
+    gamma = ternary_scales(w, mp)
+    g = jnp.repeat(gamma, w.shape[0] // mp)[:, None]
+    w_hat = jnp.round(jnp.clip(w / g, -1.0, 1.0))
+    return w_hat, gamma
+
+
+def ternary_dequant(w_hat: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """W~ = gamma * w_hat with per-shard gamma broadcast over rows."""
+    g = jnp.repeat(gamma, w_hat.shape[0] // gamma.shape[0])[:, None]
+    return g * w_hat
+
+
+def ternary_linear(x: jnp.ndarray, w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    """Forward pass: Y = X @ W~^T with on-the-fly ternarization."""
+    w_hat, gamma = ternarize(w, mp)
+    return x @ ternary_dequant(w_hat, gamma).T
+
+
+# ---------------------------------------------------------------------------
+# BiLM (binary) — Appendix A.1 / B
+# ---------------------------------------------------------------------------
+
+def binarize(w: jnp.ndarray, mp: int = 1):
+    """Centered sign binarization with per-shard absmean scale.
+
+    alpha is the absmean of the centered shard (BitNet's binarization;
+    see the module docstring for the Table 1 typo).
+    Returns (w_hat in {-1, +1}, alpha shape (mp,)).
+    """
+    out = w.shape[0]
+    shards = w.reshape(mp, out // mp, w.shape[1])
+    mean = jnp.mean(shards, axis=(1, 2), keepdims=True)
+    centered = shards - mean
+    alpha = EPS + jnp.mean(jnp.abs(centered), axis=(1, 2))
+    w_hat = jnp.where(centered >= 0, 1.0, -1.0).reshape(w.shape)
+    return w_hat, alpha
+
+
+def binary_linear(x: jnp.ndarray, w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    w_hat, alpha = binarize(w, mp)
+    a = jnp.repeat(alpha, w.shape[0] // mp)[:, None]
+    return x @ (a * w_hat).T
+
+
+# ---------------------------------------------------------------------------
+# BitNet b1.58-style activation quantization (§A.6)
+# ---------------------------------------------------------------------------
+
+def absmax_quant_act(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Per-token absmax activation quantization to ``bits`` (dequantized).
+
+    BitNet quantizes the input activations of every linear to 8 bits
+    with a per-token absmax scale; this returns the fake-quantized
+    (quantize->dequantize) activations used in the forward pass.
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, EPS)
+    return jnp.round(jnp.clip(x / scale, -qmax, qmax)) * scale
+
+
+def parameterless_rmsnorm(x: jnp.ndarray) -> jnp.ndarray:
+    """BitNet's scale-free RMSNorm applied before each linear."""
+    return x * (1.0 / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS))
+
+
+def bitnet_linear(x: jnp.ndarray, w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    """BitNet b1.58 linear: norm + 8-bit act quant + ternary weights."""
+    xq = absmax_quant_act(parameterless_rmsnorm(x))
+    return ternary_linear(xq, w, mp)
+
+
+# ---------------------------------------------------------------------------
+# QuantLM k-bit symmetric group quantization (GPTQ storage format, §4.2)
+# ---------------------------------------------------------------------------
+
+def group_quant(w: jnp.ndarray, bits: int, group: int = 128):
+    """Symmetric (no zero offset) per-group quantization of rows.
+
+    Rows of ``w`` (out, in) are split into groups of ``group`` input
+    channels; each group gets an absmax scale mapping to the signed
+    ``bits``-bit integer grid. Returns (q int32, scales (out, n_groups)).
+    """
+    out, k = w.shape
+    group = min(group, k)
+    assert k % group == 0, f"in_features={k} not divisible by group={group}"
+    ng = k // group
+    wg = w.reshape(out, ng, group)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scales = jnp.max(jnp.abs(wg), axis=-1) / qmax
+    scales = jnp.maximum(scales, EPS)
+    q = jnp.round(jnp.clip(wg / scales[..., None], -qmax, qmax)).astype(jnp.int32)
+    return q, scales
+
+
+def group_dequant(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    out, ng, group = q.shape
+    return (q.astype(jnp.float32) * scales[..., None]).reshape(out, ng * group)
+
+
+def quant_linear(x: jnp.ndarray, q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Forward with dequantized k-bit weights: Y = X @ dequant(q)^T."""
+    return x @ group_dequant(q, scales).T

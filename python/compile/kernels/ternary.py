@@ -1,0 +1,130 @@
+"""Pallas kernels for the TriLM ternary linear layer (§3.1, Table 1).
+
+Two kernels:
+
+- :func:`ternary_matmul` — the *training* forward hot-spot: ternarize the
+  latent FP weights on the fly (round(clip(w/gamma, -1, 1)) * gamma, with
+  per-model-parallel-shard gamma) and contract against the activations.
+- :func:`ternary_matmul_infer` — the *inference* hot-spot: weights arrive
+  already ternarized as {-1,0,+1} (stored packed on the Rust side and
+  unpacked to int8 for execution); the kernel dequantizes in VMEM and
+  contracts.
+
+The scale reduction itself (absmean over each shard) is a tiny global
+reduce and is computed outside the kernel (see ref.ternary_scales); the
+kernels take a per-row gamma vector so the shard boundaries never cross a
+block.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+mental model (threadblock owns an output tile, streams K) is expressed
+here as a (M/bm, N/bn, K/bk) grid whose BlockSpecs stage HBM->VMEM tiles,
+with the contraction issued as an MXU-shaped `jnp.dot` in f32.
+
+All pallas_calls use interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO so the same graph
+runs under the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _ternary_mm_kernel(x_ref, w_ref, g_ref, o_ref):
+    """Grid step: o[bm,bn] += x[bm,bk] @ ternarize(w[bn,bk]).T ."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]                                # (bn, 1) per-row scale
+    w = w_ref[...]                                # (bn, bk) latent weights
+    w_t = jnp.round(jnp.clip(w / g, -1.0, 1.0)) * g
+    o_ref[...] += jnp.dot(x_ref[...], w_t.T, preferred_element_type=jnp.float32)
+
+
+def _infer_mm_kernel(x_ref, q_ref, g_ref, o_ref):
+    """Grid step with pre-ternarized int8 weights: dequant in VMEM."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_t = q_ref[...].astype(jnp.float32) * g_ref[...]
+    o_ref[...] += jnp.dot(x_ref[...], w_t.T, preferred_element_type=jnp.float32)
+
+
+def _matmul_call(kernel, x, w, g_rows, w_dtype):
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} vs {w.shape}"
+    bm, bn, bk = tiling.pick_blocks(m, n, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, 1), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w.astype(w_dtype), g_rows)
+
+
+def gamma_rows(w: jnp.ndarray, mp: int) -> jnp.ndarray:
+    """Per-row (N, 1) scale vector from per-shard absmean (§A.5)."""
+    n = w.shape[0]
+    shards = w.reshape(mp, n // mp, w.shape[1])
+    gamma = 1e-5 + jnp.mean(jnp.abs(shards), axis=(1, 2))
+    return jnp.repeat(gamma, n // mp)[:, None]
+
+
+def ternary_matmul(x: jnp.ndarray, w: jnp.ndarray, g_rows: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ ternarize(w).T with on-the-fly ternarization.
+
+    x: (M, K) f32; w: (N, K) f32 latent; g_rows: (N, 1) per-row gamma.
+    """
+    return _matmul_call(_ternary_mm_kernel, x, w, g_rows, jnp.float32)
+
+
+def ternary_matmul_infer(x: jnp.ndarray, w_hat: jnp.ndarray,
+                         g_rows: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ (gamma * w_hat).T with pre-ternarized int8 weight states."""
+    return _matmul_call(_infer_mm_kernel, x, w_hat, g_rows, jnp.int8)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ternary_linear(x: jnp.ndarray, w: jnp.ndarray, mp: int = 1) -> jnp.ndarray:
+    """TriLM linear with straight-through-estimator gradients (Table 1).
+
+    Forward: Y = X @ W~^T via the Pallas kernel.
+    Backward: dX = dY @ W~ ; dW = dY^T @ X  (STE: grad w.r.t. the latent
+    weights is the grad w.r.t. the ternarized weights, passed through).
+    """
+    return ternary_matmul(x, w, gamma_rows(w, mp))
+
+
+def _ternary_linear_fwd(x, w, mp):
+    g = gamma_rows(w, mp)
+    y = ternary_matmul(x, w, g)
+    # Save the *dequantized* weights for the backward contraction: Table 1
+    # backprops through W~, not the latent W.
+    w_t = jnp.round(jnp.clip(w / g, -1.0, 1.0)) * g
+    return y, (x, w_t)
+
+
+def _ternary_linear_bwd(mp, res, dy):
+    x, w_t = res
+    dx = dy @ w_t
+    dw = dy.T @ x
+    return dx, dw
+
+
+ternary_linear.defvjp(_ternary_linear_fwd, _ternary_linear_bwd)

@@ -1,0 +1,49 @@
+"""Block-shape selection shared by the Pallas kernels.
+
+The kernels tile for VMEM (§Hardware-Adaptation in DESIGN.md): each grid
+step holds an (bm, bk) activation tile, a (bn, bk) weight tile and a
+(bm, bn) accumulator tile resident in VMEM, targeting MXU-shaped
+(128x128) dots.  Block shapes must divide the array dims exactly
+(interpret-mode pallas does not pad), so we pick the largest divisor not
+exceeding the target tile edge.
+"""
+
+from __future__ import annotations
+
+# Tile-edge targets. On a real TPU these would be MXU-shaped (128) and
+# VMEM-bounded; under interpret=True (CPU PJRT) each grid step lowers to
+# a while-loop iteration with dynamic-slice staging, so fewer/larger
+# tiles win: the §Perf pass measured 128/128/512 -> 512/512/1024 cutting
+# TriLM train-step wall clock ~2x at the 15m size (see EXPERIMENTS.md
+# §Perf). vmem_bytes()/mxu_utilization() report the TPU-shaped estimates
+# for the DESIGN.md §Perf accounting.
+DEFAULT_BM = 2048
+DEFAULT_BN = 2048
+DEFAULT_BK = 2048
+
+
+def largest_divisor(dim: int, target: int) -> int:
+    """Largest d <= target with dim % d == 0 (dim itself if dim <= target)."""
+    if dim <= target:
+        return dim
+    for d in range(target, 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
+def pick_blocks(m: int, n: int, k: int,
+                bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK) -> tuple[int, int, int]:
+    return (largest_divisor(m, bm), largest_divisor(n, bn),
+            largest_divisor(k, bk))
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (x + w + out tiles)."""
+    return (bm * bk + bn * bk + bm * bn) * dtype_bytes
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of a 128x128x128 MXU pass filled by the chosen tiles."""
+    return (min(bm, 128) / 128.0) * (min(bn, 128) / 128.0) * (min(bk, 128) / 128.0)

@@ -1,0 +1,329 @@
+"""L2: the Spectra model zoo — LLaMa-style transformers in JAX.
+
+One architecture (§3.1 / §4.2), four linear-layer families:
+
+- ``float``   — FloatLM: plain FP matmuls (f32 here; the paper's FP16
+                semantics are reproduced by the fp16-grad-simulation
+                train-step variant and by the bit-accounting in Rust).
+- ``ternary`` — TriLM: on-the-fly absmean ternarization with per-shard
+                scales and STE gradients (Pallas kernel, kernels/ternary).
+- ``binary``  — BiLM: centered-sign binarization (kernels/binary).
+- ``bitnet``  — BitNet b1.58 replication: parameterless pre-norm +
+                8-bit act quant + ternary weights (kernels/bitnet).
+
+Architecture: RMSNorm (with scale), SwiGLU gated MLP, RoPE, multi-headed
+attention, no bias terms, untied embedding / LM head. Embedding and LM
+head are always full-precision (§A.1: only linear-layer weights are
+quantized).
+
+Everything here is build-time Python: the train/eval/capture graphs are
+AOT-lowered to HLO text by aot.py and executed from Rust. Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.binary import binary_linear
+from .kernels.bitnet import bitnet_linear
+from .kernels.ternary import ternary_linear
+
+FAMILIES = ("float", "ternary", "binary", "bitnet")
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95  # paper §A.4: Adam betas (0.9, 0.95)
+ADAM_EPS = 1e-8
+NORM_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One Spectra suite entry (Table 3 analog; see DESIGN.md scale map)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    glu: int
+    heads: int
+    layers: int
+    seq: int
+    mp: int = 1          # model-parallel degree -> per-shard scale count
+    family: str = "float"
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert self.hidden % self.heads == 0
+        assert self.hidden % self.mp == 0 and self.glu % self.mp == 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def with_family(self, family: str) -> "ModelConfig":
+        return replace(self, family=family)
+
+
+# The repro suite grid (DESIGN.md "Scale mapping"). Vocab matches the
+# Rust BPE tokenizer; seq = 128 everywhere; mp mirrors the paper's
+# Table 3 pattern of growing model parallelism with scale.
+SUITE: dict[str, dict[str, Any]] = {
+    "160k": dict(hidden=64, glu=160, heads=1, layers=2, mp=1),
+    "430k": dict(hidden=96, glu=256, heads=2, layers=3, mp=1),
+    "930k": dict(hidden=128, glu=352, heads=2, layers=4, mp=1),
+    "2.8m": dict(hidden=192, glu=512, heads=3, layers=6, mp=2),
+    "6.7m": dict(hidden=256, glu=704, heads=4, layers=8, mp=2),
+    "15m": dict(hidden=384, glu=1056, heads=6, layers=8, mp=3),
+}
+
+
+def suite_config(size: str, family: str = "float", vocab: int = 512,
+                 seq: int = 128) -> ModelConfig:
+    spec = SUITE[size]
+    return ModelConfig(name=f"{size}_{family}", vocab=vocab, seq=seq,
+                       family=family, **spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameters. Flat, ordered dict: name -> array. The ordering is the
+# AOT calling convention shared with Rust (manifest.json).
+# ---------------------------------------------------------------------------
+
+# The seven quantizable linear weights of each transformer layer (§A.1).
+LINEAR_NAMES = ("attn_q", "attn_k", "attn_v", "attn_o",
+                "mlp_gate", "mlp_up", "mlp_down")
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the flat calling convention."""
+    specs: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.hidden))]
+    h, g = cfg.hidden, cfg.glu
+    shapes = dict(attn_q=(h, h), attn_k=(h, h), attn_v=(h, h), attn_o=(h, h),
+                  mlp_gate=(g, h), mlp_up=(g, h), mlp_down=(h, g))
+    for l in range(cfg.layers):
+        specs.append((f"l{l}.attn_norm", (h,)))
+        for n in ("attn_q", "attn_k", "attn_v", "attn_o"):
+            specs.append((f"l{l}.{n}", shapes[n]))
+        specs.append((f"l{l}.mlp_norm", (h,)))
+        for n in ("mlp_gate", "mlp_up", "mlp_down"):
+            specs.append((f"l{l}.{n}", shapes[n]))
+    specs.append(("final_norm", (h,)))
+    specs.append(("lm_head", (cfg.vocab, h)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """GPT-NeoX-style small init; residual-out projections down-scaled."""
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, jnp.ndarray] = {}
+    resid_scale = 1.0 / math.sqrt(2.0 * cfg.layers)
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(("attn_o", "mlp_down")):
+                std *= resid_scale
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _linear(cfg: ModelConfig, x2d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Family dispatch for the quantizable linears. x2d: (tokens, in)."""
+    if cfg.family == "float":
+        return x2d @ w.T
+    if cfg.family == "ternary":
+        return ternary_linear(x2d, w, cfg.mp)
+    if cfg.family == "binary":
+        return binary_linear(x2d, w, cfg.mp)
+    if cfg.family == "bitnet":
+        return bitnet_linear(x2d, w, cfg.mp)
+    raise ValueError(cfg.family)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return scale * x * (1.0 / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True)
+                                       + NORM_EPS))
+
+
+def rope(x: jnp.ndarray) -> jnp.ndarray:
+    """Rotary position embedding over (B, S, H, D)."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = t[:, None] * freqs[None, :]                    # (S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rot1 = x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :]
+    rot2 = x2 * cos[None, :, None, :] + x1 * sin[None, :, None, :]
+    return jnp.concatenate([rot1, rot2], axis=-1)
+
+
+def _attention(cfg: ModelConfig, params, l: int, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, h = x.shape
+    xn = rmsnorm(x, params[f"l{l}.attn_norm"])
+    x2 = xn.reshape(b * s, h)
+    q = _linear(cfg, x2, params[f"l{l}.attn_q"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    k = _linear(cfg, x2, params[f"l{l}.attn_k"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    v = _linear(cfg, x2, params[f"l{l}.attn_v"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    q, k = rope(q), rope(k)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, h)
+    return x + _linear(cfg, ctx, params[f"l{l}.attn_o"]).reshape(b, s, h)
+
+
+def _mlp(cfg: ModelConfig, params, l: int, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, h = x.shape
+    xn = rmsnorm(x, params[f"l{l}.mlp_norm"]).reshape(b * s, h)
+    gate = _linear(cfg, xn, params[f"l{l}.mlp_gate"])
+    up = _linear(cfg, xn, params[f"l{l}.mlp_up"])
+    y = _linear(cfg, jax.nn.silu(gate) * up, params[f"l{l}.mlp_down"])
+    return x + y.reshape(b, s, h)
+
+
+def forward(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B, S) int32 -> logits (B, S, vocab) f32."""
+    x = params["embed"][tokens]
+    for l in range(cfg.layers):
+        x = _attention(cfg, params, l, x)
+        x = _mlp(cfg, params, l, x)
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"].T
+
+
+def token_logprobs(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B, S+1) -> log p(tokens[:,1:]) at each position, (B, S)."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return -jnp.mean(token_logprobs(cfg, params, tokens))
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step (graph executed from Rust)
+# ---------------------------------------------------------------------------
+
+def _decay_mask(name: str) -> bool:
+    """Weight decay applies to matrices only, not norms (standard)."""
+    return not name.endswith("norm")
+
+
+def train_step(cfg: ModelConfig, fp16_grads: bool, params, m, v, step,
+               tokens, lr, wd, loss_scale):
+    """One AdamW step with dynamic-loss-scaling support (§A.3, Table 5).
+
+    step/lr/wd/loss_scale are f32 scalars supplied by the Rust
+    coordinator (which owns the schedule and the loss-scale state
+    machine). Returns (params', m', v', loss, grad_norm, grads_finite).
+
+    With ``fp16_grads``, the scaled gradients are round-tripped through
+    f16 before unscaling — reproducing the overflow behaviour of V100
+    mixed-precision training that Table 5 documents (scaled grads beyond
+    f16 range become inf, the step is skipped, Rust halves the scale).
+    """
+    def scaled_loss(p):
+        return loss_fn(cfg, p, tokens) * loss_scale
+
+    loss_s, grads = jax.value_and_grad(scaled_loss)(params)
+    loss = loss_s / loss_scale
+    if fp16_grads:
+        grads = {k: g.astype(jnp.float16).astype(jnp.float32)
+                 for k, g in grads.items()}
+    grads = {k: g / loss_scale for k, g in grads.items()}
+
+    finite = jnp.array(True)
+    for g in grads.values():
+        finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(g)))
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.where(jnp.isfinite(g), g, 0.0) ** 2)
+                         for g in grads.values()))
+
+    new_step = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** new_step
+    bc2 = 1.0 - ADAM_B2 ** new_step
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name]
+        mi = ADAM_B1 * m[name] + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * v[name] + (1.0 - ADAM_B2) * g * g
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        if _decay_mask(name):
+            update = update + wd * params[name]
+        pi = params[name] - lr * update
+        # Skip the whole update when any grad overflowed (Table 5).
+        new_p[name] = jnp.where(finite, pi, params[name])
+        new_m[name] = jnp.where(finite, mi, m[name])
+        new_v[name] = jnp.where(finite, vi, v[name])
+
+    out_step = jnp.where(finite, new_step, step)
+    return new_p, new_m, new_v, out_step, loss, gnorm, finite.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activation capture (GPTQ calibration, §4.2)
+# ---------------------------------------------------------------------------
+
+def capture_linear_inputs(cfg: ModelConfig, params, tokens: jnp.ndarray):
+    """Forward pass that also returns the input activations of every
+    quantizable linear, in param_specs order. Used by the Rust GPTQ
+    module to accumulate per-layer Hessians H = 2 X^T X.
+
+    Returns a flat tuple: one (B*S, in_features) array per linear,
+    ordered l0.attn_qkv-input, l0.attn_o-input, l0.mlp_gate/up-input,
+    l0.mlp_down-input, l1..., i.e. 4 capture points per layer (q/k/v
+    share their input, gate/up share theirs).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    captures = []
+    for l in range(cfg.layers):
+        # attention
+        xn = rmsnorm(x, params[f"l{l}.attn_norm"])
+        x2 = xn.reshape(b * s, cfg.hidden)
+        captures.append(x2)  # input of q, k, v
+        q = (x2 @ params[f"l{l}.attn_q"].T).reshape(b, s, cfg.heads, cfg.head_dim)
+        k = (x2 @ params[f"l{l}.attn_k"].T).reshape(b, s, cfg.heads, cfg.head_dim)
+        v = (x2 @ params[f"l{l}.attn_v"].T).reshape(b, s, cfg.heads, cfg.head_dim)
+        q, k = rope(q), rope(k)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+        ctx = ctx.reshape(b * s, cfg.hidden)
+        captures.append(ctx)  # input of o
+        x = x + (ctx @ params[f"l{l}.attn_o"].T).reshape(b, s, cfg.hidden)
+        # mlp
+        xn = rmsnorm(x, params[f"l{l}.mlp_norm"]).reshape(b * s, cfg.hidden)
+        captures.append(xn)  # input of gate, up
+        gate = xn @ params[f"l{l}.mlp_gate"].T
+        up = xn @ params[f"l{l}.mlp_up"].T
+        act = jax.nn.silu(gate) * up
+        captures.append(act)  # input of down
+        x = x + (act @ params[f"l{l}.mlp_down"].T).reshape(b, s, cfg.hidden)
+    return tuple(captures)
+
+
+CAPTURES_PER_LAYER = 4  # qkv-in, o-in, gate/up-in, down-in

@@ -1,0 +1,70 @@
+"""AOT lowering tests: HLO text round-trips and manifests are coherent."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+TINY = M.ModelConfig(name="tiny_ternary", vocab=64, hidden=32, glu=96,
+                     heads=2, layers=2, seq=16, mp=1, family="ternary")
+
+
+def test_train_graph_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_train(TINY, batch=2, fp16_grads=False))
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+def test_eval_graph_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_eval(TINY, batch=2))
+    assert "ENTRY" in text
+
+
+def test_graph_io_spec_counts():
+    cfg = M.suite_config("160k", "ternary")
+    P = len(M.param_specs(cfg))
+    ins, outs = aot.graph_io_spec(cfg, "train")
+    assert len(ins) == 3 * P + 5       # params,m,v + step,tokens,lr,wd,scale
+    assert len(outs) == 3 * P + 4      # params,m,v + step,loss,gnorm,finite
+    ins, outs = aot.graph_io_spec(cfg, "eval")
+    assert len(ins) == P + 1 and len(outs) == 1
+    ins, outs = aot.graph_io_spec(cfg, "capture")
+    assert len(outs) == cfg.layers * M.CAPTURES_PER_LAYER
+
+
+def test_build_plan_respects_paper_scope():
+    plan = aot.build_plan(list(M.SUITE), ["float", "ternary", "binary", "bitnet"])
+    names = {(c.name, g) for c, g, _ in plan}
+    # BiLM only at its three sizes (App. B)
+    assert ("160k_binary", "train") in names
+    assert ("430k_binary", "train") not in names
+    # BitNet replication at one size (§A.6)
+    assert sum(1 for (n, g) in names if n.endswith("_bitnet") and g == "train") == 1
+    # capture graphs only for FloatLM
+    assert all(n.endswith("_float") for (n, g) in names if g == "capture")
+    # fp16 variants only at the loss-scaling study sizes
+    fp16 = {n for (n, g) in names if g == "train_fp16"}
+    assert fp16 == {f"{s}_{f}" for s in aot.FP16_SIZES for f in ("float", "ternary")}
+
+
+@pytest.mark.slow
+def test_aot_cli_writes_manifest():
+    with tempfile.TemporaryDirectory() as td:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", td,
+             "--sizes", "160k", "--families", "ternary"],
+            check=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+        with open(os.path.join(td, "manifest.json")) as f:
+            man = json.load(f)
+        entry = man["models"]["160k_ternary"]
+        assert entry["n_params"] > 150_000
+        assert set(entry["graphs"]) == {"train", "eval", "next_logits",
+                                        "train_fp16"}
+        for g in entry["graphs"].values():
+            assert os.path.exists(os.path.join(td, g["file"]))

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and the model-parallel degree / group size /
+bit width parameters) and asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary, bitnet, qlinear, ref, ternary
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+dims = st.sampled_from([8, 16, 32, 48, 64, 96, 128, 160, 256])
+mps = st.sampled_from([1, 2, 4])
+seeds = st.integers(0, 2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, mp=mps, seed=seeds)
+def test_ternary_matmul_matches_ref(m, n, k, mp, seed):
+    if n % mp:
+        mp = 1
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, n, k)
+    got = ternary.ternary_linear(x, w, mp)
+    want = ref.ternary_linear(x, w, mp)
+    np.testing.assert_allclose(got, want, atol=ATOL * k, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, k=dims, mp=mps, seed=seeds)
+def test_ternary_infer_matches_train_path(m, n, k, mp, seed):
+    """Inference with cached (w_hat, gamma) == training on-the-fly path."""
+    if n % mp:
+        mp = 1
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, n, k)
+    w_hat, _ = ref.ternarize(w, mp)
+    got = ternary.ternary_matmul_infer(x, w_hat.astype(jnp.int8),
+                                       ternary.gamma_rows(w, mp))
+    want = ternary.ternary_linear(x, w, mp)
+    np.testing.assert_allclose(got, want, atol=ATOL * k, rtol=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, k=dims, mp=mps, seed=seeds)
+def test_binary_matmul_matches_ref(m, n, k, mp, seed):
+    if n % mp:
+        mp = 1
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, n, k)
+    np.testing.assert_allclose(binary.binary_linear(x, w, mp),
+                               ref.binary_linear(x, w, mp),
+                               atol=ATOL * k, rtol=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=seeds)
+def test_bitnet_matmul_matches_ref(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, n, k)
+    np.testing.assert_allclose(bitnet.bitnet_linear(x, w, 1),
+                               ref.bitnet_linear(x, w, 1),
+                               atol=ATOL * k, rtol=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, k=st.sampled_from([32, 64, 128, 256]),
+       bits=st.sampled_from([3, 4, 6, 8]),
+       group=st.sampled_from([16, 32, 64, 128]), seed=seeds)
+def test_quant_matmul_matches_ref(m, n, k, bits, group, seed):
+    group = min(group, k)
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, n, k)
+    q, s = ref.group_quant(w, bits, group)
+    got = qlinear.quant_matmul(x, q.reshape(n, k).astype(jnp.int8), s, group)
+    want = ref.quant_linear(x, q, s)
+    np.testing.assert_allclose(got, want, atol=ATOL * k, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer semantics (Table 1 invariants)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(n=dims, k=dims, mp=mps, seed=seeds)
+def test_ternarize_states_and_scales(n, k, mp, seed):
+    if n % mp:
+        mp = 1
+    rng = np.random.default_rng(seed)
+    w = rand(rng, n, k)
+    w_hat, gamma = ref.ternarize(w, mp)
+    states = np.unique(np.asarray(w_hat))
+    assert set(states).issubset({-1.0, 0.0, 1.0})
+    assert gamma.shape == (mp,)
+    assert np.all(np.asarray(gamma) > 0)
+    # gamma is the absmean of the shard (+eps)
+    shard = np.asarray(w).reshape(mp, n // mp, k)
+    np.testing.assert_allclose(gamma, np.abs(shard).mean(axis=(1, 2)) + ref.EPS,
+                               rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=dims, k=dims, seed=seeds)
+def test_binarize_states(n, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, n, k)
+    w_hat, alpha = ref.binarize(w, 1)
+    assert set(np.unique(np.asarray(w_hat))).issubset({-1.0, 1.0})
+    assert float(alpha[0]) > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=dims, k=st.sampled_from([32, 64, 128]),
+       bits=st.sampled_from([3, 4, 6, 8]), seed=seeds)
+def test_group_quant_roundtrip_error_bound(n, k, bits, seed):
+    """Symmetric group quant error is bounded by half a quantization step."""
+    rng = np.random.default_rng(seed)
+    w = rand(rng, n, k)
+    q, s = ref.group_quant(w, bits, 32)
+    back = ref.group_dequant(q, s)
+    step = np.asarray(s)[..., None] * np.ones((1, 1, 32))
+    err = np.abs(np.asarray(back).reshape(n, k // 32, 32) -
+                 np.asarray(w).reshape(n, k // 32, 32))
+    assert np.all(err <= 0.5 * step + 1e-6)
+
+
+def test_higher_bits_lower_error():
+    """More bits => monotonically smaller reconstruction error (§4.2)."""
+    rng = np.random.default_rng(7)
+    w = rand(rng, 64, 128)
+    errs = []
+    for bits in (3, 4, 6, 8):
+        q, s = ref.group_quant(w, bits, 128)
+        errs.append(float(jnp.mean((ref.group_dequant(q, s) - w) ** 2)))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_activation_quant_is_idempotent():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 64)
+    q1 = ref.absmax_quant_act(x)
+    q2 = ref.absmax_quant_act(q1)
+    np.testing.assert_allclose(q1, q2, atol=1e-5)
+
+
+@pytest.mark.parametrize("mp", [1, 2, 3, 6])
+def test_mp_scale_artifact_count(mp):
+    """§A.5: model parallelism adds exactly mp scale values per matrix."""
+    rng = np.random.default_rng(0)
+    w = rand(rng, 96, 64)
+    _, gamma = ref.ternarize(w, mp)
+    assert gamma.shape == (mp,)

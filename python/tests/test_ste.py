@@ -1,0 +1,76 @@
+"""Straight-through-estimator gradients (Table 1 backward-pass column).
+
+The custom_vjp of every quantized linear must produce exactly
+dL/dX = dL/dY @ W~ and dL/dW = dL/dY^T @ X, where W~ is the dequantized
+(ternarized / binarized) weight — NOT the latent weight.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary, bitnet, ref, ternary
+
+dims = st.sampled_from([8, 16, 32, 64])
+seeds = st.integers(0, 2**31 - 1)
+
+
+def _check_ste(linear_fn, wtilde_fn, m, n, k, seed, x_transform=None):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    dy = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+
+    def scalar_loss(x, w):
+        return jnp.sum(linear_fn(x, w, 1) * dy)
+
+    dx, dw = jax.grad(scalar_loss, argnums=(0, 1))(x, w)
+    w_t = wtilde_fn(w)
+    x_eff = x_transform(x) if x_transform else x
+    np.testing.assert_allclose(dx, dy @ w_t, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(dw, dy.T @ x_eff, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=seeds)
+def test_ternary_ste(m, n, k, seed):
+    def wtilde(w):
+        return ref.ternary_dequant(*ref.ternarize(w, 1))
+    _check_ste(ternary.ternary_linear, wtilde, m, n, k, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=seeds)
+def test_binary_ste(m, n, k, seed):
+    def wtilde(w):
+        w_hat, alpha = ref.binarize(w, 1)
+        return alpha[0] * w_hat
+    _check_ste(binary.binary_linear, wtilde, m, n, k, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=seeds)
+def test_bitnet_ste(m, n, k, seed):
+    def wtilde(w):
+        return ref.ternary_dequant(*ref.ternarize(w, 1))
+
+    def xq(x):
+        return ref.absmax_quant_act(ref.parameterless_rmsnorm(x))
+
+    _check_ste(bitnet.bitnet_linear, wtilde, m, n, k, seed, x_transform=xq)
+
+
+def test_ste_grad_flows_through_zero_states():
+    """Latent weights whose ternary state is 0 still receive gradient —
+    the mechanism that lets states flip as updates accumulate (§3.1)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(0.01 * rng.normal(size=(16, 16)).astype(np.float32))
+    w_hat, _ = ref.ternarize(w, 1)
+    # ensure some zero states exist
+    assert float(jnp.mean(w_hat == 0)) > 0
+
+    g = jax.grad(lambda w: jnp.sum(ternary.ternary_linear(x, w, 1) ** 2))(w)
+    zero_mask = np.asarray(w_hat == 0)
+    assert np.abs(np.asarray(g)[zero_mask]).max() > 0

@@ -1,0 +1,32 @@
+//! Bench + regeneration check: Table 4 / Fig. 2 / Fig. 21 analytics.
+//! These are analytical, so the bench doubles as the regeneration run:
+//! it prints the table values alongside the paper's numbers.
+
+use spectra::deploy::{self, SizeFamily};
+use spectra::util::bench::{bench, black_box};
+
+fn main() {
+    bench("table4_full_regeneration", || {
+        black_box(deploy::table4());
+    }).report();
+    bench("fig2_series", || {
+        black_box(deploy::fig2_series());
+    }).report();
+    bench("fig21_trends", || {
+        black_box(deploy::memory_per_tflop_trend());
+        black_box(deploy::bandwidth_per_tflop_trend());
+    }).report();
+
+    // Regeneration vs paper (Table 4 rows, bits x 1e9).
+    println!("\nTable 4 check (ours vs paper):");
+    let paper_float = [1.60, 3.05, 6.28, 9.11, 13.34, 18.39, 24.23, 39.38, 63.83];
+    let paper_trilm = [0.90, 1.42, 2.11, 2.76, 3.55, 4.42, 5.36, 7.23, 10.76];
+    for (fam, paper) in [(SizeFamily::Float, paper_float),
+                         (SizeFamily::Ternary, paper_trilm)] {
+        print!("{:<10}", fam.label());
+        for (row, p) in deploy::PAPER_SUITE.iter().zip(paper.iter()) {
+            print!(" {:.2}/{:.2}", row.size_bits(fam) / 1e9, p);
+        }
+        println!();
+    }
+}

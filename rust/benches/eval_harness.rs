@@ -1,0 +1,43 @@
+//! Bench: the downstream-eval harness (Tables 6/7/9 machinery) — MCQ
+//! scoring and perplexity throughput through the AOT eval graph.
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::Trainer;
+use spectra::data::Dataset;
+use spectra::eval::{self, Evaluator, TaskKind};
+use spectra::runtime::Runtime;
+use spectra::util::bench::bench_few;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("eval_harness: artifacts/ missing, run `make artifacts`");
+        return;
+    };
+    let data = Dataset::build(std::path::Path::new("runs/data"), 400_000, 0)
+        .expect("dataset");
+    let model = "160k_ternary";
+    // Fresh params are fine: we're benching the harness, not the model.
+    let trainer = Trainer::new(&rt, model,
+                               TrainConfig::for_family(Family::Ternary, 10))
+        .expect("trainer");
+    let ev = Evaluator::new(&rt, model).expect("evaluator");
+    let params = trainer.param_literals();
+
+    let val: Vec<u32> = data.val.iter().take(8 * 129 * 4).cloned().collect();
+    bench_few("perplexity_nll_4x8x128tok", 5, || {
+        std::hint::black_box(ev.nll(params, &val).unwrap());
+    }).report_throughput("tokens", val.len() as f64);
+
+    for kind in [TaskKind::PatternMcq, TaskKind::Cloze, TaskKind::FactRecall] {
+        let items = eval::generate(&data.world, kind, 8, 3);
+        let r = bench_few(&format!("score_{}_8items", kind.as_str()), 3, || {
+            for item in &items {
+                std::hint::black_box(
+                    ev.score_choices(params, &data.bpe, item).unwrap());
+            }
+        });
+        let choices: usize = items.iter().map(|i| i.choices.len()).sum();
+        r.report_throughput("choice-scores", choices as f64);
+    }
+}

@@ -1,0 +1,56 @@
+//! Bench: QuantLM construction (§4.2) — GPTQ per-matrix wall clock at
+//! realistic layer shapes, plus the accuracy story: GPTQ vs
+//! round-to-nearest on the Hessian-weighted objective.
+
+use spectra::gptq::{gptq_quantize, hessian_weighted_error, GptqConfig,
+                    HessianAccumulator};
+use spectra::quant::QuantTensor;
+use spectra::runtime::{HostTensor, SplitMix64};
+use spectra::util::bench::{bench_few, black_box};
+
+fn correlated_inputs(n: usize, d: usize, seed: u64) -> HostTensor {
+    let mut rng = SplitMix64::new(seed);
+    let mut data = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let base = rng.next_gaussian();
+        for j in 0..d {
+            data.push((0.6 * base + 0.4 * rng.next_gaussian()
+                + if j % 5 == 0 { 0.4 * base } else { 0.0 }) as f32);
+        }
+    }
+    HostTensor::new(vec![n, d], data)
+}
+
+fn main() {
+    println!("== gptq: QuantLM construction cost & quality ==");
+    for (rows, cols) in [(256, 256), (704, 256), (384, 1056)] {
+        let w = HostTensor::randn(vec![rows, cols], 0.05, 7);
+        let x = correlated_inputs(512, cols, 8);
+        let mut acc = HessianAccumulator::new(cols);
+        acc.add_batch(&x);
+        let h = acc.finalize();
+
+        // group must divide in_features (suite layers use the largest
+        // divisor <= 128, e.g. 96 for glu = 1056).
+        let group = spectra::gptq::pipeline::largest_divisor(cols, 128);
+        let cfg = GptqConfig::new(4, group);
+        let r = bench_few(&format!("gptq_4bit_{rows}x{cols}"), 3, || {
+            black_box(gptq_quantize(&w, &h, cfg).unwrap());
+        });
+        r.report_throughput("weights", (rows * cols) as f64);
+
+        let gptq = gptq_quantize(&w, &h, cfg).unwrap();
+        let rtn = QuantTensor::quantize_rtn(&w, 4, group);
+        let (eg, er) = (hessian_weighted_error(&w, &gptq, &h),
+                        hessian_weighted_error(&w, &rtn, &h));
+        println!("  H-weighted err: GPTQ {eg:.4e} vs RTN {er:.4e} \
+                  (GPTQ wins by {:.1}%)\n", 100.0 * (er - eg) / er);
+    }
+
+    // Hessian accumulation throughput (the capture-side cost).
+    let x = correlated_inputs(1024, 256, 9);
+    let mut acc = HessianAccumulator::new(256);
+    bench_few("hessian_add_batch_1024x256", 5, || {
+        acc.add_batch(&x);
+    }).report_throughput("activations", (1024 * 256) as f64);
+}

@@ -1,0 +1,36 @@
+//! Bench: the data substrate — corpus generation, BPE train/encode,
+//! batcher throughput. The L3 data pipeline must never be the training
+//! bottleneck (§Perf: batcher >> train-step rate).
+
+use spectra::data::{Batcher, Bpe, Generator, World};
+use spectra::util::bench::{bench, bench_few, black_box};
+
+fn main() {
+    let world = World::new(0);
+
+    bench("corpus_generate_100kchars", || {
+        let mut g = Generator::new(&world, 1);
+        black_box(g.training_text(100_000));
+    }).report_throughput("chars", 100_000.0);
+
+    let mut g = Generator::new(&world, 2);
+    let text = g.training_text(200_000);
+
+    bench_few("bpe_train_vocab512_200kchars", 3, || {
+        black_box(Bpe::train(&text[..100_000], 512));
+    }).report_throughput("chars", 100_000.0);
+
+    let bpe = Bpe::train(&text[..100_000], 512);
+    bench("bpe_encode_100kchars", || {
+        black_box(bpe.encode(&text[..100_000]));
+    }).report_throughput("chars", 100_000.0);
+
+    let tokens = bpe.encode(&text);
+    println!("  compression: {:.2} chars/token",
+             text.len() as f64 / tokens.len() as f64);
+
+    let mut batcher = Batcher::new(tokens, 8, 128, 0);
+    bench("batcher_next_batch_8x129", || {
+        black_box(batcher.next_batch());
+    }).report_throughput("tokens", (8 * 129) as f64);
+}

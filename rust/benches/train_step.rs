@@ -1,0 +1,47 @@
+//! Bench: end-to-end train-step wall clock per size x family through the
+//! PJRT runtime — the Fig. 8 throughput axis and the L3 §Perf target
+//! (dispatch overhead must be small vs graph execution).
+//!
+//! Requires `make artifacts`. Skips silently if artifacts are missing.
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::Trainer;
+use spectra::data::{Batcher, Dataset};
+use spectra::runtime::Runtime;
+use spectra::util::bench::bench_few;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("train_step: artifacts/ missing, run `make artifacts`");
+        return;
+    };
+    let data = Dataset::build(std::path::Path::new("runs/data"), 400_000, 0)
+        .expect("dataset");
+
+    for (size, family, iters) in [("160k", Family::Float, 10),
+                                  ("160k", Family::Ternary, 10),
+                                  ("430k", Family::Ternary, 6),
+                                  ("930k", Family::Ternary, 4)] {
+        let model = format!("{size}_{}", family.as_str());
+        let cfg = TrainConfig::for_family(family, 1000);
+        let Ok(mut trainer) = Trainer::new(&rt, &model, cfg) else {
+            continue;
+        };
+        let mut batcher = Batcher::new(data.train.clone(),
+                                       rt.manifest().train_batch,
+                                       rt.manifest().seq, 0);
+        let tokens_per_step =
+            rt.manifest().train_batch * rt.manifest().seq;
+        let r = bench_few(&format!("train_step_{model}"), iters, || {
+            let batch = batcher.next_batch();
+            trainer.step(&batch).expect("step");
+        });
+        r.report_throughput("tokens", tokens_per_step as f64);
+    }
+
+    // Dispatch overhead proxy: batcher + literal assembly without execute.
+    let mut batcher = Batcher::new(data.train.clone(), 8, 128, 0);
+    bench_few("batcher_next_batch", 200, || {
+        std::hint::black_box(batcher.next_batch());
+    }).report();
+}

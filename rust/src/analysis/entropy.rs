@@ -1,0 +1,170 @@
+//! Weight-distribution analysis (§2.2, Figs. 3, 4, 20).
+//!
+//! - Shannon entropy of the binned weight distribution, across bin
+//!   counts (Fig. 3): the average bits needed to encode a weight.
+//! - Differential entropy of a Gaussian fit, H = 1/2 log2(2*pi*e*sigma^2)
+//!   (Fig. 4): falls as weights concentrate with scale.
+//! - Histogram + Gaussian-fit quality (Fig. 20 / App. E).
+
+
+/// Mean and standard deviation of a sample.
+pub fn gaussian_fit(xs: &[f32]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| {
+        let d = x as f64 - mean;
+        d * d
+    }).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Differential entropy (bits) of the Gaussian fit (Fig. 4).
+pub fn differential_entropy_bits(sigma: f64) -> f64 {
+    0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E * sigma * sigma).log2()
+}
+
+/// Equal-width histogram over [min, max].
+pub fn histogram(xs: &[f32], bins: usize) -> (Vec<usize>, f64, f64) {
+    assert!(bins >= 1 && !xs.is_empty());
+    let min = xs.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let width = ((max - min) / bins as f64).max(1e-30);
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let b = (((x as f64 - min) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    (counts, min, width)
+}
+
+/// Shannon entropy (bits) of the binned distribution (Fig. 3).
+pub fn shannon_entropy_bits(xs: &[f32], bins: usize) -> f64 {
+    let (counts, _, _) = histogram(xs, bins);
+    let n = xs.len() as f64;
+    counts.iter().filter(|&&c| c > 0).map(|&c| {
+        let p = c as f64 / n;
+        -p * p.log2()
+    }).sum()
+}
+
+/// Excess kurtosis — 0 for a Gaussian; the App.-E normality proxy.
+pub fn excess_kurtosis(xs: &[f32]) -> f64 {
+    let (mean, sigma) = gaussian_fit(xs);
+    let n = xs.len() as f64;
+    let m4 = xs.iter().map(|&x| {
+        let d = (x as f64 - mean) / sigma.max(1e-30);
+        d.powi(4)
+    }).sum::<f64>() / n;
+    m4 - 3.0
+}
+
+/// Per-model weight-distribution report row (Figs. 3/4/20 data).
+#[derive(Debug, Clone)]
+pub struct WeightStats {
+    pub model: String,
+    pub n_weights: usize,
+    pub mean: f64,
+    pub sigma: f64,
+    pub differential_entropy_bits: f64,
+    /// Shannon entropy at each probed bin count.
+    pub shannon_bits: Vec<(usize, f64)>,
+    pub excess_kurtosis: f64,
+}
+
+/// Fig. 3's bin sweep.
+pub const BIN_COUNTS: [usize; 4] = [64, 256, 1024, 4096];
+
+/// Compute the full report for a pooled weight sample.
+pub fn weight_stats(model: &str, xs: &[f32]) -> WeightStats {
+    let (mean, sigma) = gaussian_fit(xs);
+    WeightStats {
+        model: model.to_string(),
+        n_weights: xs.len(),
+        mean,
+        sigma,
+        differential_entropy_bits: differential_entropy_bits(sigma),
+        shannon_bits: BIN_COUNTS.iter()
+            .map(|&b| (b, shannon_entropy_bits(xs, b)))
+            .collect(),
+        excess_kurtosis: excess_kurtosis(xs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SplitMix64;
+
+    fn gaussian_sample(n: usize, sigma: f64, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| (sigma * rng.next_gaussian()) as f32).collect()
+    }
+
+    #[test]
+    fn gaussian_fit_recovers_sigma() {
+        let xs = gaussian_sample(50_000, 0.02, 1);
+        let (mean, sigma) = gaussian_fit(&xs);
+        assert!(mean.abs() < 1e-3);
+        assert!((sigma - 0.02).abs() / 0.02 < 0.05);
+    }
+
+    #[test]
+    fn differential_entropy_drops_with_concentration() {
+        // The §2.2 claim: smaller sigma (more concentrated weights,
+        // larger models) => lower differential entropy.
+        assert!(differential_entropy_bits(0.01) < differential_entropy_bits(0.05));
+    }
+
+    #[test]
+    fn differential_entropy_formula() {
+        // H(N(0, 1)) = 0.5*log2(2*pi*e) ~= 2.047 bits.
+        assert!((differential_entropy_bits(1.0) - 2.047).abs() < 0.01);
+    }
+
+    #[test]
+    fn shannon_entropy_bounds() {
+        let xs = gaussian_sample(10_000, 1.0, 2);
+        let h = shannon_entropy_bits(&xs, 256);
+        assert!(h > 0.0 && h <= 8.0); // <= log2(bins)
+    }
+
+    #[test]
+    fn shannon_entropy_grows_with_bins() {
+        let xs = gaussian_sample(100_000, 1.0, 3);
+        let h64 = shannon_entropy_bits(&xs, 64);
+        let h1024 = shannon_entropy_bits(&xs, 1024);
+        assert!(h1024 > h64);
+    }
+
+    #[test]
+    fn narrower_distribution_lower_shannon() {
+        // Fig. 3's trend driver: same binning *range-relative* entropy
+        // is scale-free, so compare mixtures — a spikier distribution
+        // (more zeros) has lower entropy at fixed bins over fixed range.
+        let wide = gaussian_sample(50_000, 1.0, 4);
+        let mut narrow = gaussian_sample(25_000, 0.2, 5);
+        narrow.extend(std::iter::repeat(0.0f32).take(25_000));
+        // use a shared binning range by appending range markers
+        let mut w = wide.clone();
+        w.push(4.0);
+        w.push(-4.0);
+        let mut n = narrow.clone();
+        n.push(4.0);
+        n.push(-4.0);
+        assert!(shannon_entropy_bits(&n, 256) < shannon_entropy_bits(&w, 256));
+    }
+
+    #[test]
+    fn kurtosis_near_zero_for_gaussian() {
+        let xs = gaussian_sample(100_000, 0.5, 6);
+        assert!(excess_kurtosis(&xs).abs() < 0.1);
+    }
+
+    #[test]
+    fn weight_stats_report_is_complete() {
+        let xs = gaussian_sample(10_000, 0.02, 7);
+        let s = weight_stats("test", &xs);
+        assert_eq!(s.shannon_bits.len(), BIN_COUNTS.len());
+        assert!(s.differential_entropy_bits < 0.0); // sigma << 1
+    }
+}

@@ -1,0 +1,10 @@
+//! Analysis: scaling-law fitting and weight-distribution entropy.
+
+pub mod entropy;
+pub mod scaling;
+
+pub use entropy::{differential_entropy_bits, excess_kurtosis, gaussian_fit,
+                  histogram, shannon_entropy_bits, weight_stats, WeightStats,
+                  BIN_COUNTS};
+pub use scaling::{fit_power_law, percent_gap, scaling_report, PowerLawFit,
+                  ScalingReport};

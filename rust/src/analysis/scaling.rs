@@ -1,0 +1,232 @@
+//! Scaling-law fitting (§4.3, Eq. 1; Figs. 9, 10, 19).
+//!
+//! Fits validation loss against parameter count with the paper's two
+//! forms using Levenberg–Marquardt nonlinear least squares:
+//!
+//!   power law with offset:  L(N) = A / N^alpha + eps     (Hoffmann-style)
+//!   pure power law:         L(N) = A / N^alpha           (Kaplan-style)
+//!
+//! and derives the Fig. 10 extrapolation: the percentage validation-loss
+//! gap between two fitted families as N grows.
+
+
+/// Fitted power law with optional offset.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerLawFit {
+    pub a: f64,
+    pub alpha: f64,
+    pub eps: f64,
+    pub with_offset: bool,
+    /// Residual sum of squares at the solution.
+    pub rss: f64,
+}
+
+impl PowerLawFit {
+    pub fn predict(&self, n: f64) -> f64 {
+        self.a / n.powf(self.alpha) + self.eps
+    }
+}
+
+fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    // Gaussian elimination with partial pivoting, 3x3.
+    for col in 0..3 {
+        let piv = (col..3).max_by(|&i, &j| {
+            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        m.swap(col, piv);
+        b.swap(col, piv);
+        for row in (col + 1)..3 {
+            let f = m[row][col] / m[col][col];
+            for k in col..3 {
+                m[row][k] -= f * m[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut s = b[row];
+        for k in (row + 1)..3 {
+            s -= m[row][k] * x[k];
+        }
+        x[row] = s / m[row][row];
+    }
+    Some(x)
+}
+
+fn rss_of(params: &[f64; 3], ns: &[f64], ys: &[f64]) -> f64 {
+    ns.iter().zip(ys).map(|(&n, &y)| {
+        let f = params[0] / n.powf(params[1]) + params[2];
+        (y - f) * (y - f)
+    }).sum()
+}
+
+/// Levenberg–Marquardt fit of L(N) = A/N^alpha (+ eps if `with_offset`).
+///
+/// `ns` in raw parameter counts; `ys` the final validation losses.
+pub fn fit_power_law(ns: &[f64], ys: &[f64], with_offset: bool) -> PowerLawFit {
+    assert!(ns.len() >= 3 && ns.len() == ys.len());
+    // Initialization: alpha 0.3, eps = 0.9*min(y) (or 0), A from first point.
+    let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut p = [0.0f64; 3];
+    p[1] = 0.3;
+    p[2] = if with_offset { 0.9 * ymin } else { 0.0 };
+    p[0] = (ys[0] - p[2]) * ns[0].powf(p[1]);
+
+    let mut lambda = 1e-3;
+    let mut rss = rss_of(&p, ns, ys);
+    for _ in 0..200 {
+        // Jacobian-normal equations: (JtJ + lambda diag(JtJ)) d = Jt r
+        let mut jtj = [[0.0f64; 3]; 3];
+        let mut jtr = [0.0f64; 3];
+        for (&n, &y) in ns.iter().zip(ys) {
+            let npa = n.powf(-p[1]);
+            let f = p[0] * npa + p[2];
+            let r = y - f;
+            let j = [npa, -p[0] * n.ln() * npa, if with_offset { 1.0 } else { 0.0 }];
+            for i in 0..3 {
+                jtr[i] += j[i] * r;
+                for k in 0..3 {
+                    jtj[i][k] += j[i] * j[k];
+                }
+            }
+        }
+        if !with_offset {
+            jtj[2][2] = 1.0; // pin eps
+            jtr[2] = 0.0;
+        }
+        let mut damped = jtj;
+        for i in 0..3 {
+            damped[i][i] += lambda * jtj[i][i].max(1e-12);
+        }
+        let Some(delta) = solve3(damped, jtr) else { break };
+        let mut cand = [p[0] + delta[0], p[1] + delta[1], p[2] + delta[2]];
+        if !with_offset {
+            cand[2] = 0.0;
+        }
+        cand[0] = cand[0].max(1e-12);
+        cand[1] = cand[1].clamp(0.01, 2.0);
+        cand[2] = cand[2].max(0.0);
+        let cand_rss = rss_of(&cand, ns, ys);
+        if cand_rss < rss {
+            p = cand;
+            rss = cand_rss;
+            lambda = (lambda * 0.5).max(1e-12);
+            if delta.iter().all(|d| d.abs() < 1e-12) {
+                break;
+            }
+        } else {
+            lambda *= 2.0;
+            if lambda > 1e12 {
+                break;
+            }
+        }
+    }
+    PowerLawFit { a: p[0], alpha: p[1], eps: p[2], with_offset, rss }
+}
+
+/// Fig. 10: percentage loss gap of `fit_a` relative to `fit_b` at N.
+pub fn percent_gap(fit_a: &PowerLawFit, fit_b: &PowerLawFit, n: f64) -> f64 {
+    100.0 * (fit_a.predict(n) - fit_b.predict(n)) / fit_b.predict(n)
+}
+
+/// One Fig. 9/10 report: both families, both fit forms, extrapolations.
+#[derive(Debug, Clone)]
+pub struct ScalingReport {
+    pub trilm_offset: PowerLawFit,
+    pub floatlm_offset: PowerLawFit,
+    pub trilm_pure: PowerLawFit,
+    pub floatlm_pure: PowerLawFit,
+    /// (N, %gap) extrapolation samples (Fig. 10 curve).
+    pub gap_curve: Vec<(f64, f64)>,
+}
+
+pub fn scaling_report(trilm: &[(f64, f64)], floatlm: &[(f64, f64)])
+                      -> ScalingReport {
+    let split = |pts: &[(f64, f64)]| -> (Vec<f64>, Vec<f64>) {
+        (pts.iter().map(|p| p.0).collect(), pts.iter().map(|p| p.1).collect())
+    };
+    let (tn, ty) = split(trilm);
+    let (fx, fy) = split(floatlm);
+    let trilm_offset = fit_power_law(&tn, &ty, true);
+    let floatlm_offset = fit_power_law(&fx, &fy, true);
+    let max_n = tn.iter().cloned().fold(0.0, f64::max);
+    let gap_curve = (0..40).map(|i| {
+        let n = max_n * 10f64.powf(i as f64 / 8.0); // out to ~1e5x
+        (n, percent_gap(&trilm_offset, &floatlm_offset, n))
+    }).collect();
+    ScalingReport {
+        trilm_offset,
+        floatlm_offset,
+        trilm_pure: fit_power_law(&tn, &ty, false),
+        floatlm_pure: fit_power_law(&fx, &fy, false),
+        gap_curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(a: f64, alpha: f64, eps: f64, noise: f64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = crate::runtime::SplitMix64::new(5);
+        let ns: Vec<f64> = (0..8).map(|i| 1e5 * 4f64.powi(i)).collect();
+        let ys = ns.iter().enumerate().map(|(i, &n)| {
+            let _ = i;
+            a / n.powf(alpha) + eps + noise * rng.next_gaussian()
+        }).collect();
+        (ns, ys)
+    }
+
+    #[test]
+    fn recovers_exact_power_law_with_offset() {
+        let (ns, ys) = synth(185.0, 0.26, 1.76, 0.0);
+        let fit = fit_power_law(&ns, &ys, true);
+        assert!((fit.alpha - 0.26).abs() < 0.01, "alpha {}", fit.alpha);
+        assert!((fit.eps - 1.76).abs() < 0.05, "eps {}", fit.eps);
+        assert!((fit.a - 185.0).abs() / 185.0 < 0.1, "a {}", fit.a);
+    }
+
+    #[test]
+    fn recovers_pure_power_law() {
+        let (ns, ys) = synth(50.0, 0.2, 0.0, 0.0);
+        let fit = fit_power_law(&ns, &ys, false);
+        assert_eq!(fit.eps, 0.0);
+        assert!((fit.alpha - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn noise_tolerant() {
+        let (ns, ys) = synth(100.0, 0.3, 2.0, 0.01);
+        let fit = fit_power_law(&ns, &ys, true);
+        assert!((fit.alpha - 0.3).abs() < 0.1);
+        assert!(fit.rss < 0.01);
+    }
+
+    #[test]
+    fn offset_fit_beats_pure_when_offset_exists() {
+        let (ns, ys) = synth(100.0, 0.3, 2.0, 0.0);
+        let with = fit_power_law(&ns, &ys, true);
+        let without = fit_power_law(&ns, &ys, false);
+        assert!(with.rss < without.rss * 0.5,
+                "{} !< {}", with.rss, without.rss);
+    }
+
+    #[test]
+    fn paper_eq1_gap_closes_with_scale() {
+        // Using the paper's own Eq. 1 constants, the TriLM-FloatLM gap
+        // shrinks with N (Fig. 10): ~7% at 15.6B, ~6% at 330B.
+        let trilm = PowerLawFit { a: 185.0, alpha: 0.26, eps: 1.76,
+                                  with_offset: true, rss: 0.0 };
+        let floatlm = PowerLawFit { a: 159.0, alpha: 0.26, eps: 1.67,
+                                    with_offset: true, rss: 0.0 };
+        let g15 = percent_gap(&trilm, &floatlm, 15.6e9);
+        let g330 = percent_gap(&trilm, &floatlm, 330e9);
+        assert!(g330 < g15);
+        assert!((g15 - 7.0).abs() < 1.5, "gap@15.6B {g15}");
+        assert!((g330 - 6.0).abs() < 1.5, "gap@330B {g330}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Checkpoint store: named f32 tensors + JSON metadata on disk.
+//!
+//! Format: one `.spt` file per checkpoint — a JSON header (names,
+//! shapes, arbitrary metadata) length-prefixed with a u64, followed by
+//! the raw little-endian f32 payloads in header order. This keeps the
+//! 500+-checkpoint release workflow of the paper (§4.1 "Public
+//! Accessibility") practical at repo scale.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+
+use crate::runtime::HostTensor;
+use crate::util::Json;
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"SPECTRA1";
+
+/// An in-memory checkpoint: ordered named tensors + string metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub tensors: Vec<(String, HostTensor)>,
+    pub metadata: BTreeMap<String, String>,
+}
+
+impl Checkpoint {
+    pub fn new(tensors: Vec<(String, HostTensor)>) -> Self {
+        Checkpoint { tensors, metadata: BTreeMap::new() }
+    }
+
+    pub fn with_meta(mut self, key: &str, value: impl ToString) -> Self {
+        self.metadata.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let header = Json::obj(vec![
+            ("tensors", Json::arr(self.tensors.iter().map(|(n, t)| {
+                Json::obj(vec![
+                    ("name", Json::str(n.clone())),
+                    ("shape", Json::arr(t.shape.iter()
+                        .map(|&d| Json::num(d as f64)))),
+                ])
+            }))),
+            ("metadata", Json::Obj(self.metadata.iter()
+                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                .collect())),
+        ]);
+        let hjson = header.to_string().into_bytes();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for (_, t) in &self.tensors {
+            for &v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            anyhow::bail!("{} is not a spectra checkpoint", path.display());
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let mut hjson = vec![0u8; u64::from_le_bytes(lenb) as usize];
+        f.read_exact(&mut hjson)?;
+        let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+        let metas = header.get("tensors")?.as_arr()?;
+        let mut tensors = Vec::with_capacity(metas.len());
+        for meta in metas {
+            let name = meta.get("name")?.as_str()?.to_string();
+            let shape = meta.get("shape")?.as_usize_vec()?;
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes.chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push((name, HostTensor::new(shape, data)));
+        }
+        let metadata = header.get("metadata")?.as_obj()?.iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Checkpoint { tensors, metadata })
+    }
+
+    /// Tensors in file order, without names (runtime calling convention).
+    pub fn tensor_list(&self) -> Vec<HostTensor> {
+        self.tensors.iter().map(|(_, t)| t.clone()).collect()
+    }
+
+    /// Total bytes of tensor payload.
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![8, 4], 1.0, 1)),
+            ("l0.attn_q".into(), HostTensor::randn(vec![4, 4], 1.0, 2)),
+        ]).with_meta("step", 123).with_meta("family", "ternary")
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let path = dir.path().join("ckpt.spt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors, ck.tensors);
+        assert_eq!(back.metadata["step"], "123");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::testutil::TempDir::new();
+        let path = dir.path().join("junk.spt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn get_by_name() {
+        let ck = sample();
+        assert!(ck.get("embed").is_some());
+        assert!(ck.get("missing").is_none());
+        assert_eq!(ck.payload_bytes(), (32 + 16) * 4);
+    }
+}

@@ -1,0 +1,129 @@
+//! Dynamic loss scaling — the FP16 mixed-precision mechanism whose
+//! artifacts Table 5 documents (min loss-scale, skipped batches).
+//!
+//! The train graph multiplies the loss by the current scale before
+//! backprop and reports whether all (fp16-round-tripped) gradients were
+//! finite; this state machine owns the scale: halve + skip on overflow,
+//! double after a window of clean steps. Defaults follow the paper's
+//! cited recipe (Micikevicius et al. 2018) with the recommended floor
+//! of 128 referenced in §A.5.
+
+/// Dynamic loss-scale controller.
+#[derive(Debug, Clone)]
+pub struct DynamicLossScale {
+    pub scale: f32,
+    pub growth_interval: usize,
+    pub max_scale: f32,
+    pub min_scale: f32,
+    good_steps: usize,
+    /// Lowest scale ever reached (Table 5 "Min. Loss-Scale").
+    pub min_seen: f32,
+    /// Batches skipped due to overflow (Table 5 "# Skipped Batches").
+    pub skipped: usize,
+}
+
+impl Default for DynamicLossScale {
+    fn default() -> Self {
+        DynamicLossScale::new(65_536.0)
+    }
+}
+
+impl DynamicLossScale {
+    pub fn new(initial: f32) -> Self {
+        DynamicLossScale {
+            scale: initial,
+            growth_interval: 200,
+            max_scale: 65_536.0,
+            min_scale: 1.0,
+            good_steps: 0,
+            min_seen: initial,
+            skipped: 0,
+        }
+    }
+
+    /// Record a step outcome; returns the scale for the *next* step.
+    pub fn update(&mut self, grads_finite: bool) -> f32 {
+        if grads_finite {
+            self.good_steps += 1;
+            if self.good_steps >= self.growth_interval {
+                self.scale = (self.scale * 2.0).min(self.max_scale);
+                self.good_steps = 0;
+            }
+        } else {
+            self.skipped += 1;
+            self.scale = (self.scale / 2.0).max(self.min_scale);
+            self.good_steps = 0;
+        }
+        self.min_seen = self.min_seen.min(self.scale);
+        self.scale
+    }
+
+    /// Whether the run stayed at or above the recommended floor of 128
+    /// (the §A.5 health check for FP16 training).
+    pub fn above_recommended_floor(&self) -> bool {
+        self.min_seen >= 128.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overflow_halves_and_counts() {
+        let mut ls = DynamicLossScale::new(1024.0);
+        ls.update(false);
+        assert_eq!(ls.scale, 512.0);
+        assert_eq!(ls.skipped, 1);
+        ls.update(false);
+        assert_eq!(ls.scale, 256.0);
+        assert_eq!(ls.min_seen, 256.0);
+    }
+
+    #[test]
+    fn growth_after_interval() {
+        let mut ls = DynamicLossScale::new(256.0);
+        ls.growth_interval = 3;
+        ls.update(true);
+        ls.update(true);
+        assert_eq!(ls.scale, 256.0);
+        ls.update(true);
+        assert_eq!(ls.scale, 512.0);
+    }
+
+    #[test]
+    fn overflow_resets_growth_window() {
+        let mut ls = DynamicLossScale::new(256.0);
+        ls.growth_interval = 2;
+        ls.update(true);
+        ls.update(false); // resets window, halves
+        ls.update(true);
+        assert_eq!(ls.scale, 128.0, "growth window must restart");
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut ls = DynamicLossScale::new(2.0);
+        for _ in 0..10 {
+            ls.update(false);
+        }
+        assert_eq!(ls.scale, ls.min_scale);
+        let mut ls = DynamicLossScale::new(65_536.0);
+        ls.growth_interval = 1;
+        for _ in 0..5 {
+            ls.update(true);
+        }
+        assert_eq!(ls.scale, ls.max_scale);
+    }
+
+    #[test]
+    fn floor_check_tracks_min_seen() {
+        let mut ls = DynamicLossScale::new(1024.0);
+        assert!(ls.above_recommended_floor());
+        for _ in 0..4 {
+            ls.update(false);
+        }
+        assert_eq!(ls.min_seen, 64.0);
+        assert!(!ls.above_recommended_floor());
+    }
+}

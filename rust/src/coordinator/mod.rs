@@ -1,0 +1,15 @@
+//! The L3 coordination layer: training orchestration for the Spectra
+//! suite — the Rust owner of the event loop, schedules, loss-scaling
+//! state, checkpoints and the size x family grid. All compute runs
+//! through AOT-compiled PJRT executables; Python is never invoked.
+
+pub mod loss_scale;
+pub mod schedule;
+pub mod suite;
+pub mod trainer;
+
+pub use loss_scale::DynamicLossScale;
+pub use schedule::{learning_rate, weight_decay, ScheduleVariant};
+pub use suite::{run_suite, scaling_from_results, ModelRecord, SuiteResults,
+                SuiteSpec};
+pub use trainer::{RunLog, StepMetrics, Trainer};

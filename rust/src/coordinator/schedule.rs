@@ -1,0 +1,163 @@
+//! The Spectra optimization schedule (§3.2, Fig. 6).
+//!
+//! TriLM/BiLM/BitNet: linear decay with warmup plus two interventions —
+//!   (1) *Peak LR*: at the halfway point the peak learning rate drops
+//!       (Table 3's "2.4e-3 -> 1.5e-3" arrows);
+//!   (2) *L2 Reg.*: at the two-thirds point weight decay is removed
+//!       (ternarization provides sufficient regularization).
+//! FloatLM: cosine decay with warmup and constant weight decay (§A.4).
+
+use crate::config::TrainConfig;
+
+/// Learning rate at `step` (0-based) for the configured schedule.
+pub fn learning_rate(cfg: &TrainConfig, step: usize) -> f32 {
+    let s = step as f32;
+    let total = cfg.steps as f32;
+    let warmup = cfg.warmup_steps as f32;
+    if s < warmup {
+        return cfg.peak_lr * (s + 1.0) / warmup;
+    }
+    let progress = ((s - warmup) / (total - warmup).max(1.0)).min(1.0);
+    if cfg.cosine {
+        // Cosine to 10% of peak (Pythia/OLMo-style floor).
+        let min_lr = 0.1 * cfg.peak_lr;
+        return min_lr
+            + 0.5 * (cfg.peak_lr - min_lr)
+                * (1.0 + (std::f32::consts::PI * progress).cos());
+    }
+    // Linear decay to zero; after the halfway intervention the schedule
+    // is re-anchored at the lower peak (same decay endpoint).
+    let peak = if cfg.drop_peak_lr && s >= total / 2.0 {
+        cfg.post_drop_lr
+    } else {
+        cfg.peak_lr
+    };
+    peak * (1.0 - progress)
+}
+
+/// Weight decay at `step`: removed at the 2/3 mark when configured.
+pub fn weight_decay(cfg: &TrainConfig, step: usize) -> f32 {
+    if cfg.drop_weight_decay && (step as f32) >= (cfg.steps as f32) * 2.0 / 3.0 {
+        0.0
+    } else {
+        cfg.weight_decay
+    }
+}
+
+/// The four Fig. 6 ablation variants of the TriLM schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleVariant {
+    /// Both interventions (the TriLM default).
+    Both,
+    /// Only the halfway peak-LR drop.
+    OnlyPeakLrDrop,
+    /// Only the two-thirds weight-decay removal.
+    OnlyWdRemoval,
+    /// Vanilla linear decay with constant weight decay.
+    Baseline,
+}
+
+impl ScheduleVariant {
+    pub const ALL: [ScheduleVariant; 4] = [
+        ScheduleVariant::Both,
+        ScheduleVariant::OnlyPeakLrDrop,
+        ScheduleVariant::OnlyWdRemoval,
+        ScheduleVariant::Baseline,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScheduleVariant::Both => "both",
+            ScheduleVariant::OnlyPeakLrDrop => "only_peak_lr",
+            ScheduleVariant::OnlyWdRemoval => "only_l2_removal",
+            ScheduleVariant::Baseline => "baseline",
+        }
+    }
+
+    pub fn apply(self, mut cfg: TrainConfig) -> TrainConfig {
+        let (drop_lr, drop_wd) = match self {
+            ScheduleVariant::Both => (true, true),
+            ScheduleVariant::OnlyPeakLrDrop => (true, false),
+            ScheduleVariant::OnlyWdRemoval => (false, true),
+            ScheduleVariant::Baseline => (false, false),
+        };
+        cfg.drop_peak_lr = drop_lr;
+        cfg.drop_weight_decay = drop_wd;
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Family;
+
+    fn trilm(steps: usize) -> TrainConfig {
+        TrainConfig::for_family(Family::Ternary, steps)
+    }
+
+    fn floatlm(steps: usize) -> TrainConfig {
+        TrainConfig::for_family(Family::Float, steps)
+    }
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let cfg = trilm(1000);
+        assert!(learning_rate(&cfg, 0) < cfg.peak_lr / 2.0);
+        let at_warmup = learning_rate(&cfg, cfg.warmup_steps);
+        assert!((at_warmup - cfg.peak_lr).abs() / cfg.peak_lr < 0.05);
+    }
+
+    #[test]
+    fn peak_lr_drops_at_halfway() {
+        let cfg = trilm(1000);
+        let before = learning_rate(&cfg, 499);
+        let after = learning_rate(&cfg, 500);
+        assert!(after < before, "{after} !< {before}");
+        // The drop ratio mirrors post_drop/peak.
+        let ratio = after / before;
+        let want = cfg.post_drop_lr / cfg.peak_lr;
+        assert!((ratio - want).abs() < 0.05, "{ratio} vs {want}");
+    }
+
+    #[test]
+    fn no_drop_without_intervention() {
+        let cfg = ScheduleVariant::Baseline.apply(trilm(1000));
+        let before = learning_rate(&cfg, 499);
+        let after = learning_rate(&cfg, 500);
+        assert!(after <= before && before - after < 0.01 * cfg.peak_lr);
+    }
+
+    #[test]
+    fn weight_decay_removed_at_two_thirds() {
+        let cfg = trilm(900);
+        assert_eq!(weight_decay(&cfg, 599), cfg.weight_decay);
+        assert_eq!(weight_decay(&cfg, 600), 0.0);
+    }
+
+    #[test]
+    fn floatlm_cosine_keeps_wd_and_never_drops() {
+        let cfg = floatlm(1000);
+        assert_eq!(weight_decay(&cfg, 999), cfg.weight_decay);
+        // Cosine is smooth through the halfway point.
+        let d = learning_rate(&cfg, 499) - learning_rate(&cfg, 501);
+        assert!(d.abs() < 1e-5 * 1000.0);
+        // Ends at the 10% floor.
+        let end = learning_rate(&cfg, 1000);
+        assert!((end - 0.1 * cfg.peak_lr).abs() < 0.02 * cfg.peak_lr);
+    }
+
+    #[test]
+    fn linear_decay_reaches_zero() {
+        let cfg = ScheduleVariant::Baseline.apply(trilm(1000));
+        assert!(learning_rate(&cfg, 1000) < 1e-6);
+    }
+
+    #[test]
+    fn variants_differ_only_in_flags() {
+        let base = trilm(100);
+        let v = ScheduleVariant::OnlyWdRemoval.apply(base.clone());
+        assert!(!v.drop_peak_lr && v.drop_weight_decay);
+        assert_eq!(v.peak_lr, base.peak_lr);
+    }
+}

@@ -1,0 +1,346 @@
+//! The Spectra suite runner (§4): trains the size x family grid on
+//! identical data, builds QuantLMs from the trained FloatLMs, and
+//! evaluates everything — the engine behind Figs. 1, 8, 9, 11, 12 and
+//! Tables 6/7/9/12-analogs.
+
+use std::path::{Path, PathBuf};
+
+
+use crate::analysis;
+use crate::checkpoint::Checkpoint;
+use crate::config::{suite_config, Family, TrainConfig};
+use crate::coordinator::trainer::Trainer;
+use crate::data::{Batcher, Dataset, Domain};
+use crate::deploy::{model_size_bits, SizeFamily};
+use crate::eval::{self, Evaluator, TaskKind, TaskScore};
+use crate::gptq;
+use crate::runtime::{self, HostTensor, Runtime};
+use crate::util::Json;
+use crate::Result;
+
+/// What to run.
+#[derive(Debug, Clone)]
+pub struct SuiteSpec {
+    pub sizes: Vec<String>,
+    pub families: Vec<Family>,
+    pub steps: usize,
+    /// GPTQ bitwidths applied to each trained FloatLM.
+    pub quant_bits: Vec<u32>,
+    pub eval_items: usize,
+    pub calib_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for SuiteSpec {
+    fn default() -> Self {
+        SuiteSpec {
+            sizes: vec!["160k".into(), "430k".into(), "930k".into()],
+            families: vec![Family::Float, Family::Ternary],
+            steps: 300,
+            quant_bits: vec![3, 4, 8],
+            eval_items: 50,
+            calib_batches: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// One evaluated model (trained family or derived QuantLM).
+#[derive(Debug, Clone)]
+pub struct ModelRecord {
+    pub name: String,
+    pub size: String,
+    /// "float", "ternary", "binary", "bitnet", or "quant3"/"quant4"/...
+    pub family: String,
+    pub n_params: usize,
+    pub size_bits: f64,
+    pub final_train_loss: f32,
+    pub val_nll: f64,
+    /// Per-domain val NLL (Fig. 13 analog).
+    pub domain_nll: Vec<(String, f64)>,
+    pub tasks: Vec<TaskScore>,
+}
+
+/// Suite output: all records + where artifacts were written.
+#[derive(Debug, Clone)]
+pub struct SuiteResults {
+    pub records: Vec<ModelRecord>,
+    pub run_dir: String,
+}
+
+impl ModelRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("size", Json::str(self.size.clone())),
+            ("family", Json::str(self.family.clone())),
+            ("n_params", Json::num(self.n_params as f64)),
+            ("size_bits", Json::num(self.size_bits)),
+            ("final_train_loss", Json::num(self.final_train_loss as f64)),
+            ("val_nll", Json::num(self.val_nll)),
+            ("domain_nll", Json::arr(self.domain_nll.iter().map(|(d, v)| {
+                Json::arr([Json::str(d.clone()), Json::num(*v)])
+            }))),
+            ("tasks", Json::arr(self.tasks.iter().map(|t| {
+                Json::obj(vec![
+                    ("task", Json::str(t.task.clone())),
+                    ("n", Json::num(t.n as f64)),
+                    ("acc", Json::num(t.acc)),
+                    ("acc_norm", Json::num(t.acc_norm)),
+                    ("stderr", Json::num(t.stderr)),
+                ])
+            }))),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelRecord {
+            name: j.get("name")?.as_str()?.to_string(),
+            size: j.get("size")?.as_str()?.to_string(),
+            family: j.get("family")?.as_str()?.to_string(),
+            n_params: j.get("n_params")?.as_usize()?,
+            size_bits: j.get("size_bits")?.as_f64()?,
+            final_train_loss: j.get("final_train_loss")?.as_f64()? as f32,
+            val_nll: j.get("val_nll")?.as_f64()?,
+            domain_nll: j.get("domain_nll")?.as_arr()?.iter().map(|p| {
+                let pair = p.as_arr()?;
+                Ok((pair[0].as_str()?.to_string(), pair[1].as_f64()?))
+            }).collect::<Result<Vec<_>>>()?,
+            tasks: j.get("tasks")?.as_arr()?.iter().map(|t| {
+                Ok(TaskScore {
+                    task: t.get("task")?.as_str()?.to_string(),
+                    n: t.get("n")?.as_usize()?,
+                    acc: t.get("acc")?.as_f64()?,
+                    acc_norm: t.get("acc_norm")?.as_f64()?,
+                    stderr: t.get("stderr")?.as_f64()?,
+                })
+            }).collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+impl SuiteResults {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let j = Json::obj(vec![
+            ("run_dir", Json::str(self.run_dir.clone())),
+            ("records", Json::arr(self.records.iter()
+                .map(|r| r.to_json()))),
+        ]);
+        std::fs::write(path, j.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        Ok(SuiteResults {
+            run_dir: j.get("run_dir")?.as_str()?.to_string(),
+            records: j.get("records")?.as_arr()?.iter()
+                .map(ModelRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// (params, val_nll) points for one family — scaling-fit input.
+    pub fn family_points(&self, family: &str) -> Vec<(f64, f64)> {
+        self.records.iter()
+            .filter(|r| r.family == family)
+            .map(|r| (r.n_params as f64, r.val_nll))
+            .collect()
+    }
+}
+
+/// Evaluate a parameter set: val nll, per-domain nll, all tasks.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_model(rt: &Runtime, model: &str, params: &[HostTensor],
+                  data: &Dataset, spec: &SuiteSpec, name: &str,
+                  family_label: &str, size: &str,
+                  final_train_loss: f32, bits_family: SizeFamily)
+                  -> Result<ModelRecord> {
+    let ev = Evaluator::new(rt, model)?;
+    let lits: Vec<xla::Literal> = params.iter()
+        .map(runtime::literal_from_tensor)
+        .collect::<Result<_>>()?;
+    let val_nll = ev.nll(&lits, &data.val)?;
+
+    let mut domain_nll = Vec::new();
+    for dom in Domain::ALL {
+        let toks = data.domain_tokens(dom, 40_000, spec.seed ^ 0xD0);
+        domain_nll.push((dom.as_str().to_string(), ev.nll(&lits, &toks)?));
+    }
+
+    let mut tasks = Vec::new();
+    for kind in TaskKind::ALL {
+        let n = if kind == TaskKind::FactRecall {
+            spec.eval_items / 2 // 48-way items are slow; half count
+        } else {
+            spec.eval_items
+        };
+        let items = eval::generate(&data.world, kind, n, spec.seed ^ 0xE0);
+        tasks.push(eval::run_task(&ev, &lits, &data.bpe, kind, &items)?);
+    }
+
+    let cfg = suite_config(size, Family::Float).unwrap();
+    Ok(ModelRecord {
+        name: name.to_string(),
+        size: size.to_string(),
+        family: family_label.to_string(),
+        n_params: cfg.n_params(),
+        size_bits: model_size_bits(&cfg, bits_family),
+        final_train_loss,
+        val_nll,
+        domain_nll,
+        tasks,
+    })
+}
+
+/// Train + evaluate the whole grid. Writes checkpoints, loss CSVs and
+/// `suite_results.json` under `run_dir`.
+pub fn run_suite(rt: &Runtime, data: &Dataset, spec: &SuiteSpec,
+                 run_dir: &Path) -> Result<SuiteResults> {
+    std::fs::create_dir_all(run_dir)?;
+    let mut records = Vec::new();
+
+    for size in &spec.sizes {
+        for &family in &spec.families {
+            let model = format!("{size}_{}", family.as_str());
+            if rt.manifest().models.get(&model).is_none() {
+                // paper scope: binary/bitnet exist only at select sizes
+                continue;
+            }
+            let ckpt_path = run_dir.join(format!("{model}.spt"));
+            // Resume support: a completed checkpoint in the run dir is
+            // reused instead of retraining (incremental suite runs).
+            let (params, final_loss) = if ckpt_path.exists() {
+                eprintln!("[suite] reusing checkpoint for {model}");
+                let ck = Checkpoint::load(&ckpt_path)?;
+                let loss: f32 = ck.metadata.get("final_loss")
+                    .and_then(|v| v.parse().ok()).unwrap_or(f32::NAN);
+                (ck.tensor_list(), loss)
+            } else {
+                eprintln!("[suite] training {model} ({} steps)", spec.steps);
+                let cfg = TrainConfig {
+                    seed: spec.seed,
+                    ..TrainConfig::for_family(family, spec.steps)
+                };
+                let mut trainer = Trainer::new(rt, &model, cfg)?;
+                // Identical data order across families: seed fixed per size.
+                let mut batcher = Batcher::new(data.train.clone(),
+                                               rt.manifest().train_batch,
+                                               rt.manifest().seq, spec.seed);
+                let mut last_print = std::time::Instant::now();
+                trainer.train(&mut batcher, spec.steps, |m| {
+                    if last_print.elapsed().as_secs() >= 10 {
+                        eprintln!("[suite] {model} step {} loss {:.4}",
+                                  m.step, m.loss);
+                        last_print = std::time::Instant::now();
+                    }
+                })?;
+                trainer.log.write_csv(&run_dir.join(format!("{model}_loss.csv")))?;
+                trainer.save_checkpoint(rt, &model, &ckpt_path)?;
+                (trainer.params()?, trainer.log.final_loss(20))
+            };
+            records.push(evaluate_model(
+                rt, &model, &params, data, spec, &model,
+                family.as_str(), size, final_loss,
+                SizeFamily::from_family(family))?);
+
+            // Incremental save: a crash or OOM never loses finished work.
+            SuiteResults { records: records.clone(),
+                           run_dir: run_dir.display().to_string() }
+                .save(&run_dir.join("suite_results.json"))?;
+
+            // QuantLM derivation from the trained FloatLM (§4.2).
+            if family == Family::Float && !spec.quant_bits.is_empty() {
+                let calib = calibration_batches(rt, data, spec);
+                let lits: Vec<xla::Literal> = params.iter()
+                    .map(runtime::literal_from_tensor)
+                    .collect::<Result<_>>()?;
+                let hessians =
+                    gptq::accumulate_hessians(rt, &model, &lits, &calib)?;
+                for &bits in &spec.quant_bits {
+                    eprintln!("[suite] GPTQ {model} -> {bits}-bit");
+                    let qm = gptq::quantize_model(rt, &model, &params,
+                                                  &hessians, bits, 128)?;
+                    let label = format!("quant{bits}");
+                    records.push(evaluate_model(
+                        rt, &model, &qm.params, data, spec,
+                        &format!("{size}_{label}"), &label, size, final_loss,
+                        SizeFamily::Quant { bits, group: 128 })?);
+                    SuiteResults { records: records.clone(),
+                                   run_dir: run_dir.display().to_string() }
+                        .save(&run_dir.join("suite_results.json"))?;
+                }
+            }
+        }
+    }
+
+    let results = SuiteResults {
+        records,
+        run_dir: run_dir.display().to_string(),
+    };
+    results.save(&run_dir.join("suite_results.json"))?;
+    Ok(results)
+}
+
+/// Calibration batches drawn deterministically from the training stream
+/// (the paper uses training-distribution calibration data).
+pub fn calibration_batches(rt: &Runtime, data: &Dataset, spec: &SuiteSpec)
+                           -> Vec<Vec<i32>> {
+    let b = rt.manifest().capture_batch;
+    let s = rt.manifest().seq;
+    let mut batcher = Batcher::new(data.train.clone(), b, s - 1,
+                                   spec.seed ^ 0xCA11B);
+    (0..spec.calib_batches).map(|_| {
+        // batcher yields b*(s) tokens with seq = s-1; capture wants b*s.
+        batcher.next_batch()
+    }).collect()
+}
+
+/// Fit the Fig. 9/10 scaling laws from suite results.
+pub fn scaling_from_results(results: &SuiteResults)
+                            -> Option<analysis::ScalingReport> {
+    let trilm = results.family_points("ternary");
+    let floatlm = results.family_points("float");
+    if trilm.len() >= 3 && floatlm.len() >= 3 {
+        Some(analysis::scaling_report(&trilm, &floatlm))
+    } else {
+        None
+    }
+}
+
+/// Run directory convention: `runs/<tag>/`.
+pub fn run_dir(tag: &str) -> PathBuf {
+    PathBuf::from("runs").join(tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_sane() {
+        let s = SuiteSpec::default();
+        assert!(s.sizes.len() >= 3);
+        assert!(s.families.contains(&Family::Ternary));
+    }
+
+    #[test]
+    fn results_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let r = SuiteResults {
+            records: vec![ModelRecord {
+                name: "160k_float".into(), size: "160k".into(),
+                family: "float".into(), n_params: 160064,
+                size_bits: 2.5e6, final_train_loss: 3.0, val_nll: 3.1,
+                domain_nll: vec![("web".into(), 3.0)],
+                tasks: vec![],
+            }],
+            run_dir: "runs/test".into(),
+        };
+        let path = dir.path().join("r.json");
+        r.save(&path).unwrap();
+        let back = SuiteResults::load(&path).unwrap();
+        assert_eq!(back.records.len(), 1);
+        assert_eq!(back.family_points("float"), vec![(160064.0, 3.1)]);
+    }
+}

@@ -1,0 +1,206 @@
+//! The training orchestrator: drives the AOT-compiled train-step graph
+//! from the request path with zero Python.
+//!
+//! One `Trainer` owns the compiled graph, the model state (params +
+//! Adam moments as device-ready literals), the LR/WD schedule, and the
+//! dynamic loss-scale state machine. The main loop is: pull a batch from
+//! the deterministic batcher, assemble the flat argument list per the
+//! manifest calling convention, execute, thread the returned state into
+//! the next step, and log metrics.
+
+use std::path::Path;
+
+use crate::checkpoint::Checkpoint;
+use crate::config::TrainConfig;
+use crate::coordinator::loss_scale::DynamicLossScale;
+use crate::coordinator::schedule;
+use crate::data::Batcher;
+use crate::runtime::{self, Graph, HostTensor, Runtime, TrainState};
+use crate::Result;
+
+/// Per-step metrics (one CSV row).
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub loss_scale: f32,
+    pub grads_finite: bool,
+    pub tokens_seen: usize,
+}
+
+/// A whole run's metric log, CSV-serializable.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub rows: Vec<StepMetrics>,
+}
+
+impl RunLog {
+    pub fn losses(&self) -> Vec<f32> {
+        self.rows.iter().map(|r| r.loss).collect()
+    }
+
+    /// Mean loss over the final `n` steps (smoothed "final training loss").
+    pub fn final_loss(&self, n: usize) -> f32 {
+        let tail: Vec<f32> = self.rows.iter().rev().take(n)
+            .filter(|r| r.grads_finite).map(|r| r.loss).collect();
+        tail.iter().sum::<f32>() / tail.len().max(1) as f32
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from(
+            "step,loss,grad_norm,lr,weight_decay,loss_scale,grads_finite,tokens\n");
+        for r in &self.rows {
+            out.push_str(&format!("{},{},{},{},{},{},{},{}\n",
+                r.step, r.loss, r.grad_norm, r.lr, r.weight_decay,
+                r.loss_scale, r.grads_finite as u8, r.tokens_seen));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+/// Trains one model on one dataset with the Spectra schedule.
+pub struct Trainer {
+    graph: Graph,
+    state: TrainState,
+    pub cfg: TrainConfig,
+    pub loss_scale: DynamicLossScale,
+    pub log: RunLog,
+    n_params_arrays: usize,
+    step: usize,
+    batch_shape: (usize, usize),
+}
+
+impl Trainer {
+    /// Compile the model's train graph and initialize fresh state.
+    pub fn new(rt: &Runtime, model: &str, cfg: TrainConfig) -> Result<Self> {
+        let entry = rt.manifest().model(model)?;
+        let graph_name = if cfg.fp16 { "train_fp16" } else { "train" };
+        let graph = rt.load_graph(model, graph_name)?;
+        let params = runtime::init_params_like(entry, cfg.seed);
+        let state = TrainState::init(&params)?;
+        let batch_shape = (rt.manifest().train_batch, rt.manifest().seq + 1);
+        let loss_scale = if cfg.fp16 {
+            DynamicLossScale::default()
+        } else {
+            // f32 training: scale pinned at 1, never overflows.
+            let mut ls = DynamicLossScale::new(1.0);
+            ls.max_scale = 1.0;
+            ls
+        };
+        Ok(Trainer {
+            graph,
+            state,
+            cfg,
+            loss_scale,
+            log: RunLog::default(),
+            n_params_arrays: entry.n_param_arrays(),
+            step: 0,
+            batch_shape,
+        })
+    }
+
+    /// Restore parameters from a checkpoint (moments reset to zero).
+    pub fn load_params(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.state = TrainState::init(&ck.tensor_list())?;
+        Ok(())
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// Execute one train step on a (batch * (seq+1)) token block.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<StepMetrics> {
+        let (b, s1) = self.batch_shape;
+        assert_eq!(tokens.len(), b * s1, "bad batch shape");
+        let lr = schedule::learning_rate(&self.cfg, self.step);
+        let wd = schedule::weight_decay(&self.cfg, self.step);
+        let scale = self.loss_scale.scale;
+
+        let toks = runtime::literal_i32(&[b, s1], tokens)?;
+        let lr_l = runtime::scalar_f32(lr);
+        let wd_l = runtime::scalar_f32(wd);
+        let scale_l = runtime::scalar_f32(scale);
+
+        let p = self.n_params_arrays;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * p + 5);
+        args.extend(self.state.params.iter());
+        args.extend(self.state.m.iter());
+        args.extend(self.state.v.iter());
+        args.push(&self.state.step);
+        args.push(&toks);
+        args.push(&lr_l);
+        args.push(&wd_l);
+        args.push(&scale_l);
+
+        let mut outs = self.graph.run(&args)?;
+        // Outputs: params(P), m(P), v(P), step, loss, gnorm, finite.
+        let finite = runtime::scalar_from_literal(&outs[3 * p + 3])? > 0.5;
+        let gnorm = runtime::scalar_from_literal(&outs[3 * p + 2])?;
+        let loss = runtime::scalar_from_literal(&outs[3 * p + 1])?;
+        outs.truncate(3 * p + 1);
+        let step_lit = outs.pop().unwrap();
+        let v = outs.split_off(2 * p);
+        let m = outs.split_off(p);
+        self.state = TrainState { params: outs, m, v, step: step_lit };
+
+        self.loss_scale.update(finite);
+        self.step += 1;
+        let metrics = StepMetrics {
+            step: self.step,
+            loss,
+            grad_norm: gnorm,
+            lr,
+            weight_decay: wd,
+            loss_scale: scale,
+            grads_finite: finite,
+            tokens_seen: self.step * b * (s1 - 1),
+        };
+        self.log.rows.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Run `n` steps against a batcher, optionally reporting progress.
+    pub fn train(&mut self, batcher: &mut Batcher, n: usize,
+                 mut progress: impl FnMut(&StepMetrics)) -> Result<()> {
+        for _ in 0..n {
+            let batch = batcher.next_batch();
+            let m = self.step(&batch)?;
+            progress(&m);
+        }
+        Ok(())
+    }
+
+    /// Snapshot current parameters to host.
+    pub fn params(&self) -> Result<Vec<HostTensor>> {
+        self.state.params_to_host()
+    }
+
+    /// Borrow the raw device-ready parameter literals (for evaluation
+    /// without a host round-trip).
+    pub fn param_literals(&self) -> &[xla::Literal] {
+        &self.state.params
+    }
+
+    /// Save a checkpoint with run metadata.
+    pub fn save_checkpoint(&self, rt: &Runtime, model: &str, path: &Path)
+                           -> Result<()> {
+        let entry = rt.manifest().model(model)?;
+        let params = self.params()?;
+        let tensors = entry.params.iter().zip(params)
+            .map(|(spec, t)| (spec.name.clone(), t))
+            .collect();
+        Checkpoint::new(tensors)
+            .with_meta("model", model)
+            .with_meta("step", self.step)
+            .with_meta("final_loss", self.log.final_loss(20))
+            .save(path)
+    }
+}

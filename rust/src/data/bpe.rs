@@ -1,0 +1,233 @@
+//! Byte-level BPE tokenizer (trainer + encoder + decoder).
+//!
+//! Stands in for the paper's GPT-NeoX 20B tokenizer (§A.2): the suite
+//! needs a real subword tokenizer so that corpus token statistics,
+//! perplexities, and the benchmark harness exercise the same code paths
+//! as the paper's pipeline. Vocab defaults to 512 (256 bytes + 256
+//! learned merges), matching the model configs.
+
+use std::collections::HashMap;
+
+
+/// A trained byte-level BPE model.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merges[i] = (left, right) token ids merged into id 256 + i.
+    pub merges: Vec<(u32, u32)>,
+    /// vocab[id] = byte sequence for that token.
+    pub vocab: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Train on `text` until `vocab_size` tokens exist.
+    ///
+    /// Classic BPE over whitespace-delimited words (spaces are attached
+    /// to the following word, GPT-2 style, so decoding is lossless).
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256, "vocab must cover all bytes");
+        // word -> count, each word as a token-id sequence.
+        let mut words: HashMap<Vec<u32>, usize> = HashMap::new();
+        for w in split_words(text) {
+            *words.entry(w.bytes().map(|b| b as u32).collect()).or_insert(0) += 1;
+        }
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = Vec::new();
+
+        while vocab.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut pairs: HashMap<(u32, u32), usize> = HashMap::new();
+            for (word, count) in &words {
+                for pair in word.windows(2) {
+                    *pairs.entry((pair[0], pair[1])).or_insert(0) += count;
+                }
+            }
+            // Deterministic tie-break: highest count, then lowest ids.
+            let Some((&best, _)) = pairs.iter().max_by_key(|(&(a, b), &c)| {
+                (c, std::cmp::Reverse((a, b)))
+            }) else {
+                break;
+            };
+            if pairs[&best] < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = vocab.len() as u32;
+            let mut merged_bytes = vocab[best.0 as usize].clone();
+            merged_bytes.extend_from_slice(&vocab[best.1 as usize]);
+            vocab.push(merged_bytes);
+            merges.push(best);
+            // Apply the merge to every word.
+            words = words.into_iter().map(|(word, count)| {
+                (apply_merge(&word, best, new_id), count)
+            }).collect();
+        }
+        Bpe { merges, vocab }
+    }
+
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let ranks: HashMap<(u32, u32), u32> = self.merges.iter().enumerate()
+            .map(|(i, &p)| (p, 256 + i as u32)).collect();
+        let mut out = Vec::with_capacity(text.len() / 3);
+        let mut cache: HashMap<&str, Vec<u32>> = HashMap::new();
+        for w in split_words(text) {
+            if let Some(toks) = cache.get(w) {
+                out.extend_from_slice(toks);
+                continue;
+            }
+            let toks = self.encode_word(w, &ranks);
+            out.extend_from_slice(&toks);
+            cache.insert(w, toks);
+        }
+        out
+    }
+
+    fn encode_word(&self, word: &str, ranks: &HashMap<(u32, u32), u32>) -> Vec<u32> {
+        let mut toks: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+        loop {
+            // Lowest-rank (earliest-learned) applicable merge first.
+            let mut best: Option<(u32, usize)> = None;
+            for (i, pair) in toks.windows(2).enumerate() {
+                if let Some(&id) = ranks.get(&(pair[0], pair[1])) {
+                    if best.map_or(true, |(b, _)| id < b) {
+                        best = Some((id, i));
+                    }
+                }
+            }
+            let Some((id, i)) = best else { break };
+            toks.splice(i..i + 2, [id]);
+        }
+        toks
+    }
+
+    /// Decode token ids back to text (lossless for valid UTF-8 input).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            bytes.extend_from_slice(&self.vocab[t as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Save as a merge list: one `left right` pair per line (the vocab
+    /// is fully determined by the merges, so that is all we store).
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut out = String::from("spectra-bpe-v1\n");
+        for &(a, b) in &self.merges {
+            out.push_str(&format!("{a} {b}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        if lines.next() != Some("spectra-bpe-v1") {
+            anyhow::bail!("{} is not a spectra BPE file", path.display());
+        }
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = Vec::new();
+        for line in lines {
+            let mut it = line.split_whitespace();
+            let (Some(a), Some(b)) = (it.next(), it.next()) else {
+                anyhow::bail!("bad merge line: {line}");
+            };
+            let (a, b): (u32, u32) = (a.parse()?, b.parse()?);
+            let mut bytes = vocab[a as usize].clone();
+            bytes.extend_from_slice(&vocab[b as usize]);
+            vocab.push(bytes);
+            merges.push((a, b));
+        }
+        Ok(Bpe { merges, vocab })
+    }
+}
+
+/// Split into words with leading whitespace attached (GPT-2 style).
+fn split_words(text: &str) -> impl Iterator<Item = &str> {
+    let bytes = text.as_bytes();
+    let mut starts = vec![0usize];
+    for i in 1..bytes.len() {
+        // start a new word at every space->nonspace boundary
+        if bytes[i] != b' ' && bytes[i - 1] == b' ' && i >= 1 {
+            // attach exactly one leading space to the word
+            starts.push(i - 1);
+        }
+    }
+    starts.push(bytes.len());
+    starts.windows(2).map(|w| &text[w[0]..w[1]]).collect::<Vec<_>>().into_iter()
+}
+
+fn apply_merge(word: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(word.len());
+    let mut i = 0;
+    while i < word.len() {
+        if i + 1 < word.len() && word[i] == pair.0 && word[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(word[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the cat sat on the mat . the cat ran to the cat \
+                          house and the mat stayed on the floor . ";
+
+    #[test]
+    fn train_learns_merges() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        assert!(bpe.vocab_size() > 256, "no merges learned");
+        assert!(bpe.vocab_size() <= 300);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 320);
+        for text in [SAMPLE, "the cat", "unseen words zyx !", "a", ""] {
+            assert_eq!(bpe.decode(&bpe.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn compression_beats_bytes() {
+        let bpe = Bpe::train(SAMPLE, 400);
+        let toks = bpe.encode(SAMPLE);
+        assert!(toks.len() < SAMPLE.len(), "{} !< {}", toks.len(), SAMPLE.len());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Bpe::train(SAMPLE, 300);
+        let b = Bpe::train(SAMPLE, 300);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn all_ids_below_vocab() {
+        let bpe = Bpe::train(SAMPLE, 512);
+        for t in bpe.encode("completely novel text 123 !@#") {
+            assert!((t as usize) < bpe.vocab_size());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let path = dir.path().join("bpe.txt");
+        let bpe = Bpe::train(SAMPLE, 300);
+        bpe.save(&path).unwrap();
+        let loaded = Bpe::load(&path).unwrap();
+        assert_eq!(loaded.merges, bpe.merges);
+        assert_eq!(loaded.encode(SAMPLE), bpe.encode(SAMPLE));
+    }
+}

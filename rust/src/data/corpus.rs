@@ -1,0 +1,376 @@
+//! Synthetic training corpus — the stand-in for the paper's 300B-token
+//! SlimPajama subset (§A.2, Table 2).
+//!
+//! The generator produces a deterministic, seeded mixture of "domains"
+//! mirroring SlimPajama's subset structure (web / wikipedia-like /
+//! book-like / code), built from:
+//!
+//! - a stochastic grammar over a Zipfian content vocabulary (so token
+//!   statistics are natural-language-like and the LM has syntax to learn),
+//! - a world of entity–relation *facts* rendered through templates (the
+//!   learnable "knowledge" probed by the SciQ/TriviaQA-analog tasks),
+//! - fixed *implication patterns* ("if it rains , the ground gets wet")
+//!   that play the role of commonsense regularities (ARC/PIQA analogs),
+//! - narrative collocations whose final word is predictable from long
+//!   context (the LAMBADA-analog cloze signal).
+//!
+//! Domains share the grammar but differ in mixture weights and noise, so
+//! in-domain vs out-of-domain perplexity comparisons (paper Fig. 13) are
+//! meaningful.
+
+
+use crate::runtime::SplitMix64;
+
+/// One entity–relation–value fact, e.g. capital(Valdoria) = Merenthal.
+#[derive(Debug, Clone)]
+pub struct Fact {
+    pub relation: usize,
+    pub entity: String,
+    pub value: String,
+}
+
+/// An antecedent->consequent pattern pair, e.g. "rains" -> "wet ground".
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    pub cause: String,
+    pub effect: String,
+}
+
+/// The fixed synthetic "world" every corpus and benchmark draws from.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub entities: Vec<String>,
+    pub values: Vec<String>,
+    pub facts: Vec<Fact>,
+    pub patterns: Vec<Pattern>,
+    pub content_words: Vec<String>,
+    /// attributes[i] = the attribute the corpus statistically associates
+    /// with entity i (the CrowS-Pairs-analog "stereotype" signal): the
+    /// corpus asserts it with probability ATTR_BIAS, the opposite
+    /// otherwise, so models absorb a measurable association bias.
+    pub attributes: Vec<usize>,
+}
+
+/// The two attribute words used by the bias probe.
+pub const ATTRIBUTES: [&str; 2] = ["brave", "quiet"];
+
+/// P(corpus asserts the biased attribute) vs the counter-attribute.
+pub const ATTR_BIAS: f64 = 0.9;
+
+pub const RELATIONS: [(&str, &str); 4] = [
+    ("the capital of", "is"),
+    ("the element discovered in", "is called"),
+    ("the river that crosses", "is"),
+    ("the founder of", "was"),
+];
+
+const ONSETS: [&str; 12] = ["b", "br", "d", "dr", "f", "gr", "k", "m", "n",
+                            "p", "st", "v"];
+const NUCLEI: [&str; 6] = ["a", "e", "i", "o", "u", "ai"];
+const CODAS: [&str; 8] = ["l", "n", "r", "rn", "s", "th", "x", "nd"];
+
+fn make_word(rng: &mut SplitMix64, syllables: usize) -> String {
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(ONSETS[rng.below(ONSETS.len())]);
+        w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+        if rng.next_f64() < 0.5 {
+            w.push_str(CODAS[rng.below(CODAS.len())]);
+        }
+    }
+    w
+}
+
+impl World {
+    /// Build the deterministic world used across training and evaluation.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let entities: Vec<String> = (0..48)
+            .map(|_| {
+                let syl = 2 + rng.below(2);
+                let mut w = make_word(&mut rng, syl);
+                // Capitalize: proper nouns are distinct token shapes.
+                w[..1].make_ascii_uppercase();
+                w
+            })
+            .collect();
+        let values: Vec<String> = (0..48)
+            .map(|_| {
+                let syl = 2 + rng.below(2);
+                let mut w = make_word(&mut rng, syl);
+                w[..1].make_ascii_uppercase();
+                w
+            })
+            .collect();
+        // One fact per (relation, entity): value drawn uniquely per pair.
+        let mut facts = Vec::new();
+        for relation in 0..RELATIONS.len() {
+            for entity in &entities {
+                facts.push(Fact {
+                    relation,
+                    entity: entity.clone(),
+                    value: values[rng.below(values.len())].clone(),
+                });
+            }
+        }
+        let causes = ["it rains", "the sun sets", "the wind rises",
+                      "the fire burns", "the ice melts", "the bell rings",
+                      "the door opens", "the seed grows"];
+        let effects = ["the ground gets wet", "the sky turns dark",
+                       "the leaves start to move", "the room becomes warm",
+                       "the water level rises", "the people look up",
+                       "the cold air comes in", "a small plant appears"];
+        let patterns = causes.iter().zip(effects.iter())
+            .map(|(c, e)| Pattern { cause: c.to_string(), effect: e.to_string() })
+            .collect();
+        let content_words = (0..400).map(|_| {
+            let syl = 1 + rng.below(3);
+            make_word(&mut rng, syl)
+        }).collect();
+        let attributes = (0..entities.len()).map(|_| rng.below(2)).collect();
+        World { entities, values, facts, patterns, content_words, attributes }
+    }
+
+    pub fn fact(&self, relation: usize, entity: &str) -> Option<&Fact> {
+        self.facts.iter().find(|f| f.relation == relation && f.entity == entity)
+    }
+}
+
+/// Corpus domains (SlimPajama-subset analogs, Table 2 / Fig. 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    /// CommonCrawl/C4-like: grammar sentences + facts + noise.
+    Web,
+    /// Wikipedia-like: fact-dense, clean.
+    Wiki,
+    /// Book-like: long narrative collocations (cloze signal).
+    Book,
+    /// GitHub-like: toy code lines.
+    Code,
+}
+
+impl Domain {
+    pub const ALL: [Domain; 4] = [Domain::Web, Domain::Wiki, Domain::Book,
+                                  Domain::Code];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Domain::Web => "web",
+            Domain::Wiki => "wiki",
+            Domain::Book => "book",
+            Domain::Code => "code",
+        }
+    }
+}
+
+/// Seeded text generator over a [`World`].
+pub struct Generator<'w> {
+    pub world: &'w World,
+    rng: SplitMix64,
+    /// Zipf weights over content words.
+    zipf: Vec<f64>,
+}
+
+impl<'w> Generator<'w> {
+    pub fn new(world: &'w World, seed: u64) -> Self {
+        let zipf = (0..world.content_words.len())
+            .map(|i| 1.0 / (i as f64 + 1.0))
+            .collect();
+        Generator { world, rng: SplitMix64::new(seed), zipf }
+    }
+
+    fn content(&mut self) -> &'w str {
+        let i = self.rng.weighted(&self.zipf);
+        &self.world.content_words[i]
+    }
+
+    /// A grammar sentence: det N V det N (P det N)? .
+    fn grammar_sentence(&mut self) -> String {
+        let dets = ["the", "a", "some", "this"];
+        let preps = ["near", "under", "over", "behind", "inside"];
+        let mut s = String::new();
+        s.push_str(dets[self.rng.below(dets.len())]);
+        s.push(' ');
+        s.push_str(self.content());
+        s.push(' ');
+        s.push_str(self.content());
+        s.push_str("s ");
+        s.push_str(dets[self.rng.below(dets.len())]);
+        s.push(' ');
+        s.push_str(self.content());
+        if self.rng.next_f64() < 0.4 {
+            s.push(' ');
+            s.push_str(preps[self.rng.below(preps.len())]);
+            s.push_str(" the ");
+            s.push_str(self.content());
+        }
+        s.push_str(" . ");
+        s
+    }
+
+    /// Render one fact through its relation template.
+    fn fact_sentence(&mut self) -> String {
+        let f = &self.world.facts[self.rng.below(self.world.facts.len())];
+        let (pre, mid) = RELATIONS[f.relation];
+        format!("{pre} {} {mid} {} . ", f.entity, f.value)
+    }
+
+    fn pattern_sentence(&mut self) -> String {
+        let p = &self.world.patterns[self.rng.below(self.world.patterns.len())];
+        match self.rng.below(3) {
+            0 => format!("if {} , then {} . ", p.cause, p.effect),
+            1 => format!("when {} , {} . ", p.cause, p.effect),
+            _ => format!("{} and so {} . ", p.cause, p.effect),
+        }
+    }
+
+    /// Narrative with a long-range predictable final word: the opening
+    /// names a character; the closing sentence repeats it (LAMBADA-like).
+    fn narrative(&mut self) -> String {
+        let hero = &self.world.entities[self.rng.below(self.world.entities.len())];
+        let mut s = format!("one day {hero} walked to the old bridge . ");
+        for _ in 0..2 + self.rng.below(3) {
+            s.push_str(&self.grammar_sentence());
+        }
+        s.push_str(&format!("at the end of the long road stood {hero} . "));
+        s
+    }
+
+    /// Biased attribute assertion (the stereotype signal).
+    fn attribute_sentence(&mut self) -> String {
+        let i = self.rng.below(self.world.entities.len());
+        let biased = self.world.attributes[i];
+        let attr = if self.rng.next_f64() < ATTR_BIAS {
+            ATTRIBUTES[biased]
+        } else {
+            ATTRIBUTES[1 - biased]
+        };
+        format!("everyone says that {} is very {attr} . ",
+                self.world.entities[i])
+    }
+
+    fn code_line(&mut self) -> String {
+        let names = ["count", "total", "index", "value", "sum", "size"];
+        let a = names[self.rng.below(names.len())];
+        let b = names[self.rng.below(names.len())];
+        match self.rng.below(3) {
+            0 => format!("let {a} = {b} + {} ; ", self.rng.below(100)),
+            1 => format!("if {a} > {} then {b} = 0 ; ", self.rng.below(10)),
+            _ => format!("for {a} in 0 .. {} do {b} = {b} + {a} ; ",
+                         self.rng.below(32)),
+        }
+    }
+
+    /// Generate about `target_chars` of text from one domain.
+    pub fn domain_text(&mut self, domain: Domain, target_chars: usize) -> String {
+        let mut out = String::with_capacity(target_chars + 128);
+        while out.len() < target_chars {
+            let piece = match domain {
+                Domain::Web => match self.rng.below(10) {
+                    0..=3 => self.grammar_sentence(),
+                    4..=5 => self.fact_sentence(),
+                    6..=7 => self.pattern_sentence(),
+                    8 => self.attribute_sentence(),
+                    _ => self.narrative(),
+                },
+                Domain::Wiki => match self.rng.below(10) {
+                    0..=6 => self.fact_sentence(),
+                    _ => self.grammar_sentence(),
+                },
+                Domain::Book => match self.rng.below(10) {
+                    0..=5 => self.narrative(),
+                    6..=7 => self.pattern_sentence(),
+                    _ => self.grammar_sentence(),
+                },
+                Domain::Code => self.code_line(),
+            };
+            out.push_str(&piece);
+        }
+        out
+    }
+
+    /// The training mixture (weights ~ Table 2's subset proportions:
+    /// web-heavy, then wiki/book/code).
+    pub fn training_text(&mut self, target_chars: usize) -> String {
+        let weights = [(Domain::Web, 0.55), (Domain::Wiki, 0.20),
+                       (Domain::Book, 0.15), (Domain::Code, 0.10)];
+        let mut out = String::with_capacity(target_chars + 128);
+        while out.len() < target_chars {
+            let w: Vec<f64> = weights.iter().map(|&(_, p)| p).collect();
+            let d = weights[self.rng.weighted(&w)].0;
+            // Interleave domains in chunks, like shuffled corpus shards.
+            out.push_str(&self.domain_text(d, 512));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = World::new(1);
+        let b = World::new(1);
+        assert_eq!(a.facts.len(), b.facts.len());
+        assert_eq!(a.facts[0].value, b.facts[0].value);
+        assert_eq!(a.entities, b.entities);
+    }
+
+    #[test]
+    fn facts_cover_all_relation_entity_pairs() {
+        let w = World::new(1);
+        assert_eq!(w.facts.len(), RELATIONS.len() * w.entities.len());
+        for f in &w.facts {
+            assert!(w.fact(f.relation, &f.entity).is_some());
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let w = World::new(1);
+        let a = Generator::new(&w, 7).training_text(5000);
+        let b = Generator::new(&w, 7).training_text(5000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let w = World::new(1);
+        let a = Generator::new(&w, 7).training_text(2000);
+        let b = Generator::new(&w, 8).training_text(2000);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn domains_have_distinct_statistics() {
+        let w = World::new(1);
+        let mut g = Generator::new(&w, 3);
+        let code = g.domain_text(Domain::Code, 4000);
+        let wiki = g.domain_text(Domain::Wiki, 4000);
+        assert!(code.matches(';').count() > 50);
+        assert_eq!(wiki.matches(';').count(), 0);
+        // wiki is fact-dense: relation templates appear often
+        assert!(wiki.matches(" is ").count() + wiki.matches(" was ").count() > 20);
+    }
+
+    #[test]
+    fn training_text_contains_facts_and_patterns() {
+        let w = World::new(1);
+        let text = Generator::new(&w, 5).training_text(60_000);
+        assert!(text.contains("the capital of"));
+        assert!(text.contains("if it rains"));
+        assert!(text.contains("one day"));
+    }
+
+    #[test]
+    fn narratives_repeat_the_hero() {
+        let w = World::new(1);
+        let mut g = Generator::new(&w, 9);
+        let n = g.narrative();
+        let hero = n.split_whitespace().nth(2).unwrap();
+        assert!(n.trim_end_matches(" . ").trim_end().ends_with(hero),
+                "{n}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Data substrate: synthetic corpus, BPE tokenizer, deterministic batcher.
+//!
+//! Together these reproduce the paper's data pipeline properties (§4.1):
+//! every model family trains on identical token sequences in identical
+//! order, and held-out per-domain corpora support the Fig. 13
+//! cross-corpus perplexity study.
+
+pub mod batcher;
+pub mod bpe;
+pub mod corpus;
+
+pub use batcher::{train_val_split, Batcher};
+pub use bpe::Bpe;
+pub use corpus::{Domain, Fact, Generator, Pattern, World, ATTRIBUTES,
+                 ATTR_BIAS, RELATIONS};
+
+use std::path::Path;
+
+use crate::Result;
+
+/// Everything the coordinator needs from the data layer, built once and
+/// cached on disk (`<run_dir>/data/`): the world, the tokenizer and the
+/// tokenized train/val splits.
+pub struct Dataset {
+    pub world: World,
+    pub bpe: Bpe,
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+}
+
+impl Dataset {
+    /// Build (or reload) the standard dataset: `chars` characters of the
+    /// training mixture, vocab-512 BPE, 2% held-out validation tail.
+    pub fn build(cache_dir: &Path, chars: usize, seed: u64) -> Result<Self> {
+        std::fs::create_dir_all(cache_dir)?;
+        let bpe_path = cache_dir.join("bpe.txt");
+        let toks_path = cache_dir.join(format!("tokens_{chars}_{seed}.bin"));
+
+        let world = World::new(seed);
+        let mut gen = Generator::new(&world, seed.wrapping_add(1));
+
+        let (bpe, all) = if bpe_path.exists() && toks_path.exists() {
+            let bpe = Bpe::load(&bpe_path)?;
+            let bytes = std::fs::read(&toks_path)?;
+            let all: Vec<u32> = bytes.chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            (bpe, all)
+        } else {
+            let text = gen.training_text(chars);
+            // Train BPE on a prefix: enough to learn the corpus' merges.
+            let sample_len = text.len().min(250_000);
+            let bpe = Bpe::train(&text[..sample_len], 512);
+            let all = bpe.encode(&text);
+            bpe.save(&bpe_path)?;
+            let mut bytes = Vec::with_capacity(all.len() * 4);
+            for &t in &all {
+                bytes.extend_from_slice(&t.to_le_bytes());
+            }
+            std::fs::write(&toks_path, bytes)?;
+            (bpe, all)
+        };
+
+        let (train, val) = train_val_split(all, 0.02);
+        Ok(Dataset { world, bpe, train, val })
+    }
+
+    /// Tokenize a fresh sample of one domain (Fig. 13 eval corpora).
+    pub fn domain_tokens(&self, domain: Domain, chars: usize, seed: u64) -> Vec<u32> {
+        let mut gen = Generator::new(&self.world, seed);
+        self.bpe.encode(&gen.domain_text(domain, chars))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_build_and_cache_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let d1 = Dataset::build(dir.path(), 60_000, 1).unwrap();
+        assert!(d1.train.len() > 5_000, "train too small: {}", d1.train.len());
+        assert!(d1.val.len() > 100);
+        // Second build must reload the cache and produce identical tokens.
+        let d2 = Dataset::build(dir.path(), 60_000, 1).unwrap();
+        assert_eq!(d1.train, d2.train);
+        assert_eq!(d1.val, d2.val);
+    }
+
+    #[test]
+    fn domain_tokens_are_in_vocab() {
+        let dir = crate::util::testutil::TempDir::new();
+        let d = Dataset::build(dir.path(), 60_000, 1).unwrap();
+        for dom in Domain::ALL {
+            let toks = d.domain_tokens(dom, 2_000, 9);
+            assert!(!toks.is_empty());
+            assert!(toks.iter().all(|&t| (t as usize) < d.bpe.vocab_size()));
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Model-size accounting in bits — the machinery behind Table 4, Fig. 2a
+//! and the suite's "size (bits)" axis (Figs. 1, 9a, 11, 12).
+//!
+//! Accounting rules follow the paper exactly (§2.1, §4.2, §A.5):
+//! embedding and LM head stay FP16 in every family; linear-layer weights
+//! cost `weight_bits` each; TriLM adds `mp` FP16 scales per matrix;
+//! QuantLM adds one FP16 scale per group of 128 input channels
+//! (effective 3.25/4.25/6.125/8.125 bits per parameter).
+
+
+use crate::config::{Family, ModelConfig};
+
+/// A family variant for size accounting: the three trained families plus
+/// the four post-training QuantLM bitwidths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeFamily {
+    Float,
+    Quant { bits: u32, group: usize },
+    Ternary,
+    Binary,
+}
+
+impl SizeFamily {
+    pub const TABLE4: [SizeFamily; 6] = [
+        SizeFamily::Float,
+        SizeFamily::Quant { bits: 8, group: 128 },
+        SizeFamily::Quant { bits: 6, group: 128 },
+        SizeFamily::Quant { bits: 4, group: 128 },
+        SizeFamily::Quant { bits: 3, group: 128 },
+        SizeFamily::Ternary,
+    ];
+
+    pub fn label(self) -> String {
+        match self {
+            SizeFamily::Float => "FloatLM".into(),
+            SizeFamily::Quant { bits, .. } => format!("QuantLM {bits}-Bit"),
+            SizeFamily::Ternary => "TriLM".into(),
+            SizeFamily::Binary => "BiLM".into(),
+        }
+    }
+
+    pub fn from_family(f: Family) -> Self {
+        match f {
+            Family::Float => SizeFamily::Float,
+            Family::Ternary | Family::Bitnet => SizeFamily::Ternary,
+            Family::Binary => SizeFamily::Binary,
+        }
+    }
+}
+
+/// A paper-scale architecture row (Table 3) for exact Table 4 output.
+#[derive(Debug, Clone)]
+pub struct ArchRow {
+    pub label: &'static str,
+    pub hidden: usize,
+    pub glu: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub mp: usize,
+    pub vocab: usize,
+}
+
+/// The paper's Table 3 grid (GPT-NeoX 20B tokenizer, vocab 50,432,
+/// embeddings rounded up to a multiple of 128*mp per §A.2).
+pub const PAPER_SUITE: [ArchRow; 9] = [
+    ArchRow { label: "99M", hidden: 512, glu: 1280, heads: 8, layers: 16, mp: 1, vocab: 50432 },
+    ArchRow { label: "190M", hidden: 768, glu: 2048, heads: 12, layers: 16, mp: 1, vocab: 50432 },
+    ArchRow { label: "390M", hidden: 1024, glu: 2560, heads: 16, layers: 24, mp: 1, vocab: 50432 },
+    ArchRow { label: "560M", hidden: 1280, glu: 3072, heads: 20, layers: 24, mp: 1, vocab: 50432 },
+    ArchRow { label: "830M", hidden: 1536, glu: 4096, heads: 24, layers: 24, mp: 1, vocab: 50432 },
+    ArchRow { label: "1.1B", hidden: 1792, glu: 5120, heads: 28, layers: 24, mp: 2, vocab: 50432 },
+    ArchRow { label: "1.5B", hidden: 2048, glu: 6144, heads: 32, layers: 24, mp: 2, vocab: 50432 },
+    ArchRow { label: "2.4B", hidden: 2304, glu: 7680, heads: 36, layers: 30, mp: 3, vocab: 50432 },
+    ArchRow { label: "3.9B", hidden: 3072, glu: 9216, heads: 24, layers: 30, mp: 6, vocab: 50432 },
+];
+
+impl ArchRow {
+    pub fn embed_params(&self) -> u64 {
+        // embedding + untied LM head, each vocab x hidden
+        2 * self.vocab as u64 * self.hidden as u64
+    }
+
+    pub fn linear_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let g = self.glu as u64;
+        self.layers as u64 * (4 * h * h + 3 * g * h)
+    }
+
+    pub fn other_params(&self) -> u64 {
+        // RMSNorm scales: 2 per layer + final
+        (2 * self.layers + 1) as u64 * self.hidden as u64
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.embed_params() + self.linear_params() + self.other_params()
+    }
+
+    /// Total model size in bits for one family variant.
+    pub fn size_bits(&self, fam: SizeFamily) -> f64 {
+        let embed = self.embed_params() as f64 * 16.0;
+        let other = self.other_params() as f64 * 16.0;
+        let lin = self.linear_params() as f64;
+        let n_matrices = (self.layers * 7) as f64;
+        let lin_bits = match fam {
+            SizeFamily::Float => lin * 16.0,
+            SizeFamily::Quant { bits, group } => {
+                lin * bits as f64 + (lin / group as f64) * 16.0
+            }
+            // Ternary states at the 1.58-bit entropy coding (Table 4's
+            // accounting) + mp fp16 scales per matrix (§A.5).
+            SizeFamily::Ternary => {
+                lin * 3f64.log2() + n_matrices * self.mp as f64 * 16.0
+            }
+            SizeFamily::Binary => lin + n_matrices * self.mp as f64 * 16.0,
+        };
+        embed + other + lin + lin_bits - lin // embed+other+lin_bits
+    }
+
+    pub fn size_gb(&self, fam: SizeFamily) -> f64 {
+        self.size_bits(fam) / 8.0 / 1e9
+    }
+}
+
+/// One regenerated Table 4 row.
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub family: String,
+    /// Size in bits x 1e9 per paper column, in PAPER_SUITE order.
+    pub sizes_gbits: Vec<f64>,
+}
+
+/// Regenerate Table 4 ("Sizes in bits (*10^9)").
+pub fn table4() -> Vec<Table4Row> {
+    SizeFamily::TABLE4.iter().map(|&fam| Table4Row {
+        family: fam.label(),
+        sizes_gbits: PAPER_SUITE.iter()
+            .map(|row| row.size_bits(fam) / 1e9)
+            .collect(),
+    }).collect()
+}
+
+/// Size accounting for a *repro-suite* config (our small models).
+pub fn model_size_bits(cfg: &ModelConfig, fam: SizeFamily) -> f64 {
+    let embed = (2 * cfg.vocab * cfg.hidden) as f64 * 16.0;
+    let other = ((2 * cfg.layers + 1) * cfg.hidden) as f64 * 16.0;
+    let lin = cfg.n_linear_params() as f64;
+    let n_matrices = (cfg.layers * 7) as f64;
+    let lin_bits = match fam {
+        SizeFamily::Float => lin * 16.0,
+        SizeFamily::Quant { bits, group } => {
+            lin * bits as f64 + (lin / group as f64) * 16.0
+        }
+        SizeFamily::Ternary => lin * 3f64.log2() + n_matrices * cfg.mp as f64 * 16.0,
+        SizeFamily::Binary => lin + n_matrices * cfg.mp as f64 * 16.0,
+    };
+    embed + other + lin_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 4, FloatLM row (bits x 1e9).
+    const PAPER_FLOATLM: [f64; 9] =
+        [1.60, 3.05, 6.28, 9.11, 13.34, 18.39, 24.23, 39.38, 63.83];
+    /// Paper Table 4, TriLM row.
+    const PAPER_TRILM: [f64; 9] =
+        [0.90, 1.42, 2.11, 2.76, 3.55, 4.42, 5.36, 7.23, 10.76];
+    /// Paper Table 4, QuantLM 4-bit row.
+    const PAPER_Q4: [f64; 9] =
+        [1.03, 1.72, 2.88, 3.93, 5.36, 7.00, 8.86, 13.18, 20.59];
+
+    fn check_row(fam: SizeFamily, paper: &[f64; 9], tol: f64) {
+        for (row, &want) in PAPER_SUITE.iter().zip(paper.iter()) {
+            let got = row.size_bits(fam) / 1e9;
+            let rel = (got - want).abs() / want;
+            assert!(rel < tol, "{} {}: got {got:.2}, paper {want:.2} \
+                     (rel {rel:.3})", fam.label(), row.label);
+        }
+    }
+
+    #[test]
+    fn table4_floatlm_matches_paper() {
+        check_row(SizeFamily::Float, &PAPER_FLOATLM, 0.03);
+    }
+
+    #[test]
+    fn table4_trilm_matches_paper() {
+        check_row(SizeFamily::Ternary, &PAPER_TRILM, 0.06);
+    }
+
+    #[test]
+    fn table4_quantlm4_matches_paper() {
+        check_row(SizeFamily::Quant { bits: 4, group: 128 }, &PAPER_Q4, 0.04);
+    }
+
+    #[test]
+    fn paper_param_counts_match_table3() {
+        // Table 3's "Params" column (to ~1%).
+        let want = [99.74e6, 190.0e6, 392.4e6, 569.2e6, 834.0e6,
+                    1.149e9, 1.515e9, 2.461e9, 3.989e9];
+        for (row, &w) in PAPER_SUITE.iter().zip(want.iter()) {
+            let got = row.total_params() as f64;
+            assert!((got - w).abs() / w < 0.015,
+                    "{}: {got:.3e} vs {w:.3e}", row.label);
+        }
+    }
+
+    #[test]
+    fn trilm_is_about_10x_smaller_than_floatlm_at_scale() {
+        let row = &PAPER_SUITE[8]; // 3.9B
+        let ratio = row.size_bits(SizeFamily::Float)
+            / row.size_bits(SizeFamily::Ternary);
+        assert!(ratio > 5.5 && ratio < 10.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn repro_suite_bits_ordering() {
+        let cfg = crate::config::suite_config("6.7m", Family::Ternary).unwrap();
+        let f = model_size_bits(&cfg, SizeFamily::Float);
+        let q4 = model_size_bits(&cfg, SizeFamily::Quant { bits: 4, group: 128 });
+        let t = model_size_bits(&cfg, SizeFamily::Ternary);
+        let b = model_size_bits(&cfg, SizeFamily::Binary);
+        assert!(f > q4 && q4 > t && t > b);
+    }
+
+    use crate::config::Family;
+}

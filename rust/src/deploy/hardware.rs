@@ -1,0 +1,152 @@
+//! Accelerator datasheet database (paper Appendix F.1) and the
+//! memory-vs-compute trend fits behind Fig. 21.
+//!
+//! Values are from the same public datasheets the paper cites (peak
+//! half-precision dense TFLOPs, HBM/DRAM capacity and bandwidth).
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vendor {
+    Nvidia,
+    Amd,
+    Intel,
+    Google,
+}
+
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub name: &'static str,
+    pub vendor: Vendor,
+    pub year: u32,
+    /// Memory capacity, GB.
+    pub mem_gb: f64,
+    /// Memory bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// Peak dense FP16/BF16 TFLOPs.
+    pub tflops_fp16: f64,
+}
+
+/// The Appendix-F accelerator survey.
+pub const ACCELERATORS: &[Accelerator] = &[
+    // Nvidia
+    Accelerator { name: "V100-SXM", vendor: Vendor::Nvidia, year: 2018,
+                  mem_gb: 32.0, bw_gbs: 900.0, tflops_fp16: 125.0 },
+    Accelerator { name: "A100-40G", vendor: Vendor::Nvidia, year: 2020,
+                  mem_gb: 40.0, bw_gbs: 1555.0, tflops_fp16: 312.0 },
+    Accelerator { name: "A100-80G", vendor: Vendor::Nvidia, year: 2021,
+                  mem_gb: 80.0, bw_gbs: 2039.0, tflops_fp16: 312.0 },
+    Accelerator { name: "H100-SXM", vendor: Vendor::Nvidia, year: 2022,
+                  mem_gb: 80.0, bw_gbs: 3350.0, tflops_fp16: 990.0 },
+    Accelerator { name: "H200", vendor: Vendor::Nvidia, year: 2023,
+                  mem_gb: 141.0, bw_gbs: 4800.0, tflops_fp16: 990.0 },
+    Accelerator { name: "B200", vendor: Vendor::Nvidia, year: 2024,
+                  mem_gb: 192.0, bw_gbs: 8000.0, tflops_fp16: 2250.0 },
+    // AMD
+    Accelerator { name: "MI210", vendor: Vendor::Amd, year: 2022,
+                  mem_gb: 64.0, bw_gbs: 1638.0, tflops_fp16: 181.0 },
+    Accelerator { name: "MI250X", vendor: Vendor::Amd, year: 2022,
+                  mem_gb: 128.0, bw_gbs: 3277.0, tflops_fp16: 383.0 },
+    Accelerator { name: "MI300X", vendor: Vendor::Amd, year: 2023,
+                  mem_gb: 192.0, bw_gbs: 5300.0, tflops_fp16: 1307.0 },
+    Accelerator { name: "MI325X", vendor: Vendor::Amd, year: 2024,
+                  mem_gb: 256.0, bw_gbs: 6000.0, tflops_fp16: 1307.0 },
+    // Intel
+    Accelerator { name: "Gaudi2", vendor: Vendor::Intel, year: 2022,
+                  mem_gb: 96.0, bw_gbs: 2450.0, tflops_fp16: 432.0 },
+    Accelerator { name: "Gaudi3", vendor: Vendor::Intel, year: 2024,
+                  mem_gb: 128.0, bw_gbs: 3700.0, tflops_fp16: 1835.0 },
+    // Google TPUs
+    Accelerator { name: "TPUv3", vendor: Vendor::Google, year: 2018,
+                  mem_gb: 16.0, bw_gbs: 900.0, tflops_fp16: 123.0 },
+    Accelerator { name: "TPUv4", vendor: Vendor::Google, year: 2021,
+                  mem_gb: 32.0, bw_gbs: 1200.0, tflops_fp16: 275.0 },
+    Accelerator { name: "TPUv5e", vendor: Vendor::Google, year: 2023,
+                  mem_gb: 16.0, bw_gbs: 819.0, tflops_fp16: 197.0 },
+    Accelerator { name: "TPUv5p", vendor: Vendor::Google, year: 2023,
+                  mem_gb: 95.0, bw_gbs: 2765.0, tflops_fp16: 459.0 },
+];
+
+/// Simple least-squares line y = a + b x.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let b = cov / var.max(1e-12);
+    (my - b * mx, b)
+}
+
+/// One Fig. 21 series: per-vendor linear fit of ratio-vs-year.
+#[derive(Debug, Clone)]
+pub struct TrendFit {
+    pub vendor: Vendor,
+    pub metric: &'static str,
+    pub intercept: f64,
+    pub slope: f64,
+    pub points: Vec<(u32, f64)>,
+}
+
+/// Fig. 21a: GB of memory per TFLOP, per vendor, fit over years.
+pub fn memory_per_tflop_trend() -> Vec<TrendFit> {
+    trend(|a| a.mem_gb / a.tflops_fp16, "mem_gb_per_tflop")
+}
+
+/// Fig. 21b: GB/s of bandwidth per TFLOP, per vendor, fit over years.
+pub fn bandwidth_per_tflop_trend() -> Vec<TrendFit> {
+    trend(|a| a.bw_gbs / a.tflops_fp16, "bw_gbs_per_tflop")
+}
+
+fn trend(f: impl Fn(&Accelerator) -> f64, metric: &'static str) -> Vec<TrendFit> {
+    [Vendor::Nvidia, Vendor::Amd, Vendor::Intel, Vendor::Google]
+        .into_iter()
+        .map(|vendor| {
+            let pts: Vec<(u32, f64)> = ACCELERATORS.iter()
+                .filter(|a| a.vendor == vendor)
+                .map(|a| (a.year, f(a)))
+                .collect();
+            let xs: Vec<f64> = pts.iter().map(|&(y, _)| y as f64).collect();
+            let ys: Vec<f64> = pts.iter().map(|&(_, v)| v).collect();
+            let (intercept, slope) = linear_fit(&xs, &ys);
+            TrendFit { vendor, metric, intercept, slope, points: pts }
+        })
+        .collect()
+}
+
+pub fn by_name(name: &str) -> Option<&'static Accelerator> {
+    ACCELERATORS.iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let (a, b) = linear_fit(&[0.0, 1.0, 2.0], &[1.0, 3.0, 5.0]);
+        assert!((a - 1.0).abs() < 1e-9 && (b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig21_slopes_are_downward() {
+        // The paper's headline: memory and bandwidth per FLOP are falling.
+        // With public datasheet numbers the GPU vendors are strictly
+        // downward; Google's TPUv5p (95 GB) bucks the *capacity* trend,
+        // so Fig 21a holds for the three GPU vendors and Fig 21b for all.
+        for fit in memory_per_tflop_trend() {
+            if fit.vendor != Vendor::Google {
+                assert!(fit.slope < 0.0, "{:?} mem slope {}", fit.vendor,
+                        fit.slope);
+            }
+        }
+        for fit in bandwidth_per_tflop_trend() {
+            assert!(fit.slope < 0.0, "{:?} bw slope {}", fit.vendor, fit.slope);
+        }
+    }
+
+    #[test]
+    fn lookup_works() {
+        assert!(by_name("H100-SXM").is_some());
+        assert!(by_name("GTX1080").is_none());
+    }
+}

@@ -1,0 +1,158 @@
+//! Deployment analytics: the paper's memory-wall argument (§2.1, App. F).
+//!
+//! - [`hardware`] — accelerator datasheet DB + Fig. 21 trend fits.
+//! - [`bits`] — model-size accounting (Table 4, Fig. 2a axes).
+//! - this module — the Fig. 2 analytical models: model-GB vs parameter
+//!   count against GPU capacities, and the max theoretical decode
+//!   speedup from the compression factor (Kim et al.'s memory wall:
+//!   token generation is bandwidth-bound, so speedup ≈ bytes ratio).
+
+pub mod bits;
+pub mod hardware;
+
+pub use bits::{model_size_bits, table4, ArchRow, SizeFamily, Table4Row,
+               PAPER_SUITE};
+pub use hardware::{bandwidth_per_tflop_trend, memory_per_tflop_trend,
+                   Accelerator, Vendor, ACCELERATORS};
+
+
+/// A hypothetical LLaMa-3-style deployment config at parameter count `n`
+/// (Fig. 2's x-axis; 128k vocab per §2.1's setup).
+#[derive(Debug, Clone, Copy)]
+pub struct DeployPoint {
+    pub params: f64,
+    pub hidden: f64,
+}
+
+/// Approximate hidden size for a given total parameter count using the
+/// LLaMa aspect recipe params ≈ 12 * layers * hidden^2, layers ≈ hidden/128.
+pub fn hidden_for_params(params: f64) -> f64 {
+    // params = 12 * (hidden/128) * hidden^2 -> hidden = (params * 128/12)^(1/3)
+    (params * 128.0 / 12.0).cbrt()
+}
+
+/// Model size in GB at parameter count `params` for a family, keeping
+/// embeddings (128k vocab, tied pair) in FP16 (§2.1).
+pub fn size_gb_at(params: f64, fam: SizeFamily) -> f64 {
+    let hidden = hidden_for_params(params);
+    let embed = 2.0 * 128_000.0 * hidden; // embedding + head
+    let linear = (params - embed).max(0.0);
+    let wbits = match fam {
+        SizeFamily::Float => 16.0,
+        SizeFamily::Quant { bits, group } => bits as f64 + 16.0 / group as f64,
+        SizeFamily::Ternary => 3f64.log2(),
+        SizeFamily::Binary => 1.0,
+    };
+    (embed * 16.0 + linear * wbits) / 8.0 / 1e9
+}
+
+/// Fig. 2a: the largest parameter count whose weights fit in `mem_gb`.
+pub fn max_params_fitting(mem_gb: f64, fam: SizeFamily) -> f64 {
+    // Bisection over params.
+    let (mut lo, mut hi): (f64, f64) = (1e6, 1e14);
+    for _ in 0..200 {
+        let mid = (lo * hi).sqrt();
+        if size_gb_at(mid, fam) > mem_gb {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    lo
+}
+
+/// Fig. 2b: theoretical max autoregressive-decoding speedup vs FP16 at
+/// parameter count `params` — the ratio of weight bytes streamed per
+/// token (the memory wall makes decode bandwidth-bound).
+pub fn max_speedup_vs_fp16(params: f64, fam: SizeFamily) -> f64 {
+    size_gb_at(params, SizeFamily::Float) / size_gb_at(params, fam)
+}
+
+/// One row of the Fig. 2 series dump.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub params: f64,
+    pub float_gb: f64,
+    pub quant4_gb: f64,
+    pub trilm_gb: f64,
+    pub quant4_speedup: f64,
+    pub trilm_speedup: f64,
+}
+
+/// The Fig. 2 series over a parameter sweep (1B..1T, log-spaced).
+pub fn fig2_series() -> Vec<Fig2Row> {
+    let q4 = SizeFamily::Quant { bits: 4, group: 128 };
+    (0..=30).map(|i| {
+        let params = 1e9 * 10f64.powf(i as f64 / 10.0); // 1B..1T
+        Fig2Row {
+            params,
+            float_gb: size_gb_at(params, SizeFamily::Float),
+            quant4_gb: size_gb_at(params, q4),
+            trilm_gb: size_gb_at(params, SizeFamily::Ternary),
+            quant4_speedup: max_speedup_vs_fp16(params, q4),
+            trilm_speedup: max_speedup_vs_fp16(params, SizeFamily::Ternary),
+        }
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floatlm_hits_h100_wall_around_34b() {
+        // §2.1: "FloatLM reaches the memory capacity of a single H100 at
+        // 34B parameters."
+        let max = max_params_fitting(80.0, SizeFamily::Float);
+        assert!(max > 25e9 && max < 45e9, "{max:.3e}");
+    }
+
+    #[test]
+    fn trilm_fits_300b_on_h100() {
+        // §2.1: "TriLMs, with over 300B parameters and appropriate
+        // packing, can fit on a single H100."
+        let max = max_params_fitting(80.0, SizeFamily::Ternary);
+        assert!(max > 300e9, "{max:.3e}");
+    }
+
+    #[test]
+    fn quantlm4_supports_300b_on_mi300x() {
+        let q4 = SizeFamily::Quant { bits: 4, group: 128 };
+        let max = max_params_fitting(192.0, q4);
+        assert!(max > 300e9, "{max:.3e}");
+    }
+
+    #[test]
+    fn speedup_plateaus_match_paper() {
+        // §2.1: QuantLM-4 plateaus at ~4x, TriLM at ~10x; at 7B TriLM
+        // is already >4x and ~2x QuantLM-4.
+        let q4 = SizeFamily::Quant { bits: 4, group: 128 };
+        let t_1t = max_speedup_vs_fp16(1e12, SizeFamily::Ternary);
+        let q_1t = max_speedup_vs_fp16(1e12, q4);
+        assert!(t_1t > 9.0 && t_1t < 10.5, "TriLM plateau {t_1t}");
+        assert!(q_1t > 3.5 && q_1t < 4.0, "Q4 plateau {q_1t}");
+        let t_7b = max_speedup_vs_fp16(7e9, SizeFamily::Ternary);
+        let q_7b = max_speedup_vs_fp16(7e9, q4);
+        assert!(t_7b > 4.0, "TriLM@7B {t_7b}");
+        // Paper: "2 times faster than QuantLM 4-bit" at 7B; with our
+        // untied-embedding accounting the ratio lands slightly lower.
+        assert!(t_7b / q_7b > 1.5, "ratio {t_7b}/{q_7b}");
+    }
+
+    #[test]
+    fn speedup_grows_with_scale() {
+        // Embedding share shrinks with N, so speedup is monotone in N.
+        let s1 = max_speedup_vs_fp16(1e9, SizeFamily::Ternary);
+        let s2 = max_speedup_vs_fp16(100e9, SizeFamily::Ternary);
+        assert!(s2 > s1);
+    }
+
+    #[test]
+    fn fig2_series_has_monotone_sizes() {
+        let series = fig2_series();
+        for w in series.windows(2) {
+            assert!(w[1].float_gb > w[0].float_gb);
+            assert!(w[1].trilm_gb > w[0].trilm_gb);
+        }
+    }
+}

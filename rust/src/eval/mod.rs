@@ -1,0 +1,176 @@
+//! Evaluation: perplexity + the zero-shot downstream benchmark harness.
+//!
+//! Scoring follows lm-eval-harness (the paper's §D evaluation tool):
+//! each multiple-choice option is scored by the sum of its tokens'
+//! log-probabilities given the context (plus a length-normalized
+//! variant, `acc_norm`); cloze/recall use the same machinery. All
+//! scoring runs through the AOT-compiled `eval` graph — Rust composes
+//! the padded token batches and masks.
+
+pub mod tasks;
+
+pub use tasks::{generate, TaskItem, TaskKind};
+
+use crate::data::Bpe;
+use crate::runtime::{self, Graph, Runtime};
+use crate::Result;
+
+/// Wraps a model's compiled `eval` graph for batched logprob queries.
+pub struct Evaluator {
+    graph: Graph,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, model: &str) -> Result<Self> {
+        let graph = rt.load_graph(model, "eval")?;
+        Ok(Evaluator { graph, batch: rt.manifest().eval_batch,
+                       seq: rt.manifest().seq })
+    }
+
+    /// Per-position target logprobs for a (batch, seq+1) token block:
+    /// out[b][i] = log p(tokens[b][i+1] | tokens[b][..=i]).
+    pub fn logprobs(&self, params: &[xla::Literal], tokens: &[i32])
+                    -> Result<Vec<Vec<f32>>> {
+        assert_eq!(tokens.len(), self.batch * (self.seq + 1));
+        let toks = runtime::literal_i32(&[self.batch, self.seq + 1], tokens)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&toks);
+        let outs = self.graph.run(&args)?;
+        let t = runtime::tensor_from_literal(&outs[0])?;
+        Ok((0..self.batch).map(|b| t.row(b).to_vec()).collect())
+    }
+
+    /// Mean negative log-likelihood per token over a stream (perplexity
+    /// = exp of this). Deterministically chunks the stream into windows.
+    pub fn nll(&self, params: &[xla::Literal], tokens: &[u32]) -> Result<f64> {
+        let stride = self.seq + 1;
+        let n_chunks = tokens.len() / stride;
+        assert!(n_chunks > 0, "token stream shorter than one window");
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut chunk_idx = 0;
+        while chunk_idx < n_chunks {
+            let rows = self.batch.min(n_chunks - chunk_idx);
+            let mut block = Vec::with_capacity(self.batch * stride);
+            for r in 0..self.batch {
+                let c = if r < rows { chunk_idx + r } else { chunk_idx }; // pad rows repeat
+                block.extend(tokens[c * stride..(c + 1) * stride].iter()
+                    .map(|&t| t as i32));
+            }
+            let lp = self.logprobs(params, &block)?;
+            for row in lp.iter().take(rows) {
+                for &l in row {
+                    total -= l as f64;
+                    count += 1;
+                }
+            }
+            chunk_idx += rows;
+        }
+        Ok(total / count as f64)
+    }
+
+    /// Score one MCQ item: returns (sum_logprob, mean_logprob) per choice.
+    /// Items whose tokenized context+choice exceed the window are
+    /// truncated from the left (lm-eval behavior).
+    pub fn score_choices(&self, params: &[xla::Literal], bpe: &Bpe,
+                         item: &TaskItem) -> Result<Vec<(f64, f64)>> {
+        // Build one padded row per choice; run in batches of `self.batch`.
+        let stride = self.seq + 1;
+        let mut rows: Vec<(Vec<i32>, usize, usize)> = Vec::new(); // (tokens, start, len)
+        for choice in &item.choices {
+            let ctx = bpe.encode(&item.context);
+            let cho = bpe.encode(choice);
+            let mut toks: Vec<i32> = ctx.iter().chain(cho.iter())
+                .map(|&t| t as i32).collect();
+            let keep = stride.min(toks.len());
+            let dropped = toks.len() - keep;
+            toks.drain(..dropped);
+            // choice token span within the (possibly truncated) row
+            let cho_start = ctx.len().saturating_sub(dropped);
+            let cho_len = cho.len().min(keep.saturating_sub(cho_start));
+            let pad_to = stride;
+            toks.resize(pad_to, 0);
+            rows.push((toks, cho_start, cho_len));
+        }
+        let mut scores = Vec::with_capacity(rows.len());
+        for group in rows.chunks(self.batch) {
+            let mut block = Vec::with_capacity(self.batch * stride);
+            for r in 0..self.batch {
+                let row = &group[r.min(group.len() - 1)].0;
+                block.extend_from_slice(row);
+            }
+            let lp = self.logprobs(params, &block)?;
+            for (r, (_, start, len)) in group.iter().enumerate() {
+                // logprob index i predicts token i+1, so choice tokens
+                // at positions [start, start+len) are predicted by
+                // logprobs [start-1, start+len-1).
+                let (mut sum, mut n) = (0.0f64, 0usize);
+                for i in start.saturating_sub(1)..(start + len).saturating_sub(1) {
+                    sum += lp[r][i] as f64;
+                    n += 1;
+                }
+                scores.push((sum, sum / n.max(1) as f64));
+            }
+        }
+        Ok(scores)
+    }
+}
+
+/// Aggregate result of one task over one model.
+#[derive(Debug, Clone)]
+pub struct TaskScore {
+    pub task: String,
+    pub n: usize,
+    /// sum-logprob argmax accuracy (lm-eval `acc`).
+    pub acc: f64,
+    /// length-normalized accuracy (lm-eval `acc_norm`).
+    pub acc_norm: f64,
+    /// binomial standard error of `acc`.
+    pub stderr: f64,
+}
+
+/// Run a task's items through an evaluator; for `StereoPairs` the `acc`
+/// field is the *pct-stereotype* preference rate.
+pub fn run_task(ev: &Evaluator, params: &[xla::Literal], bpe: &Bpe,
+                kind: TaskKind, items: &[TaskItem]) -> Result<TaskScore> {
+    let mut correct = 0usize;
+    let mut correct_norm = 0usize;
+    for item in items {
+        let scores = ev.score_choices(params, bpe, item)?;
+        let argmax = |f: fn(&(f64, f64)) -> f64| {
+            scores.iter().enumerate()
+                .max_by(|a, b| f(a.1).partial_cmp(&f(b.1)).unwrap())
+                .map(|(i, _)| i).unwrap()
+        };
+        if argmax(|s| s.0) == item.answer {
+            correct += 1;
+        }
+        if argmax(|s| s.1) == item.answer {
+            correct_norm += 1;
+        }
+    }
+    let n = items.len();
+    let acc = correct as f64 / n as f64;
+    Ok(TaskScore {
+        task: kind.as_str().to_string(),
+        n,
+        acc,
+        acc_norm: correct_norm as f64 / n as f64,
+        stderr: (acc * (1.0 - acc) / n as f64).sqrt(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_score_fields() {
+        let s = TaskScore { task: "cloze".into(), n: 10, acc: 0.5,
+                            acc_norm: 0.6, stderr: 0.15 };
+        assert_eq!(s.task, "cloze");
+        assert!(s.stderr > 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Synthetic downstream benchmark tasks — the stand-ins for the paper's
+//! evaluation suite (§5, Appendix D), built from the same [`World`] the
+//! training corpus renders, so they are *learnable* and family/size
+//! trends are measurable:
+//!
+//! - [`TaskKind::Cloze`]      ~ LAMBADA: predict a narrative's final word
+//!   that only long-range context determines.
+//! - [`TaskKind::PatternMcq`] ~ ARC/PIQA/HellaSwag: pick the consequent
+//!   of a commonsense implication among distractors.
+//! - [`TaskKind::FactMcq`]    ~ SciQ/MMLU: pick the value of a world fact
+//!   among distractor values.
+//! - [`TaskKind::FactRecall`] ~ TriviaQA (EM): produce the fact value —
+//!   scored as argmax over the full value vocabulary (the exact-match
+//!   analog when the answer space is closed).
+//! - [`TaskKind::StereoPairs`] ~ CrowS-Pairs: likelihood preference for
+//!   the corpus-biased attribute assertion over its counterfactual;
+//!   the "pct stereotype" score.
+
+
+use crate::data::corpus::{ATTRIBUTES, RELATIONS};
+use crate::data::World;
+use crate::runtime::SplitMix64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Cloze,
+    PatternMcq,
+    FactMcq,
+    FactRecall,
+    StereoPairs,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 5] = [TaskKind::Cloze, TaskKind::PatternMcq,
+                                    TaskKind::FactMcq, TaskKind::FactRecall,
+                                    TaskKind::StereoPairs];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskKind::Cloze => "cloze",
+            TaskKind::PatternMcq => "pattern_mcq",
+            TaskKind::FactMcq => "fact_mcq",
+            TaskKind::FactRecall => "fact_recall",
+            TaskKind::StereoPairs => "stereo_pairs",
+        }
+    }
+
+    /// The paper benchmark this task is the analog of.
+    pub fn paper_analog(self) -> &'static str {
+        match self {
+            TaskKind::Cloze => "LAMBADA",
+            TaskKind::PatternMcq => "ARC/PIQA/HellaSwag (C&R avg)",
+            TaskKind::FactMcq => "SciQ / MMLU",
+            TaskKind::FactRecall => "TriviaQA",
+            TaskKind::StereoPairs => "CrowS-Pairs",
+        }
+    }
+}
+
+/// One zero-shot item: a context and scored continuations.
+/// `answer` indexes the correct choice. For StereoPairs, choice 0 is the
+/// corpus-biased ("stereotype") continuation and `answer` is 0 — the
+/// *score* for stereo tasks is preference rate, not accuracy.
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+/// Generate `n` items of the given kind from the world, seeded.
+pub fn generate(world: &World, kind: TaskKind, n: usize, seed: u64) -> Vec<TaskItem> {
+    let mut rng = SplitMix64::new(seed ^ (kind as u64) << 48);
+    (0..n).map(|_| one_item(world, kind, &mut rng)).collect()
+}
+
+fn distinct_indices(rng: &mut SplitMix64, n: usize, count: usize,
+                    exclude: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let i = rng.below(n);
+        if i != exclude && !out.contains(&i) {
+            out.push(i);
+        }
+    }
+    out
+}
+
+fn one_item(world: &World, kind: TaskKind, rng: &mut SplitMix64) -> TaskItem {
+    match kind {
+        TaskKind::Cloze => {
+            // Same narrative frame the Book domain trains on.
+            let hi = rng.below(world.entities.len());
+            let hero = &world.entities[hi];
+            let filler = &world.content_words[rng.below(world.content_words.len())];
+            let context = format!(
+                "one day {hero} walked to the old bridge . the {filler} waited . \
+                 at the end of the long road stood");
+            let mut choices = vec![format!(" {hero}")];
+            for d in distinct_indices(rng, world.entities.len(), 3, hi) {
+                choices.push(format!(" {}", world.entities[d]));
+            }
+            TaskItem { context, choices, answer: 0 }
+        }
+        TaskKind::PatternMcq => {
+            let pi = rng.below(world.patterns.len());
+            let p = &world.patterns[pi];
+            let context = format!("if {} , then", p.cause);
+            let mut choices = vec![format!(" {}", p.effect)];
+            for d in distinct_indices(rng, world.patterns.len(), 3, pi) {
+                choices.push(format!(" {}", world.patterns[d].effect));
+            }
+            TaskItem { context, choices, answer: 0 }
+        }
+        TaskKind::FactMcq => {
+            let f = &world.facts[rng.below(world.facts.len())];
+            let (pre, mid) = RELATIONS[f.relation];
+            let context = format!("{pre} {} {mid}", f.entity);
+            let vi = world.values.iter().position(|v| *v == f.value).unwrap();
+            let mut choices = vec![format!(" {}", f.value)];
+            for d in distinct_indices(rng, world.values.len(), 3, vi) {
+                choices.push(format!(" {}", world.values[d]));
+            }
+            TaskItem { context, choices, answer: 0 }
+        }
+        TaskKind::FactRecall => {
+            let f = &world.facts[rng.below(world.facts.len())];
+            let (pre, mid) = RELATIONS[f.relation];
+            let context = format!("{pre} {} {mid}", f.entity);
+            // Closed answer space: every value is a candidate; "exact
+            // match" = the true value wins argmax.
+            let vi = world.values.iter().position(|v| *v == f.value).unwrap();
+            let mut choices: Vec<String> =
+                world.values.iter().map(|v| format!(" {v}")).collect();
+            choices.swap(0, vi);
+            TaskItem { context, choices, answer: 0 }
+        }
+        TaskKind::StereoPairs => {
+            let i = rng.below(world.entities.len());
+            let biased = ATTRIBUTES[world.attributes[i]];
+            let counter = ATTRIBUTES[1 - world.attributes[i]];
+            let context = format!("everyone says that {} is very",
+                                  world.entities[i]);
+            TaskItem {
+                context,
+                choices: vec![format!(" {biased}"), format!(" {counter}")],
+                answer: 0,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_have_valid_answers() {
+        let w = World::new(1);
+        for kind in TaskKind::ALL {
+            let items = generate(&w, kind, 16, 3);
+            assert_eq!(items.len(), 16);
+            for it in items {
+                assert!(it.answer < it.choices.len());
+                assert!(it.choices.len() >= 2);
+                // choices must be distinct
+                let mut c = it.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), it.choices.len(), "{:?}", it.choices);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let w = World::new(1);
+        let a = generate(&w, TaskKind::FactMcq, 8, 5);
+        let b = generate(&w, TaskKind::FactMcq, 8, 5);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn fact_mcq_answer_matches_world() {
+        let w = World::new(1);
+        for it in generate(&w, TaskKind::FactMcq, 32, 7) {
+            // Recover the entity from the context and check the gold
+            // choice is the world's fact value.
+            let value = it.choices[it.answer].trim();
+            assert!(w.facts.iter().any(|f| f.value == value),
+                    "{value} not a fact value");
+        }
+    }
+
+    #[test]
+    fn recall_has_full_value_space() {
+        let w = World::new(1);
+        let items = generate(&w, TaskKind::FactRecall, 4, 9);
+        for it in items {
+            assert_eq!(it.choices.len(), w.values.len());
+        }
+    }
+
+    #[test]
+    fn cloze_answer_is_the_narrative_hero() {
+        let w = World::new(1);
+        for it in generate(&w, TaskKind::Cloze, 16, 11) {
+            let hero = it.context.split_whitespace().nth(2).unwrap();
+            assert_eq!(it.choices[it.answer].trim(), hero);
+        }
+    }
+}

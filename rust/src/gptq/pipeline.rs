@@ -1,0 +1,143 @@
+//! QuantLM construction pipeline (§4.2): FloatLM checkpoint +
+//! calibration data -> GPTQ-quantized model.
+//!
+//! Runs the AOT-compiled `capture` graph over calibration batches to
+//! collect the input activations of every linear layer, accumulates the
+//! per-layer Hessians, GPTQ-quantizes each weight matrix, and returns
+//! params with the quantized weights substituted (dequantized f32 — the
+//! paper's QuantLMs also compute in halfprec; storage-bits accounting
+//! lives in deploy::bits).
+
+use std::collections::HashMap;
+
+use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
+use crate::quant::QuantTensor;
+use crate::runtime::{self, HostTensor, Runtime};
+use crate::Result;
+
+/// Capture points per transformer layer, in graph output order:
+/// inputs of (q,k,v), (o), (gate,up), (down).
+pub const CAPTURES_PER_LAYER: usize = 4;
+
+/// Largest divisor of `dim` not exceeding `target`.
+pub fn largest_divisor(dim: usize, target: usize) -> usize {
+    let mut d = target.min(dim).max(1);
+    while dim % d != 0 {
+        d -= 1;
+    }
+    d
+}
+
+/// Which linear weights each capture point feeds.
+pub fn capture_targets(layer: usize, point: usize) -> Vec<String> {
+    let names: &[&str] = match point {
+        0 => &["attn_q", "attn_k", "attn_v"],
+        1 => &["attn_o"],
+        2 => &["mlp_gate", "mlp_up"],
+        3 => &["mlp_down"],
+        _ => panic!("bad capture point {point}"),
+    };
+    names.iter().map(|n| format!("l{layer}.{n}")).collect()
+}
+
+/// Accumulate per-capture-point Hessians over calibration batches.
+///
+/// `batches`: each is capture_batch * seq i32 tokens.
+pub fn accumulate_hessians(rt: &Runtime, model: &str,
+                           params: &[xla::Literal],
+                           batches: &[Vec<i32>])
+                           -> Result<Vec<HessianAccumulator>> {
+    let entry = rt.manifest().model(model)?;
+    let graph = rt.load_graph(model, "capture")?;
+    let layers = entry.config.layers;
+    let b = rt.manifest().capture_batch;
+    let s = rt.manifest().seq;
+
+    let mut accs: Vec<HessianAccumulator> = (0..layers * CAPTURES_PER_LAYER)
+        .map(|i| {
+            let dim = if i % CAPTURES_PER_LAYER == 3 {
+                entry.config.glu
+            } else {
+                entry.config.hidden
+            };
+            HessianAccumulator::new(dim)
+        })
+        .collect();
+
+    for batch in batches {
+        assert_eq!(batch.len(), b * s, "capture batch must be {b}x{s}");
+        let toks = runtime::literal_i32(&[b, s], batch)?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&toks);
+        let outs = graph.run(&args)?;
+        for (i, lit) in outs.iter().enumerate() {
+            let x = runtime::tensor_from_literal(lit)?;
+            accs[i].add_batch(&x);
+        }
+    }
+    Ok(accs)
+}
+
+/// Result of quantizing one model at one bitwidth.
+pub struct QuantizedModel {
+    /// Parameters with dequantized (f32) GPTQ weights substituted.
+    pub params: Vec<HostTensor>,
+    /// The raw quantized linears by name (storage format / accounting).
+    pub quantized: HashMap<String, QuantTensor>,
+    pub bits: u32,
+    pub group: usize,
+}
+
+/// Apply GPTQ at `bits` to every linear layer of a FloatLM.
+pub fn quantize_model(rt: &Runtime, model: &str, params: &[HostTensor],
+                      hessians: &[HessianAccumulator], bits: u32,
+                      group: usize) -> Result<QuantizedModel> {
+    let entry = rt.manifest().model(model)?;
+    let layers = entry.config.layers;
+    assert_eq!(hessians.len(), layers * CAPTURES_PER_LAYER);
+
+    let name_index: HashMap<&str, usize> = entry.params.iter().enumerate()
+        .map(|(i, p)| (p.name.as_str(), i))
+        .collect();
+
+    let mut out = params.to_vec();
+    let mut quantized = HashMap::new();
+    for l in 0..layers {
+        for point in 0..CAPTURES_PER_LAYER {
+            let h = hessians[l * CAPTURES_PER_LAYER + point].finalize();
+            for target in capture_targets(l, point) {
+                let idx = *name_index.get(target.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("missing param {target}"))?;
+                let w = &params[idx];
+                // group must divide in_features; shrink to the largest
+                // divisor for layers narrower than the target group.
+                let g = largest_divisor(w.shape[1], group);
+                let cfg = GptqConfig::new(bits, g);
+                let qt = gptq_quantize(w, &h, cfg)?;
+                out[idx] = qt.dequant();
+                quantized.insert(target, qt);
+            }
+        }
+    }
+    Ok(QuantizedModel { params: out, quantized, bits, group })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_targets_cover_all_linears() {
+        let mut all: Vec<String> = Vec::new();
+        for point in 0..CAPTURES_PER_LAYER {
+            all.extend(capture_targets(0, point));
+        }
+        all.sort();
+        let mut want: Vec<String> =
+            ["attn_q", "attn_k", "attn_v", "attn_o",
+             "mlp_gate", "mlp_up", "mlp_down"]
+                .iter().map(|n| format!("l0.{n}")).collect();
+        want.sort();
+        assert_eq!(all, want);
+    }
+}

@@ -1,0 +1,39 @@
+//! Spectra: a three-layer reproduction of *"Spectra: A Comprehensive
+//! Study of Ternary, Quantized, and FP16 Language Models"*.
+//!
+//! Layer 3 (this crate) is the coordinator and every substrate the paper
+//! depends on; Layer 2 (JAX) and Layer 1 (Pallas) live in `python/` and
+//! are AOT-compiled to HLO-text artifacts executed here via PJRT.
+//! Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the paper-experiment index):
+//!
+//! - [`config`] — suite/model/training configuration.
+//! - [`runtime`] — PJRT client wrapper: load HLO text, compile, execute.
+//! - [`data`] — synthetic corpus generator, BPE tokenizer, batcher.
+//! - [`coordinator`] — training loop, Spectra optimization schedule,
+//!   dynamic loss scaling, suite runner.
+//! - [`checkpoint`] — tensor store for trained models.
+//! - [`ternary`] — ternarization, 2-bit/base-3 packing, CPU kernels.
+//! - [`quant`] — k-bit symmetric group quantization (QuantLM storage).
+//! - [`gptq`] — GPTQ post-training quantization (Hessian + Cholesky).
+//! - [`analysis`] — scaling-law fits (Levenberg–Marquardt), entropy.
+//! - [`deploy`] — hardware DB, model-bits accounting, memory-wall model.
+//! - [`eval`] — perplexity + downstream benchmark harness.
+//! - [`util`] — offline stand-ins for serde/clap/criterion/tempfile.
+
+pub mod analysis;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod deploy;
+pub mod eval;
+pub mod gptq;
+pub mod quant;
+pub mod runtime;
+pub mod ternary;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

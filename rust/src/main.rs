@@ -1,0 +1,371 @@
+//! `spectra` — the L3 coordinator CLI.
+//!
+//! Everything runs from AOT-compiled artifacts (`make artifacts` once);
+//! no Python on any code path here. Subcommands:
+//!
+//!   train         train one model
+//!   suite         train + evaluate the size x family grid
+//!   configs       print the suite configuration grid (Table 3 analog)
+//!   eval          evaluate a saved checkpoint
+//!   analyze       scaling-law / entropy analysis
+//!   deploy        Table 4 / Fig 2 / Fig 21 analytics
+//!   generate      greedy text generation (Appendix H demo)
+//!   bench-report  paper-style tables from a suite run
+
+use std::path::PathBuf;
+
+use spectra::checkpoint::Checkpoint;
+use spectra::config::{suite_config, Family, TrainConfig};
+use spectra::coordinator::{self, SuiteSpec, Trainer};
+use spectra::data::{Batcher, Dataset};
+use spectra::deploy;
+use spectra::eval::Evaluator;
+use spectra::runtime::{self, Runtime};
+use spectra::util::args::Args;
+use spectra::{analysis, Result};
+
+const USAGE: &str = "\
+spectra <command> [--flags]
+
+commands:
+  train         --size 160k --family ternary --steps 200 [--fp16]
+  suite         --sizes 160k,430k,930k --families float,ternary --steps 300
+  configs
+  eval          --checkpoint runs/train/160k_ternary.spt
+  analyze       [--results runs/suite/suite_results.json] [--checkpoint x.spt]
+  deploy        --output 4|2a|2b|21
+  generate      --checkpoint x.spt --prompt 'one day'
+  bench-report  --results runs/suite/suite_results.json --experiment all
+
+global: --artifacts artifacts --runs runs";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let runs = PathBuf::from(args.get("runs", "runs"));
+    match args.command.as_str() {
+        "train" => cmd_train(&args, &artifacts, &runs),
+        "suite" => cmd_suite(&args, &artifacts, &runs),
+        "configs" => cmd_configs(),
+        "eval" => cmd_eval(&args, &artifacts, &runs),
+        "analyze" => cmd_analyze(&args),
+        "deploy" => {
+            print_deploy(&args.get("output", "4"));
+            Ok(())
+        }
+        "generate" => cmd_generate(&args, &artifacts, &runs),
+        "bench-report" => {
+            let res = coordinator::SuiteResults::load(
+                &PathBuf::from(args.get("results", "")))?;
+            bench_report(&res, &args.get("experiment", "all"));
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let size = args.get("size", "160k");
+    let family = Family::parse(&args.get("family", "ternary"))
+        .ok_or_else(|| anyhow::anyhow!("bad family"))?;
+    let steps = args.get_usize("steps", 200);
+    let seed = args.get_u64("seed", 0);
+    let model = format!("{size}_{}", family.as_str());
+    let run = runs.join(args.get("tag", "train"));
+    let data = Dataset::build(&runs.join("data"),
+                              args.get_usize("data-chars", 2_000_000), seed)?;
+    let cfg = TrainConfig {
+        seed,
+        fp16: args.has("fp16"),
+        ..TrainConfig::for_family(family, steps)
+    };
+    let mut trainer = Trainer::new(&rt, &model, cfg)?;
+    let mut batcher = Batcher::new(data.train.clone(), rt.manifest().train_batch,
+                                   rt.manifest().seq, seed);
+    trainer.train(&mut batcher, steps, |m| {
+        if m.step % 20 == 0 {
+            println!("step {:5}  loss {:.4}  lr {:.2e}  scale {}",
+                     m.step, m.loss, m.lr, m.loss_scale);
+        }
+    })?;
+    std::fs::create_dir_all(&run)?;
+    trainer.log.write_csv(&run.join(format!("{model}_loss.csv")))?;
+    trainer.save_checkpoint(&rt, &model, &run.join(format!("{model}.spt")))?;
+    println!("final loss {:.4}; skipped {} batches; min scale {}",
+             trainer.log.final_loss(20), trainer.loss_scale.skipped,
+             trainer.loss_scale.min_seen);
+    Ok(())
+}
+
+fn cmd_suite(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let seed = args.get_u64("seed", 0);
+    let data = Dataset::build(&runs.join("data"),
+                              args.get_usize("data-chars", 4_000_000), seed)?;
+    let spec = SuiteSpec {
+        sizes: args.get_list("sizes", "160k,430k,930k"),
+        families: args.get_list("families", "float,ternary").iter()
+            .filter_map(|f| Family::parse(f)).collect(),
+        steps: args.get_usize("steps", 300),
+        quant_bits: args.get_list("quant-bits", "3,4,8").iter()
+            .filter_map(|b| b.parse().ok()).collect(),
+        eval_items: args.get_usize("eval-items", 50),
+        calib_batches: args.get_usize("calib-batches", 4),
+        seed,
+    };
+    let results = coordinator::run_suite(&rt, &data, &spec,
+                                         &runs.join(args.get("tag", "suite")))?;
+    print_suite_table(&results);
+    if let Some(rep) = coordinator::scaling_from_results(&results) {
+        print_scaling(&rep);
+    }
+    Ok(())
+}
+
+fn cmd_configs() -> Result<()> {
+    println!("{:<6} {:>7} {:>5} {:>6} {:>6} {:>3} {:>10} {:>12}",
+             "size", "hidden", "glu", "heads", "layers", "mp", "params",
+             "TriLM bits");
+    for size in spectra::config::SUITE_SIZES {
+        let c = suite_config(size, Family::Ternary).unwrap();
+        println!("{:<6} {:>7} {:>5} {:>6} {:>6} {:>3} {:>10} {:>12.0}",
+                 size, c.hidden, c.glu, c.heads, c.layers, c.mp, c.n_params(),
+                 deploy::model_size_bits(&c, deploy::SizeFamily::Ternary));
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let ck = Checkpoint::load(&PathBuf::from(args.get("checkpoint", "")))?;
+    let model = ck.metadata.get("model")
+        .ok_or_else(|| anyhow::anyhow!("checkpoint missing model meta"))?
+        .clone();
+    let seed = args.get_u64("seed", 0);
+    let data = Dataset::build(&runs.join("data"),
+                              args.get_usize("data-chars", 2_000_000), seed)?;
+    let ev = Evaluator::new(&rt, &model)?;
+    let lits: Vec<xla::Literal> = ck.tensor_list().iter()
+        .map(runtime::literal_from_tensor).collect::<Result<_>>()?;
+    println!("val nll: {:.4}", ev.nll(&lits, &data.val)?);
+    for kind in spectra::eval::TaskKind::ALL {
+        let items = spectra::eval::generate(
+            &data.world, kind, args.get_usize("eval-items", 50), seed ^ 0xE0);
+        let score = spectra::eval::run_task(&ev, &lits, &data.bpe, kind, &items)?;
+        println!("{:<14} acc {:.3} acc_norm {:.3} (n={})  [{}]",
+                 score.task, score.acc, score.acc_norm, score.n,
+                 kind.paper_analog());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("results") {
+        let res = coordinator::SuiteResults::load(&PathBuf::from(path))?;
+        if let Some(rep) = coordinator::scaling_from_results(&res) {
+            print_scaling(&rep);
+        } else {
+            println!("not enough per-family points for scaling fits");
+        }
+    }
+    if let Some(path) = args.opt("checkpoint") {
+        let ck = Checkpoint::load(&PathBuf::from(path))?;
+        // Pool linear-layer weights only (§2.2 analyzes linears).
+        let mut pool = Vec::new();
+        for (name, t) in &ck.tensors {
+            if name.contains("attn_") || name.contains("mlp_") {
+                pool.extend_from_slice(&t.data);
+            }
+        }
+        let label = ck.metadata.get("model").cloned()
+            .unwrap_or_else(|| path.to_string());
+        let stats = analysis::weight_stats(&label, &pool);
+        println!("{label}: sigma {:.5} H_diff {:.3} bits kurtosis {:+.3}",
+                 stats.sigma, stats.differential_entropy_bits,
+                 stats.excess_kurtosis);
+        for (bins, h) in &stats.shannon_bits {
+            println!("  shannon[{bins:>5} bins] = {h:.3} bits");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let ck = Checkpoint::load(&PathBuf::from(args.get("checkpoint", "")))?;
+    let model = ck.metadata.get("model").unwrap().clone();
+    let data = Dataset::build(&runs.join("data"),
+                              args.get_usize("data-chars", 2_000_000), 0)?;
+    let text = generate(&rt, &model, &ck, &data, &args.get("prompt", "one day"),
+                        args.get_usize("max-tokens", 48))?;
+    println!("{text}");
+    Ok(())
+}
+
+/// Greedy decoding via the `next_logits` graph (Appendix-H-style demo).
+fn generate(rt: &Runtime, model: &str, ck: &Checkpoint, data: &Dataset,
+            prompt: &str, max_tokens: usize) -> Result<String> {
+    let graph = rt.load_graph(model, "next_logits")?;
+    let seq = rt.manifest().seq;
+    let lits: Vec<xla::Literal> = ck.tensor_list().iter()
+        .map(runtime::literal_from_tensor).collect::<Result<_>>()?;
+    let mut tokens: Vec<i32> = data.bpe.encode(prompt).iter()
+        .map(|&t| t as i32).collect();
+    for _ in 0..max_tokens {
+        // Left-pad/truncate to the fixed window.
+        let mut window = vec![0i32; seq];
+        let tail = tokens.len().min(seq);
+        window[seq - tail..].copy_from_slice(&tokens[tokens.len() - tail..]);
+        let toks = runtime::literal_i32(&[1, seq], &window)?;
+        let mut gargs: Vec<&xla::Literal> = lits.iter().collect();
+        gargs.push(&toks);
+        let outs = graph.run(&gargs)?;
+        let logits = runtime::tensor_from_literal(&outs[0])?;
+        let next = logits.data.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32).unwrap();
+        tokens.push(next);
+    }
+    Ok(data.bpe.decode(&tokens.iter().map(|&t| t as u32).collect::<Vec<_>>()))
+}
+
+fn print_suite_table(results: &coordinator::SuiteResults) {
+    println!("\n{:<16} {:>10} {:>12} {:>9} {:>9} {:>9}",
+             "model", "params", "bits", "train", "val_nll", "cloze");
+    for r in &results.records {
+        let cloze = r.tasks.iter().find(|t| t.task == "cloze")
+            .map(|t| format!("{:.3}", t.acc)).unwrap_or_default();
+        println!("{:<16} {:>10} {:>12.3e} {:>9.4} {:>9.4} {:>9}",
+                 r.name, r.n_params, r.size_bits, r.final_train_loss,
+                 r.val_nll, cloze);
+    }
+}
+
+fn print_scaling(rep: &analysis::ScalingReport) {
+    println!("\nScaling fits  L(N) = A/N^alpha + eps   (Eq. 1 analog)");
+    for (label, fit) in [("TriLM", &rep.trilm_offset),
+                         ("FloatLM", &rep.floatlm_offset)] {
+        println!("  {label:<8} A={:<8.3} alpha={:<6.3} eps={:<6.3} rss={:.2e}",
+                 fit.a, fit.alpha, fit.eps, fit.rss);
+    }
+    println!("  gap extrapolation (Fig. 10 analog):");
+    for (n, gap) in rep.gap_curve.iter().step_by(8) {
+        println!("    N = {n:>12.3e}: TriLM {gap:+.2}% vs FloatLM");
+    }
+}
+
+fn print_deploy(output: &str) {
+    match output {
+        "4" => {
+            println!("Table 4: sizes in bits (x1e9)");
+            print!("{:<16}", "family");
+            for row in deploy::PAPER_SUITE.iter() {
+                print!("{:>8}", row.label);
+            }
+            println!();
+            for row in deploy::table4() {
+                print!("{:<16}", row.family);
+                for v in row.sizes_gbits {
+                    print!("{v:>8.2}");
+                }
+                println!();
+            }
+        }
+        "2a" => {
+            println!("Fig 2a: model size (GB) vs params");
+            println!("{:>12} {:>10} {:>10} {:>10}",
+                     "params", "FloatLM", "QuantLM4", "TriLM");
+            for r in deploy::fig2_series().iter().step_by(3) {
+                println!("{:>12.3e} {:>10.1} {:>10.1} {:>10.1}",
+                         r.params, r.float_gb, r.quant4_gb, r.trilm_gb);
+            }
+            for (gpu, mem) in [("H100", 80.0), ("MI300X", 192.0)] {
+                println!("max params on one {gpu} ({mem} GB): \
+                          FloatLM {:.2e}, QuantLM4 {:.2e}, TriLM {:.2e}",
+                         deploy::max_params_fitting(mem, deploy::SizeFamily::Float),
+                         deploy::max_params_fitting(
+                             mem, deploy::SizeFamily::Quant { bits: 4, group: 128 }),
+                         deploy::max_params_fitting(mem, deploy::SizeFamily::Ternary));
+            }
+        }
+        "2b" => {
+            println!("Fig 2b: theoretical max decode speedup vs FP16");
+            println!("{:>12} {:>10} {:>10}", "params", "QuantLM4", "TriLM");
+            for r in deploy::fig2_series().iter().step_by(3) {
+                println!("{:>12.3e} {:>10.2} {:>10.2}",
+                         r.params, r.quant4_speedup, r.trilm_speedup);
+            }
+        }
+        "21" => {
+            println!("Fig 21a: memory (GB) per TFLOP trends");
+            for f in deploy::memory_per_tflop_trend() {
+                println!("  {:?}: slope {:+.4}/yr  points {:?}",
+                         f.vendor, f.slope, f.points);
+            }
+            println!("Fig 21b: bandwidth (GB/s) per TFLOP trends");
+            for f in deploy::bandwidth_per_tflop_trend() {
+                println!("  {:?}: slope {:+.4}/yr", f.vendor, f.slope);
+            }
+        }
+        other => println!("unknown deploy output '{other}' (use 4|2a|2b|21)"),
+    }
+}
+
+fn bench_report(res: &coordinator::SuiteResults, experiment: &str) {
+    let all = experiment == "all";
+    if all || experiment == "fig1" {
+        section("Fig 1 / Tables 6-7 analog: C&R (pattern_mcq) + LAMBADA \
+                 (cloze) by size & family");
+        table_by_task(res, &["pattern_mcq", "cloze"]);
+    }
+    if all || experiment == "fig9" {
+        section("Fig 9 analog: final val loss across size (bits) and params");
+        println!("{:<16} {:>10} {:>12} {:>9}", "model", "params", "bits",
+                 "val_nll");
+        for r in &res.records {
+            println!("{:<16} {:>10} {:>12.3e} {:>9.4}",
+                     r.name, r.n_params, r.size_bits, r.val_nll);
+        }
+    }
+    if all || experiment == "fig11" {
+        section("Figs 11-12 / Tables 9,13 analog: knowledge tasks");
+        table_by_task(res, &["fact_mcq", "fact_recall"]);
+    }
+    if all || experiment == "fig13" {
+        section("Fig 13 analog: cross-domain NLL");
+        for r in &res.records {
+            let doms: Vec<String> = r.domain_nll.iter()
+                .map(|(d, v)| format!("{d} {v:.3}")).collect();
+            println!("{:<16} {}", r.name, doms.join("  "));
+        }
+    }
+    if all || experiment == "toxicity" {
+        section("Table 12 analog: stereotype preference (CrowS-Pairs-like)");
+        table_by_task(res, &["stereo_pairs"]);
+    }
+}
+
+fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+fn table_by_task(res: &coordinator::SuiteResults, tasks: &[&str]) {
+    print!("{:<16} {:>10} {:>12}", "model", "params", "bits");
+    for t in tasks {
+        print!(" {t:>12}");
+    }
+    println!();
+    for r in &res.records {
+        print!("{:<16} {:>10} {:>12.3e}", r.name, r.n_params, r.size_bits);
+        for t in tasks {
+            let s = r.tasks.iter().find(|x| x.task == *t)
+                .map(|x| format!("{:.3}", x.acc)).unwrap_or_default();
+            print!(" {s:>12}");
+        }
+        println!();
+    }
+}

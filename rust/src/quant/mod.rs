@@ -1,0 +1,191 @@
+//! k-bit symmetric group quantization — the QuantLM storage format (§4.2).
+//!
+//! Symmetric (no zero offset), group size 128 along input channels,
+//! matching the paper's GPTQ configuration: effective bit rates are
+//! bits + 16/group (one fp16 scale per group), e.g. 3.25 / 4.25 bits at
+//! group 128 — the numbers behind Table 4's QuantLM rows.
+
+
+use crate::runtime::HostTensor;
+
+/// A k-bit group-quantized matrix.
+#[derive(Debug, Clone)]
+pub struct QuantTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub group: usize,
+    /// Row-major signed k-bit values stored widened to i8.
+    pub q: Vec<i8>,
+    /// One scale per (row, group): rows * (cols / group) values.
+    pub scales: Vec<f32>,
+}
+
+impl QuantTensor {
+    pub fn qmax(bits: u32) -> f32 {
+        (1i32 << (bits - 1)) as f32 - 1.0
+    }
+
+    /// Round-to-nearest symmetric group quantization (the non-GPTQ
+    /// baseline; GPTQ improves on this using the Hessian — see gptq/).
+    pub fn quantize_rtn(w: &HostTensor, bits: u32, group: usize) -> Self {
+        let (rows, cols) = w.dims2();
+        let group = group.min(cols);
+        assert_eq!(cols % group, 0, "cols {cols} % group {group} != 0");
+        let ng = cols / group;
+        let qmax = Self::qmax(bits);
+        let mut q = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows * ng);
+        for r in 0..rows {
+            let row = w.row(r);
+            for g in 0..ng {
+                let seg = &row[g * group..(g + 1) * group];
+                let absmax = seg.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let scale = (absmax / qmax).max(1e-5);
+                scales.push(scale);
+                for &x in seg {
+                    q.push((x / scale).round().clamp(-qmax, qmax) as i8);
+                }
+            }
+        }
+        QuantTensor { rows, cols, bits, group, q, scales }
+    }
+
+    pub fn dequant(&self) -> HostTensor {
+        let ng = self.cols / self.group;
+        let mut data = Vec::with_capacity(self.q.len());
+        for r in 0..self.rows {
+            for g in 0..ng {
+                let scale = self.scales[r * ng + g];
+                let base = r * self.cols + g * self.group;
+                for i in 0..self.group {
+                    data.push(self.q[base + i] as f32 * scale);
+                }
+            }
+        }
+        HostTensor::new(vec![self.rows, self.cols], data)
+    }
+
+    /// Scale of (row, col)'s group.
+    pub fn scale_at(&self, r: usize, c: usize) -> f32 {
+        self.scales[r * (self.cols / self.group) + c / self.group]
+    }
+
+    /// Effective bits per parameter including the fp16 group scales —
+    /// the paper's 3.25/4.25 accounting (§4.2).
+    pub fn effective_bits(&self) -> f64 {
+        self.bits as f64 + 16.0 / self.group as f64
+    }
+
+    /// Mean squared reconstruction error vs the original weights.
+    pub fn mse(&self, w: &HostTensor) -> f64 {
+        let dq = self.dequant();
+        dq.data.iter().zip(w.data.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>() / w.data.len() as f64
+    }
+}
+
+/// Pack widened i8 k-bit values into a dense bitstream (storage size
+/// accounting + the format a real deployment kernel would stream).
+pub fn pack_kbit(q: &[i8], bits: u32) -> Vec<u8> {
+    let qmax = (1i32 << (bits - 1)) - 1;
+    let mut out = Vec::with_capacity((q.len() * bits as usize).div_ceil(8));
+    let mut acc: u64 = 0;
+    let mut nbits = 0u32;
+    for &v in q {
+        debug_assert!((v as i32) >= -qmax && (v as i32) <= qmax);
+        let unsigned = (v as i32 + qmax) as u64; // bias to unsigned
+        acc |= unsigned << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+    out
+}
+
+pub fn unpack_kbit(bytes: &[u8], bits: u32, len: usize) -> Vec<i8> {
+    let qmax = (1i32 << (bits - 1)) - 1;
+    let mask = (1u64 << bits) - 1;
+    let mut out = Vec::with_capacity(len);
+    let mut acc: u64 = 0;
+    let mut nbits = 0u32;
+    let mut iter = bytes.iter();
+    while out.len() < len {
+        while nbits < bits {
+            acc |= (*iter.next().expect("bitstream underrun") as u64) << nbits;
+            nbits += 8;
+        }
+        out.push(((acc & mask) as i32 - qmax) as i8);
+        acc >>= bits;
+        nbits -= bits;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtn_error_bounded_by_half_step() {
+        let w = HostTensor::randn(vec![16, 64], 0.1, 1);
+        let q = QuantTensor::quantize_rtn(&w, 4, 32);
+        let dq = q.dequant();
+        for r in 0..16 {
+            for c in 0..64 {
+                let step = q.scale_at(r, c);
+                assert!((w.at2(r, c) - dq.at2(r, c)).abs() <= 0.5 * step + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = HostTensor::randn(vec![32, 128], 0.1, 2);
+        let errs: Vec<f64> = [3u32, 4, 6, 8].iter()
+            .map(|&b| QuantTensor::quantize_rtn(&w, b, 128).mse(&w))
+            .collect();
+        for pair in errs.windows(2) {
+            assert!(pair[1] < pair[0], "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn effective_bits_match_paper() {
+        let w = HostTensor::randn(vec![8, 128], 0.1, 3);
+        assert!((QuantTensor::quantize_rtn(&w, 3, 128).effective_bits() - 3.125)
+                    .abs() < 1e-9);
+        assert!((QuantTensor::quantize_rtn(&w, 4, 128).effective_bits() - 4.125)
+                    .abs() < 1e-9);
+    }
+
+    #[test]
+    fn kbit_pack_roundtrip_property() {
+        let mut rng = crate::runtime::SplitMix64::new(31);
+        for trial in 0..300 {
+            let bits = 2 + (rng.below(7) as u32); // 2..=8
+            let qmax = (1i32 << (bits - 1)) - 1;
+            let len = trial % 101;
+            let vals: Vec<i8> = (0..len)
+                .map(|_| (rng.below((2 * qmax + 1) as usize) as i32 - qmax) as i8)
+                .collect();
+            let packed = pack_kbit(&vals, bits);
+            assert_eq!(unpack_kbit(&packed, bits, vals.len()), vals,
+                       "bits {bits} trial {trial}");
+        }
+    }
+
+    #[test]
+    fn packed_size_matches_bits() {
+        let vals = vec![0i8; 1024];
+        assert_eq!(pack_kbit(&vals, 4).len(), 512);
+        assert_eq!(pack_kbit(&vals, 3).len(), 384);
+    }
+}

@@ -1,0 +1,193 @@
+//! The artifact manifest: the calling convention shared with
+//! `python/compile/aot.py`. Parameter order, graph files, and I/O specs
+//! are all defined by `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seq: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub capture_batch: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub size: String,
+    pub family: String,
+    pub config: ConfigSpec,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigSpec {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub glu: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub mp: usize,
+    pub family: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        shape: j.get("shape")?.as_usize_vec()?,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let cfg = m.get("config")?;
+            let config = ConfigSpec {
+                vocab: cfg.get("vocab")?.as_usize()?,
+                hidden: cfg.get("hidden")?.as_usize()?,
+                glu: cfg.get("glu")?.as_usize()?,
+                heads: cfg.get("heads")?.as_usize()?,
+                layers: cfg.get("layers")?.as_usize()?,
+                seq: cfg.get("seq")?.as_usize()?,
+                mp: cfg.get("mp")?.as_usize()?,
+                family: cfg.get("family")?.as_str()?.to_string(),
+            };
+            let params = m.get("params")?.as_arr()?.iter().map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.as_usize_vec()?,
+                })
+            }).collect::<Result<Vec<_>>>()?;
+            let mut graphs = BTreeMap::new();
+            for (gname, g) in m.get("graphs")?.as_obj()? {
+                graphs.insert(gname.clone(), GraphSpec {
+                    file: g.get("file")?.as_str()?.to_string(),
+                    inputs: g.get("inputs")?.as_arr()?.iter()
+                        .map(io_spec).collect::<Result<Vec<_>>>()?,
+                    outputs: g.get("outputs")?.as_arr()?.iter()
+                        .map(io_spec).collect::<Result<Vec<_>>>()?,
+                });
+            }
+            models.insert(name.clone(), ModelEntry {
+                size: m.get("size")?.as_str()?.to_string(),
+                family: m.get("family")?.as_str()?.to_string(),
+                config,
+                n_params: m.get("n_params")?.as_usize()?,
+                params,
+                graphs,
+            });
+        }
+        Ok(Manifest {
+            seq: j.get("seq")?.as_usize()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            capture_batch: j.get("capture_batch")?.as_usize()?,
+            models,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)",
+                                         path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!("model '{name}' not in manifest (have: {:?})",
+                            self.models.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+impl ModelEntry {
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs.get(name).ok_or_else(|| {
+            anyhow::anyhow!("graph '{name}' not lowered for this model \
+                             (have: {:?})", self.graphs.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Number of flat parameter arrays P (train graphs take 3P + 5 inputs).
+    pub fn n_param_arrays(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let json = r#"{
+            "seq": 128, "train_batch": 8, "eval_batch": 8,
+            "capture_batch": 4,
+            "adam": {"b1": 0.9, "b2": 0.95, "eps": 1e-8},
+            "models": {
+                "160k_float": {
+                    "size": "160k", "family": "float",
+                    "config": {"vocab": 512, "hidden": 64, "glu": 160,
+                               "heads": 1, "layers": 2, "seq": 128,
+                               "mp": 1, "family": "float"},
+                    "n_params": 160064,
+                    "params": [{"name": "embed", "shape": [512, 64]}],
+                    "graphs": {"train": {"file": "x.hlo.txt",
+                                          "inputs": [{"shape": [2], "dtype": "f32"}],
+                                          "outputs": []}}
+                }
+            }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        let entry = &m.models["160k_float"];
+        assert_eq!(entry.params[0].name, "embed");
+        assert_eq!(entry.params[0].shape, vec![512, 64]);
+        assert_eq!(entry.config.hidden, 64);
+        assert_eq!(entry.graphs["train"].inputs[0].dtype, "f32");
+        assert!(entry.graph("train").is_ok());
+        assert!(entry.graph("missing").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = Path::new("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.models.len() >= 4);
+            for entry in m.models.values() {
+                assert!(entry.n_param_arrays() > 0);
+                assert!(entry.graphs.contains_key("eval"));
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only bridge between the Rust coordinator and the
+//! JAX/Pallas layers: `python/compile/aot.py` lowers every graph once to
+//! `artifacts/*.hlo.txt`; this module compiles them on the PJRT CPU
+//! client and runs them with concrete inputs. HLO *text* is the
+//! interchange format (jax>=0.5 protos use 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use manifest::{GraphSpec, Manifest, ModelEntry};
+pub use tensor::{HostTensor, SplitMix64};
+
+use crate::Result;
+
+/// A wrapper over the PJRT CPU client plus the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+/// A compiled executable plus its manifest spec.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub spec: GraphSpec,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load `artifacts/manifest.json`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { client, dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one graph of one model (e.g. `("6.7m_ternary", "train")`).
+    pub fn load_graph(&self, model: &str, graph: &str) -> Result<Graph> {
+        let entry = self.manifest.model(model)?;
+        let spec = entry.graph(graph)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(Graph { exe, client: self.client.clone(), spec,
+                   name: format!("{model}/{graph}") })
+    }
+}
+
+impl Graph {
+    /// Execute with host literals; returns the flattened output tuple.
+    ///
+    /// Inputs are staged as self-managed `PjRtBuffer`s and executed via
+    /// `execute_b`, NOT `execute(&[Literal])`: the crate's literal-based
+    /// shim `release()`s the input buffers it creates without freeing
+    /// them, leaking every argument on every call (fatal for a training
+    /// loop — a suite run leaked ~36 GB before being OOM-killed).
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if !self.spec.inputs.is_empty() && args.len() != self.spec.inputs.len() {
+            anyhow::bail!("{}: expected {} inputs, got {}", self.name,
+                        self.spec.inputs.len(), args.len());
+        }
+        let bufs: Vec<xla::PjRtBuffer> = args.iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit))
+            .collect::<std::result::Result<_, _>>().map_err(wrap)?;
+        let outs = self.exe.execute_b::<xla::PjRtBuffer>(&bufs).map_err(wrap)?;
+        drop(bufs);
+        let lit = outs[0][0].to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: output is one tuple literal.
+        lit.to_tuple().map_err(wrap).map_err(Into::into)
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host conversions
+// ---------------------------------------------------------------------------
+
+/// f32 literal with the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(wrap).map_err(Into::into)
+}
+
+/// i32 literal with the given shape (token batches).
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(wrap).map_err(Into::into)
+}
+
+/// f32 scalar literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn literal_from_tensor(t: &HostTensor) -> Result<xla::Literal> {
+    literal_f32(&t.shape, &t.data)
+}
+
+pub fn tensor_from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(wrap)?;
+    Ok(HostTensor::new(dims, data))
+}
+
+/// Extract the f32 scalar from a rank-0 literal.
+pub fn scalar_from_literal(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(wrap).map_err(Into::into)
+}
+
+/// The full model state threaded through a train graph:
+/// params, first and second Adam moments, and the step counter.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: xla::Literal,
+}
+
+impl TrainState {
+    /// Fresh state: params from host tensors, zeroed moments, step 0.
+    pub fn init(params: &[HostTensor]) -> Result<Self> {
+        let p = params.iter().map(literal_from_tensor).collect::<Result<Vec<_>>>()?;
+        let zeros = |t: &HostTensor| literal_f32(&t.shape, &vec![0.0; t.len()]);
+        let m = params.iter().map(zeros).collect::<Result<Vec<_>>>()?;
+        let v = params.iter().map(zeros).collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { params: p, m, v, step: scalar_f32(0.0) })
+    }
+
+    /// Copy params back to host tensors (checkpointing, analysis, GPTQ).
+    pub fn params_to_host(&self) -> Result<Vec<HostTensor>> {
+        self.params.iter().map(tensor_from_literal).collect()
+    }
+}
+
+/// Initialize parameters host-side following the python init recipe
+/// (normal(0, 0.02), residual-out projections scaled by 1/sqrt(2L),
+/// norms at 1). The RNG stream differs from jax's; the *distribution*
+/// is what matters for training from scratch in Rust.
+pub fn init_params_like(entry: &ModelEntry, seed: u64) -> Vec<HostTensor> {
+    let layers = entry.config.layers as f32;
+    let resid_scale = 1.0 / (2.0 * layers).sqrt();
+    entry.params.iter().enumerate().map(|(i, p)| {
+        if p.name.ends_with("norm") {
+            HostTensor::new(p.shape.clone(), vec![1.0; p.shape.iter().product()])
+        } else {
+            let std = if p.name.ends_with("attn_o") || p.name.ends_with("mlp_down") {
+                0.02 * resid_scale
+            } else {
+                0.02
+            };
+            HostTensor::randn(p.shape.clone(), std, seed ^ ((i as u64) << 32))
+        }
+    }).collect()
+}
+
+/// Name -> host tensor map helper used by GPTQ / analysis code.
+pub fn params_by_name(entry: &ModelEntry, params: &[HostTensor])
+                      -> HashMap<String, HostTensor> {
+    entry.params.iter().zip(params.iter())
+        .map(|(spec, t)| (spec.name.clone(), t.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = literal_from_tensor(&t).unwrap();
+        let back = tensor_from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_i32_shape() {
+        let lit = literal_i32(&[2, 2], &[1, 2, 3, 4]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_f32(3.5);
+        assert_eq!(scalar_from_literal(&lit).unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,157 @@
+//! Ternary deployment substrate: ternarization, packed storage formats,
+//! and CPU inference kernels.
+//!
+//! This is the "deployment" half of the paper's story (§2.1): once a
+//! TriLM is trained, inference needs only the ternary states and the
+//! per-shard scales. Two packings are provided:
+//!
+//! - [`Packed2Bit`] — 2 bits/weight (4 trits per byte): the simple
+//!   hardware-friendly packing the paper's Fig. 2a "appropriate packing"
+//!   refers to for GPU deployment.
+//! - [`PackedBase3`] — 5 trits per byte = 1.6 bits/weight, approaching
+//!   the information-theoretic 1.58 bits (log2 3) used in the paper's
+//!   size accounting (Table 4).
+//!
+//! The CPU matmul kernels realize the §2.1/F.2 claim that memory-bound
+//! decoding speeds up ~proportionally to the compression factor:
+//! `matmul_ternary_*` streams 2-bit weights instead of 32-bit floats
+//! and replaces multiplies with add/sub (benches/ternary_matmul.rs).
+
+pub mod matmul;
+pub mod pack;
+
+pub use matmul::{matvec_dense, matvec_ternary_packed, matmul_dense,
+                 matmul_ternary_dense};
+pub use pack::{Packed2Bit, PackedBase3};
+
+use crate::runtime::HostTensor;
+
+/// Per-shard absmean scales (§A.5), mirroring `ref.ternary_scales`.
+pub fn ternary_scales(w: &HostTensor, mp: usize) -> Vec<f32> {
+    let (rows, cols) = w.dims2();
+    assert_eq!(rows % mp, 0, "rows {rows} not divisible by mp {mp}");
+    let shard = rows / mp;
+    (0..mp)
+        .map(|s| {
+            let start = s * shard * cols;
+            let end = (s + 1) * shard * cols;
+            let sum: f64 = w.data[start..end].iter().map(|x| x.abs() as f64).sum();
+            1e-5 + (sum / (shard * cols) as f64) as f32
+        })
+        .collect()
+}
+
+/// A ternarized weight matrix: states in {-1, 0, +1} plus per-shard scales.
+#[derive(Debug, Clone)]
+pub struct TernaryTensor {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major states, one i8 in {-1, 0, 1} per weight.
+    pub states: Vec<i8>,
+    /// mp scale values; row r uses scales[r / (rows/mp)].
+    pub scales: Vec<f32>,
+}
+
+impl TernaryTensor {
+    /// Ternarize latent FP weights (round(clip(w/gamma, -1, 1))), the
+    /// exact inference-time transform of Table 1.
+    pub fn from_latent(w: &HostTensor, mp: usize) -> Self {
+        let (rows, cols) = w.dims2();
+        let scales = ternary_scales(w, mp);
+        let shard = rows / mp;
+        let mut states = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let g = scales[r / shard];
+            for c in 0..cols {
+                let t = (w.at2(r, c) / g).clamp(-1.0, 1.0).round() as i8;
+                states.push(t);
+            }
+        }
+        TernaryTensor { rows, cols, states, scales }
+    }
+
+    /// Dequantize back to floats (gamma * w_hat).
+    pub fn dequant(&self) -> HostTensor {
+        let shard = self.rows / self.scales.len();
+        let mut data = Vec::with_capacity(self.states.len());
+        for r in 0..self.rows {
+            let g = self.scales[r / shard];
+            for c in 0..self.cols {
+                data.push(g * self.states[r * self.cols + c] as f32);
+            }
+        }
+        HostTensor::new(vec![self.rows, self.cols], data)
+    }
+
+    /// Fraction of zero states — the sparsity ternary hardware exploits
+    /// (§2.3, Broader-Impact "Cerebras" note).
+    pub fn sparsity(&self) -> f64 {
+        self.states.iter().filter(|&&s| s == 0).count() as f64
+            / self.states.len().max(1) as f64
+    }
+
+    /// Row scale for row r.
+    pub fn row_scale(&self, r: usize) -> f32 {
+        self.scales[r / (self.rows / self.scales.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> HostTensor {
+        HostTensor::randn(vec![rows, cols], 0.05, seed)
+    }
+
+    #[test]
+    fn scales_match_absmean() {
+        let w = sample(8, 4, 0);
+        let s = ternary_scales(&w, 2);
+        assert_eq!(s.len(), 2);
+        let manual: f32 =
+            w.data[..16].iter().map(|x| x.abs()).sum::<f32>() / 16.0 + 1e-5;
+        assert!((s[0] - manual).abs() < 1e-6);
+    }
+
+    #[test]
+    fn states_are_ternary() {
+        let t = TernaryTensor::from_latent(&sample(16, 8, 1), 4);
+        assert!(t.states.iter().all(|&s| (-1..=1).contains(&s)));
+        assert_eq!(t.scales.len(), 4);
+    }
+
+    #[test]
+    fn dequant_error_bounded_by_half_gamma() {
+        let w = sample(16, 8, 2);
+        let t = TernaryTensor::from_latent(&w, 1);
+        let dq = t.dequant();
+        let g = t.scales[0];
+        for (a, b) in w.data.iter().zip(dq.data.iter()) {
+            // For |w| <= 1.5*gamma the rounding error is <= gamma/2;
+            // beyond that the clip dominates, error <= |w| - gamma.
+            let bound = if a.abs() <= 1.5 * g { g / 2.0 + 1e-6 }
+                        else { a.abs() - g + 1e-6 };
+            assert!((a - b).abs() <= bound, "{a} vs {b} (gamma {g})");
+        }
+    }
+
+    #[test]
+    fn typical_gaussian_weights_have_nonzero_sparsity() {
+        // For N(0, sigma), absmean = sigma*sqrt(2/pi); |w| < gamma/2
+        // happens ~31% of the time -> zero states exist in bulk.
+        let t = TernaryTensor::from_latent(&sample(64, 64, 3), 1);
+        let sp = t.sparsity();
+        assert!(sp > 0.15 && sp < 0.5, "sparsity {sp}");
+    }
+
+    #[test]
+    fn mp_shards_get_independent_scales() {
+        let mut w = sample(8, 4, 4);
+        for v in &mut w.data[16..] {
+            *v *= 10.0; // second shard much larger
+        }
+        let t = TernaryTensor::from_latent(&w, 2);
+        assert!(t.scales[1] > 5.0 * t.scales[0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Packed storage for ternary states.
+//!
+//! - [`Packed2Bit`]: 4 trits per byte, 2 bits each (00=0, 01=+1, 10=-1).
+//!   Fast to decode, used by the CPU inference kernels.
+//! - [`PackedBase3`]: 5 trits per byte (3^5 = 243 <= 256), 1.6 bits per
+//!   weight — the near-entropy coding behind the paper's Table 4 sizes.
+
+
+/// 2-bit packing: 4 ternary states per byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Packed2Bit {
+    pub len: usize,
+    pub bytes: Vec<u8>,
+}
+
+#[inline]
+fn enc2(s: i8) -> u8 {
+    match s {
+        0 => 0b00,
+        1 => 0b01,
+        -1 => 0b10,
+        _ => panic!("not a ternary state: {s}"),
+    }
+}
+
+#[inline]
+pub fn dec2(b: u8) -> i8 {
+    match b & 0b11 {
+        0b00 => 0,
+        0b01 => 1,
+        0b10 => -1,
+        _ => 0, // 0b11 unused; treat as zero for robustness
+    }
+}
+
+impl Packed2Bit {
+    pub fn pack(states: &[i8]) -> Self {
+        let mut bytes = vec![0u8; states.len().div_ceil(4)];
+        for (i, &s) in states.iter().enumerate() {
+            bytes[i / 4] |= enc2(s) << ((i % 4) * 2);
+        }
+        Packed2Bit { len: states.len(), bytes }
+    }
+
+    pub fn unpack(&self) -> Vec<i8> {
+        (0..self.len)
+            .map(|i| dec2(self.bytes[i / 4] >> ((i % 4) * 2)))
+            .collect()
+    }
+
+    /// Decode position i without unpacking everything.
+    #[inline]
+    pub fn get(&self, i: usize) -> i8 {
+        dec2(self.bytes[i / 4] >> ((i % 4) * 2))
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        8.0 * self.bytes.len() as f64 / self.len as f64
+    }
+}
+
+/// Base-3 packing: 5 ternary states per byte (1.6 bits/weight).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBase3 {
+    pub len: usize,
+    pub bytes: Vec<u8>,
+}
+
+impl PackedBase3 {
+    pub fn pack(states: &[i8]) -> Self {
+        let mut bytes = Vec::with_capacity(states.len().div_ceil(5));
+        for chunk in states.chunks(5) {
+            let mut v: u16 = 0;
+            // little-endian base-3 digits, states mapped -1,0,1 -> 0,1,2
+            for &s in chunk.iter().rev() {
+                debug_assert!((-1..=1).contains(&s));
+                v = v * 3 + (s + 1) as u16;
+            }
+            bytes.push(v as u8);
+        }
+        PackedBase3 { len: states.len(), bytes }
+    }
+
+    pub fn unpack(&self) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.len);
+        for (ci, &b) in self.bytes.iter().enumerate() {
+            let mut v = b as u16;
+            let n = (self.len - ci * 5).min(5);
+            for _ in 0..n {
+                out.push((v % 3) as i8 - 1);
+                v /= 3;
+            }
+        }
+        out
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        8.0 * self.bytes.len() as f64 / self.len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SplitMix64;
+
+    fn random_states(rng: &mut SplitMix64, len: usize) -> Vec<i8> {
+        (0..len).map(|_| rng.below(3) as i8 - 1).collect()
+    }
+
+    // Property sweeps (seeded stand-ins for proptest; see util/mod.rs).
+    #[test]
+    fn pack2_roundtrip_property() {
+        let mut rng = SplitMix64::new(21);
+        for trial in 0..200 {
+            let states = random_states(&mut rng, trial % 97);
+            let p = Packed2Bit::pack(&states);
+            assert_eq!(p.unpack(), states, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn pack3_roundtrip_property() {
+        let mut rng = SplitMix64::new(22);
+        for trial in 0..200 {
+            let states = random_states(&mut rng, trial % 103);
+            let p = PackedBase3::pack(&states);
+            assert_eq!(p.unpack(), states, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn pack2_random_access_property() {
+        let mut rng = SplitMix64::new(23);
+        for trial in 0..100 {
+            let states = random_states(&mut rng, 1 + trial % 77);
+            let p = Packed2Bit::pack(&states);
+            for (i, &s) in states.iter().enumerate() {
+                assert_eq!(p.get(i), s);
+            }
+        }
+    }
+
+    #[test]
+    fn bits_per_weight_targets() {
+        let states = vec![0i8; 10_000];
+        assert!((Packed2Bit::pack(&states).bits_per_weight() - 2.0).abs() < 0.01);
+        assert!((PackedBase3::pack(&states).bits_per_weight() - 1.6).abs() < 0.01);
+    }
+
+    #[test]
+    fn base3_is_denser_than_2bit() {
+        let states = vec![1i8; 100_000];
+        assert!(PackedBase3::pack(&states).bytes.len()
+                < Packed2Bit::pack(&states).bytes.len());
+    }
+}

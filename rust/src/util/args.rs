@@ -1,0 +1,101 @@
+//! Tiny CLI argument parser: `--flag value` and boolean `--flag` styles,
+//! with a leading subcommand word.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                out.command = iter.next().unwrap();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                match iter.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), iter.next().unwrap());
+                    }
+                    _ => out.bools.push(name.to_string()),
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str, default: &str) -> Vec<String> {
+        self.get(name, default).split(',')
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --size 160k --steps 100 --fp16");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("size", "x"), "160k");
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.has("fp16"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("suite");
+        assert_eq!(a.get("families", "float,ternary"), "float,ternary");
+        assert_eq!(a.get_list("families", "a,b"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--x 1");
+        assert_eq!(a.command, "");
+        assert_eq!(a.get("x", ""), "1");
+    }
+}

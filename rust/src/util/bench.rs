@@ -1,0 +1,115 @@
+//! Minimal benchmark harness (criterion stand-in for the offline build).
+//!
+//! Benches are plain binaries (`harness = false`): each calls
+//! [`bench`] with a closure; we warm up, run timed iterations until a
+//! wall-clock budget is spent, and report mean / p50 / p95 per
+//! iteration plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    pub fn report(&self) {
+        println!("{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+                 self.name, self.mean, self.p50, self.p95, self.iters);
+    }
+
+    /// Report with a throughput line, e.g. items/sec or bytes/sec.
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) {
+        self.report();
+        println!("{:<44} {:>14.3e} {unit}/s", "", per_iter / self.mean_secs());
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after `warmup` iterations).
+pub fn bench_for(name: &str, warmup: usize, budget: Duration,
+                 mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.is_empty() {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[samples.len() * 95 / 100],
+    }
+}
+
+/// Default: 3 warmup iterations, 2-second budget.
+pub fn bench(name: &str, f: impl FnMut()) -> BenchResult {
+    bench_for(name, 3, Duration::from_secs(2), f)
+}
+
+/// Short variant for expensive end-to-end benches.
+pub fn bench_few(name: &str, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench_for("noop", 1, Duration::from_millis(20), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters > 10);
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn bench_few_counts() {
+        let r = bench_few("sleepless", 5, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline-friendly utilities: JSON, CLI args, bench timing, temp dirs.
+//!
+//! The build environment ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, tempfile) are replaced by these small equivalents.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod testutil;
+
+pub use json::Json;

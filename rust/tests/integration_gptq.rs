@@ -1,0 +1,73 @@
+//! Integration: the QuantLM pipeline over the real capture graph —
+//! Hessian accumulation, GPTQ quantization, and the §4.2 quality
+//! ordering (8-bit ~ lossless > 4-bit > 3-bit).
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::Trainer;
+use spectra::data::{Batcher, Dataset};
+use spectra::eval::Evaluator;
+use spectra::gptq;
+use spectra::runtime::{self, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn gptq_pipeline_quality_ordering() {
+    let Some(rt) = runtime() else { return };
+    let data = Dataset::build(std::path::Path::new("runs/data_test"),
+                              300_000, 7).unwrap();
+    // Briefly train a FloatLM so weights/activations are non-degenerate.
+    let cfg = TrainConfig { seed: 7, ..TrainConfig::for_family(Family::Float, 30) };
+    let mut trainer = Trainer::new(&rt, "160k_float", cfg).unwrap();
+    let mut batcher = Batcher::new(data.train.clone(),
+                                   rt.manifest().train_batch,
+                                   rt.manifest().seq, 7);
+    trainer.train(&mut batcher, 30, |_| {}).unwrap();
+    let params = trainer.params().unwrap();
+
+    // Calibration batches + Hessians via the capture graph.
+    let b = rt.manifest().capture_batch;
+    let s = rt.manifest().seq;
+    let mut cal_batcher = Batcher::new(data.train.clone(), b, s - 1, 11);
+    let batches: Vec<Vec<i32>> = (0..3).map(|_| cal_batcher.next_batch())
+        .collect();
+    let hessians = gptq::accumulate_hessians(
+        &rt, "160k_float", trainer.param_literals(), &batches).unwrap();
+    assert!(hessians.iter().all(|h| h.n_samples == 3 * b * s));
+    // Hessian diagonals are non-negative (sum of squares).
+    for h in &hessians {
+        let hh = h.finalize();
+        for j in 0..h.dim {
+            assert!(hh[j * h.dim + j] >= 0.0);
+        }
+    }
+
+    // Quantize at 3/4/8 bits and check the val-nll quality ordering.
+    let ev = Evaluator::new(&rt, "160k_float").unwrap();
+    let base_lits: Vec<xla::Literal> = params.iter()
+        .map(runtime::literal_from_tensor)
+        .collect::<Result<_, _>>().unwrap();
+    let base = ev.nll(&base_lits, &data.val).unwrap();
+
+    let mut nlls = Vec::new();
+    for bits in [8u32, 4, 3] {
+        let qm = gptq::quantize_model(&rt, "160k_float", &params, &hessians,
+                                      bits, 128).unwrap();
+        let lits: Vec<xla::Literal> = qm.params.iter()
+            .map(runtime::literal_from_tensor)
+            .collect::<Result<_, _>>().unwrap();
+        nlls.push((bits, ev.nll(&lits, &data.val).unwrap()));
+    }
+    let get = |b: u32| nlls.iter().find(|(x, _)| *x == b).unwrap().1;
+    // 8-bit is near-lossless.
+    assert!((get(8) - base).abs() < 0.02, "8-bit {} vs base {base}", get(8));
+    // Degradation grows as bits shrink (allowing tiny noise at this scale).
+    assert!(get(3) >= get(4) - 0.005, "3-bit {} vs 4-bit {}", get(3), get(4));
+    assert!(get(4) >= get(8) - 0.005);
+}

@@ -1,0 +1,186 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts:
+//! the full L3 -> L2 -> L1 composition. Tests skip (pass trivially)
+//! when `artifacts/` is absent so `cargo test` works pre-`make artifacts`.
+
+use spectra::config::{Family, TrainConfig};
+use spectra::coordinator::Trainer;
+use spectra::data::{Batcher, Dataset};
+use spectra::eval::{self, Evaluator, TaskKind};
+use spectra::runtime::{self, Runtime};
+use spectra::ternary::TernaryTensor;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+fn dataset() -> Dataset {
+    Dataset::build(std::path::Path::new("runs/data_test"), 300_000, 7)
+        .expect("dataset")
+}
+
+#[test]
+fn train_step_runs_and_initial_loss_is_uniform() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    let cfg = TrainConfig::for_family(Family::Ternary, 100);
+    let mut trainer = Trainer::new(&rt, "160k_ternary", cfg).unwrap();
+    let mut batcher = Batcher::new(data.train.clone(),
+                                   rt.manifest().train_batch,
+                                   rt.manifest().seq, 7);
+    let m = trainer.step(&batcher.next_batch()).unwrap();
+    // Untrained model: CE ~= ln(512) = 6.24.
+    assert!((m.loss - 512f32.ln()).abs() < 0.6, "loss {}", m.loss);
+    assert!(m.grads_finite);
+    assert!(m.grad_norm > 0.0);
+}
+
+#[test]
+fn training_reduces_loss_for_every_family() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    for (model, family) in [("160k_float", Family::Float),
+                            ("160k_ternary", Family::Ternary),
+                            ("160k_binary", Family::Binary)] {
+        let cfg = TrainConfig { seed: 7, ..TrainConfig::for_family(family, 40) };
+        let mut trainer = Trainer::new(&rt, model, cfg).unwrap();
+        let mut batcher = Batcher::new(data.train.clone(),
+                                       rt.manifest().train_batch,
+                                       rt.manifest().seq, 7);
+        trainer.train(&mut batcher, 40, |_| {}).unwrap();
+        let first = trainer.log.rows[0].loss;
+        let last = trainer.log.final_loss(5);
+        assert!(last < first - 0.3, "{model}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn identical_seeds_give_identical_batches_across_families() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    // The paper's "Uniform Training" property (§4.1).
+    let mut b1 = Batcher::new(data.train.clone(), rt.manifest().train_batch,
+                              rt.manifest().seq, 3);
+    let mut b2 = Batcher::new(data.train.clone(), rt.manifest().train_batch,
+                              rt.manifest().seq, 3);
+    for _ in 0..5 {
+        assert_eq!(b1.next_batch(), b2.next_batch());
+    }
+}
+
+#[test]
+fn eval_logprobs_are_valid() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    let trainer = Trainer::new(&rt, "160k_ternary",
+                               TrainConfig::for_family(Family::Ternary, 10))
+        .unwrap();
+    let ev = Evaluator::new(&rt, "160k_ternary").unwrap();
+    let stride = rt.manifest().seq + 1;
+    let block: Vec<i32> = data.train[..rt.manifest().eval_batch * stride]
+        .iter().map(|&t| t as i32).collect();
+    let lp = ev.logprobs(trainer.param_literals(), &block).unwrap();
+    assert_eq!(lp.len(), rt.manifest().eval_batch);
+    for row in &lp {
+        assert_eq!(row.len(), rt.manifest().seq);
+        assert!(row.iter().all(|&l| l <= 0.0 && l.is_finite()));
+    }
+}
+
+#[test]
+fn nll_matches_mean_of_logprobs() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    let trainer = Trainer::new(&rt, "160k_float",
+                               TrainConfig::for_family(Family::Float, 10))
+        .unwrap();
+    let ev = Evaluator::new(&rt, "160k_float").unwrap();
+    let stride = rt.manifest().seq + 1;
+    let n = rt.manifest().eval_batch * stride;
+    let toks: Vec<u32> = data.val[..n].to_vec();
+    let nll = ev.nll(trainer.param_literals(), &toks).unwrap();
+    let block: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+    let lp = ev.logprobs(trainer.param_literals(), &block).unwrap();
+    let manual: f64 = -lp.iter().flatten().map(|&l| l as f64).sum::<f64>()
+        / (lp.len() * lp[0].len()) as f64;
+    assert!((nll - manual).abs() < 1e-5, "{nll} vs {manual}");
+}
+
+#[test]
+fn fp16_graph_overflows_at_huge_scale_and_skips() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    let cfg = TrainConfig { fp16: true,
+                            ..TrainConfig::for_family(Family::Float, 50) };
+    let mut trainer = Trainer::new(&rt, "160k_float", cfg).unwrap();
+    // Force an immediate overflow: f16 max is 65504, so a scale of 2^30
+    // guarantees scaled grads overflow.
+    trainer.loss_scale.scale = 2f32.powi(30);
+    trainer.loss_scale.min_seen = trainer.loss_scale.scale;
+    let mut batcher = Batcher::new(data.train.clone(),
+                                   rt.manifest().train_batch,
+                                   rt.manifest().seq, 7);
+    let m = trainer.step(&batcher.next_batch()).unwrap();
+    assert!(!m.grads_finite, "expected overflow at scale 2^30");
+    assert_eq!(trainer.loss_scale.skipped, 1);
+    assert!(trainer.loss_scale.scale < 2f32.powi(30));
+    // Recovery: subsequent steps at the halved scale eventually succeed.
+    let mut ok = false;
+    for _ in 0..25 {
+        let m = trainer.step(&batcher.next_batch()).unwrap();
+        if m.grads_finite {
+            ok = true;
+            break;
+        }
+    }
+    assert!(ok, "loss scale never recovered");
+}
+
+#[test]
+fn ternarized_deployment_matches_eval_graph_family() {
+    let Some(rt) = runtime() else { return };
+    // Rust-side ternarization must agree with the kernel's: ternarize a
+    // trained latent matrix, dequantize, and check the values the eval
+    // graph would see are reproducible (states in {-1,0,1}, per-shard
+    // scales ordered like the python oracle).
+    let entry = rt.manifest().model("930k_ternary").unwrap();
+    let params = runtime::init_params_like(entry, 3);
+    for (spec, t) in entry.params.iter().zip(params.iter()) {
+        if !spec.name.contains("attn_q") {
+            continue;
+        }
+        let tt = TernaryTensor::from_latent(t, entry.config.mp);
+        assert_eq!(tt.scales.len(), entry.config.mp);
+        let dq = tt.dequant();
+        // dequant only contains +-gamma and 0
+        for (r, row) in dq.data.chunks(tt.cols).enumerate() {
+            let g = tt.row_scale(r);
+            for &v in row {
+                assert!(v == 0.0 || (v.abs() - g).abs() < 1e-7);
+            }
+        }
+    }
+}
+
+#[test]
+fn task_scoring_prefers_trained_answer() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    // Train briefly; the stereo task should move toward the corpus bias
+    // faster than chance since it is a 2-way contrast trained densely.
+    let cfg = TrainConfig { seed: 7, ..TrainConfig::for_family(Family::Ternary, 60) };
+    let mut trainer = Trainer::new(&rt, "160k_ternary", cfg).unwrap();
+    let mut batcher = Batcher::new(data.train.clone(),
+                                   rt.manifest().train_batch,
+                                   rt.manifest().seq, 7);
+    trainer.train(&mut batcher, 60, |_| {}).unwrap();
+    let ev = Evaluator::new(&rt, "160k_ternary").unwrap();
+    let items = eval::generate(&data.world, TaskKind::StereoPairs, 24, 5);
+    let score = eval::run_task(&ev, trainer.param_literals(), &data.bpe,
+                               TaskKind::StereoPairs, &items).unwrap();
+    assert_eq!(score.n, 24);
+    assert!(score.acc >= 0.0 && score.acc <= 1.0);
+}
