@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# One-command verification harness: the tier-1 gate (which runs all
+# unit + integration suites, incl. kernel_equivalence and
+# serve_determinism) plus compile checks for every bench and example.
+#
+#   ./ci.sh          # full gate
+#   ./ci.sh --fast   # tier-1 only (build + tests)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--fast" ]]; then
+    echo "ci: tier-1 green (fast mode)"
+    exit 0
+fi
+
+echo "== compile benches + examples =="
+cargo build --release --benches --examples
+
+echo "ci: all green"

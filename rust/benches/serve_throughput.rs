@@ -1,0 +1,70 @@
+//! Bench: batched threaded ternary decode through the serve engine —
+//! tokens/sec vs batch size and thread count, against (a) the
+//! single-thread scalar reference (batch 1, 1 thread: the old
+//! one-request-at-a-time path) and (b) the dense f32 twin holding
+//! identical weights (the FloatLM-storage baseline).
+//!
+//! Acceptance target: batch-8 threaded ternary >= 3x the single-thread
+//! scalar tokens/sec.
+
+use spectra::serve::{bench_requests, DecodeModel, LmDims, Scheduler,
+                     TernaryLm};
+use spectra::util::bench::bench_few;
+
+const N_REQUESTS: usize = 24;
+const MAX_NEW: usize = 24;
+
+/// One full drain of the request set; returns generated-token count.
+fn drain(model: &dyn DecodeModel, batch: usize, threads: usize) -> usize {
+    let mut sched = Scheduler::new(model, batch, threads);
+    for r in bench_requests(model.dims().vocab, N_REQUESTS, MAX_NEW, 1) {
+        sched.submit(r);
+    }
+    let done = sched.run();
+    done.iter().map(|c| c.tokens.len()).sum()
+}
+
+fn main() {
+    let dims = LmDims { vocab: 512, hidden: 256, glu: 704, layers: 4 };
+    println!("== serve_throughput: {} requests x {MAX_NEW} tokens, \
+              vocab {} hidden {} glu {} layers {} ==",
+             N_REQUESTS, dims.vocab, dims.hidden, dims.glu, dims.layers);
+    let (tlm, dlm) = TernaryLm::synthetic_pair(dims, 2, 1);
+    let total_tokens = (N_REQUESTS * MAX_NEW) as f64;
+
+    let cores = std::thread::available_parallelism()
+        .map(|t| t.get()).unwrap_or(1);
+    let thread_counts: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&t| t <= cores.max(1)).collect();
+
+    let scalar = bench_few("ternary batch=1 threads=1 (scalar ref)", 3, || {
+        assert_eq!(drain(&tlm, 1, 1), N_REQUESTS * MAX_NEW);
+    });
+    scalar.report_throughput("tokens", total_tokens);
+    let scalar_tps = total_tokens / scalar.mean_secs();
+
+    let mut best_b8 = 0.0f64;
+    for &threads in &thread_counts {
+        for batch in [2usize, 4, 8] {
+            let r = bench_few(
+                &format!("ternary batch={batch} threads={threads}"), 3, || {
+                    drain(&tlm, batch, threads);
+                });
+            r.report_throughput("tokens", total_tokens);
+            if batch == 8 {
+                best_b8 = best_b8.max(total_tokens / r.mean_secs());
+            }
+        }
+    }
+
+    let dense = bench_few("dense f32 batch=8 (baseline)", 3, || {
+        drain(&dlm, 8, 1);
+    });
+    dense.report_throughput("tokens", total_tokens);
+
+    println!("\nbatch-8 threaded ternary vs single-thread scalar: {:.2}x \
+              (target >= 3x; {cores} cores available)",
+             best_b8 / scalar_tps);
+    println!("batch-8 ternary vs dense f32 batch-8: {:.2}x",
+             best_b8 / (total_tokens / dense.mean_secs()));
+}

@@ -4,8 +4,10 @@
 //! ratio (16x for 2-bit vs f32). Reports realized speedup per size.
 
 use spectra::runtime::HostTensor;
-use spectra::ternary::{matmul_dense, matmul_ternary_dense, matvec_dense,
-                       matvec_ternary_packed, Packed2Bit, TernaryTensor};
+use spectra::ternary::{matmul_dense, matmul_ternary_dense,
+                       matmul_ternary_packed, matvec_dense,
+                       matvec_ternary_packed, Packed2Bit, PackedMatrix,
+                       TernaryTensor};
 use spectra::util::bench::{bench, black_box};
 
 fn main() {
@@ -42,4 +44,21 @@ fn main() {
     bench("ternary_dense_matmul_32x1024x1024", || {
         black_box(matmul_ternary_dense(&x, &t));
     }).report();
+
+    println!("\n== blocked packed matmul (decode-shaped, m=8) ==");
+    let pm = PackedMatrix::from_ternary(&t);
+    let xb = HostTensor::randn(vec![8, cols], 1.0, 5);
+    let base = bench("packed_blocked_matmul_8x1024x1024_t1", || {
+        black_box(matmul_ternary_packed(&xb, &pm, 1));
+    });
+    base.report();
+    for threads in [2usize, 4] {
+        let r = bench(&format!("packed_blocked_matmul_8x1024x1024_t{threads}"),
+                      || {
+            black_box(matmul_ternary_packed(&xb, &pm, threads));
+        });
+        r.report();
+        println!("  -> thread scaling {:.2}x over 1 thread",
+                 base.mean_secs() / r.mean_secs());
+    }
 }

@@ -68,6 +68,48 @@ pub fn max_speedup_vs_fp16(params: f64, fam: SizeFamily) -> f64 {
     size_gb_at(params, SizeFamily::Float) / size_gb_at(params, fam)
 }
 
+/// Batched decode roofline: tokens/sec at batch size `batch` on `hw`.
+///
+/// Extends the Fig. 2b single-stream model with the batching term the
+/// serve engine exploits: per decode step the weights are streamed
+/// once and amortized over all lanes (bandwidth cost independent of
+/// batch), while compute grows linearly with batch. The step time is
+/// the roofline max of the two, so throughput rises ~linearly with
+/// batch until the compute roof, then flattens:
+///
+///   t_step = max(weight_bytes / BW,  batch * 2 * params / FLOPS)
+///   tokens/sec = batch / t_step
+pub fn decode_tokens_per_sec(params: f64, fam: SizeFamily,
+                             hw: &Accelerator, batch: f64) -> f64 {
+    assert!(batch >= 1.0, "batch must be >= 1");
+    let weight_bytes = size_gb_at(params, fam) * 1e9;
+    let t_bw = weight_bytes / (hw.bw_gbs * 1e9);
+    let t_compute = batch * 2.0 * params / (hw.tflops_fp16 * 1e12);
+    batch / t_bw.max(t_compute)
+}
+
+/// Decode speedup over FP16 at a given batch size — the Fig. 2b ratio
+/// with the batching term. At batch 1 both families are bandwidth-bound
+/// and this equals [`max_speedup_vs_fp16`]; at large batch both hit the
+/// same compute roof and the ratio collapses toward 1 (compression buys
+/// bandwidth, not FLOPs).
+pub fn batched_speedup_vs_fp16(params: f64, fam: SizeFamily,
+                               hw: &Accelerator, batch: f64) -> f64 {
+    decode_tokens_per_sec(params, fam, hw, batch)
+        / decode_tokens_per_sec(params, SizeFamily::Float, hw, batch)
+}
+
+/// The batch size where a family's decode turns compute-bound on `hw`
+/// (weight-streaming time == compute time). Ternary saturates at a
+/// smaller batch than FP16 — it streams ~10x fewer bytes, so the
+/// bandwidth headroom runs out sooner.
+pub fn saturation_batch(params: f64, fam: SizeFamily, hw: &Accelerator) -> f64 {
+    let weight_bytes = size_gb_at(params, fam) * 1e9;
+    let t_bw = weight_bytes / (hw.bw_gbs * 1e9);
+    let t_compute_per_lane = 2.0 * params / (hw.tflops_fp16 * 1e12);
+    (t_bw / t_compute_per_lane).max(1.0)
+}
+
 /// One row of the Fig. 2 series dump.
 #[derive(Debug, Clone)]
 pub struct Fig2Row {
@@ -145,6 +187,49 @@ mod tests {
         let s1 = max_speedup_vs_fp16(1e9, SizeFamily::Ternary);
         let s2 = max_speedup_vs_fp16(100e9, SizeFamily::Ternary);
         assert!(s2 > s1);
+    }
+
+    #[test]
+    fn batched_roofline_behaviour() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let fam = SizeFamily::Ternary;
+        // Throughput is nondecreasing in batch...
+        let mut last = 0.0;
+        for b in [1.0, 2.0, 8.0, 64.0, 1024.0] {
+            let tps = decode_tokens_per_sec(7e9, fam, hw, b);
+            assert!(tps >= last * 0.999, "batch {b}: {tps} < {last}");
+            last = tps;
+        }
+        // ...and exactly linear while bandwidth-bound.
+        let sat = saturation_batch(7e9, fam, hw);
+        assert!(sat > 1.0);
+        let b = (sat / 2.0).max(1.0);
+        let ratio = decode_tokens_per_sec(7e9, fam, hw, b)
+            / decode_tokens_per_sec(7e9, fam, hw, 1.0);
+        assert!((ratio - b).abs() / b < 1e-6, "ratio {ratio} at batch {b}");
+    }
+
+    #[test]
+    fn ternary_saturates_before_fp16() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let t = saturation_batch(7e9, SizeFamily::Ternary, hw);
+        let f = saturation_batch(7e9, SizeFamily::Float, hw);
+        assert!(t < f, "ternary {t} vs float {f}");
+    }
+
+    #[test]
+    fn batched_speedup_interpolates_fig2b_to_one() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let fam = SizeFamily::Ternary;
+        // Batch 1: the classic Fig. 2b bytes-ratio speedup.
+        let s1 = batched_speedup_vs_fp16(7e9, fam, hw, 1.0);
+        assert!((s1 - max_speedup_vs_fp16(7e9, fam)).abs() < 1e-9);
+        // Huge batch: both compute-bound, advantage collapses.
+        let s_inf = batched_speedup_vs_fp16(7e9, fam, hw, 1e6);
+        assert!(s_inf < 1.01, "compute-bound speedup {s_inf}");
+        // In between it is monotonically nonincreasing.
+        let s8 = batched_speedup_vs_fp16(7e9, fam, hw, 8.0);
+        assert!(s8 <= s1 + 1e-9 && s_inf <= s8 + 1e-9);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 pub mod tasks;
 
-pub use tasks::{generate, TaskItem, TaskKind};
+pub use tasks::{generate, serve_prompts, TaskItem, TaskKind};
 
 use crate::data::Bpe;
 use crate::runtime::{self, Graph, Runtime};

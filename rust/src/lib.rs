@@ -18,8 +18,12 @@
 //! - [`quant`] — k-bit symmetric group quantization (QuantLM storage).
 //! - [`gptq`] — GPTQ post-training quantization (Hessian + Cholesky).
 //! - [`analysis`] — scaling-law fits (Levenberg–Marquardt), entropy.
-//! - [`deploy`] — hardware DB, model-bits accounting, memory-wall model.
+//! - [`deploy`] — hardware DB, model-bits accounting, memory-wall model
+//!   (incl. the batched decode roofline).
 //! - [`eval`] — perplexity + downstream benchmark harness.
+//! - [`serve`] — batched ternary decode engine: continuous-batching
+//!   scheduler + blocked multi-threaded packed kernels (the §2.1
+//!   bandwidth win realized as a serving path).
 //! - [`util`] — offline stand-ins for serde/clap/criterion/tempfile.
 
 pub mod analysis;
@@ -32,6 +36,7 @@ pub mod eval;
 pub mod gptq;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod ternary;
 pub mod util;
 

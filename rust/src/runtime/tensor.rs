@@ -55,6 +55,31 @@ impl HostTensor {
         let (_, cols) = self.dims2();
         &self.data[r * cols..(r + 1) * cols]
     }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let (_, cols) = self.dims2();
+        &mut self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Contiguous view of rows `[r0, r1)` of a 2-D tensor (batched
+    /// window over row-major storage).
+    pub fn rows_range(&self, r0: usize, r1: usize) -> &[f32] {
+        let (rows, cols) = self.dims2();
+        assert!(r0 <= r1 && r1 <= rows, "rows [{r0}, {r1}) out of 0..{rows}");
+        &self.data[r0 * cols..r1 * cols]
+    }
+
+    /// Stack equal-length row slices into a (len, cols) batch tensor.
+    pub fn stack_rows(rows: &[&[f32]]) -> HostTensor {
+        assert!(!rows.is_empty(), "cannot stack zero rows");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), cols, "row {i} length {} != {cols}", r.len());
+            data.extend_from_slice(r);
+        }
+        HostTensor::new(vec![rows.len(), cols], data)
+    }
 }
 
 /// SplitMix64 — tiny deterministic RNG used wherever reproducibility
@@ -138,6 +163,32 @@ mod tests {
     #[should_panic]
     fn tensor_shape_mismatch_panics() {
         HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn batched_views() {
+        let mut t = HostTensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows_range(1, 3), &[3., 4., 5., 6.]);
+        assert_eq!(t.rows_range(1, 1), &[] as &[f32]);
+        t.row_mut(0)[1] = 9.0;
+        assert_eq!(t.row(0), &[1., 9.]);
+    }
+
+    #[test]
+    fn stack_rows_builds_batch() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let s = HostTensor::stack_rows(&[&a, &b]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length")]
+    fn stack_rows_rejects_ragged() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        HostTensor::stack_rows(&[&a, &b]);
     }
 
     #[test]

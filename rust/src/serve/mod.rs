@@ -1,0 +1,77 @@
+//! Batched ternary decode serving: the ROADMAP's "heavy traffic" path.
+//!
+//! The paper's §2.1 systems claim — ternary weights turn memory-bound
+//! autoregressive decoding into a bandwidth win — only materializes
+//! under batched, blocked execution (cf. Ma et al. 2409.17870,
+//! TernaryLLM 2406.07177). This subsystem builds that layer on CPU:
+//!
+//! - [`model`] — [`model::DecodeModel`]s executed per batched step:
+//!   [`model::TernaryLm`] over packed 2-bit weights (the hot path) and
+//!   its weight-identical dequantized twin [`model::DenseLm`] (the
+//!   f32-storage baseline).
+//! - [`scheduler`] — [`scheduler::Scheduler`]: admits N concurrent
+//!   [`scheduler::GenRequest`]s, groups the live lanes into one
+//!   (batch x hidden) kernel step, samples per lane (greedy / top-k),
+//!   and retires finished sequences with mid-flight refill
+//!   (continuous batching).
+//!
+//! Kernel tiling (see `ternary::matmul`): weights are walked in
+//! [`crate::ternary::matmul::ROW_BLOCK`]-row blocks by
+//! [`crate::ternary::matmul::COL_BLOCK_TRITS`]-trit column panels with
+//! the x panel transposed once per block (L1-resident at batch 8), and
+//! w-rows are partitioned across `std::thread` workers. Accumulation
+//! order is batch- and thread-invariant, which is what makes serving
+//! deterministic: the same request decodes to the same tokens at any
+//! batch size (`tests/serve_determinism.rs`).
+//!
+//! Throughput: `benches/serve_throughput.rs` and the `spectra
+//! serve-bench` subcommand report tokens/sec vs batch size and thread
+//! count against the dense baseline; `deploy::decode_tokens_per_sec`
+//! gives the analytic roofline the measurements are compared to.
+
+pub mod model;
+pub mod scheduler;
+
+pub use model::{DecodeModel, DenseLm, LmDims, TernaryLm};
+pub use scheduler::{Completion, GenRequest, Sampling, Scheduler, ServeStats};
+
+/// Deterministic corpus-shaped bench/demo traffic: prompt strings from
+/// [`crate::eval::serve_prompts`] (the eval task generator's contexts,
+/// cycling cloze/pattern/fact/stereo mixes), byte-mapped into the
+/// model's vocab and truncated to 16 tokens so decode dominates
+/// prefill. The single source of benchmark workload for both `spectra
+/// serve-bench` and `benches/serve_throughput.rs`, so subcommand and
+/// bench always measure the same traffic.
+pub fn bench_requests(vocab: usize, n: usize, max_new_tokens: usize,
+                      seed: u64) -> Vec<GenRequest> {
+    let world = crate::data::World::new(seed);
+    crate::eval::serve_prompts(&world, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(id, prompt)| {
+            let toks: Vec<u32> = prompt.bytes().take(16)
+                .map(|b| b as u32 % vocab as u32)
+                .collect();
+            GenRequest::greedy(id, toks, max_new_tokens)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_requests_are_deterministic_and_bounded() {
+        let a = bench_requests(512, 10, 8, 3);
+        let b = bench_requests(512, 10, 8, 3);
+        assert_eq!(a.len(), 10);
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.id, i);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, 8);
+            assert!(!x.prompt.is_empty() && x.prompt.len() <= 16);
+            assert!(x.prompt.iter().all(|&t| t < 512));
+        }
+    }
+}

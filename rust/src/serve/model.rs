@@ -1,0 +1,372 @@
+//! CPU decode models driven by the serve scheduler.
+//!
+//! The PJRT transformer graphs remain the fidelity path for training
+//! and evaluation; serving instead runs a compact gated-MLP language
+//! model directly on the packed ternary kernels, because that is the
+//! layer the paper's §2.1 bandwidth argument lives in: per decode step
+//! every linear is one batched (batch x in) @ (out x in)^T against
+//! 2-bit weights. Long-range context is carried by a per-lane
+//! exponential state (updated after each step) instead of a KV cache,
+//! which keeps every lane's computation independent of its batch
+//! neighbours — the property the scheduler's determinism guarantee
+//! (batch-1 == batch-8 token streams) is built on.
+//!
+//! Two weight-identical implementations exist so benches and tests can
+//! compare storage formats, not architectures:
+//!
+//! - [`TernaryLm`]: packed 2-bit weights through
+//!   [`matmul_ternary_packed`] (the serving hot path).
+//! - [`DenseLm`]: the *dequantized* f32 twin through [`matmul_dense`]
+//!   (the FloatLM-storage baseline; identical math up to fp rounding).
+
+use crate::checkpoint::Checkpoint;
+use crate::runtime::HostTensor;
+use crate::ternary::{matmul_dense, matmul_ternary_packed, PackedMatrix,
+                     TernaryTensor};
+use crate::Result;
+
+/// Architecture sizes of a decode model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LmDims {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub glu: usize,
+    pub layers: usize,
+}
+
+/// Per-lane context state decay: `state' = DECAY*state + (1-DECAY)*x`.
+pub const STATE_DECAY: f32 = 0.5;
+
+const RMS_EPS: f32 = 1e-6;
+
+/// A model the scheduler can drive: one batched decode step at a time.
+pub trait DecodeModel {
+    fn dims(&self) -> &LmDims;
+
+    /// Advance every lane by one token. `states[i]` is lane i's hidden
+    /// context (len = `dims().hidden`, updated in place); `tokens[i]`
+    /// is the token it consumes. Returns (batch, vocab) logits.
+    ///
+    /// Contract: lane i's outputs and state update depend only on
+    /// (`states[i]`, `tokens[i]`) — never on the other lanes — so a
+    /// request decodes identically at any batch size.
+    fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                  threads: usize) -> HostTensor;
+}
+
+/// One gated-MLP residual block, packed ternary weights.
+pub struct TernaryBlock {
+    /// (glu, hidden)
+    pub gate: PackedMatrix,
+    /// (glu, hidden)
+    pub up: PackedMatrix,
+    /// (hidden, glu)
+    pub down: PackedMatrix,
+}
+
+/// The packed-ternary serving model. Embeddings stay f32 (the paper
+/// keeps embeddings in halfprec; §2.1).
+pub struct TernaryLm {
+    pub dims: LmDims,
+    /// (vocab, hidden) f32 input embeddings.
+    pub embed: HostTensor,
+    pub blocks: Vec<TernaryBlock>,
+    /// (vocab, hidden) packed output head.
+    pub head: PackedMatrix,
+}
+
+/// The dequantized-f32 twin of [`TernaryLm`] (identical weights).
+pub struct DenseLm {
+    pub dims: LmDims,
+    pub embed: HostTensor,
+    pub blocks: Vec<DenseBlock>,
+    pub head: HostTensor,
+}
+
+pub struct DenseBlock {
+    pub gate: HostTensor,
+    pub up: HostTensor,
+    pub down: HostTensor,
+}
+
+#[inline]
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Row-wise RMS norm (no learned gain — the serve model keeps norms
+/// parameter-free so checkpoint import only needs the linears).
+fn rmsnorm(x: &HostTensor) -> HostTensor {
+    let (rows, cols) = x.dims2();
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = out.row_mut(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for v in row {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// x = embed[token] + state, stacked to a (batch, hidden) tensor.
+fn gather_input(embed: &HostTensor, states: &[&mut [f32]], tokens: &[u32])
+                -> HostTensor {
+    let (vocab, hidden) = embed.dims2();
+    assert_eq!(states.len(), tokens.len());
+    let mut x = HostTensor::zeros(vec![tokens.len(), hidden]);
+    for (bi, (&tok, st)) in tokens.iter().zip(states.iter()).enumerate() {
+        assert_eq!(st.len(), hidden, "lane {bi} state len");
+        let e = embed.row(tok as usize % vocab);
+        let row = x.row_mut(bi);
+        for j in 0..hidden {
+            row[j] = e[j] + st[j];
+        }
+    }
+    x
+}
+
+/// state' = DECAY*state + (1-DECAY)*x_row — the per-lane context carry.
+fn update_states(states: &mut [&mut [f32]], x: &HostTensor) {
+    for (bi, st) in states.iter_mut().enumerate() {
+        let row = x.row(bi);
+        for (s, &v) in st.iter_mut().zip(row) {
+            *s = STATE_DECAY * *s + (1.0 - STATE_DECAY) * v;
+        }
+    }
+}
+
+impl DecodeModel for TernaryLm {
+    fn dims(&self) -> &LmDims {
+        &self.dims
+    }
+
+    fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                  threads: usize) -> HostTensor {
+        let mut x = gather_input(&self.embed, states, tokens);
+        for blk in &self.blocks {
+            let y = rmsnorm(&x);
+            let g = matmul_ternary_packed(&y, &blk.gate, threads);
+            let u = matmul_ternary_packed(&y, &blk.up, threads);
+            let mut a = g;
+            for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
+                *av = silu(*av) * uv;
+            }
+            let d = matmul_ternary_packed(&a, &blk.down, threads);
+            for (xv, &dv) in x.data.iter_mut().zip(d.data.iter()) {
+                *xv += dv;
+            }
+        }
+        let y = rmsnorm(&x);
+        update_states(states, &x);
+        matmul_ternary_packed(&y, &self.head, threads)
+    }
+}
+
+impl DecodeModel for DenseLm {
+    fn dims(&self) -> &LmDims {
+        &self.dims
+    }
+
+    fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                  _threads: usize) -> HostTensor {
+        let mut x = gather_input(&self.embed, states, tokens);
+        for blk in &self.blocks {
+            let y = rmsnorm(&x);
+            let g = matmul_dense(&y, &blk.gate);
+            let u = matmul_dense(&y, &blk.up);
+            let mut a = g;
+            for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
+                *av = silu(*av) * uv;
+            }
+            let d = matmul_dense(&a, &blk.down);
+            for (xv, &dv) in x.data.iter_mut().zip(d.data.iter()) {
+                *xv += dv;
+            }
+        }
+        let y = rmsnorm(&x);
+        update_states(states, &x);
+        matmul_dense(&y, &self.head)
+    }
+}
+
+impl TernaryLm {
+    /// Fresh per-lane context state.
+    pub fn zero_state(&self) -> Vec<f32> {
+        vec![0.0; self.dims.hidden]
+    }
+
+    /// Seeded random weights, ternarized with `mp` scale shards —
+    /// plus the dequantized f32 twin holding *identical* weights, so
+    /// benches compare storage formats and tests check equivalence.
+    pub fn synthetic_pair(dims: LmDims, mp: usize, seed: u64)
+                          -> (TernaryLm, DenseLm) {
+        let embed = HostTensor::randn(vec![dims.vocab, dims.hidden], 0.5,
+                                      seed ^ 0xE3BED);
+        let mut blocks = Vec::with_capacity(dims.layers);
+        let mut dense_blocks = Vec::with_capacity(dims.layers);
+        for l in 0..dims.layers {
+            let ls = seed ^ ((l as u64 + 1) << 20);
+            let mk = |rows: usize, cols: usize, tag: u64| {
+                let w = HostTensor::randn(vec![rows, cols], 0.08, ls ^ tag);
+                TernaryTensor::from_latent(&w, mp)
+            };
+            let (g, u, d) = (mk(dims.glu, dims.hidden, 1),
+                             mk(dims.glu, dims.hidden, 2),
+                             mk(dims.hidden, dims.glu, 3));
+            dense_blocks.push(DenseBlock {
+                gate: g.dequant(), up: u.dequant(), down: d.dequant(),
+            });
+            blocks.push(TernaryBlock {
+                gate: PackedMatrix::from_ternary(&g),
+                up: PackedMatrix::from_ternary(&u),
+                down: PackedMatrix::from_ternary(&d),
+            });
+        }
+        let head_latent = HostTensor::randn(vec![dims.vocab, dims.hidden],
+                                            0.08, seed ^ 0x6EAD);
+        let head = TernaryTensor::from_latent(&head_latent, 1);
+        let dense = DenseLm {
+            dims: dims.clone(),
+            embed: embed.clone(),
+            blocks: dense_blocks,
+            head: head.dequant(),
+        };
+        let ternary = TernaryLm {
+            dims,
+            embed,
+            blocks,
+            head: PackedMatrix::from_ternary(&head),
+        };
+        (ternary, dense)
+    }
+
+    /// Build a serving model from a trained checkpoint: the `embed`
+    /// table is kept f32, every `l{i}.mlp_{gate,up,down}` linear is
+    /// ternarized (single-shard absmean, the §A.5 transform at mp=1)
+    /// and packed, and the head ternarizes `head` when present, else
+    /// ties to the embedding table.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<TernaryLm> {
+        let embed = ck.get("embed")
+            .ok_or_else(|| anyhow::anyhow!(
+                "checkpoint has no 'embed' tensor; cannot build serve model"))?
+            .clone();
+        let (vocab, hidden) = embed.dims2();
+        let mut blocks = Vec::new();
+        let mut glu = 0usize;
+        for l in 0.. {
+            let Some(gate) = ck.get(&format!("l{l}.mlp_gate")) else { break };
+            let up = ck.get(&format!("l{l}.mlp_up")).ok_or_else(
+                || anyhow::anyhow!("layer {l}: mlp_gate without mlp_up"))?;
+            let down = ck.get(&format!("l{l}.mlp_down")).ok_or_else(
+                || anyhow::anyhow!("layer {l}: mlp_gate without mlp_down"))?;
+            glu = gate.dims2().0;
+            let pack = |w: &HostTensor| {
+                PackedMatrix::from_ternary(&TernaryTensor::from_latent(w, 1))
+            };
+            blocks.push(TernaryBlock {
+                gate: pack(gate), up: pack(up), down: pack(down),
+            });
+        }
+        if blocks.is_empty() {
+            anyhow::bail!("checkpoint has no l0.mlp_gate — not a spectra LM");
+        }
+        let head_latent = ck.get("head").unwrap_or(&embed);
+        let head = PackedMatrix::from_ternary(
+            &TernaryTensor::from_latent(head_latent, 1));
+        let layers = blocks.len();
+        Ok(TernaryLm {
+            dims: LmDims { vocab, hidden, glu, layers },
+            embed,
+            blocks,
+            head,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dims() -> LmDims {
+        LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }
+    }
+
+    fn step_one(m: &impl DecodeModel, state: &mut Vec<f32>, tok: u32)
+                -> HostTensor {
+        let mut refs = [state.as_mut_slice()];
+        m.step_batch(&mut refs, &[tok], 1)
+    }
+
+    #[test]
+    fn ternary_and_dense_twins_agree() {
+        // Identical weights, different storage: logits must match to fp
+        // accumulation noise.
+        let (t, d) = TernaryLm::synthetic_pair(small_dims(), 1, 5);
+        let mut st_t = t.zero_state();
+        let mut st_d = t.zero_state();
+        for tok in [3u32, 17, 40] {
+            let lt = step_one(&t, &mut st_t, tok);
+            let ld = step_one(&d, &mut st_d, tok);
+            assert_eq!(lt.shape, vec![1, 64]);
+            for (a, b) in lt.data.iter().zip(ld.data.iter()) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_carries_context() {
+        // The same token after different histories must produce
+        // different logits — the state is doing its job.
+        let (t, _) = TernaryLm::synthetic_pair(small_dims(), 1, 6);
+        let mut s1 = t.zero_state();
+        let mut s2 = t.zero_state();
+        step_one(&t, &mut s1, 1);
+        step_one(&t, &mut s2, 2);
+        let a = step_one(&t, &mut s1, 7);
+        let b = step_one(&t, &mut s2, 7);
+        let diff: f32 = a.data.iter().zip(b.data.iter())
+            .map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-3, "history ignored (diff {diff})");
+    }
+
+    #[test]
+    fn out_of_vocab_tokens_wrap() {
+        let (t, _) = TernaryLm::synthetic_pair(small_dims(), 1, 7);
+        let mut s1 = t.zero_state();
+        let mut s2 = t.zero_state();
+        let a = step_one(&t, &mut s1, 3);
+        let b = step_one(&t, &mut s2, 3 + 64);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_builds_model() {
+        let ck = Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![64, 32], 0.5, 1)),
+            ("l0.mlp_gate".into(), HostTensor::randn(vec![48, 32], 0.1, 2)),
+            ("l0.mlp_up".into(), HostTensor::randn(vec![48, 32], 0.1, 3)),
+            ("l0.mlp_down".into(), HostTensor::randn(vec![32, 48], 0.1, 4)),
+        ]);
+        let lm = TernaryLm::from_checkpoint(&ck).unwrap();
+        assert_eq!(lm.dims, LmDims { vocab: 64, hidden: 32, glu: 48,
+                                     layers: 1 });
+        // tied head: (vocab, hidden) packed
+        assert_eq!(lm.head.rows, 64);
+        assert_eq!(lm.head.cols, 32);
+        let mut st = lm.zero_state();
+        let logits = step_one(&lm, &mut st, 5);
+        assert_eq!(logits.shape, vec![1, 64]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn checkpoint_without_linears_is_rejected() {
+        let ck = Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![8, 4], 0.5, 1)),
+        ]);
+        assert!(TernaryLm::from_checkpoint(&ck).is_err());
+    }
+}

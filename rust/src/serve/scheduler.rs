@@ -1,0 +1,359 @@
+//! The multi-request decode scheduler: continuous batching over the
+//! blocked ternary kernels.
+//!
+//! The scheduler owns `max_batch` *lanes*. Each step it (1) admits
+//! queued requests into empty lanes, (2) assembles the live lanes'
+//! states + next tokens into one (batch, hidden) kernel invocation,
+//! (3) advances every lane — prompt tokens are consumed one per step
+//! (prefill), then sampling starts — and (4) retires finished lanes,
+//! whose slots are refilled from the queue on the next step while the
+//! remaining lanes continue mid-flight (continuous batching: the batch
+//! never drains to refill).
+//!
+//! Determinism: a lane's computation depends only on its own state and
+//! token stream ([`DecodeModel::step_batch`]'s contract + the kernels'
+//! batch-invariant accumulation order), greedy argmax breaks ties by
+//! token id, and top-k sampling draws from a per-request seeded
+//! [`SplitMix64`]. The same request set therefore yields identical
+//! token streams at batch 1 and batch 8 — `tests/serve_determinism.rs`
+//! locks this in.
+
+use std::collections::VecDeque;
+
+use crate::runtime::SplitMix64;
+use crate::serve::model::DecodeModel;
+
+/// Per-lane sampling policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Argmax; ties break toward the lower token id.
+    Greedy,
+    /// Sample among the `k` highest logits at `temperature`, from a
+    /// stream seeded by `seed` (deterministic per request, independent
+    /// of batch composition).
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: usize,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+}
+
+impl GenRequest {
+    pub fn greedy(id: usize, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        GenRequest { id, prompt, max_new_tokens, sampling: Sampling::Greedy }
+    }
+
+    pub fn top_k(id: usize, prompt: Vec<u32>, max_new_tokens: usize,
+                 k: usize, temperature: f32, seed: u64) -> Self {
+        GenRequest { id, prompt, max_new_tokens,
+                     sampling: Sampling::TopK { k, temperature, seed } }
+    }
+}
+
+/// A finished request: the generated continuation (prompt excluded).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    /// Batched steps this request occupied a lane for (prefill + decode).
+    pub lane_steps: usize,
+}
+
+/// Aggregate serving counters for throughput reporting.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Kernel invocations (batched steps with >= 1 live lane).
+    pub batch_steps: usize,
+    /// Sum over steps of live lanes (batch_steps * avg occupancy).
+    pub lane_steps: usize,
+    pub prefill_tokens: usize,
+    pub generated_tokens: usize,
+    pub peak_occupancy: usize,
+}
+
+struct Lane {
+    req: GenRequest,
+    state: Vec<f32>,
+    /// Prompt tokens consumed so far.
+    pos: usize,
+    generated: Vec<u32>,
+    rng: SplitMix64,
+    steps: usize,
+}
+
+impl Lane {
+    fn new(req: GenRequest, hidden: usize) -> Lane {
+        let seed = match req.sampling {
+            Sampling::TopK { seed, .. } => seed,
+            Sampling::Greedy => req.id as u64,
+        };
+        Lane {
+            state: vec![0.0; hidden],
+            pos: 0,
+            generated: Vec::with_capacity(req.max_new_tokens),
+            rng: SplitMix64::new(seed),
+            steps: 0,
+            req,
+        }
+    }
+
+    /// The token this lane feeds into the next batched step.
+    fn next_token(&self) -> u32 {
+        if self.pos < self.req.prompt.len() {
+            self.req.prompt[self.pos]
+        } else {
+            *self.generated.last().expect("generating lane has a last token")
+        }
+    }
+}
+
+/// Continuous-batching decode engine over any [`DecodeModel`]
+/// (including trait objects).
+pub struct Scheduler<'m, M: DecodeModel + ?Sized> {
+    model: &'m M,
+    max_batch: usize,
+    threads: usize,
+    queue: VecDeque<GenRequest>,
+    lanes: Vec<Option<Lane>>,
+    stats: ServeStats,
+}
+
+impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
+    /// `max_batch` lanes; `threads` is passed through to the kernels
+    /// (0 = auto).
+    pub fn new(model: &'m M, max_batch: usize, threads: usize) -> Self {
+        let max_batch = max_batch.max(1);
+        Scheduler {
+            model,
+            max_batch,
+            threads,
+            queue: VecDeque::new(),
+            lanes: (0..max_batch).map(|_| None).collect(),
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// Enqueue a request. Empty prompts are normalized to `[0]` and
+    /// `max_new_tokens` to at least 1 so every request terminates.
+    pub fn submit(&mut self, mut req: GenRequest) {
+        if req.prompt.is_empty() {
+            req.prompt.push(0);
+        }
+        req.max_new_tokens = req.max_new_tokens.max(1);
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+            + self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    fn admit(&mut self) {
+        let hidden = self.model.dims().hidden;
+        for slot in &mut self.lanes {
+            if slot.is_none() {
+                let Some(req) = self.queue.pop_front() else { break };
+                *slot = Some(Lane::new(req, hidden));
+            }
+        }
+    }
+
+    /// One batched step across all live lanes. Returns any requests
+    /// that finished on this step.
+    pub fn step(&mut self) -> Vec<Completion> {
+        self.admit();
+        let tokens: Vec<u32> = self.lanes.iter()
+            .filter_map(|s| s.as_ref().map(Lane::next_token))
+            .collect();
+        if tokens.is_empty() {
+            return Vec::new();
+        }
+        let mut state_refs: Vec<&mut [f32]> = self.lanes.iter_mut()
+            .filter_map(|s| s.as_mut().map(|l| l.state.as_mut_slice()))
+            .collect();
+        let logits =
+            self.model.step_batch(&mut state_refs, &tokens, self.threads);
+        drop(state_refs);
+
+        self.stats.batch_steps += 1;
+        self.stats.lane_steps += tokens.len();
+        self.stats.peak_occupancy = self.stats.peak_occupancy.max(tokens.len());
+
+        let mut done = Vec::new();
+        let mut ai = 0usize; // index into the batch = live-lane ordinal
+        for slot in &mut self.lanes {
+            let Some(lane) = slot.as_mut() else { continue };
+            lane.steps += 1;
+            let fed_prompt = lane.pos < lane.req.prompt.len();
+            if fed_prompt {
+                lane.pos += 1;
+                self.stats.prefill_tokens += 1;
+            }
+            // Once the final prompt token has been fed, every step's
+            // logits produce one sampled continuation token.
+            if lane.pos == lane.req.prompt.len() {
+                let tok = sample(logits.row(ai), &lane.req.sampling,
+                                 &mut lane.rng);
+                lane.generated.push(tok);
+                self.stats.generated_tokens += 1;
+                if lane.generated.len() >= lane.req.max_new_tokens {
+                    let lane = slot.take().unwrap();
+                    done.push(Completion {
+                        id: lane.req.id,
+                        prompt_len: lane.req.prompt.len(),
+                        tokens: lane.generated,
+                        lane_steps: lane.steps,
+                    });
+                }
+            }
+            ai += 1;
+        }
+        done
+    }
+
+    /// Drain the queue: step until every submitted request completes.
+    /// Completions are returned sorted by request id.
+    pub fn run(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step());
+        }
+        out.sort_by_key(|c| c.id);
+        out
+    }
+}
+
+fn sample(row: &[f32], sampling: &Sampling, rng: &mut SplitMix64) -> u32 {
+    match *sampling {
+        Sampling::Greedy => {
+            // Strict-greater scan: ties keep the lowest token id, which
+            // is batch-independent (no float-order ambiguity).
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u32
+        }
+        Sampling::TopK { k, temperature, .. } => {
+            let k = k.clamp(1, row.len());
+            // Total order (logit desc, then token id) makes the top-k
+            // *set* unique even under ties, so an unstable partition
+            // selects deterministically; only the k survivors are
+            // sorted, not the whole vocab.
+            let desc = |a: &usize, b: &usize| {
+                row[*b].partial_cmp(&row[*a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(b))
+            };
+            let mut idx: Vec<usize> = (0..row.len()).collect();
+            if k < idx.len() {
+                idx.select_nth_unstable_by(k - 1, desc);
+                idx.truncate(k);
+            }
+            idx.sort_by(desc);
+            let t = temperature.max(1e-6);
+            let mx = row[idx[0]];
+            let ws: Vec<f64> = idx.iter()
+                .map(|&j| (((row[j] - mx) / t) as f64).exp())
+                .collect();
+            idx[rng.weighted(&ws)] as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::{LmDims, TernaryLm};
+
+    fn small_model() -> TernaryLm {
+        TernaryLm::synthetic_pair(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 1, 9).0
+    }
+
+    #[test]
+    fn completes_all_requests_with_more_requests_than_lanes() {
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 4, 1);
+        // Heterogeneous budgets so lanes retire at different steps.
+        let budget = |id: usize| 2 + id % 5;
+        for id in 0..10 {
+            sched.submit(GenRequest::greedy(id, vec![id as u32, 5],
+                                            budget(id)));
+        }
+        let done = sched.run();
+        assert_eq!(done.len(), 10);
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.id, i);
+            assert_eq!(c.tokens.len(), budget(i));
+            // Sampling starts on the final prompt step, so a lane is
+            // occupied prompt_len + max_new - 1 steps.
+            assert_eq!(c.lane_steps, 2 + budget(i) - 1);
+        }
+        let st = sched.stats();
+        assert_eq!(st.generated_tokens, 40);
+        assert_eq!(st.prefill_tokens, 20);
+        assert_eq!(st.peak_occupancy, 4);
+        assert_eq!(st.lane_steps, 50);
+        // Continuous batching: retired lanes refill mid-flight, packing
+        // 50 lane-steps into 16 batched steps; a drain-then-refill
+        // scheduler (groups of 4, bounded by each group's longest
+        // request) would need 20.
+        assert_eq!(st.batch_steps, 16);
+    }
+
+    #[test]
+    fn empty_prompt_and_zero_budget_are_normalized() {
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 2, 1);
+        sched.submit(GenRequest::greedy(0, vec![], 0));
+        let done = sched.run();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].prompt_len, 1);
+        assert_eq!(done[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn top_k_is_reproducible_and_respects_k() {
+        let lm = small_model();
+        let run = || {
+            let mut sched = Scheduler::new(&lm, 3, 1);
+            for id in 0..5 {
+                sched.submit(GenRequest::top_k(id, vec![2, 3], 8, 4, 0.8,
+                                               100 + id as u64));
+            }
+            sched.run()
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens, "top-k not reproducible");
+        }
+        // k=1 degenerates to greedy.
+        let mut g = Scheduler::new(&lm, 1, 1);
+        g.submit(GenRequest::greedy(0, vec![7], 5));
+        let mut t = Scheduler::new(&lm, 1, 1);
+        t.submit(GenRequest::top_k(0, vec![7], 5, 1, 1.0, 42));
+        assert_eq!(g.run()[0].tokens, t.run()[0].tokens);
+    }
+
+    #[test]
+    fn stats_start_empty() {
+        let lm = small_model();
+        let sched = Scheduler::new(&lm, 2, 1);
+        assert_eq!(sched.pending(), 0);
+        assert_eq!(sched.stats().batch_steps, 0);
+    }
+}

@@ -5,11 +5,54 @@
 //! weights moves 8x fewer bytes than f32 (16x vs fp16's claimed 10x
 //! ceiling — we measure against f32 since that is our storage), and the
 //! inner loop is add/sub (+ skip on zero), not multiply.
-//! `benches/ternary_matmul.rs` measures the realized ratio.
+//!
+//! Two generations of kernels live here:
+//!
+//! - Scalar decode ([`matvec_ternary_packed`]): one request, one token —
+//!   the original single-stream path over a flat [`Packed2Bit`].
+//! - Blocked batched decode ([`matmul_ternary_packed`]): the serving
+//!   path. N concurrent requests share one weight stream: weights are
+//!   walked in row blocks of [`ROW_BLOCK`] x column panels of
+//!   [`COL_BLOCK_TRITS`] trits (x-panel scratch stays L1-resident), the
+//!   x panel is transposed once per block so each decoded trit applies
+//!   to all batch lanes with one broadcast multiply-add, zero trits are
+//!   skipped (ternary sparsity, §2.3), and row ranges are partitioned
+//!   across `std::thread` workers with per-thread output slabs.
+//!
+//! Numerical contract the serve scheduler relies on: for a fixed weight
+//! matrix, the accumulation order over `k` for every (x-row, w-row)
+//! pair is independent of the batch size and thread count, so a lane's
+//! logits are bitwise identical whether it decodes alone or batched —
+//! see `tests/serve_determinism.rs`.
+//!
+//! `benches/ternary_matmul.rs` and `benches/serve_throughput.rs`
+//! measure the realized ratios.
 
-use super::pack::Packed2Bit;
+use super::pack::{Packed2Bit, PackedMatrix};
 use super::TernaryTensor;
 use crate::runtime::HostTensor;
+
+/// Rows of packed weights processed per column-panel pass. Sized so a
+/// block's accumulators (`ROW_BLOCK * batch` f32, 4 KiB at batch 8)
+/// and its weight panel (`ROW_BLOCK * COL_BLOCK_TRITS / 4` = 16 KiB)
+/// stay cache-resident while one transposed x panel is hot, and large
+/// enough to amortize that panel's transpose (done once per
+/// (row-block, panel) pair) over many rows.
+pub const ROW_BLOCK: usize = 128;
+
+/// Trits (k-elements) per column panel. 512 trits = 128 weight bytes
+/// per row-pass; the transposed x panel is `512 * batch * 4` bytes —
+/// 16 KiB at batch 8, sized to stay L1-resident. Fixed (never derived
+/// from the batch size) so k-accumulation order is batch-invariant.
+pub const COL_BLOCK_TRITS: usize = 512;
+
+/// Minimum accumulate operations (`n * k * m`) a worker must have
+/// before another scoped thread pays for itself. The serve hot path
+/// issues several small matmuls per decode step; below this bound the
+/// per-call spawn/join overhead exceeds the kernel work, so the call
+/// degrades to fewer threads (never changing results — thread count
+/// only partitions rows, it does not reorder accumulation).
+pub const MIN_WORK_PER_THREAD: usize = 1 << 16;
 
 /// Dense f32 mat*vec: y[r] = sum_c w[r,c] * x[c]. The FloatLM baseline.
 pub fn matvec_dense(w: &HostTensor, x: &[f32]) -> Vec<f32> {
@@ -46,26 +89,53 @@ fn trit_lut() -> &'static [[f32; 4]; 256] {
     })
 }
 
-/// Packed-ternary mat*vec with per-row scale: LUT-decode 4 trits per
+/// Packed-ternary mat*vec with per-shard scales: LUT-decode 4 trits per
 /// byte into {-1,0,+1} factors and multiply-accumulate (see trit_lut).
+///
+/// `packed` is a flat packing of the `rows * cols` states. When
+/// `cols % 4 == 0` rows are byte-aligned and the fast full-byte path
+/// runs; otherwise rows start mid-byte and a per-trit decode path is
+/// used (correct for any shape, ~4x slower — pack a [`PackedMatrix`]
+/// and call [`matmul_ternary_packed`] for aligned tail handling).
 pub fn matvec_ternary_packed(packed: &Packed2Bit, rows: usize, cols: usize,
                              scales: &[f32], x: &[f32]) -> Vec<f32> {
-    assert_eq!(packed.len, rows * cols);
-    assert_eq!(cols % 4, 0, "cols must be a multiple of 4 for packed rows");
+    assert_eq!(packed.len, rows * cols,
+               "packed len {} != rows*cols {}", packed.len, rows * cols);
     assert_eq!(x.len(), cols);
-    let lut = trit_lut();
+    assert!(!scales.is_empty(), "need at least one scale shard");
+    assert_eq!(rows % scales.len(), 0,
+               "scale shards {} must divide rows {rows} — a non-divisor \
+                silently mis-shards row->scale assignment", scales.len());
     let shard = rows / scales.len();
-    let bytes_per_row = cols / 4;
     let mut y = vec![0.0f32; rows];
-    for r in 0..rows {
-        let row_bytes = &packed.bytes[r * bytes_per_row..(r + 1) * bytes_per_row];
-        let mut acc = 0.0f32;
-        for (i, &b) in row_bytes.iter().enumerate() {
-            let t = &lut[b as usize];
-            let xs = &x[4 * i..4 * i + 4];
-            acc += t[0] * xs[0] + t[1] * xs[1] + t[2] * xs[2] + t[3] * xs[3];
+    if cols % 4 == 0 {
+        let lut = trit_lut();
+        let bytes_per_row = cols / 4;
+        for r in 0..rows {
+            let row_bytes =
+                &packed.bytes[r * bytes_per_row..(r + 1) * bytes_per_row];
+            let mut acc = 0.0f32;
+            for (i, &b) in row_bytes.iter().enumerate() {
+                let t = &lut[b as usize];
+                let xs = &x[4 * i..4 * i + 4];
+                acc += t[0] * xs[0] + t[1] * xs[1] + t[2] * xs[2] + t[3] * xs[3];
+            }
+            y[r] = acc * scales[r / shard];
         }
-        y[r] = acc * scales[r / shard];
+    } else {
+        // Unaligned tail path: rows are not byte-aligned in the flat
+        // packing, so decode trit-by-trit at absolute positions.
+        for r in 0..rows {
+            let mut acc = 0.0f32;
+            for c in 0..cols {
+                match packed.get(r * cols + c) {
+                    1 => acc += x[c],
+                    -1 => acc -= x[c],
+                    _ => {}
+                }
+            }
+            y[r] = acc * scales[r / shard];
+        }
     }
     y
 }
@@ -113,6 +183,130 @@ pub fn matmul_ternary_dense(x: &HostTensor, t: &TernaryTensor) -> HostTensor {
     HostTensor::new(vec![m, t.rows], out)
 }
 
+/// The blocked batched-decode kernel body for w-rows `[r0, r1)`.
+///
+/// `out_t` is the (rows, m)-transposed output slab for this row range:
+/// `out_t[(r - r0) * m + mi]` accumulates x-row `mi` against w-row `r`.
+/// Walks column panels of [`COL_BLOCK_TRITS`]; per panel the x block is
+/// transposed into `(k, m)` scratch so each decoded trit updates all m
+/// lanes with one broadcast multiply-add over a contiguous m-vector.
+fn packed_rows_kernel(w: &PackedMatrix, x: &HostTensor,
+                      r0: usize, r1: usize, out_t: &mut [f32]) {
+    let (m, k) = x.dims2();
+    debug_assert_eq!(k, w.cols);
+    debug_assert_eq!(out_t.len(), (r1 - r0) * m);
+    let lut = trit_lut();
+    let mut x_t = vec![0.0f32; COL_BLOCK_TRITS * m]; // (k-panel, m) scratch
+    for rb in (r0..r1).step_by(ROW_BLOCK) {
+        let rb_end = (rb + ROW_BLOCK).min(r1);
+        let mut kb = 0usize;
+        while kb < k {
+            let kb_end = (kb + COL_BLOCK_TRITS).min(k);
+            let cb = kb_end - kb;
+            // Transpose the x panel once; reused by every row in the block.
+            for (c, col) in x_t.chunks_exact_mut(m).take(cb).enumerate() {
+                for (mi, v) in col.iter_mut().enumerate() {
+                    *v = x.data[mi * k + kb + c];
+                }
+            }
+            let full_bytes = cb / 4;
+            let tail = cb % 4; // only the final panel of a row has one
+            for r in rb..rb_end {
+                let bytes = &w.row_bytes(r)[kb / 4..(kb + cb).div_ceil(4)];
+                let acc = &mut out_t[(r - r0) * m..(r - r0 + 1) * m];
+                for (bi, &b) in bytes[..full_bytes].iter().enumerate() {
+                    if b == 0 {
+                        continue; // 4 zero trits: ternary sparsity skip
+                    }
+                    let t = &lut[b as usize];
+                    for (j, &tj) in t.iter().enumerate() {
+                        if tj == 0.0 {
+                            continue;
+                        }
+                        let xs = &x_t[(4 * bi + j) * m..(4 * bi + j + 1) * m];
+                        for (a, &xv) in acc.iter_mut().zip(xs) {
+                            *a += tj * xv;
+                        }
+                    }
+                }
+                if tail > 0 {
+                    let t = &lut[bytes[full_bytes] as usize];
+                    for (j, &tj) in t.iter().take(tail).enumerate() {
+                        if tj == 0.0 {
+                            continue;
+                        }
+                        let xs =
+                            &x_t[(4 * full_bytes + j) * m..(4 * full_bytes + j + 1) * m];
+                        for (a, &xv) in acc.iter_mut().zip(xs) {
+                            *a += tj * xv;
+                        }
+                    }
+                }
+            }
+            kb = kb_end;
+        }
+        // Apply per-shard scales once per output element.
+        for r in rb..rb_end {
+            let g = w.row_scale(r);
+            for a in &mut out_t[(r - r0) * m..(r - r0 + 1) * m] {
+                *a *= g;
+            }
+        }
+    }
+}
+
+/// Batched packed-ternary matmul: y = x @ w_packed^T with per-shard
+/// scales. x: (m, k), w: (n, k) packed -> (m, n).
+///
+/// `threads = 0` uses `std::thread::available_parallelism()`. Rows of
+/// `w` (output columns) are partitioned into contiguous chunks, one
+/// per worker, each writing a disjoint transposed slab; the slabs are
+/// assembled into row-major (m, n) at the end. The worker count is
+/// additionally capped so each has at least [`MIN_WORK_PER_THREAD`]
+/// accumulate ops — small decode-step matmuls run single-threaded
+/// rather than paying spawn/join per call. Accumulation order per
+/// output element is independent of both `threads` and `m` (fixed
+/// [`COL_BLOCK_TRITS`] panels), so results are batch-invariant.
+pub fn matmul_ternary_packed(x: &HostTensor, w: &PackedMatrix,
+                             threads: usize) -> HostTensor {
+    let (m, k) = x.dims2();
+    assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
+    let n = w.rows;
+    if m == 0 || n == 0 {
+        return HostTensor::new(vec![m, n], vec![0.0; m * n]);
+    }
+    let work = n.saturating_mul(k).saturating_mul(m);
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .min(n)
+    .min((work / MIN_WORK_PER_THREAD).max(1))
+    .max(1);
+
+    let mut out_t = vec![0.0f32; n * m]; // (n, m) transposed
+    if threads == 1 {
+        packed_rows_kernel(w, x, 0, n, &mut out_t);
+    } else {
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ti, slab) in out_t.chunks_mut(chunk * m).enumerate() {
+                let r0 = ti * chunk;
+                let r1 = (r0 + chunk).min(n);
+                s.spawn(move || packed_rows_kernel(w, x, r0, r1, slab));
+            }
+        });
+    }
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..n {
+        for mi in 0..m {
+            out[mi * n + r] = out_t[r * m + mi];
+        }
+    }
+    HostTensor::new(vec![m, n], out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +330,29 @@ mod tests {
     }
 
     #[test]
+    fn packed_matvec_handles_unaligned_cols() {
+        // cols % 4 != 0: rows start mid-byte in the flat packing; the
+        // per-trit path must still match the dequantized reference.
+        let w = HostTensor::randn(vec![6, 10], 0.05, 17);
+        let t = TernaryTensor::from_latent(&w, 2);
+        let x: Vec<f32> = HostTensor::randn(vec![1, 10], 1.0, 18).data;
+        let packed = Packed2Bit::pack(&t.states);
+        let got = matvec_ternary_packed(&packed, t.rows, t.cols, &t.scales, &x);
+        let want = matvec_dense(&t.dequant(), &x);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide rows")]
+    fn packed_matvec_rejects_missharded_scales() {
+        let (_, t, x) = setup(32, 16);
+        let packed = Packed2Bit::pack(&t.states);
+        matvec_ternary_packed(&packed, t.rows, t.cols, &[1.0, 1.0, 1.0], &x);
+    }
+
+    #[test]
     fn ternary_dense_matches_dequant_matmul() {
         let (_, t, _) = setup(24, 12);
         let x = HostTensor::randn(vec![5, 12], 1.0, 13);
@@ -143,6 +360,61 @@ mod tests {
         let want = matmul_dense(&x, &t.dequant());
         for (a, b) in got.data.iter().zip(want.data.iter()) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn batched_packed_matches_dequant_matmul() {
+        for (rows, cols, m) in [(32, 16, 4), (64, 48, 8), (7, 10, 3)] {
+            let w = HostTensor::randn(vec![rows, cols], 0.05, 21);
+            let t = TernaryTensor::from_latent(&w, 1);
+            let pm = PackedMatrix::from_ternary(&t);
+            let x = HostTensor::randn(vec![m, cols], 1.0, 22);
+            let want = matmul_dense(&x, &t.dequant());
+            for threads in [1, 3] {
+                let got = matmul_ternary_packed(&x, &pm, threads);
+                assert_eq!(got.shape, vec![m, rows]);
+                for (a, b) in got.data.iter().zip(want.data.iter()) {
+                    assert!((a - b).abs() < 1e-4,
+                            "{rows}x{cols} m{m} t{threads}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_packed_spans_multiple_panels_and_row_blocks() {
+        // cols > COL_BLOCK_TRITS and rows > ROW_BLOCK exercise the
+        // panel loop, the block loop and the panel-boundary tail.
+        let cols = COL_BLOCK_TRITS + 37;
+        let rows = ROW_BLOCK + 9;
+        let w = HostTensor::randn(vec![rows, cols], 0.05, 23);
+        let t = TernaryTensor::from_latent(&w, 1);
+        let pm = PackedMatrix::from_ternary(&t);
+        let x = HostTensor::randn(vec![2, cols], 1.0, 24);
+        let got = matmul_ternary_packed(&x, &pm, 2);
+        let want = matmul_dense(&x, &t.dequant());
+        for (a, b) in got.data.iter().zip(want.data.iter()) {
+            // Same 1e-4 bar as tests/kernel_equivalence.rs: ~50x margin
+            // over observed-order f32 drift at this k.
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_packed_is_batch_invariant() {
+        // The serve scheduler's determinism contract: a lane's output
+        // is bitwise identical at batch 1 and batch 8, any thread count.
+        let w = HostTensor::randn(vec![40, 24], 0.05, 25);
+        let t = TernaryTensor::from_latent(&w, 2);
+        let pm = PackedMatrix::from_ternary(&t);
+        let xb = HostTensor::randn(vec![8, 24], 1.0, 26);
+        let batched = matmul_ternary_packed(&xb, &pm, 4);
+        for mi in 0..8 {
+            let x1 = HostTensor::stack_rows(&[xb.row(mi)]);
+            let solo = matmul_ternary_packed(&x1, &pm, 1);
+            assert_eq!(solo.data, batched.row(mi),
+                       "lane {mi} diverges between batch sizes");
         }
     }
 

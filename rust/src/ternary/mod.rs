@@ -16,13 +16,18 @@
 //! decoding speeds up ~proportionally to the compression factor:
 //! `matmul_ternary_*` streams 2-bit weights instead of 32-bit floats
 //! and replaces multiplies with add/sub (benches/ternary_matmul.rs).
+//! The blocked, multi-threaded batched kernel
+//! ([`matmul::matmul_ternary_packed`] over a row-aligned
+//! [`pack::PackedMatrix`]) is the hot path of the `serve` subsystem;
+//! its tiling parameters are [`matmul::ROW_BLOCK`] and
+//! [`matmul::COL_BLOCK_TRITS`] (see the module docs there).
 
 pub mod matmul;
 pub mod pack;
 
 pub use matmul::{matvec_dense, matvec_ternary_packed, matmul_dense,
-                 matmul_ternary_dense};
-pub use pack::{Packed2Bit, PackedBase3};
+                 matmul_ternary_dense, matmul_ternary_packed};
+pub use pack::{Packed2Bit, PackedBase3, PackedMatrix};
 
 use crate::runtime::HostTensor;
 

@@ -2,8 +2,14 @@
 //!
 //! - [`Packed2Bit`]: 4 trits per byte, 2 bits each (00=0, 01=+1, 10=-1).
 //!   Fast to decode, used by the CPU inference kernels.
+//! - [`PackedMatrix`]: a row-aligned 2-bit weight matrix — every row
+//!   starts on a byte boundary (final byte zero-padded), so the blocked
+//!   batched kernels in [`super::matmul`] can slice per-row byte ranges
+//!   for any `cols`, including `cols % 4 != 0`.
 //! - [`PackedBase3`]: 5 trits per byte (3^5 = 243 <= 256), 1.6 bits per
 //!   weight — the near-entropy coding behind the paper's Table 4 sizes.
+
+use super::TernaryTensor;
 
 
 /// 2-bit packing: 4 ternary states per byte.
@@ -56,6 +62,81 @@ impl Packed2Bit {
 
     pub fn bits_per_weight(&self) -> f64 {
         8.0 * self.bytes.len() as f64 / self.len as f64
+    }
+}
+
+/// A row-aligned 2-bit ternary weight matrix with per-shard scales.
+///
+/// Unlike a flat [`Packed2Bit`] over `rows * cols` states (where a row
+/// may start mid-byte when `cols % 4 != 0`), every row here occupies
+/// `cols.div_ceil(4)` bytes; the trailing lanes of the final byte are
+/// the zero encoding, so full-byte decode over a row never fabricates
+/// a contribution. This is the storage format the batched decode
+/// kernels ([`super::matmul::matmul_ternary_packed`]) consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// `cols.div_ceil(4)` — each row's byte footprint.
+    pub bytes_per_row: usize,
+    /// `rows * bytes_per_row` bytes, row-major, rows byte-aligned.
+    pub bytes: Vec<u8>,
+    /// Per-shard absmean scales; `scales.len()` must divide `rows` and
+    /// row `r` uses `scales[r / (rows / scales.len())]` (§A.5).
+    pub scales: Vec<f32>,
+}
+
+impl PackedMatrix {
+    /// Pack row-major states with explicit shard scales.
+    pub fn from_states(rows: usize, cols: usize, states: &[i8],
+                       scales: Vec<f32>) -> Self {
+        assert_eq!(states.len(), rows * cols,
+                   "states len {} != rows*cols {}", states.len(), rows * cols);
+        assert!(!scales.is_empty(), "need at least one scale shard");
+        assert_eq!(rows % scales.len(), 0,
+                   "scale shards {} must divide rows {rows}", scales.len());
+        let bytes_per_row = cols.div_ceil(4);
+        let mut bytes = vec![0u8; rows * bytes_per_row];
+        for r in 0..rows {
+            for c in 0..cols {
+                let s = states[r * cols + c];
+                bytes[r * bytes_per_row + c / 4] |= enc2(s) << ((c % 4) * 2);
+            }
+        }
+        PackedMatrix { rows, cols, bytes_per_row, bytes, scales }
+    }
+
+    /// Pack a ternarized tensor (states + scales) for the decode path.
+    pub fn from_ternary(t: &TernaryTensor) -> Self {
+        PackedMatrix::from_states(t.rows, t.cols, &t.states, t.scales.clone())
+    }
+
+    /// The packed bytes of row `r`.
+    #[inline]
+    pub fn row_bytes(&self, r: usize) -> &[u8] {
+        &self.bytes[r * self.bytes_per_row..(r + 1) * self.bytes_per_row]
+    }
+
+    /// The absmean scale applied to row `r`.
+    #[inline]
+    pub fn row_scale(&self, r: usize) -> f32 {
+        self.scales[r / (self.rows / self.scales.len())]
+    }
+
+    /// Decode a single state.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        dec2(self.bytes[r * self.bytes_per_row + c / 4] >> ((c % 4) * 2))
+    }
+
+    /// Decode one row back to i8 states.
+    pub fn unpack_row(&self, r: usize) -> Vec<i8> {
+        (0..self.cols).map(|c| self.get(r, c)).collect()
+    }
+
+    /// Storage bits per weight, *including* row-padding overhead.
+    pub fn bits_per_weight(&self) -> f64 {
+        8.0 * self.bytes.len() as f64 / (self.rows * self.cols).max(1) as f64
     }
 }
 
@@ -139,6 +220,76 @@ mod tests {
                 assert_eq!(p.get(i), s);
             }
         }
+    }
+
+    // Satellite: exhaustive roundtrip over every length 0..=257 — the
+    // partial final byte (len % 4 and % 5) is covered at every phase.
+    #[test]
+    fn pack2_roundtrip_every_length_0_to_257() {
+        let mut rng = SplitMix64::new(31);
+        for len in 0..=257usize {
+            let states = random_states(&mut rng, len);
+            let p = Packed2Bit::pack(&states);
+            assert_eq!(p.bytes.len(), len.div_ceil(4), "len {len}");
+            assert_eq!(p.unpack(), states, "len {len}");
+        }
+    }
+
+    #[test]
+    fn pack3_roundtrip_every_length_0_to_257() {
+        let mut rng = SplitMix64::new(32);
+        for len in 0..=257usize {
+            let states = random_states(&mut rng, len);
+            let p = PackedBase3::pack(&states);
+            assert_eq!(p.unpack(), states, "len {len}");
+        }
+    }
+
+    #[test]
+    fn packed_matrix_roundtrip_all_col_phases() {
+        let mut rng = SplitMix64::new(33);
+        for rows in [1usize, 2, 5, 8] {
+            for cols in [1usize, 3, 4, 6, 7, 8, 13, 16] {
+                let states = random_states(&mut rng, rows * cols);
+                let m = PackedMatrix::from_states(rows, cols, &states,
+                                                  vec![1.0]);
+                assert_eq!(m.bytes_per_row, cols.div_ceil(4));
+                for r in 0..rows {
+                    assert_eq!(m.unpack_row(r), states[r * cols..(r + 1) * cols],
+                               "{rows}x{cols} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matrix_row_padding_is_zero_encoded() {
+        // cols = 5: three pad lanes in each row's final byte must decode
+        // to 0 so full-byte LUT passes cannot fabricate contributions.
+        let states = vec![1i8; 2 * 5];
+        let m = PackedMatrix::from_states(2, 5, &states, vec![1.0]);
+        for r in 0..2 {
+            let last = m.row_bytes(r)[m.bytes_per_row - 1];
+            for lane in 1..4 {
+                assert_eq!(dec2(last >> (2 * lane)), 0, "row {r} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matrix_shard_scales() {
+        let states = vec![1i8; 4 * 4];
+        let m = PackedMatrix::from_states(4, 4, &states, vec![2.0, 3.0]);
+        assert_eq!(m.row_scale(0), 2.0);
+        assert_eq!(m.row_scale(1), 2.0);
+        assert_eq!(m.row_scale(2), 3.0);
+        assert_eq!(m.row_scale(3), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide rows")]
+    fn packed_matrix_rejects_missharded_scales() {
+        PackedMatrix::from_states(5, 4, &vec![0i8; 20], vec![1.0, 1.0]);
     }
 
     #[test]

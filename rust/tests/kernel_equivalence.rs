@@ -1,0 +1,179 @@
+//! Kernel-equivalence harness: every ternary kernel generation against
+//! the dequantized-f32 reference over a shape grid (satellite of the
+//! batched-decode PR).
+//!
+//! Cross-checked kernels:
+//!   matvec_dense            — dense f32 reference executor
+//!   matvec_ternary_packed   — flat Packed2Bit scalar decode
+//!   matmul_ternary_dense    — unpacked i8 matmul
+//!   matmul_ternary_packed   — blocked/threaded PackedMatrix matmul
+//!
+//! Grid covers: cols not divisible by 4 (both the flat mid-byte path
+//! and the row-aligned tail-byte path), rows = 1, single-scale vs
+//! sharded scales, all-zero rows, shapes spanning multiple ROW_BLOCK x
+//! COL_BLOCK_TRITS tiles, batch sizes {1, 3, 8} and thread counts
+//! {1, 2, 5}. All inputs come from seeded SplitMix64 streams; the
+//! acceptance bar is max |err| < 1e-4 against the dequantized
+//! reference.
+
+use spectra::runtime::HostTensor;
+use spectra::ternary::matmul::{COL_BLOCK_TRITS, ROW_BLOCK};
+use spectra::ternary::{matmul_dense, matmul_ternary_dense,
+                       matmul_ternary_packed, matvec_dense,
+                       matvec_ternary_packed, Packed2Bit, PackedMatrix,
+                       TernaryTensor};
+
+const TOL: f32 = 1e-4;
+
+/// (rows, cols) grid: edge and tile-spanning shapes.
+fn shape_grid() -> Vec<(usize, usize)> {
+    vec![
+        (1, 4),                              // single row, aligned
+        (1, 7),                              // single row, tail bytes
+        (2, 8),
+        (3, 5),                              // both dims odd/unaligned
+        (7, 10),
+        (8, 12),
+        (16, 16),
+        (32, 20),
+        (33, 64),                            // odd, block-unaligned
+        (ROW_BLOCK + 9, COL_BLOCK_TRITS + 37), // spans tiles + tail
+        (64, 48),
+    ]
+}
+
+/// Scale-shard counts valid for `rows`: single scale plus every
+/// sharding the suite's mp grid would produce.
+fn mp_grid(rows: usize) -> Vec<usize> {
+    [1usize, 2, 3, 4].into_iter()
+        .filter(|&mp| mp <= rows && rows % mp == 0)
+        .collect()
+}
+
+fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn check_all_kernels(t: &TernaryTensor, seed: u64, label: &str) {
+    let dq = t.dequant();
+    let flat = Packed2Bit::pack(&t.states);
+    let pm = PackedMatrix::from_ternary(t);
+
+    // Scalar decode path vs dense reference.
+    let x1 = HostTensor::randn(vec![1, t.cols], 1.0, seed ^ 1);
+    let want_v = matvec_dense(&dq, &x1.data);
+    let got_v = matvec_ternary_packed(&flat, t.rows, t.cols, &t.scales,
+                                      &x1.data);
+    assert!(max_abs_err(&got_v, &want_v) < TOL, "{label}: matvec packed");
+
+    // Batched paths at several batch sizes and thread counts.
+    for m in [1usize, 3, 8] {
+        let x = HostTensor::randn(vec![m, t.cols], 1.0, seed ^ (m as u64) << 8);
+        let want = matmul_dense(&x, &dq);
+
+        let got_dense_t = matmul_ternary_dense(&x, t);
+        assert!(max_abs_err(&got_dense_t.data, &want.data) < TOL,
+                "{label} m={m}: matmul_ternary_dense");
+
+        for threads in [1usize, 2, 5] {
+            let got = matmul_ternary_packed(&x, &pm, threads);
+            assert_eq!(got.shape, vec![m, t.rows]);
+            let err = max_abs_err(&got.data, &want.data);
+            assert!(err < TOL,
+                    "{label} m={m} threads={threads}: \
+                     matmul_ternary_packed err {err}");
+        }
+    }
+
+    // Kernel-generation consistency: batched kernel at m=1 vs matvec.
+    let got_m1 = matmul_ternary_packed(&x1, &pm, 1);
+    assert!(max_abs_err(&got_m1.data, &got_v) < TOL,
+            "{label}: matmul(m=1) vs matvec disagree");
+}
+
+#[test]
+fn equivalence_over_shape_and_scale_grid() {
+    let mut seed = 0xA11CE;
+    for (rows, cols) in shape_grid() {
+        for mp in mp_grid(rows) {
+            seed += 1;
+            let w = HostTensor::randn(vec![rows, cols], 0.05, seed);
+            let t = TernaryTensor::from_latent(&w, mp);
+            assert_eq!(t.scales.len(), mp);
+            check_all_kernels(&t, seed, &format!("{rows}x{cols} mp={mp}"));
+        }
+    }
+}
+
+#[test]
+fn equivalence_with_all_zero_rows() {
+    // Every other row all-zero: the sparsity skip must not desync
+    // row/scale bookkeeping, and zero rows must emit exact zeros.
+    for (rows, cols) in [(4usize, 8usize), (6, 10), (33, 20)] {
+        let mut states = vec![0i8; rows * cols];
+        for r in 0..rows {
+            if r % 2 == 0 {
+                for c in 0..cols {
+                    states[r * cols + c] = match (r + c) % 3 {
+                        0 => 1,
+                        1 => -1,
+                        _ => 0,
+                    };
+                }
+            }
+        }
+        let t = TernaryTensor {
+            rows, cols, states, scales: vec![0.7],
+        };
+        check_all_kernels(&t, 0xDEAD ^ rows as u64, &format!(
+            "zero-rows {rows}x{cols}"));
+        let x = HostTensor::randn(vec![2, cols], 1.0, 5);
+        let y = matmul_ternary_packed(&x, &PackedMatrix::from_ternary(&t), 2);
+        for r in (1..rows).step_by(2) {
+            for mi in 0..2 {
+                assert_eq!(y.at2(mi, r), 0.0, "zero row {r} leaked");
+            }
+        }
+    }
+}
+
+#[test]
+fn equivalence_with_extreme_scales() {
+    // Tiny and large shard scales through the full kernel stack.
+    let rows = 8;
+    let cols = 12;
+    let w = HostTensor::randn(vec![rows, cols], 0.05, 77);
+    let mut t = TernaryTensor::from_latent(&w, 2);
+    t.scales = vec![1e-4, 40.0];
+    // Relative check at large scale: compare against dequant reference.
+    let dq = t.dequant();
+    let x = HostTensor::randn(vec![3, cols], 1.0, 78);
+    let want = matmul_dense(&x, &dq);
+    let got = matmul_ternary_packed(&x, &PackedMatrix::from_ternary(&t), 2);
+    for (a, b) in got.data.iter().zip(want.data.iter()) {
+        let tol = TOL * b.abs().max(1.0);
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn batch_and_thread_invariance_is_bitwise() {
+    // Stronger than the tolerance harness: each lane's result is
+    // bitwise identical across batch sizes and thread counts — the
+    // property the serve scheduler's determinism rests on.
+    let w = HostTensor::randn(vec![48, COL_BLOCK_TRITS + 11], 0.05, 91);
+    let t = TernaryTensor::from_latent(&w, 2);
+    let pm = PackedMatrix::from_ternary(&t);
+    let xb = HostTensor::randn(vec![8, t.cols], 1.0, 92);
+    let reference = matmul_ternary_packed(&xb, &pm, 1);
+    for threads in [2usize, 3, 8] {
+        let got = matmul_ternary_packed(&xb, &pm, threads);
+        assert_eq!(got.data, reference.data, "threads={threads}");
+    }
+    for mi in 0..8 {
+        let x1 = HostTensor::stack_rows(&[xb.row(mi)]);
+        let solo = matmul_ternary_packed(&x1, &pm, 4);
+        assert_eq!(solo.data, reference.row(mi), "lane {mi}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Scheduler determinism (satellite): the same request set must
+//! produce identical token streams regardless of batch size and
+//! kernel thread count — continuous batching is an operational
+//! optimization, never a semantic one.
+//!
+//! This holds because (a) each lane's computation depends only on its
+//! own state/tokens, (b) the blocked kernel's accumulation order is
+//! batch- and thread-invariant (tests/kernel_equivalence.rs checks it
+//! bitwise), and (c) greedy ties break by token id while top-k draws
+//! from a per-request seeded stream.
+
+use spectra::serve::{GenRequest, LmDims, Scheduler, TernaryLm};
+
+fn dims() -> LmDims {
+    LmDims { vocab: 128, hidden: 64, glu: 96, layers: 3 }
+}
+
+fn request_set() -> Vec<GenRequest> {
+    (0..12).map(|id| {
+        let prompt: Vec<u32> =
+            (0..(1 + id % 5)).map(|j| ((7 * id + 3 * j) % 128) as u32).collect();
+        GenRequest::greedy(id, prompt, 4 + id % 7)
+    }).collect()
+}
+
+fn run(lm: &TernaryLm, max_batch: usize, threads: usize) -> Vec<Vec<u32>> {
+    let mut sched = Scheduler::new(lm, max_batch, threads);
+    for r in request_set() {
+        sched.submit(r);
+    }
+    sched.run().into_iter().map(|c| c.tokens).collect()
+}
+
+#[test]
+fn greedy_streams_identical_at_batch_1_and_8() {
+    let (lm, _) = TernaryLm::synthetic_pair(dims(), 1, 42);
+    let solo = run(&lm, 1, 1);
+    let batched = run(&lm, 8, 4);
+    assert_eq!(solo.len(), 12);
+    for (id, (a, b)) in solo.iter().zip(batched.iter()).enumerate() {
+        assert_eq!(a, b, "request {id}: batch-1 and batch-8 streams differ");
+    }
+}
+
+#[test]
+fn greedy_streams_invariant_across_lane_counts_and_threads() {
+    let (lm, _) = TernaryLm::synthetic_pair(dims(), 2, 43);
+    let reference = run(&lm, 1, 1);
+    for (max_batch, threads) in [(2, 1), (3, 2), (5, 3), (12, 8)] {
+        let got = run(&lm, max_batch, threads);
+        assert_eq!(got, reference,
+                   "divergence at max_batch={max_batch} threads={threads}");
+    }
+}
+
+#[test]
+fn dense_twin_is_also_batch_invariant() {
+    // The contract is on the engine, not just the ternary kernels: the
+    // dense baseline must serve deterministically too.
+    let (_, dlm) = TernaryLm::synthetic_pair(dims(), 1, 44);
+    let run_dense = |max_batch: usize| -> Vec<Vec<u32>> {
+        let mut sched = Scheduler::new(&dlm, max_batch, 1);
+        for r in request_set() {
+            sched.submit(r);
+        }
+        sched.run().into_iter().map(|c| c.tokens).collect()
+    };
+    assert_eq!(run_dense(1), run_dense(8));
+}
+
+#[test]
+fn top_k_streams_identical_at_batch_1_and_8() {
+    // Seeded top-k: the random draw sequence is per-request, so batch
+    // composition cannot perturb it.
+    let (lm, _) = TernaryLm::synthetic_pair(dims(), 1, 45);
+    let run_topk = |max_batch: usize| -> Vec<Vec<u32>> {
+        let mut sched = Scheduler::new(&lm, max_batch, 2);
+        for id in 0..10 {
+            sched.submit(GenRequest::top_k(
+                id, vec![(id as u32) % 128, 9], 6, 5, 0.9, 1000 + id as u64));
+        }
+        sched.run().into_iter().map(|c| c.tokens).collect()
+    };
+    assert_eq!(run_topk(1), run_topk(8));
+}
+
+#[test]
+fn ternary_and_dense_serve_comparable_distributions() {
+    // Weight-identical twins: greedy streams may legitimately diverge
+    // at near-ties, but the first decoded token (one step from a zero
+    // state) must agree — a storage-format smoke check at the serving
+    // level.
+    let (tlm, dlm) = TernaryLm::synthetic_pair(dims(), 1, 46);
+    let first = |out: Vec<Vec<u32>>| -> Vec<u32> {
+        out.into_iter().map(|t| t[0]).collect()
+    };
+    let mut st = Scheduler::new(&tlm, 4, 1);
+    let mut sd = Scheduler::new(&dlm, 4, 1);
+    for r in request_set() {
+        st.submit(r.clone());
+        sd.submit(r);
+    }
+    let a = first(st.run().into_iter().map(|c| c.tokens).collect());
+    let b = first(sd.run().into_iter().map(|c| c.tokens).collect());
+    let agree = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    assert!(agree >= 10, "only {agree}/12 first tokens agree");
+}

@@ -1,0 +1,103 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored
+//! shim provides exactly the subset spectra uses: [`Error`],
+//! [`Result`], [`anyhow!`] and [`bail!`]. Like real anyhow, `Error`
+//! deliberately does NOT implement `std::error::Error` — that is what
+//! makes the blanket `From<E: std::error::Error>` impl coherent, so
+//! `?` converts any std error into an [`Error`].
+
+use std::fmt;
+
+/// A type-erased error: a message plus (optionally) the source error's
+/// rendered chain. Construction is either [`Error::msg`] (the
+/// [`anyhow!`] macro) or the blanket `From` impl used by `?`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `main() -> anyhow::Result<()>` prints the Debug form on Err;
+        // show the plain message like real anyhow does.
+        f.write_str(&self.msg)
+    }
+}
+
+// Coherent because `Error` itself does not (and, by the orphan rule,
+// never can downstream) implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — crate-wide shorthand.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e2 = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e2.to_string(), "1 and 2");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("nope {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 7");
+    }
+}

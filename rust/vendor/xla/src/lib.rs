@@ -1,0 +1,279 @@
+//! Offline stand-in for the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The real crate links the multi-GB xla_extension C++ runtime, which
+//! this build environment does not ship. Everything spectra does on the
+//! *host* side — building, reshaping and reading back [`Literal`]s —
+//! is implemented for real here, so checkpoint I/O, batching, GPTQ and
+//! the CPU ternary kernels all work. Only actual device execution
+//! ([`PjRtLoadedExecutable::execute_b`]) is unavailable: it returns a
+//! clear error. The integration tests and every `Runtime`-driven
+//! command already skip / fail gracefully when `artifacts/` is absent,
+//! and the serve/ subsystem runs decode entirely on the CPU kernels
+//! without PJRT.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`'s role (Display + std::error).
+#[derive(Debug, Clone)]
+pub struct Error {
+    pub msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold (the subset spectra uses).
+pub trait NativeType: Copy + 'static {
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal;
+    fn unwrap_slice(lit: &Literal) -> Result<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal {
+        Literal::F32 { dims, data }
+    }
+    fn unwrap_slice(lit: &Literal) -> Result<&[Self]> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data),
+            other => Err(Error::new(format!(
+                "literal is not f32: {}", other.kind()))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal {
+        Literal::I32 { dims, data }
+    }
+    fn unwrap_slice(lit: &Literal) -> Result<&[Self]> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data),
+            other => Err(Error::new(format!(
+                "literal is not i32: {}", other.kind()))),
+        }
+    }
+}
+
+/// A host tensor value: shaped f32/i32 arrays or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    I32 { dims: Vec<i64>, data: Vec<i32> },
+    Tuple(Vec<Literal>),
+}
+
+/// Array shape (dims only; element type lives on the literal).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    fn kind(&self) -> &'static str {
+        match self {
+            Literal::F32 { .. } => "f32",
+            Literal::I32 { .. } => "i32",
+            Literal::Tuple(_) => "tuple",
+        }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::wrap(vec![data.len() as i64], data.to_vec())
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        T::wrap(vec![], vec![x])
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.element_count())));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } =>
+                Literal::F32 { dims: dims.to_vec(), data: data.clone() },
+            Literal::I32 { data, .. } =>
+                Literal::I32 { dims: dims.to_vec(), data: data.clone() },
+            Literal::Tuple(_) =>
+                return Err(Error::new("cannot reshape a tuple literal")),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(ts) => ts.iter().map(|t| t.element_count()).sum(),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::F32 { dims, .. } | Literal::I32 { dims, .. } =>
+                Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) =>
+                Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap_slice(self).map(|s| s.to_vec())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let s = T::unwrap_slice(self)?;
+        s.first().copied()
+            .ok_or_else(|| Error::new("empty literal has no first element"))
+    }
+
+    /// Flatten a tuple literal into its members.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(ts) => Ok(ts),
+            other => Ok(vec![other]),
+        }
+    }
+}
+
+/// Parsed (well — retained) HLO module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::new(format!("reading {}: {e}", path.display()))
+        })?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// PJRT client stand-in ("platform" is host-only).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+/// Device buffer stand-in: holds the staged host literal.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+/// Compiled-executable stand-in. Execution is unavailable offline.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+const NO_BACKEND: &str =
+    "PJRT execution is unavailable in this offline build: the vendored \
+     xla stub only supports host literals. Graph-driven paths (train / \
+     eval / capture) need the real xla_extension backend; the serve/ \
+     subsystem and ternary CPU kernels run without it.";
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+
+    pub fn buffer_from_host_literal(&self, _device: Option<usize>,
+                                    lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(NO_BACKEND))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_i32() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        let i = Literal::vec1(&[7i32, 8]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+        assert!(i.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn execution_is_gated_with_clear_error() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(
+            &HloModuleProto { text: "HloModule m".into() });
+        let exe = client.compile(&comp).unwrap();
+        let buf = client
+            .buffer_from_host_literal(None, &Literal::scalar(1.0f32))
+            .unwrap();
+        let err = exe.execute_b(&[buf]).unwrap_err();
+        assert!(err.to_string().contains("offline"));
+    }
+}
