@@ -22,4 +22,13 @@ fi
 echo "== compile benches + examples =="
 cargo build --release --benches --examples
 
+# Cross-family runtime smoke: tiny dims, all four serving families
+# through the scheduler — catches runtime panics (ragged groups, kernel
+# tails, family builders), not just compile errors.
+echo "== cross-family serve smoke =="
+cargo run --release --quiet -- serve-bench \
+    --family float,quant3,quant4,ternary \
+    --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
+    --requests 4 --max-tokens 4 --batches 1,2 --threads 1
+
 echo "ci: all green"

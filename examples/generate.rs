@@ -1,21 +1,26 @@
 //! Completion demo on the serve engine: concurrent prompts decoded by
-//! the continuous-batching scheduler over packed ternary CPU kernels —
-//! the pure-Rust inference request path, no PJRT required.
+//! the continuous-batching scheduler over any storage family — dense
+//! f32 (FloatLM), k-bit group-quantized (QuantLM, RTN or GPTQ), or
+//! packed ternary (TriLM) — the pure-Rust inference request path, no
+//! PJRT required.
 //!
-//! With a trained checkpoint, its mlp linears are ternarized into a
-//! [`TernaryLm`] and the prompts are BPE-tokenized against the run's
-//! dataset; without one, a synthetic model serves the same traffic so
-//! the demo (and its throughput readout) always runs.
+//! With a trained checkpoint, its mlp linears become the latent f32
+//! weights and the prompts are BPE-tokenized against the run's
+//! dataset; without one, synthetic latent weights serve the same
+//! traffic so the demo (and its throughput readout) always runs. The
+//! `--family` flag picks the storage format the same weights are
+//! served in.
 //!
 //!     cargo run --release --example generate -- \
 //!         --checkpoint runs/main/930k_ternary.spt --prompt "one day" \
-//!         --batch 4 --threads 2 --max-tokens 24
+//!         --family ternary --batch 4 --threads 2 --max-tokens 24
 
 use std::path::PathBuf;
 
 use spectra::checkpoint::Checkpoint;
 use spectra::data::Dataset;
-use spectra::serve::{GenRequest, LmDims, Scheduler, TernaryLm};
+use spectra::serve::{DecodeModel, FamilySpec, GenRequest, LatentLm, LmDims,
+                     Scheduler};
 use spectra::util::args::Args;
 use spectra::Result;
 
@@ -24,6 +29,10 @@ fn main() -> Result<()> {
     let max_tokens = args.get_usize("max-tokens", 24);
     let batch = args.get_usize("batch", 4);
     let threads = args.get_usize("threads", 2);
+    let group = args.get_usize("group", 128);
+    let spec = FamilySpec::parse(&args.get("family", "ternary"), group)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown family (float | quant<bits> | gptq<bits> | ternary)"))?;
     let ck_path = PathBuf::from(
         args.get("checkpoint", "runs/main/930k_ternary.spt"));
 
@@ -31,33 +40,38 @@ fn main() -> Result<()> {
                    "the capital of".to_string(),
                    "if it rains , then".to_string()];
 
-    // Model + tokenization differ by source; the serve flow does not.
+    // Latent weights + tokenization differ by source; the family
+    // realization and the serve flow do not.
     type Decode = Box<dyn Fn(&[u32]) -> String>;
-    let (lm, encoded, decode): (TernaryLm, Vec<Vec<u32>>, Decode) =
+    let (latent, encoded, decode): (LatentLm, Vec<Vec<u32>>, Decode) =
         match Checkpoint::load(&ck_path) {
             Ok(ck) => {
-                let lm = TernaryLm::from_checkpoint(&ck)?;
+                let latent = LatentLm::from_checkpoint(&ck)?;
                 let data =
                     Dataset::build(&PathBuf::from("runs/data"), 400_000, 0)?;
                 let encoded =
                     prompts.iter().map(|p| data.bpe.encode(p)).collect();
                 let bpe = data.bpe;
-                (lm, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
+                (latent, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
             }
             Err(e) => {
-                eprintln!("no checkpoint ({e}); serving a synthetic \
-                           ternary LM");
+                eprintln!("no checkpoint ({e}); serving synthetic latent \
+                           weights");
                 let dims =
                     LmDims { vocab: 512, hidden: 128, glu: 352, layers: 4 };
-                let (lm, _) = TernaryLm::synthetic_pair(dims, 1, 0);
+                let latent = LatentLm::synthetic(dims, 1, 0);
                 let encoded = prompts.iter()
                     .map(|p| p.bytes().map(|b| b as u32 % 512).collect())
                     .collect();
-                (lm, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
+                (latent, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
             }
         };
 
-    let mut sched = Scheduler::new(&lm, batch, threads);
+    let lm = latent.build(spec)?;
+    println!("family {} ({}, {:.2} bits/param)", spec.label(),
+             lm.family_label(), lm.effective_bits_per_param());
+
+    let mut sched = Scheduler::new(lm.as_ref(), batch, threads);
     for (id, toks) in encoded.into_iter().enumerate() {
         sched.submit(GenRequest::greedy(id, toks, max_tokens));
     }

@@ -1,14 +1,15 @@
-//! Bench: batched threaded ternary decode through the serve engine —
-//! tokens/sec vs batch size and thread count, against (a) the
-//! single-thread scalar reference (batch 1, 1 thread: the old
-//! one-request-at-a-time path) and (b) the dense f32 twin holding
-//! identical weights (the FloatLM-storage baseline).
+//! Bench: batched threaded decode through the serve engine —
+//! (a) a cross-family sweep (FloatLM / QuantLM 3,4-bit / TriLM storage
+//! of the *same* latent weights at batch 8: the paper's
+//! bits-vs-throughput story on the serving path), then (b) the ternary
+//! batch/thread grid against the single-thread scalar reference and
+//! the dense f32 twin holding identical weights.
 //!
 //! Acceptance target: batch-8 threaded ternary >= 3x the single-thread
 //! scalar tokens/sec.
 
-use spectra::serve::{bench_requests, DecodeModel, LmDims, Scheduler,
-                     TernaryLm};
+use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentLm,
+                     LmDims, Scheduler, TernaryLm};
 use spectra::util::bench::bench_few;
 
 const N_REQUESTS: usize = 24;
@@ -29,8 +30,24 @@ fn main() {
     println!("== serve_throughput: {} requests x {MAX_NEW} tokens, \
               vocab {} hidden {} glu {} layers {} ==",
              N_REQUESTS, dims.vocab, dims.hidden, dims.glu, dims.layers);
-    let (tlm, dlm) = TernaryLm::synthetic_pair(dims, 2, 1);
+    let (tlm, dlm) = TernaryLm::synthetic_pair(dims.clone(), 2, 1);
     let total_tokens = (N_REQUESTS * MAX_NEW) as f64;
+
+    // Cross-family sweep: same latent weights, same traffic, one
+    // storage format per row (group 128 => ragged groups at these dims).
+    let latent = LatentLm::synthetic(dims.clone(), 2, 1);
+    for fam in ["float", "quant3", "quant4", "ternary"] {
+        let spec = FamilySpec::parse(fam, 128).unwrap();
+        let model = latent.build(spec).unwrap();
+        let r = bench_few(
+            &format!("family {} ({:.2} bits/param) batch=8",
+                     spec.label(), model.effective_bits_per_param()),
+            3, || {
+                assert_eq!(drain(model.as_ref(), 8, 2),
+                           N_REQUESTS * MAX_NEW);
+            });
+        r.report_throughput("tokens", total_tokens);
+    }
 
     let cores = std::thread::available_parallelism()
         .map(|t| t.get()).unwrap_or(1);

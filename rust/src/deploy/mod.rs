@@ -31,19 +31,32 @@ pub fn hidden_for_params(params: f64) -> f64 {
     (params * 128.0 / 12.0).cbrt()
 }
 
-/// Model size in GB at parameter count `params` for a family, keeping
-/// embeddings (128k vocab, tied pair) in FP16 (§2.1).
-pub fn size_gb_at(params: f64, fam: SizeFamily) -> f64 {
-    let hidden = hidden_for_params(params);
-    let embed = 2.0 * 128_000.0 * hidden; // embedding + head
-    let linear = (params - embed).max(0.0);
-    let wbits = match fam {
+/// Linear-weight bits per parameter for a size family (the paper's
+/// effective-bit accounting, §4.2).
+pub fn family_linear_bits(fam: SizeFamily) -> f64 {
+    match fam {
         SizeFamily::Float => 16.0,
         SizeFamily::Quant { bits, group } => bits as f64 + 16.0 / group as f64,
         SizeFamily::Ternary => 3f64.log2(),
         SizeFamily::Binary => 1.0,
-    };
-    (embed * 16.0 + linear * wbits) / 8.0 / 1e9
+    }
+}
+
+/// Model size in GB at parameter count `params` for an *arbitrary*
+/// linear-weight bit rate, keeping embeddings (128k vocab, tied pair)
+/// in FP16 (§2.1). This is the hook the serve engine's
+/// `LinearFormat::effective_bits_per_param` plugs into, so measured
+/// storage formats and the analytic memory-wall model share one axis.
+pub fn size_gb_at_bits(params: f64, linear_bits: f64) -> f64 {
+    let hidden = hidden_for_params(params);
+    let embed = 2.0 * 128_000.0 * hidden; // embedding + head
+    let linear = (params - embed).max(0.0);
+    (embed * 16.0 + linear * linear_bits) / 8.0 / 1e9
+}
+
+/// Model size in GB at parameter count `params` for a family.
+pub fn size_gb_at(params: f64, fam: SizeFamily) -> f64 {
+    size_gb_at_bits(params, family_linear_bits(fam))
 }
 
 /// Fig. 2a: the largest parameter count whose weights fit in `mem_gb`.
@@ -81,11 +94,28 @@ pub fn max_speedup_vs_fp16(params: f64, fam: SizeFamily) -> f64 {
 ///   tokens/sec = batch / t_step
 pub fn decode_tokens_per_sec(params: f64, fam: SizeFamily,
                              hw: &Accelerator, batch: f64) -> f64 {
+    decode_tokens_per_sec_bits(params, family_linear_bits(fam), hw, batch)
+}
+
+/// [`decode_tokens_per_sec`] keyed by an arbitrary linear-weight bit
+/// rate — the per-family decode roofline `spectra serve-bench --family`
+/// cross-references against each serving model's measured
+/// `effective_bits_per_param`.
+pub fn decode_tokens_per_sec_bits(params: f64, linear_bits: f64,
+                                  hw: &Accelerator, batch: f64) -> f64 {
     assert!(batch >= 1.0, "batch must be >= 1");
-    let weight_bytes = size_gb_at(params, fam) * 1e9;
+    let weight_bytes = size_gb_at_bits(params, linear_bits) * 1e9;
     let t_bw = weight_bytes / (hw.bw_gbs * 1e9);
     let t_compute = batch * 2.0 * params / (hw.tflops_fp16 * 1e12);
     batch / t_bw.max(t_compute)
+}
+
+/// Decode speedup over FP16 at a given batch size for an arbitrary
+/// linear-weight bit rate.
+pub fn batched_speedup_vs_fp16_bits(params: f64, linear_bits: f64,
+                                    hw: &Accelerator, batch: f64) -> f64 {
+    decode_tokens_per_sec_bits(params, linear_bits, hw, batch)
+        / decode_tokens_per_sec_bits(params, 16.0, hw, batch)
 }
 
 /// Decode speedup over FP16 at a given batch size — the Fig. 2b ratio
@@ -104,7 +134,13 @@ pub fn batched_speedup_vs_fp16(params: f64, fam: SizeFamily,
 /// smaller batch than FP16 — it streams ~10x fewer bytes, so the
 /// bandwidth headroom runs out sooner.
 pub fn saturation_batch(params: f64, fam: SizeFamily, hw: &Accelerator) -> f64 {
-    let weight_bytes = size_gb_at(params, fam) * 1e9;
+    saturation_batch_bits(params, family_linear_bits(fam), hw)
+}
+
+/// [`saturation_batch`] keyed by an arbitrary linear-weight bit rate.
+pub fn saturation_batch_bits(params: f64, linear_bits: f64,
+                             hw: &Accelerator) -> f64 {
+    let weight_bytes = size_gb_at_bits(params, linear_bits) * 1e9;
     let t_bw = weight_bytes / (hw.bw_gbs * 1e9);
     let t_compute_per_lane = 2.0 * params / (hw.tflops_fp16 * 1e12);
     (t_bw / t_compute_per_lane).max(1.0)
@@ -230,6 +266,41 @@ mod tests {
         // In between it is monotonically nonincreasing.
         let s8 = batched_speedup_vs_fp16(7e9, fam, hw, 8.0);
         assert!(s8 <= s1 + 1e-9 && s_inf <= s8 + 1e-9);
+    }
+
+    #[test]
+    fn bits_keyed_roofline_matches_family_keyed() {
+        // The serve engine keys the roofline by measured bits/param;
+        // family-keyed and bits-keyed forms must agree exactly.
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let q4 = SizeFamily::Quant { bits: 4, group: 128 };
+        for fam in [SizeFamily::Float, q4, SizeFamily::Ternary] {
+            let bits = family_linear_bits(fam);
+            assert_eq!(size_gb_at(7e9, fam), size_gb_at_bits(7e9, bits));
+            for b in [1.0, 8.0, 256.0] {
+                assert_eq!(decode_tokens_per_sec(7e9, fam, hw, b),
+                           decode_tokens_per_sec_bits(7e9, bits, hw, b));
+            }
+            assert_eq!(saturation_batch(7e9, fam, hw),
+                       saturation_batch_bits(7e9, bits, hw));
+        }
+    }
+
+    #[test]
+    fn fewer_bits_more_tokens_while_bandwidth_bound() {
+        // The bits-vs-throughput story serve-bench reproduces: at batch
+        // 1 (bandwidth-bound) throughput rises monotonically as the
+        // linear-weight bit rate falls.
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let mut last = 0.0;
+        for bits in [32.0, 16.0, 8.125, 4.125, 3.125, 3f64.log2()] {
+            let tps = decode_tokens_per_sec_bits(7e9, bits, hw, 1.0);
+            assert!(tps > last, "bits {bits}: {tps} <= {last}");
+            last = tps;
+        }
+        // fp32 storage serves *slower* than the fp16 reference.
+        assert!(batched_speedup_vs_fp16_bits(7e9, 32.0, hw, 1.0) < 1.0);
+        assert!(batched_speedup_vs_fp16_bits(7e9, 3f64.log2(), hw, 1.0) > 4.0);
     }
 
     #[test]

@@ -154,8 +154,7 @@ pub fn gptq_quantize(w: &HostTensor, hessian: &[f64], cfg: GptqConfig)
                      -> Result<QuantTensor> {
     let (rows, cols) = w.dims2();
     assert_eq!(hessian.len(), cols * cols);
-    let group = cfg.group.min(cols);
-    assert_eq!(cols % group, 0);
+    let group = cfg.group;
     let qmax = QuantTensor::qmax(cfg.bits);
 
     // Damping: H += percdamp * mean(diag) * I; dead columns (H_jj = 0)
@@ -172,14 +171,16 @@ pub fn gptq_quantize(w: &HostTensor, hessian: &[f64], cfg: GptqConfig)
     }
     let u = hinv_upper(&h, cols)?;
 
-    // Working copy of weights; error-compensated in place.
+    // Working copy of weights; error-compensated in place. Groups are
+    // ragged: the final group of a row is short when group ∤ cols (the
+    // caller-visible group size is recorded verbatim, see quant/).
     let mut work: Vec<f64> = w.data.iter().map(|&x| x as f64).collect();
-    let ng = cols / group;
+    let ng = QuantTensor::n_groups(cols, group);
     let mut q = vec![0i8; rows * cols];
     let mut scales = vec![0.0f32; rows * ng];
 
     for g in 0..ng {
-        let (c0, c1) = (g * group, (g + 1) * group);
+        let (c0, c1) = (g * group, ((g + 1) * group).min(cols));
         // Group scales from the *current* (compensated) weights.
         for r in 0..rows {
             let absmax = (c0..c1).fold(0.0f64, |a, c| a.max(work[r * cols + c].abs()));
@@ -327,6 +328,24 @@ mod tests {
         let q = gptq_quantize(&w, &acc.finalize(), GptqConfig::new(4, 16)).unwrap();
         let qmax = QuantTensor::qmax(4) as i8;
         assert!(q.q.iter().all(|&v| v.abs() <= qmax));
+    }
+
+    #[test]
+    fn gptq_handles_ragged_groups() {
+        // cols = 20, group 16: a 4-wide ragged final group, with the
+        // caller-visible group recorded verbatim.
+        let d = 20;
+        let w = HostTensor::randn(vec![6, d], 0.1, 11);
+        let x = correlated_inputs(96, d, 12);
+        let mut acc = HessianAccumulator::new(d);
+        acc.add_batch(&x);
+        let q = gptq_quantize(&w, &acc.finalize(),
+                              GptqConfig::new(4, 16)).unwrap();
+        assert_eq!(q.group, 16);
+        assert_eq!(q.scales.len(), 6 * 2);
+        let qmax = QuantTensor::qmax(4) as i8;
+        assert!(q.q.iter().all(|&v| v.abs() <= qmax));
+        assert!(q.mse(&w).is_finite());
     }
 
     #[test]

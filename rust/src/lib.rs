@@ -16,6 +16,9 @@
 //! - [`checkpoint`] — tensor store for trained models.
 //! - [`ternary`] — ternarization, 2-bit/base-3 packing, CPU kernels.
 //! - [`quant`] — k-bit symmetric group quantization (QuantLM storage).
+//! - [`linear`] — the family-unified [`linear::LinearFormat`] trait
+//!   (dense f32 / packed ternary / packed k-bit quant) + the blocked
+//!   threaded k-bit serving kernel.
 //! - [`gptq`] — GPTQ post-training quantization (Hessian + Cholesky).
 //! - [`analysis`] — scaling-law fits (Levenberg–Marquardt), entropy.
 //! - [`deploy`] — hardware DB, model-bits accounting, memory-wall model
@@ -34,6 +37,7 @@ pub mod data;
 pub mod deploy;
 pub mod eval;
 pub mod gptq;
+pub mod linear;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,211 @@
+//! The family-unified linear-layer API: one trait over every weight
+//! storage format the serve engine speaks.
+//!
+//! The paper's headline result is a *cross-family* comparison — FloatLM
+//! vs QuantLM vs TriLM at matched bit budgets (§4.2, Table 4, Fig. 2).
+//! [`LinearFormat`] is the serving-side abstraction that makes the
+//! comparison executable: a linear layer is "something that can batched-
+//! matmul, dequantize, and account for its own bits per parameter",
+//! regardless of how the weights are stored. Three formats implement it:
+//!
+//! - [`DenseF32`] — f32 rows (the FloatLM-storage baseline; 32 bits).
+//! - [`crate::ternary::PackedMatrix`] — 2-bit trits + shard scales, via
+//!   the blocked threaded [`crate::ternary::matmul_ternary_packed`].
+//! - [`QuantPacked`] — k-bit group-quantized bitstream + per-group
+//!   scales, via the blocked threaded [`matmul_quant_packed`]
+//!   (see [`qmatmul`]).
+//!
+//! All three honor the same numerical contract: per-output-element
+//! accumulation order is fixed by `k` alone, so a lane's result is
+//! bitwise identical at any batch size and thread count — the property
+//! `serve`'s continuous-batching determinism rests on.
+//! [`LinearFormat::effective_bits_per_param`] keys the deploy roofline
+//! ([`crate::deploy::decode_tokens_per_sec_bits`]) so measured
+//! throughput and the analytic bits-vs-bandwidth story line up.
+
+pub mod qmatmul;
+
+pub use qmatmul::{matmul_quant_packed, QuantPacked, COL_BLOCK_VALS};
+
+use crate::runtime::HostTensor;
+use crate::ternary::{matmul_dense, matmul_ternary_packed, PackedMatrix};
+
+/// A served linear layer: y = x @ W^T over some weight storage format.
+pub trait LinearFormat: Send + Sync {
+    /// Output features (rows of W).
+    fn out_features(&self) -> usize;
+
+    /// Input features (cols of W).
+    fn in_features(&self) -> usize;
+
+    /// Batched matmul y = x @ W^T; x: (m, in) -> (m, out). `threads`
+    /// is a partitioning hint (0 = auto); implementations must keep
+    /// per-element accumulation order independent of both `threads`
+    /// and the batch size `m`.
+    fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor;
+
+    /// Dequantized f32 weights — the equivalence-test reference.
+    fn dequant(&self) -> HostTensor;
+
+    /// Stored bits per weight parameter, scale overhead included (the
+    /// paper's effective-bit accounting, §4.2).
+    fn effective_bits_per_param(&self) -> f64;
+
+    /// Short storage-format label (e.g. "fp32", "ternary", "q4g128").
+    fn label(&self) -> String;
+}
+
+/// Dense f32 storage — the FloatLM serving baseline.
+#[derive(Debug, Clone)]
+pub struct DenseF32 {
+    pub w: HostTensor,
+}
+
+impl From<HostTensor> for DenseF32 {
+    fn from(w: HostTensor) -> Self {
+        DenseF32 { w }
+    }
+}
+
+impl LinearFormat for DenseF32 {
+    fn out_features(&self) -> usize {
+        self.w.dims2().0
+    }
+
+    fn in_features(&self) -> usize {
+        self.w.dims2().1
+    }
+
+    fn matmul_batch(&self, x: &HostTensor, _threads: usize) -> HostTensor {
+        matmul_dense(x, &self.w)
+    }
+
+    fn dequant(&self) -> HostTensor {
+        self.w.clone()
+    }
+
+    fn effective_bits_per_param(&self) -> f64 {
+        32.0
+    }
+
+    fn label(&self) -> String {
+        "fp32".into()
+    }
+}
+
+impl LinearFormat for PackedMatrix {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn in_features(&self) -> usize {
+        self.cols
+    }
+
+    fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor {
+        matmul_ternary_packed(x, self, threads)
+    }
+
+    fn dequant(&self) -> HostTensor {
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            let g = self.row_scale(r);
+            for s in self.unpack_row(r) {
+                data.push(g * s as f32);
+            }
+        }
+        HostTensor::new(vec![self.rows, self.cols], data)
+    }
+
+    fn effective_bits_per_param(&self) -> f64 {
+        // 2-bit packed states (row padding included) + f16-accounted
+        // shard scales (§A.5).
+        self.bits_per_weight()
+            + 16.0 * self.scales.len() as f64
+                / (self.rows * self.cols).max(1) as f64
+    }
+
+    fn label(&self) -> String {
+        "ternary".into()
+    }
+}
+
+impl LinearFormat for QuantPacked {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn in_features(&self) -> usize {
+        self.cols
+    }
+
+    fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor {
+        matmul_quant_packed(x, self, threads)
+    }
+
+    fn dequant(&self) -> HostTensor {
+        QuantPacked::dequant(self)
+    }
+
+    fn effective_bits_per_param(&self) -> f64 {
+        self.effective_bits()
+    }
+
+    fn label(&self) -> String {
+        format!("q{}g{}", self.bits, self.group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantTensor;
+    use crate::ternary::TernaryTensor;
+
+    fn formats(rows: usize, cols: usize, seed: u64)
+               -> (DenseF32, PackedMatrix, QuantPacked) {
+        let w = HostTensor::randn(vec![rows, cols], 0.05, seed);
+        let pm = PackedMatrix::from_ternary(&TernaryTensor::from_latent(&w, 1));
+        let qp = QuantPacked::from_quant(&QuantTensor::quantize_rtn(&w, 4, 32));
+        (DenseF32 { w }, pm, qp)
+    }
+
+    #[test]
+    fn all_formats_agree_with_their_own_dequant() {
+        // The trait contract: matmul_batch == matmul_dense(x, dequant()).
+        let (d, pm, qp) = formats(24, 36, 3);
+        let x = HostTensor::randn(vec![4, 36], 1.0, 4);
+        let fmts: [&dyn LinearFormat; 3] = [&d, &pm, &qp];
+        for f in fmts {
+            assert_eq!(f.out_features(), 24);
+            assert_eq!(f.in_features(), 36);
+            let got = f.matmul_batch(&x, 2);
+            let want = matmul_dense(&x, &f.dequant());
+            assert_eq!(got.shape, vec![4, 24]);
+            for (a, b) in got.data.iter().zip(want.data.iter()) {
+                assert!((a - b).abs() < 1e-3, "{}: {a} vs {b}", f.label());
+            }
+        }
+    }
+
+    #[test]
+    fn bit_budgets_order_across_families() {
+        // The Table 4 ordering, now queryable through one API.
+        let (d, pm, qp) = formats(32, 64, 5);
+        assert!(d.effective_bits_per_param()
+                    > qp.effective_bits_per_param());
+        assert!(qp.effective_bits_per_param()
+                    > pm.effective_bits_per_param());
+        assert_eq!(d.label(), "fp32");
+        assert_eq!(pm.label(), "ternary");
+        assert_eq!(qp.label(), "q4g32");
+    }
+
+    #[test]
+    fn ternary_dequant_matches_tensor_dequant() {
+        let w = HostTensor::randn(vec![10, 14], 0.05, 6);
+        let t = TernaryTensor::from_latent(&w, 2);
+        let pm = PackedMatrix::from_ternary(&t);
+        assert_eq!(LinearFormat::dequant(&pm).data, t.dequant().data);
+    }
+}

@@ -1,0 +1,312 @@
+//! Blocked, multi-threaded k-bit group-quantized matmul — the QuantLM
+//! serving kernel.
+//!
+//! [`QuantPacked`] is the serving twin of [`crate::quant::QuantTensor`]:
+//! the same signed k-bit values, but stored as a *row-aligned*
+//! [`pack_kbit`] bitstream (every row starts on a byte boundary) so the
+//! kernel can stream per-row byte ranges and worker threads can
+//! partition rows without bit-offset bookkeeping across rows.
+//!
+//! [`matmul_quant_packed`] follows the same tiling and numerical
+//! contract as the ternary serving kernel
+//! ([`crate::ternary::matmul_ternary_packed`]):
+//!
+//! - weights walk in [`ROW_BLOCK`]-row blocks by column panels of
+//!   [`COL_BLOCK_VALS`] values (rounded to a multiple of the quant
+//!   group so scale groups never straddle a panel), with the x panel
+//!   transposed once per (row-block, panel) so each decoded weight
+//!   updates all batch lanes with one broadcast multiply-add;
+//! - zero quant values are skipped (the symmetric grid's zero level);
+//! - per output element, accumulation runs group-by-group in column
+//!   order into a group accumulator, then folds in via one multiply by
+//!   the group scale — an order fixed by `k` alone, so results are
+//!   bitwise invariant to both the batch size and the thread count
+//!   (`tests/kernel_equivalence.rs` locks this in);
+//! - rows are partitioned across `std::thread` workers with disjoint
+//!   transposed output slabs, capped by [`crate::ternary::matmul::MIN_WORK_PER_THREAD`].
+
+use crate::quant::{pack_kbit, QuantTensor};
+use crate::runtime::HostTensor;
+use crate::ternary::matmul::{blocked_rows_driver, COL_BLOCK_TRITS, ROW_BLOCK};
+
+/// Values per column panel — the quant analog of [`COL_BLOCK_TRITS`]
+/// (same L1-residency sizing; the effective panel is rounded to a
+/// multiple of the group so a scale group never straddles panels).
+pub const COL_BLOCK_VALS: usize = COL_BLOCK_TRITS;
+
+/// A row-aligned k-bit group-quantized weight matrix: the storage the
+/// QuantLM serving path streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantPacked {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    /// Caller-requested group size (ragged final group per row when
+    /// `cols % group != 0`; recorded verbatim, see `quant/`).
+    pub group: usize,
+    /// `(cols * bits).div_ceil(8)` — each row's byte footprint.
+    pub bytes_per_row: usize,
+    /// `rows * bytes_per_row` bytes; row `r`'s bitstream is
+    /// `bytes[r*bytes_per_row..(r+1)*bytes_per_row]`, values packed
+    /// LSB-first exactly as [`pack_kbit`] emits them.
+    pub bytes: Vec<u8>,
+    /// One scale per (row, group): rows * cols.div_ceil(group).
+    pub scales: Vec<f32>,
+}
+
+impl QuantPacked {
+    /// Re-pack a [`QuantTensor`] (RTN or GPTQ output) row-aligned for
+    /// the serving kernel.
+    pub fn from_quant(t: &QuantTensor) -> Self {
+        assert!((2..=8).contains(&t.bits), "serving supports 2..=8 bits");
+        let bytes_per_row = (t.cols * t.bits as usize).div_ceil(8);
+        let mut bytes = Vec::with_capacity(t.rows * bytes_per_row);
+        for r in 0..t.rows {
+            let row = &t.q[r * t.cols..(r + 1) * t.cols];
+            let packed = pack_kbit(row, t.bits);
+            debug_assert_eq!(packed.len(), bytes_per_row);
+            bytes.extend_from_slice(&packed);
+        }
+        QuantPacked {
+            rows: t.rows,
+            cols: t.cols,
+            bits: t.bits,
+            group: t.group,
+            bytes_per_row,
+            bytes,
+            scales: t.scales.clone(),
+        }
+    }
+
+    /// Scale groups per row (uniform width, ragged final group).
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        QuantTensor::n_groups(self.cols, self.group)
+    }
+
+    /// Decode `len` values of row `r` starting at value index `start`
+    /// into `out[..len]`. A value spans at most two bytes (bits <= 8),
+    /// read LSB-first to mirror [`pack_kbit`].
+    pub fn decode_row_range(&self, r: usize, start: usize, len: usize,
+                            out: &mut [i8]) {
+        debug_assert!(start + len <= self.cols);
+        let bits = self.bits as usize;
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let mask = (1u32 << bits) - 1;
+        let row = &self.bytes[r * self.bytes_per_row..(r + 1) * self.bytes_per_row];
+        let mut bitpos = start * bits;
+        for o in out[..len].iter_mut() {
+            let byte = bitpos / 8;
+            let shift = bitpos % 8;
+            let lo = (row[byte] as u32) >> shift;
+            let have = 8 - shift;
+            let v = if have >= bits {
+                lo & mask
+            } else {
+                (lo | ((row[byte + 1] as u32) << have)) & mask
+            };
+            *o = (v as i32 - qmax) as i8;
+            bitpos += bits;
+        }
+    }
+
+    /// Dequantize to f32 (the kernel-equivalence reference path).
+    pub fn dequant(&self) -> HostTensor {
+        let ng = self.n_groups();
+        let mut qrow = vec![0i8; self.cols];
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            self.decode_row_range(r, 0, self.cols, &mut qrow);
+            for (c, &qv) in qrow.iter().enumerate() {
+                data.push(qv as f32 * self.scales[r * ng + c / self.group]);
+            }
+        }
+        HostTensor::new(vec![self.rows, self.cols], data)
+    }
+
+    /// Effective bits per parameter with the paper's fp16-scale
+    /// accounting (§4.2) — honest under ragged groups.
+    pub fn effective_bits(&self) -> f64 {
+        self.bits as f64 + 16.0 * self.n_groups() as f64 / self.cols as f64
+    }
+}
+
+/// The blocked quant-decode kernel body for w-rows `[r0, r1)`.
+///
+/// `out_t` is the (rows, m)-transposed output slab for this row range,
+/// mirroring the ternary kernel. Per (row-block, panel) the x block is
+/// transposed into `(k-panel, m)` scratch; per row the panel's values
+/// are bitstream-decoded once into an i8 scratch, then accumulated
+/// group-by-group (group accumulator x group scale).
+fn quant_rows_kernel(w: &QuantPacked, x: &HostTensor,
+                     r0: usize, r1: usize, out_t: &mut [f32]) {
+    let (m, k) = x.dims2();
+    debug_assert_eq!(k, w.cols);
+    debug_assert_eq!(out_t.len(), (r1 - r0) * m);
+    // Effective group width never exceeds k (a wider caller group is a
+    // single ragged group); the panel is the largest multiple of the
+    // group near COL_BLOCK_VALS so groups never straddle panels.
+    let group = w.group.min(k).max(1);
+    let panel = if group >= COL_BLOCK_VALS {
+        group
+    } else {
+        (COL_BLOCK_VALS / group) * group
+    };
+    let ng = w.n_groups();
+    let mut x_t = vec![0.0f32; panel * m]; // (k-panel, m) scratch
+    let mut qbuf = vec![0i8; panel];
+    let mut gacc = vec![0.0f32; m];
+    for rb in (r0..r1).step_by(ROW_BLOCK) {
+        let rb_end = (rb + ROW_BLOCK).min(r1);
+        let mut kb = 0usize;
+        while kb < k {
+            let kb_end = (kb + panel).min(k);
+            let cb = kb_end - kb;
+            // Transpose the x panel once; reused by every row in the block.
+            for (c, col) in x_t.chunks_exact_mut(m).take(cb).enumerate() {
+                for (mi, v) in col.iter_mut().enumerate() {
+                    *v = x.data[mi * k + kb + c];
+                }
+            }
+            for r in rb..rb_end {
+                w.decode_row_range(r, kb, cb, &mut qbuf);
+                let acc = &mut out_t[(r - r0) * m..(r - r0 + 1) * m];
+                let mut c0 = 0usize;
+                while c0 < cb {
+                    let c1 = (c0 + group).min(cb);
+                    let g_global = (kb + c0) / group;
+                    for a in gacc.iter_mut() {
+                        *a = 0.0;
+                    }
+                    for (j, &qv) in qbuf[c0..c1].iter().enumerate() {
+                        if qv == 0 {
+                            continue; // zero level of the symmetric grid
+                        }
+                        let t = qv as f32;
+                        let xs = &x_t[(c0 + j) * m..(c0 + j + 1) * m];
+                        for (a, &xv) in gacc.iter_mut().zip(xs) {
+                            *a += t * xv;
+                        }
+                    }
+                    let s = w.scales[r * ng + g_global];
+                    for (a, &gv) in acc.iter_mut().zip(gacc.iter()) {
+                        *a += s * gv;
+                    }
+                    c0 = c1;
+                }
+            }
+            kb = kb_end;
+        }
+    }
+}
+
+/// Batched k-bit group-quantized matmul: y = x @ w_packed^T with
+/// per-group scales. x: (m, k), w: (n, k) packed -> (m, n).
+///
+/// Threading via the shared
+/// [`crate::ternary::matmul::blocked_rows_driver`] (identical
+/// partitioning and [`crate::ternary::matmul::MIN_WORK_PER_THREAD`] capping as the ternary
+/// kernel). Accumulation order per output element is fixed by `k`
+/// alone — independent of `threads` and `m` — so results are bitwise
+/// batch- and thread-invariant.
+pub fn matmul_quant_packed(x: &HostTensor, w: &QuantPacked,
+                           threads: usize) -> HostTensor {
+    let (m, k) = x.dims2();
+    assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
+    blocked_rows_driver(m, k, w.rows, threads,
+                        |r0, r1, slab| quant_rows_kernel(w, x, r0, r1, slab))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ternary::matmul_dense;
+
+    fn quantized(rows: usize, cols: usize, bits: u32, group: usize,
+                 seed: u64) -> (QuantTensor, QuantPacked) {
+        let w = HostTensor::randn(vec![rows, cols], 0.05, seed);
+        let qt = QuantTensor::quantize_rtn(&w, bits, group);
+        let qp = QuantPacked::from_quant(&qt);
+        (qt, qp)
+    }
+
+    #[test]
+    fn packed_dequant_matches_quant_tensor_bitwise() {
+        for (rows, cols, bits, group) in
+            [(8usize, 32usize, 4u32, 16usize), (5, 21, 3, 8), (3, 130, 4, 128)]
+        {
+            let (qt, qp) = quantized(rows, cols, bits, group, 7);
+            assert_eq!(qp.dequant().data, qt.dequant().data,
+                       "{rows}x{cols} b{bits} g{group}");
+        }
+    }
+
+    #[test]
+    fn decode_row_range_matches_full_unpack_at_any_offset() {
+        // Mid-row decode starts at arbitrary (non-byte-aligned) bit
+        // offsets; every (start, len) window must agree with the full
+        // row decode.
+        let (qt, qp) = quantized(3, 37, 3, 16, 9);
+        for r in 0..3 {
+            let full: Vec<i8> = qt.q[r * 37..(r + 1) * 37].to_vec();
+            let mut buf = vec![0i8; 37];
+            for start in 0..37 {
+                for len in [0usize, 1, 5, 37 - start] {
+                    qp.decode_row_range(r, start, len, &mut buf);
+                    assert_eq!(&buf[..len], &full[start..start + len],
+                               "row {r} start {start} len {len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matmul_matches_dequant_reference() {
+        for (rows, cols, bits, group) in [
+            (16usize, 32usize, 4u32, 16usize),
+            (33, 64, 3, 128), // single ragged group per row
+            (7, 130, 4, 128), // ragged final group
+            (ROW_BLOCK + 9, COL_BLOCK_VALS + 37, 3, 128), // spans tiles
+        ] {
+            let (qt, qp) = quantized(rows, cols, bits, group, 11);
+            let dq = qt.dequant();
+            for m in [1usize, 3, 8] {
+                let x = HostTensor::randn(vec![m, cols], 1.0, 13 + m as u64);
+                let want = matmul_dense(&x, &dq);
+                for threads in [1usize, 2, 5] {
+                    let got = matmul_quant_packed(&x, &qp, threads);
+                    assert_eq!(got.shape, vec![m, rows]);
+                    for (a, b) in got.data.iter().zip(want.data.iter()) {
+                        assert!((a - b).abs() < 1e-3,
+                                "{rows}x{cols} b{bits} g{group} m{m} \
+                                 t{threads}: {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matmul_is_batch_and_thread_invariant() {
+        let (_, qp) = quantized(40, 150, 4, 128, 17);
+        let xb = HostTensor::randn(vec![8, 150], 1.0, 18);
+        let reference = matmul_quant_packed(&xb, &qp, 1);
+        for threads in [2usize, 3, 8] {
+            let got = matmul_quant_packed(&xb, &qp, threads);
+            assert_eq!(got.data, reference.data, "threads={threads}");
+        }
+        for mi in 0..8 {
+            let x1 = HostTensor::stack_rows(&[xb.row(mi)]);
+            let solo = matmul_quant_packed(&x1, &qp, 4);
+            assert_eq!(solo.data, reference.row(mi), "lane {mi}");
+        }
+    }
+
+    #[test]
+    fn effective_bits_accounting() {
+        let (_, qp) = quantized(4, 128, 3, 128, 19);
+        assert!((qp.effective_bits() - 3.125).abs() < 1e-9);
+        let (_, ragged) = quantized(4, 130, 3, 128, 19);
+        assert!((ragged.effective_bits() - (3.0 + 32.0 / 130.0)).abs() < 1e-9);
+    }
+}

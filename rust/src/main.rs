@@ -10,7 +10,7 @@
 //!   analyze       scaling-law / entropy analysis
 //!   deploy        Table 4 / Fig 2 / Fig 21 analytics
 //!   generate      greedy text generation (Appendix H demo)
-//!   serve-bench   batched ternary decode throughput (serve engine)
+//!   serve-bench   cross-family batched decode throughput (serve engine)
 //!   bench-report  paper-style tables from a suite run
 
 use std::path::PathBuf;
@@ -36,7 +36,8 @@ commands:
   analyze       [--results runs/suite/suite_results.json] [--checkpoint x.spt]
   deploy        --output 4|2a|2b|21
   generate      --checkpoint x.spt --prompt 'one day'
-  serve-bench   --requests 32 --max-tokens 32 --batches 1,2,4,8
+  serve-bench   --family float,quant3,quant4,ternary --group 128
+                --requests 32 --max-tokens 32 --batches 1,2,4,8
                 --threads 1,2,4 --hidden 256 --glu 704 --layers 4
   bench-report  --results runs/suite/suite_results.json --experiment all
 
@@ -64,9 +65,16 @@ fn main() -> Result<()> {
             bench_report(&res, &args.get("experiment", "all"));
             Ok(())
         }
-        _ => {
+        "" => {
+            // Bare `spectra` is a help request.
             println!("{USAGE}");
             Ok(())
+        }
+        other => {
+            // A typo'd command must fail loudly: scripts and CI rely on
+            // a non-zero exit, not on someone reading the usage text.
+            eprintln!("{USAGE}");
+            anyhow::bail!("unknown command '{other}'");
         }
     }
 }
@@ -210,13 +218,15 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
     Ok(())
 }
 
-/// Benchmark the serve engine: tokens/sec of batched threaded ternary
-/// decode vs batch size and thread count, against the dense f32
-/// baseline and the single-thread scalar reference — the §2.1
-/// bandwidth win measured end-to-end through the scheduler.
+/// Benchmark the serve engine across storage families: one table of
+/// tokens/sec + effective bits/param per family (the paper's
+/// bits-vs-throughput story on the serving path), plus the ternary
+/// batch/thread sweep against the single-thread scalar reference and
+/// the analytic per-family decode roofline keyed by each model's
+/// measured bit rate.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use spectra::serve::{bench_requests, DecodeModel, LmDims, Scheduler,
-                         TernaryLm};
+    use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentLm,
+                         LmDims, Scheduler};
 
     let dims = LmDims {
         vocab: args.get_usize("vocab", 512),
@@ -225,6 +235,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         layers: args.get_usize("layers", 4),
     };
     let mp = args.get_usize("mp", 2);
+    if mp == 0 || dims.glu % mp != 0 || dims.hidden % mp != 0 {
+        anyhow::bail!("--mp {mp} must divide both --glu {} and --hidden {} \
+                       (ternary scale shards are per row range)",
+                      dims.glu, dims.hidden);
+    }
+    let group = args.get_usize("group", 128);
     let seed = args.get_u64("seed", 0);
     let n_req = args.get_usize("requests", 32);
     let max_new = args.get_usize("max-tokens", 32);
@@ -232,11 +248,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .filter_map(|b| b.parse().ok()).collect();
     let threads_list: Vec<usize> = args.get_list("threads", "1,2,4").iter()
         .filter_map(|t| t.parse().ok()).collect();
+    let families: Vec<FamilySpec> = args
+        .get_list("family", "float,quant3,quant4,ternary").iter()
+        .map(|f| FamilySpec::parse(f, group).ok_or_else(|| anyhow::anyhow!(
+            "unknown family '{f}' (float | quant<bits> | gptq<bits> | \
+             ternary)")))
+        .collect::<Result<_>>()?;
 
     println!("serve-bench: vocab {} hidden {} glu {} layers {} | \
-              {n_req} requests x {max_new} tokens",
+              {n_req} requests x {max_new} tokens | group {group}",
              dims.vocab, dims.hidden, dims.glu, dims.layers);
-    let (tlm, dlm) = TernaryLm::synthetic_pair(dims.clone(), mp, seed);
+    let latent = LatentLm::synthetic(dims.clone(), mp, seed);
 
     let run_once = |model: &dyn DecodeModel, batch: usize, threads: usize|
                    -> (f64, usize) {
@@ -251,45 +273,76 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         (toks as f64 / secs, sched.stats().batch_steps)
     };
 
-    let (scalar_tps, _) = run_once(&tlm, 1, 1);
-    println!("\n{:<10} {:>7} {:>14} {:>12} {:>10}",
-             "kernel", "batch", "threads", "tokens/s", "vs scalar");
-    println!("{:<10} {:>7} {:>14} {:>12.0} {:>10}",
-             "ternary", 1, 1, scalar_tps, "1.00x");
-    let mut best_b8 = 0.0f64;
-    for &threads in &threads_list {
-        for &batch in &batches {
-            if batch == 1 && threads == 1 {
-                continue;
-            }
-            let (tps, _) = run_once(&tlm, batch, threads);
-            if batch == 8 {
-                best_b8 = best_b8.max(tps);
-            }
-            println!("{:<10} {:>7} {:>14} {:>12.0} {:>9.2}x",
-                     "ternary", batch, threads, tps, tps / scalar_tps);
+    // Cross-family sweep: every family serves the *same* latent model
+    // on the same traffic at the largest batch/thread setting.
+    let fam_batch = batches.iter().copied().max().unwrap_or(8);
+    let fam_threads = threads_list.iter().copied().max().unwrap_or(1);
+    let mut rows: Vec<(String, f64, f64, usize)> = Vec::new();
+    let mut float_tps = None;
+    for spec in &families {
+        let model = latent.build(*spec)?;
+        let (tps, steps) = run_once(model.as_ref(), fam_batch, fam_threads);
+        if matches!(spec, FamilySpec::Float) {
+            float_tps = Some(tps);
         }
+        rows.push((spec.label(), model.effective_bits_per_param(), tps,
+                   steps));
     }
-    let dense_batch = batches.iter().copied().max().unwrap_or(8);
-    let (dense_tps, _) = run_once(&dlm, dense_batch, 1);
-    println!("{:<10} {:>7} {:>14} {:>12.0} {:>9.2}x  (f32 baseline)",
-             "dense", dense_batch, 1, dense_tps, dense_tps / scalar_tps);
-    if best_b8 > 0.0 {
-        println!("\nbatch-8 threaded ternary vs single-thread scalar: \
-                  {:.2}x (target >= 3x)", best_b8 / scalar_tps);
+    println!("\ncross-family @ batch {fam_batch}, {fam_threads} threads \
+              (identical latent weights)");
+    println!("{:<22} {:>10} {:>12} {:>7} {:>10}",
+             "family", "bits/param", "tokens/s", "steps", "vs float");
+    for (label, bits, tps, steps) in &rows {
+        let rel = float_tps
+            .map(|f| format!("{:.2}x", tps / f))
+            .unwrap_or_else(|| "-".into());
+        println!("{label:<22} {bits:>10.2} {tps:>12.0} {steps:>7} {rel:>10}");
     }
 
-    // Analytic cross-reference: the roofline this realizes at scale.
+    // Ternary batch/thread sweep vs the single-thread scalar reference.
+    if families.contains(&FamilySpec::Ternary) {
+        let tlm = latent.build_ternary();
+        let (scalar_tps, _) = run_once(&tlm, 1, 1);
+        println!("\n{:<10} {:>7} {:>14} {:>12} {:>10}",
+                 "kernel", "batch", "threads", "tokens/s", "vs scalar");
+        println!("{:<10} {:>7} {:>14} {:>12.0} {:>10}",
+                 "ternary", 1, 1, scalar_tps, "1.00x");
+        let mut best_b8 = 0.0f64;
+        for &threads in &threads_list {
+            for &batch in &batches {
+                if batch == 1 && threads == 1 {
+                    continue;
+                }
+                let (tps, _) = run_once(&tlm, batch, threads);
+                if batch == 8 {
+                    best_b8 = best_b8.max(tps);
+                }
+                println!("{:<10} {:>7} {:>14} {:>12.0} {:>9.2}x",
+                         "ternary", batch, threads, tps, tps / scalar_tps);
+            }
+        }
+        if best_b8 > 0.0 {
+            println!("\nbatch-8 threaded ternary vs single-thread scalar: \
+                      {:.2}x (target >= 3x)", best_b8 / scalar_tps);
+        }
+    }
+
+    // Analytic cross-reference: each family's decode roofline at scale,
+    // keyed by the bits/param measured on the serving model itself.
     if let Some(hw) = spectra::deploy::hardware::by_name("H100-SXM") {
-        use spectra::deploy::{batched_speedup_vs_fp16, saturation_batch,
-                              SizeFamily};
-        println!("\nroofline @7B on {}: ternary saturates at batch {:.0}; \
-                  speedup vs fp16 = {:.1}x (b=1), {:.1}x (b=8), {:.1}x (b=256)",
-                 hw.name,
-                 saturation_batch(7e9, SizeFamily::Ternary, hw),
-                 batched_speedup_vs_fp16(7e9, SizeFamily::Ternary, hw, 1.0),
-                 batched_speedup_vs_fp16(7e9, SizeFamily::Ternary, hw, 8.0),
-                 batched_speedup_vs_fp16(7e9, SizeFamily::Ternary, hw, 256.0));
+        use spectra::deploy::{batched_speedup_vs_fp16_bits,
+                              saturation_batch_bits};
+        println!("\nroofline @7B on {} (speedup vs fp16 by measured \
+                  bits/param):", hw.name);
+        for (label, bits, _, _) in &rows {
+            println!("  {label:<22} {bits:>6.2} bits -> {:>5.1}x (b=1) \
+                      {:>5.1}x (b=8) {:>5.1}x (b=256); saturates at \
+                      batch {:.0}",
+                     batched_speedup_vs_fp16_bits(7e9, *bits, hw, 1.0),
+                     batched_speedup_vs_fp16_bits(7e9, *bits, hw, 8.0),
+                     batched_speedup_vs_fp16_bits(7e9, *bits, hw, 256.0),
+                     saturation_batch_bits(7e9, *bits, hw));
+        }
     }
     Ok(())
 }

@@ -4,6 +4,14 @@
 //! matching the paper's GPTQ configuration: effective bit rates are
 //! bits + 16/group (one fp16 scale per group), e.g. 3.25 / 4.25 bits at
 //! group 128 — the numbers behind Table 4's QuantLM rows.
+//!
+//! Groups are *ragged*: a matrix whose `cols` is not a multiple of
+//! `group` gets a short final group (and a matrix narrower than `group`
+//! gets a single group of `cols`). The caller-requested `group` is
+//! recorded verbatim, and [`QuantTensor::effective_bits`] is computed
+//! from the scales actually stored, so the reported bit rate is always
+//! the true one — narrow layers simply pay more scale overhead per
+//! parameter instead of silently re-labelling their group size.
 
 
 use crate::runtime::HostTensor;
@@ -14,10 +22,12 @@ pub struct QuantTensor {
     pub rows: usize,
     pub cols: usize,
     pub bits: u32,
+    /// Caller-requested group size (recorded verbatim; the final group
+    /// of a row is ragged when `cols % group != 0`).
     pub group: usize,
     /// Row-major signed k-bit values stored widened to i8.
     pub q: Vec<i8>,
-    /// One scale per (row, group): rows * (cols / group) values.
+    /// One scale per (row, group): rows * cols.div_ceil(group) values.
     pub scales: Vec<f32>,
 }
 
@@ -26,20 +36,25 @@ impl QuantTensor {
         (1i32 << (bits - 1)) as f32 - 1.0
     }
 
+    /// Scale groups per row: uniform `group`-wide groups plus a ragged
+    /// final group when `group` does not divide `cols`.
+    pub fn n_groups(cols: usize, group: usize) -> usize {
+        assert!(group >= 1, "group size must be >= 1");
+        cols.div_ceil(group)
+    }
+
     /// Round-to-nearest symmetric group quantization (the non-GPTQ
     /// baseline; GPTQ improves on this using the Hessian — see gptq/).
     pub fn quantize_rtn(w: &HostTensor, bits: u32, group: usize) -> Self {
         let (rows, cols) = w.dims2();
-        let group = group.min(cols);
-        assert_eq!(cols % group, 0, "cols {cols} % group {group} != 0");
-        let ng = cols / group;
+        let ng = Self::n_groups(cols, group);
         let qmax = Self::qmax(bits);
         let mut q = Vec::with_capacity(rows * cols);
         let mut scales = Vec::with_capacity(rows * ng);
         for r in 0..rows {
             let row = w.row(r);
             for g in 0..ng {
-                let seg = &row[g * group..(g + 1) * group];
+                let seg = &row[g * group..((g + 1) * group).min(cols)];
                 let absmax = seg.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
                 let scale = (absmax / qmax).max(1e-5);
                 scales.push(scale);
@@ -52,15 +67,12 @@ impl QuantTensor {
     }
 
     pub fn dequant(&self) -> HostTensor {
-        let ng = self.cols / self.group;
+        let ng = Self::n_groups(self.cols, self.group);
         let mut data = Vec::with_capacity(self.q.len());
         for r in 0..self.rows {
-            for g in 0..ng {
-                let scale = self.scales[r * ng + g];
-                let base = r * self.cols + g * self.group;
-                for i in 0..self.group {
-                    data.push(self.q[base + i] as f32 * scale);
-                }
+            for c in 0..self.cols {
+                let scale = self.scales[r * ng + c / self.group];
+                data.push(self.q[r * self.cols + c] as f32 * scale);
             }
         }
         HostTensor::new(vec![self.rows, self.cols], data)
@@ -68,13 +80,16 @@ impl QuantTensor {
 
     /// Scale of (row, col)'s group.
     pub fn scale_at(&self, r: usize, c: usize) -> f32 {
-        self.scales[r * (self.cols / self.group) + c / self.group]
+        self.scales[r * Self::n_groups(self.cols, self.group) + c / self.group]
     }
 
     /// Effective bits per parameter including the fp16 group scales —
-    /// the paper's 3.25/4.25 accounting (§4.2).
+    /// the paper's 3.25/4.25 accounting (§4.2). Computed from the
+    /// scales actually stored, so ragged groups (cols % group != 0 or
+    /// cols < group) report their true overhead.
     pub fn effective_bits(&self) -> f64 {
-        self.bits as f64 + 16.0 / self.group as f64
+        let ng = Self::n_groups(self.cols, self.group);
+        self.bits as f64 + 16.0 * ng as f64 / self.cols as f64
     }
 
     /// Mean squared reconstruction error vs the original weights.
@@ -86,15 +101,21 @@ impl QuantTensor {
     }
 }
 
-/// Pack widened i8 k-bit values into a dense bitstream (storage size
-/// accounting + the format a real deployment kernel would stream).
+/// Pack widened i8 k-bit values into a dense bitstream — the storage
+/// format [`crate::linear::QuantPacked`]'s serving kernel streams.
+///
+/// Values must lie in the symmetric range `[-qmax, qmax]`; this is a
+/// hard `assert!` (not `debug_assert!`) because an out-of-range value
+/// would silently corrupt *neighbouring* values in the bitstream, and
+/// release builds are exactly where packed weights get served from.
 pub fn pack_kbit(q: &[i8], bits: u32) -> Vec<u8> {
     let qmax = (1i32 << (bits - 1)) - 1;
     let mut out = Vec::with_capacity((q.len() * bits as usize).div_ceil(8));
     let mut acc: u64 = 0;
     let mut nbits = 0u32;
     for &v in q {
-        debug_assert!((v as i32) >= -qmax && (v as i32) <= qmax);
+        assert!((v as i32) >= -qmax && (v as i32) <= qmax,
+                "value {v} out of symmetric {bits}-bit range [-{qmax}, {qmax}]");
         let unsigned = (v as i32 + qmax) as u64; // bias to unsigned
         acc |= unsigned << nbits;
         nbits += bits;
@@ -187,5 +208,71 @@ mod tests {
         let vals = vec![0i8; 1024];
         assert_eq!(pack_kbit(&vals, 4).len(), 512);
         assert_eq!(pack_kbit(&vals, 3).len(), 384);
+    }
+
+    // Satellite: exhaustive roundtrip over bits 2..=8 x lengths 0..=257
+    // (mirroring the ternary pack suite) — every partial-final-byte
+    // phase of every bitwidth.
+    #[test]
+    fn kbit_pack_roundtrip_every_bits_and_length() {
+        let mut rng = crate::runtime::SplitMix64::new(41);
+        for bits in 2u32..=8 {
+            let qmax = (1i32 << (bits - 1)) - 1;
+            for len in 0..=257usize {
+                let vals: Vec<i8> = (0..len)
+                    .map(|_| (rng.below((2 * qmax + 1) as usize) as i32 - qmax)
+                        as i8)
+                    .collect();
+                let packed = pack_kbit(&vals, bits);
+                assert_eq!(packed.len(), (len * bits as usize).div_ceil(8),
+                           "bits {bits} len {len}: packed size");
+                assert_eq!(unpack_kbit(&packed, bits, len), vals,
+                           "bits {bits} len {len}");
+            }
+        }
+    }
+
+    // Satellite: the range check must hold in release builds too — an
+    // out-of-range value would corrupt neighbouring bitstream values.
+    #[test]
+    #[should_panic(expected = "out of symmetric")]
+    fn pack_kbit_rejects_out_of_range_values() {
+        pack_kbit(&[0i8, 4, 0], 3); // 3-bit qmax is 3
+    }
+
+    #[test]
+    #[should_panic(expected = "out of symmetric")]
+    fn pack_kbit_rejects_asymmetric_min() {
+        pack_kbit(&[-8i8], 4); // -2^(b-1) is outside the symmetric range
+    }
+
+    // Satellite: a group wider than the matrix is recorded verbatim and
+    // effective_bits() reports the rate actually achieved (one scale
+    // over `cols` params), not the rate `group` would suggest.
+    #[test]
+    fn narrow_matrix_records_caller_group_with_honest_bits() {
+        let w = HostTensor::randn(vec![8, 32], 0.1, 4);
+        let q = QuantTensor::quantize_rtn(&w, 4, 128);
+        assert_eq!(q.group, 128, "caller-visible group must be preserved");
+        assert_eq!(q.scales.len(), 8, "one ragged group per row");
+        assert!((q.effective_bits() - (4.0 + 16.0 / 32.0)).abs() < 1e-9,
+                "true rate is bits + 16/cols, got {}", q.effective_bits());
+    }
+
+    #[test]
+    fn ragged_final_group_roundtrips_within_half_step() {
+        // cols = 130, group 128: a 2-wide ragged final group per row.
+        let w = HostTensor::randn(vec![4, 130], 0.1, 5);
+        let q = QuantTensor::quantize_rtn(&w, 3, 128);
+        assert_eq!(q.scales.len(), 4 * 2);
+        assert!((q.effective_bits() - (3.0 + 32.0 / 130.0)).abs() < 1e-9);
+        let dq = q.dequant();
+        for r in 0..4 {
+            for c in 0..130 {
+                let step = q.scale_at(r, c);
+                assert!((w.at2(r, c) - dq.at2(r, c)).abs() <= 0.5 * step + 1e-6,
+                        "({r},{c})");
+            }
+        }
     }
 }

@@ -1,38 +1,50 @@
-//! Batched ternary decode serving: the ROADMAP's "heavy traffic" path.
+//! Family-complete batched decode serving: the ROADMAP's "heavy
+//! traffic" path across every storage family the paper compares.
 //!
-//! The paper's §2.1 systems claim — ternary weights turn memory-bound
-//! autoregressive decoding into a bandwidth win — only materializes
-//! under batched, blocked execution (cf. Ma et al. 2409.17870,
-//! TernaryLLM 2406.07177). This subsystem builds that layer on CPU:
+//! The paper's headline comparison — FloatLM vs QuantLM vs TriLM at
+//! matched bit budgets (§4.2, Table 4, Fig. 2) — and its §2.1 systems
+//! claim (compressed weights turn memory-bound autoregressive decoding
+//! into a bandwidth win, cf. Ma et al. 2409.17870, TernaryLLM
+//! 2406.07177) both materialize here as one serving engine:
 //!
-//! - [`model`] — [`model::DecodeModel`]s executed per batched step:
-//!   [`model::TernaryLm`] over packed 2-bit weights (the hot path) and
-//!   its weight-identical dequantized twin [`model::DenseLm`] (the
-//!   f32-storage baseline).
+//! - [`model`] — the family-generic [`model::SpectraLm`]`<L:`
+//!   [`crate::linear::LinearFormat`]`>`: the same gated-MLP decode math
+//!   over dense f32 ([`model::DenseLm`]), k-bit group-quantized
+//!   bitstreams ([`model::QuantLm`], RTN or GPTQ), or packed 2-bit
+//!   ternary ([`model::TernaryLm`]). [`model::LatentLm`] holds the
+//!   family-agnostic f32 weights (synthetic or checkpoint) and realizes
+//!   any [`model::FamilySpec`] from them, so every family serves the
+//!   *same* model in a different storage format.
 //! - [`scheduler`] — [`scheduler::Scheduler`]: admits N concurrent
 //!   [`scheduler::GenRequest`]s, groups the live lanes into one
 //!   (batch x hidden) kernel step, samples per lane (greedy / top-k),
 //!   and retires finished sequences with mid-flight refill
-//!   (continuous batching).
+//!   (continuous batching). It drives any [`model::DecodeModel`],
+//!   family-blind.
 //!
-//! Kernel tiling (see `ternary::matmul`): weights are walked in
-//! [`crate::ternary::matmul::ROW_BLOCK`]-row blocks by
-//! [`crate::ternary::matmul::COL_BLOCK_TRITS`]-trit column panels with
-//! the x panel transposed once per block (L1-resident at batch 8), and
-//! w-rows are partitioned across `std::thread` workers. Accumulation
-//! order is batch- and thread-invariant, which is what makes serving
-//! deterministic: the same request decodes to the same tokens at any
-//! batch size (`tests/serve_determinism.rs`).
+//! Kernel tiling (see `ternary::matmul` and `linear::qmatmul`): weights
+//! walk in [`crate::ternary::matmul::ROW_BLOCK`]-row blocks by
+//! [`crate::ternary::matmul::COL_BLOCK_TRITS`]-element column panels
+//! with the x panel transposed once per block (L1-resident at batch 8),
+//! and w-rows are partitioned across `std::thread` workers. Every
+//! format keeps accumulation order batch- and thread-invariant, which
+//! is what makes serving deterministic: the same request decodes to the
+//! same tokens at any batch size, in any family
+//! (`tests/serve_determinism.rs`).
 //!
-//! Throughput: `benches/serve_throughput.rs` and the `spectra
-//! serve-bench` subcommand report tokens/sec vs batch size and thread
-//! count against the dense baseline; `deploy::decode_tokens_per_sec`
-//! gives the analytic roofline the measurements are compared to.
+//! Throughput: `benches/serve_throughput.rs` and `spectra serve-bench
+//! --family float,quant3,quant4,ternary` report tokens/sec and
+//! effective bits/param per family in one table — the paper's
+//! bits-vs-throughput story measured on the serving path — and
+//! `deploy::decode_tokens_per_sec_bits` gives the analytic roofline
+//! keyed by each model's [`model::DecodeModel::effective_bits_per_param`].
 
 pub mod model;
 pub mod scheduler;
 
-pub use model::{DecodeModel, DenseLm, LmDims, TernaryLm};
+pub use model::{DecodeModel, DenseLm, FamilySpec, LatentBlock, LatentLm,
+                LmDims, QuantLm, QuantMethod, SpectraBlock, SpectraLm,
+                TernaryLm};
 pub use scheduler::{Completion, GenRequest, Sampling, Scheduler, ServeStats};
 
 /// Deterministic corpus-shaped bench/demo traffic: prompt strings from

@@ -1,28 +1,37 @@
-//! CPU decode models driven by the serve scheduler.
+//! Family-generic CPU decode models driven by the serve scheduler.
 //!
 //! The PJRT transformer graphs remain the fidelity path for training
 //! and evaluation; serving instead runs a compact gated-MLP language
-//! model directly on the packed ternary kernels, because that is the
-//! layer the paper's §2.1 bandwidth argument lives in: per decode step
-//! every linear is one batched (batch x in) @ (out x in)^T against
-//! 2-bit weights. Long-range context is carried by a per-lane
+//! model directly on packed CPU kernels, because that is the layer the
+//! paper's §2.1 bandwidth argument lives in: per decode step every
+//! linear is one batched (batch x in) @ (out x in)^T against
+//! compressed weights. Long-range context is carried by a per-lane
 //! exponential state (updated after each step) instead of a KV cache,
 //! which keeps every lane's computation independent of its batch
 //! neighbours — the property the scheduler's determinism guarantee
 //! (batch-1 == batch-8 token streams) is built on.
 //!
-//! Two weight-identical implementations exist so benches and tests can
-//! compare storage formats, not architectures:
+//! One model, every storage family: [`SpectraLm<L>`] is generic over
+//! [`LinearFormat`], so the same decode math serves
 //!
-//! - [`TernaryLm`]: packed 2-bit weights through
-//!   [`matmul_ternary_packed`] (the serving hot path).
-//! - [`DenseLm`]: the *dequantized* f32 twin through [`matmul_dense`]
-//!   (the FloatLM-storage baseline; identical math up to fp rounding).
+//! - [`DenseLm`] = `SpectraLm<DenseF32>` — f32 rows (FloatLM storage),
+//! - [`QuantLm`] = `SpectraLm<QuantPacked>` — k-bit group-quantized
+//!   bitstreams (QuantLM storage, RTN or GPTQ),
+//! - [`TernaryLm`] = `SpectraLm<PackedMatrix>` — packed 2-bit trits
+//!   (TriLM storage, the original hot path).
+//!
+//! [`LatentLm`] holds the family-agnostic f32 weights (synthetic or
+//! from a checkpoint) and realizes any [`FamilySpec`] from them, so
+//! cross-family benches compare storage formats of the *same* model —
+//! the serving analog of the paper's matched-bit-budget comparison
+//! (§4.2, Table 4).
 
 use crate::checkpoint::Checkpoint;
-use crate::runtime::HostTensor;
-use crate::ternary::{matmul_dense, matmul_ternary_packed, PackedMatrix,
-                     TernaryTensor};
+use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
+use crate::linear::{DenseF32, LinearFormat, QuantPacked};
+use crate::quant::QuantTensor;
+use crate::runtime::{HostTensor, SplitMix64};
+use crate::ternary::{matmul_dense, PackedMatrix, TernaryTensor};
 use crate::Result;
 
 /// Architecture sizes of a decode model.
@@ -39,6 +48,12 @@ pub const STATE_DECAY: f32 = 0.5;
 
 const RMS_EPS: f32 = 1e-6;
 
+/// Serve-side GPTQ calibration traffic: lanes x steps of seeded tokens
+/// driven through the f32 latent weights to accumulate per-linear
+/// input Hessians.
+const CALIB_LANES: usize = 8;
+const CALIB_STEPS: usize = 24;
+
 /// A model the scheduler can drive: one batched decode step at a time.
 pub trait DecodeModel {
     fn dims(&self) -> &LmDims;
@@ -52,42 +67,47 @@ pub trait DecodeModel {
     /// request decodes identically at any batch size.
     fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
                   threads: usize) -> HostTensor;
+
+    /// Storage-format label of the linears (e.g. "fp32", "q4g128",
+    /// "ternary") — serving telemetry for the cross-family table.
+    fn family_label(&self) -> String;
+
+    /// Params-weighted effective bits per linear-weight parameter
+    /// (embeddings excluded; they stay float per §2.1). Keys the
+    /// deploy roofline ([`crate::deploy::decode_tokens_per_sec_bits`]).
+    fn effective_bits_per_param(&self) -> f64;
 }
 
-/// One gated-MLP residual block, packed ternary weights.
-pub struct TernaryBlock {
+/// One gated-MLP residual block over any linear storage format.
+pub struct SpectraBlock<L> {
     /// (glu, hidden)
-    pub gate: PackedMatrix,
+    pub gate: L,
     /// (glu, hidden)
-    pub up: PackedMatrix,
+    pub up: L,
     /// (hidden, glu)
-    pub down: PackedMatrix,
+    pub down: L,
 }
 
-/// The packed-ternary serving model. Embeddings stay f32 (the paper
-/// keeps embeddings in halfprec; §2.1).
-pub struct TernaryLm {
+/// The family-generic serving model. Embeddings stay f32 (the paper
+/// keeps embeddings in halfprec; §2.1); every linear is an `L`.
+pub struct SpectraLm<L: LinearFormat> {
     pub dims: LmDims,
     /// (vocab, hidden) f32 input embeddings.
     pub embed: HostTensor,
-    pub blocks: Vec<TernaryBlock>,
-    /// (vocab, hidden) packed output head.
-    pub head: PackedMatrix,
+    pub blocks: Vec<SpectraBlock<L>>,
+    /// (vocab, hidden) output head.
+    pub head: L,
 }
 
-/// The dequantized-f32 twin of [`TernaryLm`] (identical weights).
-pub struct DenseLm {
-    pub dims: LmDims,
-    pub embed: HostTensor,
-    pub blocks: Vec<DenseBlock>,
-    pub head: HostTensor,
-}
+/// TriLM storage: packed 2-bit trits ([`crate::ternary::matmul_ternary_packed`]).
+pub type TernaryLm = SpectraLm<PackedMatrix>;
 
-pub struct DenseBlock {
-    pub gate: HostTensor,
-    pub up: HostTensor,
-    pub down: HostTensor,
-}
+/// FloatLM storage: dense f32 rows.
+pub type DenseLm = SpectraLm<DenseF32>;
+
+/// QuantLM storage: k-bit group-quantized bitstreams
+/// ([`crate::linear::matmul_quant_packed`]).
+pub type QuantLm = SpectraLm<QuantPacked>;
 
 #[inline]
 fn silu(v: f32) -> f32 {
@@ -137,7 +157,7 @@ fn update_states(states: &mut [&mut [f32]], x: &HostTensor) {
     }
 }
 
-impl DecodeModel for TernaryLm {
+impl<L: LinearFormat> DecodeModel for SpectraLm<L> {
     fn dims(&self) -> &LmDims {
         &self.dims
     }
@@ -147,107 +167,162 @@ impl DecodeModel for TernaryLm {
         let mut x = gather_input(&self.embed, states, tokens);
         for blk in &self.blocks {
             let y = rmsnorm(&x);
-            let g = matmul_ternary_packed(&y, &blk.gate, threads);
-            let u = matmul_ternary_packed(&y, &blk.up, threads);
+            let g = blk.gate.matmul_batch(&y, threads);
+            let u = blk.up.matmul_batch(&y, threads);
             let mut a = g;
             for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
                 *av = silu(*av) * uv;
             }
-            let d = matmul_ternary_packed(&a, &blk.down, threads);
+            let d = blk.down.matmul_batch(&a, threads);
             for (xv, &dv) in x.data.iter_mut().zip(d.data.iter()) {
                 *xv += dv;
             }
         }
         let y = rmsnorm(&x);
         update_states(states, &x);
-        matmul_ternary_packed(&y, &self.head, threads)
-    }
-}
-
-impl DecodeModel for DenseLm {
-    fn dims(&self) -> &LmDims {
-        &self.dims
+        self.head.matmul_batch(&y, threads)
     }
 
-    fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
-                  _threads: usize) -> HostTensor {
-        let mut x = gather_input(&self.embed, states, tokens);
-        for blk in &self.blocks {
-            let y = rmsnorm(&x);
-            let g = matmul_dense(&y, &blk.gate);
-            let u = matmul_dense(&y, &blk.up);
-            let mut a = g;
-            for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
-                *av = silu(*av) * uv;
-            }
-            let d = matmul_dense(&a, &blk.down);
-            for (xv, &dv) in x.data.iter_mut().zip(d.data.iter()) {
-                *xv += dv;
-            }
+    fn family_label(&self) -> String {
+        self.head.label()
+    }
+
+    fn effective_bits_per_param(&self) -> f64 {
+        let mut bits = 0.0f64;
+        let mut params = 0.0f64;
+        for l in self.linears() {
+            let p = (l.out_features() * l.in_features()) as f64;
+            bits += l.effective_bits_per_param() * p;
+            params += p;
         }
-        let y = rmsnorm(&x);
-        update_states(states, &x);
-        matmul_dense(&y, &self.head)
+        bits / params.max(1.0)
     }
 }
 
-impl TernaryLm {
+impl<L: LinearFormat> SpectraLm<L> {
     /// Fresh per-lane context state.
     pub fn zero_state(&self) -> Vec<f32> {
         vec![0.0; self.dims.hidden]
     }
 
-    /// Seeded random weights, ternarized with `mp` scale shards —
-    /// plus the dequantized f32 twin holding *identical* weights, so
-    /// benches compare storage formats and tests check equivalence.
-    pub fn synthetic_pair(dims: LmDims, mp: usize, seed: u64)
-                          -> (TernaryLm, DenseLm) {
+    /// Every linear in the model (blocks then head).
+    pub fn linears(&self) -> Vec<&L> {
+        let mut out = Vec::with_capacity(3 * self.blocks.len() + 1);
+        for b in &self.blocks {
+            out.push(&b.gate);
+            out.push(&b.up);
+            out.push(&b.down);
+        }
+        out.push(&self.head);
+        out
+    }
+}
+
+/// How quant-family weights are produced from the latent f32 weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMethod {
+    /// Round-to-nearest group quantization.
+    Rtn,
+    /// GPTQ with serve-side synthetic calibration (Hessians accumulated
+    /// by driving the latent f32 model on seeded token traffic).
+    Gptq,
+}
+
+/// A serving family at a bit budget — the §4.2 axis, executable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FamilySpec {
+    Float,
+    Quant { bits: u32, group: usize, method: QuantMethod },
+    Ternary,
+}
+
+impl FamilySpec {
+    /// Parse a CLI family token: `float` | `ternary` | `quant<bits>` |
+    /// `gptq<bits>` (bits 2..=8). `group` applies to the quant forms.
+    pub fn parse(s: &str, group: usize) -> Option<FamilySpec> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "float" | "fp32" | "dense" => return Some(FamilySpec::Float),
+            "ternary" | "trilm" => return Some(FamilySpec::Ternary),
+            _ => {}
+        }
+        for (prefix, method) in [("quant", QuantMethod::Rtn),
+                                 ("rtn", QuantMethod::Rtn),
+                                 ("gptq", QuantMethod::Gptq)] {
+            if let Some(rest) = s.strip_prefix(prefix) {
+                if let Ok(bits) = rest.parse::<u32>() {
+                    if (2..=8).contains(&bits) {
+                        return Some(FamilySpec::Quant { bits, group, method });
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Paper-style family name for tables.
+    pub fn label(&self) -> String {
+        match *self {
+            FamilySpec::Float => "FloatLM".into(),
+            FamilySpec::Ternary => "TriLM".into(),
+            FamilySpec::Quant { bits, method: QuantMethod::Rtn, .. } => {
+                format!("QuantLM {bits}-bit")
+            }
+            FamilySpec::Quant { bits, method: QuantMethod::Gptq, .. } => {
+                format!("QuantLM {bits}-bit (GPTQ)")
+            }
+        }
+    }
+}
+
+/// One block of family-agnostic latent f32 weights.
+pub struct LatentBlock {
+    pub gate: HostTensor,
+    pub up: HostTensor,
+    pub down: HostTensor,
+}
+
+/// Family-agnostic latent weights: the single source every serving
+/// family is realized from (checkpoint-trained or synthetic), so
+/// cross-family comparisons are between storage formats of the same
+/// model, never between different models.
+pub struct LatentLm {
+    pub dims: LmDims,
+    /// (vocab, hidden) f32 embeddings (stay float in every family).
+    pub embed: HostTensor,
+    pub blocks: Vec<LatentBlock>,
+    /// (vocab, hidden) latent output head.
+    pub head: HostTensor,
+    /// Ternary scale shards per block matrix (§A.5); head uses 1.
+    pub mp: usize,
+}
+
+impl LatentLm {
+    /// Seeded random latent weights (the synthetic bench/test model).
+    pub fn synthetic(dims: LmDims, mp: usize, seed: u64) -> LatentLm {
         let embed = HostTensor::randn(vec![dims.vocab, dims.hidden], 0.5,
                                       seed ^ 0xE3BED);
         let mut blocks = Vec::with_capacity(dims.layers);
-        let mut dense_blocks = Vec::with_capacity(dims.layers);
         for l in 0..dims.layers {
             let ls = seed ^ ((l as u64 + 1) << 20);
-            let mk = |rows: usize, cols: usize, tag: u64| {
-                let w = HostTensor::randn(vec![rows, cols], 0.08, ls ^ tag);
-                TernaryTensor::from_latent(&w, mp)
-            };
-            let (g, u, d) = (mk(dims.glu, dims.hidden, 1),
-                             mk(dims.glu, dims.hidden, 2),
-                             mk(dims.hidden, dims.glu, 3));
-            dense_blocks.push(DenseBlock {
-                gate: g.dequant(), up: u.dequant(), down: d.dequant(),
-            });
-            blocks.push(TernaryBlock {
-                gate: PackedMatrix::from_ternary(&g),
-                up: PackedMatrix::from_ternary(&u),
-                down: PackedMatrix::from_ternary(&d),
+            blocks.push(LatentBlock {
+                gate: HostTensor::randn(vec![dims.glu, dims.hidden], 0.08,
+                                        ls ^ 1),
+                up: HostTensor::randn(vec![dims.glu, dims.hidden], 0.08,
+                                      ls ^ 2),
+                down: HostTensor::randn(vec![dims.hidden, dims.glu], 0.08,
+                                        ls ^ 3),
             });
         }
-        let head_latent = HostTensor::randn(vec![dims.vocab, dims.hidden],
-                                            0.08, seed ^ 0x6EAD);
-        let head = TernaryTensor::from_latent(&head_latent, 1);
-        let dense = DenseLm {
-            dims: dims.clone(),
-            embed: embed.clone(),
-            blocks: dense_blocks,
-            head: head.dequant(),
-        };
-        let ternary = TernaryLm {
-            dims,
-            embed,
-            blocks,
-            head: PackedMatrix::from_ternary(&head),
-        };
-        (ternary, dense)
+        let head = HostTensor::randn(vec![dims.vocab, dims.hidden], 0.08,
+                                     seed ^ 0x6EAD);
+        LatentLm { dims, embed, blocks, head, mp }
     }
 
-    /// Build a serving model from a trained checkpoint: the `embed`
-    /// table is kept f32, every `l{i}.mlp_{gate,up,down}` linear is
-    /// ternarized (single-shard absmean, the §A.5 transform at mp=1)
-    /// and packed, and the head ternarizes `head` when present, else
-    /// ties to the embedding table.
-    pub fn from_checkpoint(ck: &Checkpoint) -> Result<TernaryLm> {
+    /// Latent weights from a trained checkpoint: the `embed` table plus
+    /// every `l{i}.mlp_{gate,up,down}` linear; the head falls back to
+    /// the tied embedding table when absent.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<LatentLm> {
         let embed = ck.get("embed")
             .ok_or_else(|| anyhow::anyhow!(
                 "checkpoint has no 'embed' tensor; cannot build serve model"))?
@@ -261,27 +336,218 @@ impl TernaryLm {
                 || anyhow::anyhow!("layer {l}: mlp_gate without mlp_up"))?;
             let down = ck.get(&format!("l{l}.mlp_down")).ok_or_else(
                 || anyhow::anyhow!("layer {l}: mlp_gate without mlp_down"))?;
-            glu = gate.dims2().0;
-            let pack = |w: &HostTensor| {
-                PackedMatrix::from_ternary(&TernaryTensor::from_latent(w, 1))
-            };
-            blocks.push(TernaryBlock {
-                gate: pack(gate), up: pack(up), down: pack(down),
+            if l == 0 {
+                glu = gate.dims2().0;
+            }
+            // Reject shape drift here: step_batch's element-wise zips
+            // would silently truncate on mismatched tensors and serve
+            // garbage logits instead of failing.
+            for (name, t, want) in [("mlp_gate", gate, (glu, hidden)),
+                                    ("mlp_up", up, (glu, hidden)),
+                                    ("mlp_down", down, (hidden, glu))] {
+                if t.dims2() != want {
+                    anyhow::bail!(
+                        "layer {l}: {name} is {:?}, expected {:?} (from \
+                         embed hidden {hidden} and l0 glu {glu})",
+                        t.dims2(), want);
+                }
+            }
+            blocks.push(LatentBlock {
+                gate: gate.clone(),
+                up: up.clone(),
+                down: down.clone(),
             });
         }
         if blocks.is_empty() {
             anyhow::bail!("checkpoint has no l0.mlp_gate — not a spectra LM");
         }
-        let head_latent = ck.get("head").unwrap_or(&embed);
-        let head = PackedMatrix::from_ternary(
-            &TernaryTensor::from_latent(head_latent, 1));
+        let head = ck.get("head").unwrap_or(&embed).clone();
+        if head.dims2().1 != hidden {
+            anyhow::bail!("head is {:?}, expected (vocab, {hidden})",
+                          head.dims2());
+        }
         let layers = blocks.len();
-        Ok(TernaryLm {
+        Ok(LatentLm {
             dims: LmDims { vocab, hidden, glu, layers },
             embed,
             blocks,
             head,
+            mp: 1,
         })
+    }
+
+    fn realize<L: LinearFormat>(&self, f: impl Fn(&HostTensor) -> L)
+                                -> SpectraLm<L> {
+        SpectraLm {
+            dims: self.dims.clone(),
+            embed: self.embed.clone(),
+            blocks: self.blocks.iter().map(|b| SpectraBlock {
+                gate: f(&b.gate),
+                up: f(&b.up),
+                down: f(&b.down),
+            }).collect(),
+            head: f(&self.head),
+        }
+    }
+
+    /// FloatLM storage: the latent f32 weights served directly.
+    pub fn build_float(&self) -> DenseLm {
+        self.realize(|w| DenseF32 { w: w.clone() })
+    }
+
+    /// TriLM storage: absmean-ternarized (§A.5, mp shards per block
+    /// matrix, single-shard head) and packed 2-bit.
+    pub fn build_ternary(&self) -> TernaryLm {
+        let tern = |w: &HostTensor, mp: usize| {
+            PackedMatrix::from_ternary(&TernaryTensor::from_latent(w, mp))
+        };
+        SpectraLm {
+            dims: self.dims.clone(),
+            embed: self.embed.clone(),
+            blocks: self.blocks.iter().map(|b| SpectraBlock {
+                gate: tern(&b.gate, self.mp),
+                up: tern(&b.up, self.mp),
+                down: tern(&b.down, self.mp),
+            }).collect(),
+            head: tern(&self.head, 1),
+        }
+    }
+
+    /// QuantLM storage via round-to-nearest group quantization.
+    pub fn build_quant_rtn(&self, bits: u32, group: usize) -> QuantLm {
+        self.realize(|w| {
+            QuantPacked::from_quant(&QuantTensor::quantize_rtn(w, bits, group))
+        })
+    }
+
+    /// QuantLM storage via GPTQ: per-linear input Hessians are
+    /// accumulated by driving the latent f32 model on seeded synthetic
+    /// token traffic (the serving analog of the training-distribution
+    /// calibration in `gptq::pipeline`), then each linear is quantized
+    /// with second-order error compensation.
+    pub fn build_quant_gptq(&self, bits: u32, group: usize, seed: u64)
+                            -> Result<QuantLm> {
+        let (acc_h, acc_g, acc_head) = self.calibration_hessians(seed);
+        let cfg = GptqConfig::new(bits, group);
+        let qp = |w: &HostTensor, acc: &HessianAccumulator|
+                 -> Result<QuantPacked> {
+            Ok(QuantPacked::from_quant(
+                &gptq_quantize(w, &acc.finalize(), cfg)?))
+        };
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (l, b) in self.blocks.iter().enumerate() {
+            blocks.push(SpectraBlock {
+                gate: qp(&b.gate, &acc_h[l])?,
+                up: qp(&b.up, &acc_h[l])?,
+                down: qp(&b.down, &acc_g[l])?,
+            });
+        }
+        Ok(SpectraLm {
+            dims: self.dims.clone(),
+            embed: self.embed.clone(),
+            blocks,
+            head: qp(&self.head, &acc_head)?,
+        })
+    }
+
+    /// Realize any family as a boxed [`DecodeModel`] the scheduler can
+    /// drive — the one entry point `serve-bench --family` and the
+    /// cross-family test harnesses use.
+    pub fn build(&self, spec: FamilySpec) -> Result<Box<dyn DecodeModel>> {
+        let model: Box<dyn DecodeModel> = match spec {
+            FamilySpec::Float => Box::new(self.build_float()),
+            FamilySpec::Ternary => Box::new(self.build_ternary()),
+            FamilySpec::Quant { bits, group, method: QuantMethod::Rtn } => {
+                Box::new(self.build_quant_rtn(bits, group))
+            }
+            FamilySpec::Quant { bits, group, method: QuantMethod::Gptq } => {
+                Box::new(self.build_quant_gptq(bits, group, 0)?)
+            }
+        };
+        Ok(model)
+    }
+
+    /// Drive the latent f32 weights through the decode math on seeded
+    /// token traffic, accumulating every linear's input Hessian:
+    /// gate/up share the block-input accumulator (identical inputs),
+    /// down gets the activated GLU, the head gets the final norm.
+    fn calibration_hessians(&self, seed: u64)
+                            -> (Vec<HessianAccumulator>,
+                                Vec<HessianAccumulator>,
+                                HessianAccumulator) {
+        let d = &self.dims;
+        let mut acc_h: Vec<HessianAccumulator> = (0..d.layers)
+            .map(|_| HessianAccumulator::new(d.hidden)).collect();
+        let mut acc_g: Vec<HessianAccumulator> = (0..d.layers)
+            .map(|_| HessianAccumulator::new(d.glu)).collect();
+        let mut acc_head = HessianAccumulator::new(d.hidden);
+        let mut rng = SplitMix64::new(seed ^ 0xCA11B);
+        let mut states = HostTensor::zeros(vec![CALIB_LANES, d.hidden]);
+        for _ in 0..CALIB_STEPS {
+            let mut x = HostTensor::zeros(vec![CALIB_LANES, d.hidden]);
+            for b in 0..CALIB_LANES {
+                let e = self.embed.row(rng.below(d.vocab));
+                let s = states.row(b);
+                let row = x.row_mut(b);
+                for j in 0..d.hidden {
+                    row[j] = e[j] + s[j];
+                }
+            }
+            for (l, blk) in self.blocks.iter().enumerate() {
+                let y = rmsnorm(&x);
+                acc_h[l].add_batch(&y);
+                let g = matmul_dense(&y, &blk.gate);
+                let u = matmul_dense(&y, &blk.up);
+                let mut a = g;
+                for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
+                    *av = silu(*av) * uv;
+                }
+                acc_g[l].add_batch(&a);
+                let dd = matmul_dense(&a, &blk.down);
+                for (xv, &dv) in x.data.iter_mut().zip(dd.data.iter()) {
+                    *xv += dv;
+                }
+            }
+            acc_head.add_batch(&rmsnorm(&x));
+            for b in 0..CALIB_LANES {
+                let row = &x.data[b * d.hidden..(b + 1) * d.hidden];
+                let s = states.row_mut(b);
+                for (sv, &xv) in s.iter_mut().zip(row) {
+                    *sv = STATE_DECAY * *sv + (1.0 - STATE_DECAY) * xv;
+                }
+            }
+        }
+        (acc_h, acc_g, acc_head)
+    }
+}
+
+impl SpectraLm<PackedMatrix> {
+    /// Seeded random weights, ternarized with `mp` scale shards —
+    /// plus the dequantized f32 twin holding *identical* weights, so
+    /// benches compare storage formats and tests check equivalence.
+    pub fn synthetic_pair(dims: LmDims, mp: usize, seed: u64)
+                          -> (TernaryLm, DenseLm) {
+        let latent = LatentLm::synthetic(dims, mp, seed);
+        let ternary = latent.build_ternary();
+        // The dense twin dequantizes the *ternarized* weights (not the
+        // latent ones): identical math up to fp rounding.
+        let dense = SpectraLm {
+            dims: latent.dims.clone(),
+            embed: latent.embed.clone(),
+            blocks: ternary.blocks.iter().map(|b| SpectraBlock {
+                gate: DenseF32 { w: b.gate.dequant() },
+                up: DenseF32 { w: b.up.dequant() },
+                down: DenseF32 { w: b.down.dequant() },
+            }).collect(),
+            head: DenseF32 { w: ternary.head.dequant() },
+        };
+        (ternary, dense)
+    }
+
+    /// Ternarized serving model from a trained checkpoint (single-shard
+    /// absmean, the §A.5 transform at mp=1).
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<TernaryLm> {
+        Ok(LatentLm::from_checkpoint(ck)?.build_ternary())
     }
 }
 
@@ -293,7 +559,7 @@ mod tests {
         LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }
     }
 
-    fn step_one(m: &impl DecodeModel, state: &mut Vec<f32>, tok: u32)
+    fn step_one(m: &dyn DecodeModel, state: &mut Vec<f32>, tok: u32)
                 -> HostTensor {
         let mut refs = [state.as_mut_slice()];
         m.step_batch(&mut refs, &[tok], 1)
@@ -368,5 +634,118 @@ mod tests {
             ("embed".into(), HostTensor::randn(vec![8, 4], 0.5, 1)),
         ]);
         assert!(TernaryLm::from_checkpoint(&ck).is_err());
+    }
+
+    #[test]
+    fn checkpoint_with_inconsistent_shapes_is_rejected() {
+        // mlp_up rows disagree with l0's glu: must error at build time,
+        // not serve truncated garbage.
+        let ck = Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![64, 32], 0.5, 1)),
+            ("l0.mlp_gate".into(), HostTensor::randn(vec![48, 32], 0.1, 2)),
+            ("l0.mlp_up".into(), HostTensor::randn(vec![40, 32], 0.1, 3)),
+            ("l0.mlp_down".into(), HostTensor::randn(vec![32, 48], 0.1, 4)),
+        ]);
+        let err = LatentLm::from_checkpoint(&ck).unwrap_err().to_string();
+        assert!(err.contains("mlp_up"), "unhelpful error: {err}");
+        // A head with the wrong input width is rejected too.
+        let ck = Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![64, 32], 0.5, 1)),
+            ("l0.mlp_gate".into(), HostTensor::randn(vec![48, 32], 0.1, 2)),
+            ("l0.mlp_up".into(), HostTensor::randn(vec![48, 32], 0.1, 3)),
+            ("l0.mlp_down".into(), HostTensor::randn(vec![32, 48], 0.1, 4)),
+            ("head".into(), HostTensor::randn(vec![64, 16], 0.1, 5)),
+        ]);
+        assert!(LatentLm::from_checkpoint(&ck).is_err());
+    }
+
+    #[test]
+    fn family_spec_parses_cli_tokens() {
+        assert_eq!(FamilySpec::parse("float", 128), Some(FamilySpec::Float));
+        assert_eq!(FamilySpec::parse("TriLM", 128), Some(FamilySpec::Ternary));
+        assert_eq!(FamilySpec::parse("quant4", 64),
+                   Some(FamilySpec::Quant { bits: 4, group: 64,
+                                            method: QuantMethod::Rtn }));
+        assert_eq!(FamilySpec::parse("gptq3", 128),
+                   Some(FamilySpec::Quant { bits: 3, group: 128,
+                                            method: QuantMethod::Gptq }));
+        assert_eq!(FamilySpec::parse("quant9", 128), None);
+        assert_eq!(FamilySpec::parse("fp17", 128), None);
+    }
+
+    #[test]
+    fn every_family_builds_and_steps() {
+        let latent = LatentLm::synthetic(small_dims(), 1, 8);
+        let specs = [
+            FamilySpec::Float,
+            FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+            FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Rtn },
+            FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Gptq },
+            FamilySpec::Ternary,
+        ];
+        for spec in specs {
+            let m = latent.build(spec).unwrap();
+            assert_eq!(m.dims(), &small_dims(), "{}", spec.label());
+            let mut st = vec![0.0f32; 32];
+            let logits = step_one(m.as_ref(), &mut st, 9);
+            assert_eq!(logits.shape, vec![1, 64], "{}", spec.label());
+            assert!(logits.data.iter().all(|v| v.is_finite()),
+                    "{}: non-finite logits", spec.label());
+        }
+    }
+
+    #[test]
+    fn effective_bits_order_matches_table4() {
+        // FloatLM > QuantLM 4 > QuantLM 3 > TriLM — the paper's bit
+        // budget axis, measured on the serving models themselves.
+        let latent = LatentLm::synthetic(small_dims(), 1, 9);
+        let f = latent.build_float().effective_bits_per_param();
+        let q4 = latent.build_quant_rtn(4, 128).effective_bits_per_param();
+        let q3 = latent.build_quant_rtn(3, 128).effective_bits_per_param();
+        let t = latent.build_ternary().effective_bits_per_param();
+        assert!(f > q4 && q4 > q3 && q3 > t,
+                "bits ordering broken: f={f} q4={q4} q3={q3} t={t}");
+        assert_eq!(latent.build_float().family_label(), "fp32");
+        assert_eq!(latent.build_ternary().family_label(), "ternary");
+    }
+
+    #[test]
+    fn quant_families_approximate_float_logits() {
+        // Storage formats of the same latent weights: the 4-bit model
+        // must land closer to the float logits than the 3-bit model on
+        // average (more bits, less quantization error).
+        let latent = LatentLm::synthetic(small_dims(), 1, 10);
+        let f = latent.build_float();
+        let mean_err = |m: &dyn DecodeModel| -> f64 {
+            let mut st_a = vec![0.0f32; 32];
+            let mut st_b = vec![0.0f32; 32];
+            let mut total = 0.0f64;
+            let mut n = 0usize;
+            for tok in [1u32, 30, 55] {
+                let la = step_one(m, &mut st_a, tok);
+                let lb = step_one(&f, &mut st_b, tok);
+                total += la.data.iter().zip(lb.data.iter())
+                    .map(|(x, y)| (x - y).abs() as f64).sum::<f64>();
+                n += la.data.len();
+            }
+            total / n as f64
+        };
+        let e4 = mean_err(&latent.build_quant_rtn(4, 128));
+        let e3 = mean_err(&latent.build_quant_rtn(3, 128));
+        assert!(e4 < e3, "4-bit err {e4} should beat 3-bit err {e3}");
+        assert!(e4 > 0.0, "quantization must not be a no-op");
+    }
+
+    #[test]
+    fn gptq_family_is_deterministic() {
+        // Same latent + same seed -> bitwise identical quantized model
+        // (calibration is seeded, not wall-clock driven).
+        let latent = LatentLm::synthetic(small_dims(), 1, 11);
+        let a = latent.build_quant_gptq(4, 128, 3).unwrap();
+        let b = latent.build_quant_gptq(4, 128, 3).unwrap();
+        for (la, lb) in a.linears().iter().zip(b.linears().iter()) {
+            assert_eq!(la.bytes, lb.bytes);
+            assert_eq!(la.scales, lb.scales);
+        }
     }
 }

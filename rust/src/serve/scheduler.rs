@@ -1,5 +1,6 @@
-//! The multi-request decode scheduler: continuous batching over the
-//! blocked ternary kernels.
+//! The multi-request decode scheduler: continuous batching over any
+//! [`DecodeModel`] — the blocked ternary, k-bit quant, and dense f32
+//! serving models all run underneath it unchanged.
 //!
 //! The scheduler owns `max_batch` *lanes*. Each step it (1) admits
 //! queued requests into empty lanes, (2) assembles the live lanes'

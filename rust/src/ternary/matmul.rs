@@ -255,23 +255,24 @@ fn packed_rows_kernel(w: &PackedMatrix, x: &HostTensor,
     }
 }
 
-/// Batched packed-ternary matmul: y = x @ w_packed^T with per-shard
-/// scales. x: (m, k), w: (n, k) packed -> (m, n).
+/// Shared threaded driver for blocked row-partitioned matmul kernels
+/// (the ternary kernel here and the k-bit quant kernel in
+/// `linear::qmatmul` run through the same scaffold, so their threading
+/// behavior cannot diverge).
 ///
-/// `threads = 0` uses `std::thread::available_parallelism()`. Rows of
-/// `w` (output columns) are partitioned into contiguous chunks, one
-/// per worker, each writing a disjoint transposed slab; the slabs are
+/// `threads = 0` uses `std::thread::available_parallelism()`. The `n`
+/// weight rows (output columns) are partitioned into contiguous
+/// chunks, one per worker; `kernel(r0, r1, slab)` fills the disjoint
+/// (r1-r0, m)-transposed slab for its row range, and the slabs are
 /// assembled into row-major (m, n) at the end. The worker count is
 /// additionally capped so each has at least [`MIN_WORK_PER_THREAD`]
 /// accumulate ops — small decode-step matmuls run single-threaded
-/// rather than paying spawn/join per call. Accumulation order per
-/// output element is independent of both `threads` and `m` (fixed
-/// [`COL_BLOCK_TRITS`] panels), so results are batch-invariant.
-pub fn matmul_ternary_packed(x: &HostTensor, w: &PackedMatrix,
-                             threads: usize) -> HostTensor {
-    let (m, k) = x.dims2();
-    assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
-    let n = w.rows;
+/// rather than paying spawn/join per call. Thread count only
+/// partitions rows; it never reorders accumulation.
+pub(crate) fn blocked_rows_driver(
+    m: usize, k: usize, n: usize, threads: usize,
+    kernel: impl Fn(usize, usize, &mut [f32]) + Sync,
+) -> HostTensor {
     if m == 0 || n == 0 {
         return HostTensor::new(vec![m, n], vec![0.0; m * n]);
     }
@@ -287,14 +288,15 @@ pub fn matmul_ternary_packed(x: &HostTensor, w: &PackedMatrix,
 
     let mut out_t = vec![0.0f32; n * m]; // (n, m) transposed
     if threads == 1 {
-        packed_rows_kernel(w, x, 0, n, &mut out_t);
+        kernel(0, n, &mut out_t);
     } else {
         let chunk = n.div_ceil(threads);
+        let kernel = &kernel;
         std::thread::scope(|s| {
             for (ti, slab) in out_t.chunks_mut(chunk * m).enumerate() {
                 let r0 = ti * chunk;
                 let r1 = (r0 + chunk).min(n);
-                s.spawn(move || packed_rows_kernel(w, x, r0, r1, slab));
+                s.spawn(move || kernel(r0, r1, slab));
             }
         });
     }
@@ -305,6 +307,20 @@ pub fn matmul_ternary_packed(x: &HostTensor, w: &PackedMatrix,
         }
     }
     HostTensor::new(vec![m, n], out)
+}
+
+/// Batched packed-ternary matmul: y = x @ w_packed^T with per-shard
+/// scales. x: (m, k), w: (n, k) packed -> (m, n).
+///
+/// Threading via [`blocked_rows_driver`]. Accumulation order per
+/// output element is independent of both `threads` and `m` (fixed
+/// [`COL_BLOCK_TRITS`] panels), so results are batch-invariant.
+pub fn matmul_ternary_packed(x: &HostTensor, w: &PackedMatrix,
+                             threads: usize) -> HostTensor {
+    let (m, k) = x.dims2();
+    assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
+    blocked_rows_driver(m, k, w.rows, threads,
+                        |r0, r1, slab| packed_rows_kernel(w, x, r0, r1, slab))
 }
 
 #[cfg(test)]

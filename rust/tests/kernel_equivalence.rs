@@ -1,21 +1,26 @@
-//! Kernel-equivalence harness: every ternary kernel generation against
-//! the dequantized-f32 reference over a shape grid (satellite of the
-//! batched-decode PR).
+//! Kernel-equivalence harness: every serving kernel against the
+//! dequantized-f32 reference over a shape grid.
 //!
 //! Cross-checked kernels:
 //!   matvec_dense            — dense f32 reference executor
 //!   matvec_ternary_packed   — flat Packed2Bit scalar decode
 //!   matmul_ternary_dense    — unpacked i8 matmul
 //!   matmul_ternary_packed   — blocked/threaded PackedMatrix matmul
+//!   matmul_quant_packed     — blocked/threaded k-bit QuantPacked matmul
 //!
-//! Grid covers: cols not divisible by 4 (both the flat mid-byte path
-//! and the row-aligned tail-byte path), rows = 1, single-scale vs
+//! Ternary grid covers: cols not divisible by 4 (both the flat mid-byte
+//! path and the row-aligned tail-byte path), rows = 1, single-scale vs
 //! sharded scales, all-zero rows, shapes spanning multiple ROW_BLOCK x
 //! COL_BLOCK_TRITS tiles, batch sizes {1, 3, 8} and thread counts
-//! {1, 2, 5}. All inputs come from seeded SplitMix64 streams; the
-//! acceptance bar is max |err| < 1e-4 against the dequantized
-//! reference.
+//! {1, 2, 5}; acceptance bar max |err| < 1e-4. The quant grid covers 3-
+//! and 4-bit at group 128 over unaligned shapes (cols < group, ragged
+//! final group, non-byte-aligned panel starts, tile-spanning) at the
+//! same batch/thread grid; acceptance bar max |err| < 1e-3 plus bitwise
+//! batch/thread invariance. All inputs come from seeded SplitMix64
+//! streams.
 
+use spectra::linear::{matmul_quant_packed, QuantPacked};
+use spectra::quant::QuantTensor;
 use spectra::runtime::HostTensor;
 use spectra::ternary::matmul::{COL_BLOCK_TRITS, ROW_BLOCK};
 use spectra::ternary::{matmul_dense, matmul_ternary_dense,
@@ -24,6 +29,7 @@ use spectra::ternary::{matmul_dense, matmul_ternary_dense,
                        TernaryTensor};
 
 const TOL: f32 = 1e-4;
+const QTOL: f32 = 1e-3;
 
 /// (rows, cols) grid: edge and tile-spanning shapes.
 fn shape_grid() -> Vec<(usize, usize)> {
@@ -154,6 +160,76 @@ fn equivalence_with_extreme_scales() {
     for (a, b) in got.data.iter().zip(want.data.iter()) {
         let tol = TOL * b.abs().max(1.0);
         assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+}
+
+/// Quant shapes, all "unaligned" somehow: cols < group (single ragged
+/// group), ragged final group, cols not a multiple of 8 values (rows
+/// start byte-aligned but panels decode from mid-byte bit offsets),
+/// and a ROW_BLOCK/COL_BLOCK tile-spanning shape.
+fn quant_shape_grid() -> Vec<(usize, usize)> {
+    vec![
+        (1, 7),                                // single row, sub-group
+        (8, 100),                              // cols < group
+        (33, 130),                             // ragged final group
+        (64, 131),                             // ragged + odd cols
+        (ROW_BLOCK + 9, COL_BLOCK_TRITS + 37), // spans tiles + ragged
+    ]
+}
+
+#[test]
+fn quant_kernel_matches_dequant_reference() {
+    // 3- and 4-bit at group 128 (the paper's QuantLM configs) over the
+    // unaligned shape grid: the packed-bitstream kernel must land
+    // within 1e-3 of matmul against the dequantized f32 weights.
+    let mut seed = 0xBEE5u64;
+    for bits in [3u32, 4] {
+        for (rows, cols) in quant_shape_grid() {
+            seed += 1;
+            let w = HostTensor::randn(vec![rows, cols], 0.05, seed);
+            let qt = QuantTensor::quantize_rtn(&w, bits, 128);
+            let qp = QuantPacked::from_quant(&qt);
+            let dq = qt.dequant();
+            for m in [1usize, 3, 8] {
+                let x = HostTensor::randn(vec![m, cols], 1.0,
+                                          seed ^ (m as u64) << 8);
+                let want = matmul_dense(&x, &dq);
+                for threads in [1usize, 2, 5] {
+                    let got = matmul_quant_packed(&x, &qp, threads);
+                    assert_eq!(got.shape, vec![m, rows]);
+                    let err = max_abs_err(&got.data, &want.data);
+                    assert!(err < QTOL,
+                            "{rows}x{cols} bits={bits} m={m} \
+                             threads={threads}: err {err}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_kernel_batch_and_thread_invariance_is_bitwise() {
+    // Same contract as the ternary kernel: a lane's result is bitwise
+    // identical at any batch size and thread count — what lets the
+    // scheduler serve QuantLMs deterministically.
+    for bits in [3u32, 4] {
+        let w = HostTensor::randn(vec![48, COL_BLOCK_TRITS + 11], 0.05,
+                                  70 + bits as u64);
+        let qp = QuantPacked::from_quant(
+            &QuantTensor::quantize_rtn(&w, bits, 128));
+        let xb = HostTensor::randn(vec![8, qp.cols], 1.0, 80 + bits as u64);
+        let reference = matmul_quant_packed(&xb, &qp, 1);
+        for threads in [2usize, 3, 8] {
+            let got = matmul_quant_packed(&xb, &qp, threads);
+            assert_eq!(got.data, reference.data,
+                       "bits={bits} threads={threads}");
+        }
+        for mi in 0..8 {
+            let x1 = HostTensor::stack_rows(&[xb.row(mi)]);
+            let solo = matmul_quant_packed(&x1, &qp, 4);
+            assert_eq!(solo.data, reference.row(mi),
+                       "bits={bits} lane {mi}");
+        }
     }
 }
 

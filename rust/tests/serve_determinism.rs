@@ -1,18 +1,32 @@
-//! Scheduler determinism (satellite): the same request set must
-//! produce identical token streams regardless of batch size and
-//! kernel thread count — continuous batching is an operational
-//! optimization, never a semantic one.
+//! Scheduler determinism: the same request set must produce identical
+//! token streams regardless of batch size and kernel thread count —
+//! continuous batching is an operational optimization, never a
+//! semantic one — and that must hold for *every* storage family the
+//! engine serves (FloatLM f32, QuantLM 3/4-bit, TriLM ternary).
 //!
 //! This holds because (a) each lane's computation depends only on its
-//! own state/tokens, (b) the blocked kernel's accumulation order is
-//! batch- and thread-invariant (tests/kernel_equivalence.rs checks it
-//! bitwise), and (c) greedy ties break by token id while top-k draws
-//! from a per-request seeded stream.
+//! own state/tokens, (b) every blocked kernel's accumulation order is
+//! batch- and thread-invariant (tests/kernel_equivalence.rs checks
+//! both the ternary and the k-bit quant kernel bitwise), and (c)
+//! greedy ties break by token id while top-k draws from a per-request
+//! seeded stream.
 
-use spectra::serve::{GenRequest, LmDims, Scheduler, TernaryLm};
+use spectra::serve::{FamilySpec, GenRequest, LatentLm, LmDims, QuantMethod,
+                     Scheduler, TernaryLm};
 
 fn dims() -> LmDims {
     LmDims { vocab: 128, hidden: 64, glu: 96, layers: 3 }
+}
+
+/// The four serving families of the acceptance bar. Group 128 at these
+/// dims exercises the ragged-group path (hidden 64, glu 96 < 128).
+fn four_families() -> [FamilySpec; 4] {
+    [
+        FamilySpec::Float,
+        FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+        FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Rtn },
+        FamilySpec::Ternary,
+    ]
 }
 
 fn request_set() -> Vec<GenRequest> {
@@ -51,6 +65,58 @@ fn greedy_streams_invariant_across_lane_counts_and_threads() {
         assert_eq!(got, reference,
                    "divergence at max_batch={max_batch} threads={threads}");
     }
+}
+
+#[test]
+fn every_family_is_batch_and_thread_invariant() {
+    // The family-complete acceptance bar: FloatLM, QuantLM 3-bit,
+    // QuantLM 4-bit and TriLM storage of the same latent weights all
+    // serve deterministically across lane counts and thread counts.
+    let latent = LatentLm::synthetic(dims(), 1, 47);
+    for spec in four_families() {
+        let model = latent.build(spec).unwrap();
+        let run_model = |max_batch: usize, threads: usize| -> Vec<Vec<u32>> {
+            let mut sched = Scheduler::new(model.as_ref(), max_batch, threads);
+            for r in request_set() {
+                sched.submit(r);
+            }
+            sched.run().into_iter().map(|c| c.tokens).collect()
+        };
+        let reference = run_model(1, 1);
+        assert_eq!(reference.len(), 12, "{}", spec.label());
+        for (max_batch, threads) in [(8, 4), (3, 2), (12, 8)] {
+            assert_eq!(run_model(max_batch, threads), reference,
+                       "{}: divergence at max_batch={max_batch} \
+                        threads={threads}", spec.label());
+        }
+    }
+}
+
+#[test]
+fn families_share_traffic_but_not_streams() {
+    // Sanity that the families are genuinely different models in
+    // storage: identical latent weights, yet the quantized streams
+    // must not all collapse to the float stream (quantization moves
+    // near-ties), while every stream stays within the vocab.
+    let latent = LatentLm::synthetic(dims(), 1, 48);
+    let streams: Vec<Vec<Vec<u32>>> = four_families().iter().map(|&spec| {
+        let model = latent.build(spec).unwrap();
+        let mut sched = Scheduler::new(model.as_ref(), 4, 2);
+        for r in request_set() {
+            sched.submit(r);
+        }
+        sched.run().into_iter().map(|c| c.tokens).collect()
+    }).collect();
+    for fam in &streams {
+        for toks in fam {
+            assert!(toks.iter().all(|&t| t < 128));
+        }
+    }
+    // 3-bit is the most perturbed family; it should diverge from float
+    // somewhere across 12 requests.
+    assert_ne!(streams[0], streams[1],
+               "3-bit quantization changed nothing — storage formats \
+                are not actually being exercised");
 }
 
 #[test]
