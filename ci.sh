@@ -19,16 +19,31 @@ if [[ "${1:-}" == "--fast" ]]; then
     exit 0
 fi
 
-echo "== compile benches + examples =="
-cargo build --release --benches --examples
+echo "== compile examples =="
+cargo build --release --examples
+
+# Bench harness rot gate: `cargo bench --no-run` builds every bench in
+# the bench profile (serve_throughput.rs in particular), so the
+# harness cannot silently stop compiling between perf runs. This
+# replaces the old `cargo build --benches` step — building the benches
+# in both profiles would just compile everything twice.
+echo "== bench harness builds (cargo bench --no-run) =="
+cargo bench --no-run
 
 # Cross-family runtime smoke: tiny dims, all four serving families
-# through the scheduler — catches runtime panics (ragged groups, kernel
-# tails, family builders), not just compile errors.
-echo "== cross-family serve smoke =="
+# through the (pooled) scheduler — catches runtime panics (ragged
+# groups, kernel tails, family builders, pool dispatch), not just
+# compile errors. --json makes serve-bench write the machine-readable
+# result and re-parse it, so a malformed BENCH file fails this step.
+echo "== cross-family serve smoke (+ --json parse check) =="
 cargo run --release --quiet -- serve-bench \
     --family float,quant3,quant4,ternary \
     --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
-    --requests 4 --max-tokens 4 --batches 1,2 --threads 1
+    --requests 4 --max-tokens 4 --batches 1,2 --threads 1 \
+    --json runs/BENCH_serve_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 -m json.tool runs/BENCH_serve_smoke.json >/dev/null
+    echo "runs/BENCH_serve_smoke.json: valid json (python3 cross-check)"
+fi
 
 echo "ci: all green"

@@ -7,10 +7,18 @@
 //!
 //! Acceptance target: batch-8 threaded ternary >= 3x the single-thread
 //! scalar tokens/sec.
+//!
+//! Also measured: kernel dispatch substrate overhead — the same
+//! decode-shaped ternary matmul through per-call scoped threads
+//! (spawn/join + fresh buffers every call) vs the persistent
+//! [`WorkerPool`] with reused scratch (the scheduler's hot path).
 
+use spectra::runtime::{HostTensor, WorkerPool};
 use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentLm,
                      LmDims, Scheduler, TernaryLm};
-use spectra::util::bench::bench_few;
+use spectra::ternary::{matmul_ternary_packed, matmul_ternary_packed_into,
+                       PackedMatrix, TernaryTensor};
+use spectra::util::bench::{bench_few, black_box};
 
 const N_REQUESTS: usize = 24;
 const MAX_NEW: usize = 24;
@@ -78,6 +86,39 @@ fn main() {
         drain(&dlm, 8, 1);
     });
     dense.report_throughput("tokens", total_tokens);
+
+    // Dispatch-substrate microbench: one decode-shaped matmul
+    // (m=8 lanes against the glu x hidden gate projection), scoped
+    // spawns vs pooled dispatch. The delta is pure per-call overhead —
+    // results are bitwise identical (tests/pool_equivalence.rs).
+    let w = HostTensor::randn(vec![dims.glu, dims.hidden], 0.05, 7);
+    let pm = PackedMatrix::from_ternary(&TernaryTensor::from_latent(&w, 2));
+    let x = HostTensor::randn(vec![8, dims.hidden], 1.0, 8);
+    let pool_threads = thread_counts.iter().copied().max().unwrap_or(1);
+    let iters = 400;
+    let scoped = bench_few(
+        &format!("matmul m=8 scoped threads={pool_threads} x{iters}"), 3,
+        || {
+            for _ in 0..iters {
+                black_box(matmul_ternary_packed(&x, &pm, pool_threads));
+            }
+        });
+    scoped.report_throughput("matmuls", iters as f64);
+    let pool = WorkerPool::new(pool_threads);
+    let mut out_t = Vec::new();
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    let pooled = bench_few(
+        &format!("matmul m=8 pooled threads={pool_threads} x{iters}"), 3,
+        || {
+            for _ in 0..iters {
+                matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t,
+                                           &mut out);
+                black_box(out.data[0]);
+            }
+        });
+    pooled.report_throughput("matmuls", iters as f64);
+    println!("pooled dispatch vs scoped spawn on the decode-step matmul: \
+              {:.2}x", scoped.mean_secs() / pooled.mean_secs());
 
     println!("\nbatch-8 threaded ternary vs single-thread scalar: {:.2}x \
               (target >= 3x; {cores} cores available)",

@@ -9,7 +9,9 @@
 //! Module map (see DESIGN.md for the paper-experiment index):
 //!
 //! - [`config`] — suite/model/training configuration.
-//! - [`runtime`] — PJRT client wrapper: load HLO text, compile, execute.
+//! - [`runtime`] — PJRT client wrapper (load HLO text, compile,
+//!   execute) + the CPU serving execution substrate: the persistent
+//!   [`runtime::WorkerPool`] and reusable [`runtime::DecodeScratch`].
 //! - [`data`] — synthetic corpus generator, BPE tokenizer, batcher.
 //! - [`coordinator`] — training loop, Spectra optimization schedule,
 //!   dynamic loss scaling, suite runner.

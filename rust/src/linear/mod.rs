@@ -25,10 +25,13 @@
 
 pub mod qmatmul;
 
-pub use qmatmul::{matmul_quant_packed, QuantPacked, COL_BLOCK_VALS};
+pub use qmatmul::{matmul_quant_packed, matmul_quant_packed_into, QuantPacked,
+                  COL_BLOCK_VALS};
 
-use crate::runtime::HostTensor;
-use crate::ternary::{matmul_dense, matmul_ternary_packed, PackedMatrix};
+use crate::runtime::{HostTensor, WorkerPool};
+use crate::ternary::matmul::blocked_rows_driver_pooled;
+use crate::ternary::{matmul_dense, matmul_ternary_packed,
+                     matmul_ternary_packed_into, PackedMatrix};
 
 /// A served linear layer: y = x @ W^T over some weight storage format.
 pub trait LinearFormat: Send + Sync {
@@ -42,7 +45,26 @@ pub trait LinearFormat: Send + Sync {
     /// is a partitioning hint (0 = auto); implementations must keep
     /// per-element accumulation order independent of both `threads`
     /// and the batch size `m`.
+    ///
+    /// Compatibility entry point: spawns/allocates per call. The serve
+    /// hot path uses [`LinearFormat::matmul_batch_into`].
     fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor;
+
+    /// Scratch-aware batched matmul: execute on a persistent
+    /// [`WorkerPool`], accumulating into the caller's `out_t` slab and
+    /// writing the (m, out) result into `out` (reshaped in place). Must
+    /// be bitwise identical to `matmul_batch(x, pool.threads())` — the
+    /// pooled scheduler serves through this method, and the serve
+    /// determinism contract rides on the equivalence.
+    ///
+    /// The default falls back to the allocating path so external
+    /// formats stay correct; the built-in formats override it with
+    /// allocation-free implementations.
+    fn matmul_batch_into(&self, x: &HostTensor, pool: &WorkerPool,
+                         out_t: &mut Vec<f32>, out: &mut HostTensor) {
+        let _ = out_t;
+        *out = self.matmul_batch(x, pool.threads());
+    }
 
     /// Dequantized f32 weights — the equivalence-test reference.
     fn dequant(&self) -> HostTensor;
@@ -67,6 +89,28 @@ impl From<HostTensor> for DenseF32 {
     }
 }
 
+/// Pooled dense kernel body for w-rows `[r0, r1)`: plain sequential
+/// accumulation over `k` per (w-row, x-row) pair — the exact order of
+/// [`matmul_dense`], so pooled dense results are bitwise identical to
+/// the allocating path at any thread count and batch size.
+fn dense_rows_kernel(w: &HostTensor, x: &HostTensor,
+                     r0: usize, r1: usize, out_t: &mut [f32]) {
+    let (m, k) = x.dims2();
+    debug_assert_eq!(k, w.dims2().1);
+    debug_assert_eq!(out_t.len(), (r1 - r0) * m);
+    for r in r0..r1 {
+        let wr = w.row(r);
+        for mi in 0..m {
+            let xr = x.row(mi);
+            let mut acc = 0.0f32;
+            for c in 0..k {
+                acc += xr[c] * wr[c];
+            }
+            out_t[(r - r0) * m + mi] = acc;
+        }
+    }
+}
+
 impl LinearFormat for DenseF32 {
     fn out_features(&self) -> usize {
         self.w.dims2().0
@@ -78,6 +122,16 @@ impl LinearFormat for DenseF32 {
 
     fn matmul_batch(&self, x: &HostTensor, _threads: usize) -> HostTensor {
         matmul_dense(x, &self.w)
+    }
+
+    fn matmul_batch_into(&self, x: &HostTensor, pool: &WorkerPool,
+                         out_t: &mut Vec<f32>, out: &mut HostTensor) {
+        let (m, k) = x.dims2();
+        assert_eq!(k, self.w.dims2().1,
+                   "x cols {k} != dense weight cols {}", self.w.dims2().1);
+        blocked_rows_driver_pooled(
+            m, k, self.w.dims2().0, pool, out_t, out,
+            |r0, r1, slab| dense_rows_kernel(&self.w, x, r0, r1, slab));
     }
 
     fn dequant(&self) -> HostTensor {
@@ -104,6 +158,11 @@ impl LinearFormat for PackedMatrix {
 
     fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor {
         matmul_ternary_packed(x, self, threads)
+    }
+
+    fn matmul_batch_into(&self, x: &HostTensor, pool: &WorkerPool,
+                         out_t: &mut Vec<f32>, out: &mut HostTensor) {
+        matmul_ternary_packed_into(x, self, pool, out_t, out);
     }
 
     fn dequant(&self) -> HostTensor {
@@ -141,6 +200,11 @@ impl LinearFormat for QuantPacked {
 
     fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor {
         matmul_quant_packed(x, self, threads)
+    }
+
+    fn matmul_batch_into(&self, x: &HostTensor, pool: &WorkerPool,
+                         out_t: &mut Vec<f32>, out: &mut HostTensor) {
+        matmul_quant_packed_into(x, self, pool, out_t, out);
     }
 
     fn dequant(&self) -> HostTensor {
@@ -184,6 +248,28 @@ mod tests {
             assert_eq!(got.shape, vec![4, 24]);
             for (a, b) in got.data.iter().zip(want.data.iter()) {
                 assert!((a - b).abs() < 1e-3, "{}: {a} vs {b}", f.label());
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_batch_into_matches_allocating_path_bitwise() {
+        // The trait contract the pooled scheduler rides on: the
+        // scratch-aware path must be indistinguishable from the
+        // allocating one, for every storage format, reusing one
+        // scratch across formats and shapes.
+        let (d, pm, qp) = formats(24, 36, 7);
+        let pool = WorkerPool::new(3);
+        let mut out_t = Vec::new();
+        let mut out = HostTensor::zeros(vec![0, 0]);
+        let fmts: [&dyn LinearFormat; 3] = [&d, &pm, &qp];
+        for m in [1usize, 4, 8] {
+            let x = HostTensor::randn(vec![m, 36], 1.0, 8 + m as u64);
+            for f in fmts {
+                let want = f.matmul_batch(&x, pool.threads());
+                f.matmul_batch_into(&x, &pool, &mut out_t, &mut out);
+                assert_eq!(out.shape, want.shape, "{} m{m}", f.label());
+                assert_eq!(out.data, want.data, "{} m{m}", f.label());
             }
         }
     }

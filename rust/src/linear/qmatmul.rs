@@ -22,12 +22,29 @@
 //!   the group scale — an order fixed by `k` alone, so results are
 //!   bitwise invariant to both the batch size and the thread count
 //!   (`tests/kernel_equivalence.rs` locks this in);
-//! - rows are partitioned across `std::thread` workers with disjoint
-//!   transposed output slabs, capped by [`crate::ternary::matmul::MIN_WORK_PER_THREAD`].
+//! - rows are partitioned across workers with disjoint transposed
+//!   output slabs, capped by
+//!   [`crate::ternary::matmul::MIN_WORK_PER_THREAD`].
+//!
+//! Execution substrates mirror the ternary kernel exactly:
+//! [`matmul_quant_packed`] is the scoped-thread compatibility wrapper
+//! (fresh spawns + fresh output per call); [`matmul_quant_packed_into`]
+//! is the serving hot path — it dispatches the *same* row partition
+//! onto a persistent [`crate::runtime::WorkerPool`] and reuses a
+//! caller-owned accumulation slab and output tensor
+//! ([`crate::runtime::DecodeScratch`] threads them down from the
+//! scheduler). Per-worker decode scratch (the transposed x panel, the
+//! i8 value buffer, the per-group accumulator) is thread-local and
+//! persists across calls because pool workers are long-lived. Pooled
+//! and scoped execution are bitwise identical at every thread count
+//! (`tests/pool_equivalence.rs`).
+
+use std::cell::RefCell;
 
 use crate::quant::{pack_kbit, QuantTensor};
-use crate::runtime::HostTensor;
-use crate::ternary::matmul::{blocked_rows_driver, COL_BLOCK_TRITS, ROW_BLOCK};
+use crate::runtime::{HostTensor, WorkerPool};
+use crate::ternary::matmul::{blocked_rows_driver, blocked_rows_driver_pooled,
+                             COL_BLOCK_TRITS, ROW_BLOCK};
 
 /// Values per column panel — the quant analog of [`COL_BLOCK_TRITS`]
 /// (same L1-residency sizing; the effective panel is rounded to a
@@ -131,18 +148,53 @@ impl QuantPacked {
     }
 }
 
+/// Per-thread quant decode scratch: the transposed x panel, the
+/// bitstream-decoded i8 values of one row-panel, and the per-group
+/// accumulator. Thread-local for the same reason as the ternary
+/// kernel's panel scratch: pool workers are long-lived, so steady-state
+/// decode steps never allocate here. Every buffer is written before it
+/// is read within one panel/group, so stale contents cannot leak.
+#[derive(Default)]
+struct QuantScratch {
+    x_t: Vec<f32>,
+    qbuf: Vec<i8>,
+    gacc: Vec<f32>,
+}
+
+fn with_quant_scratch<R>(x_t_len: usize, qbuf_len: usize, gacc_len: usize,
+                         f: impl FnOnce(&mut [f32], &mut [i8], &mut [f32]) -> R)
+                         -> R {
+    thread_local! {
+        static SCRATCH: RefCell<QuantScratch> =
+            RefCell::new(QuantScratch::default());
+    }
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        let QuantScratch { x_t, qbuf, gacc } = &mut *s;
+        if x_t.len() < x_t_len {
+            x_t.resize(x_t_len, 0.0);
+        }
+        if qbuf.len() < qbuf_len {
+            qbuf.resize(qbuf_len, 0);
+        }
+        if gacc.len() < gacc_len {
+            gacc.resize(gacc_len, 0.0);
+        }
+        f(&mut x_t[..x_t_len], &mut qbuf[..qbuf_len], &mut gacc[..gacc_len])
+    })
+}
+
 /// The blocked quant-decode kernel body for w-rows `[r0, r1)`.
 ///
-/// `out_t` is the (rows, m)-transposed output slab for this row range,
-/// mirroring the ternary kernel. Per (row-block, panel) the x block is
-/// transposed into `(k-panel, m)` scratch; per row the panel's values
-/// are bitstream-decoded once into an i8 scratch, then accumulated
+/// `out_t` is the (rows, m)-transposed output slab for this row range
+/// (it must arrive zeroed), mirroring the ternary kernel. Per
+/// (row-block, panel) the x block is transposed into `(k-panel, m)`
+/// thread-local scratch; per row the panel's values are
+/// bitstream-decoded once into an i8 scratch, then accumulated
 /// group-by-group (group accumulator x group scale).
 fn quant_rows_kernel(w: &QuantPacked, x: &HostTensor,
                      r0: usize, r1: usize, out_t: &mut [f32]) {
     let (m, k) = x.dims2();
-    debug_assert_eq!(k, w.cols);
-    debug_assert_eq!(out_t.len(), (r1 - r0) * m);
     // Effective group width never exceeds k (a wider caller group is a
     // single ragged group); the panel is the largest multiple of the
     // group near COL_BLOCK_VALS so groups never straddle panels.
@@ -152,10 +204,21 @@ fn quant_rows_kernel(w: &QuantPacked, x: &HostTensor,
     } else {
         (COL_BLOCK_VALS / group) * group
     };
+    with_quant_scratch(panel * m, panel, m, |x_t, qbuf, gacc| {
+        quant_rows_body(w, x, r0, r1, out_t, group, panel, x_t, qbuf, gacc)
+    })
+}
+
+/// [`quant_rows_kernel`] with all scratch passed explicitly.
+#[allow(clippy::too_many_arguments)]
+fn quant_rows_body(w: &QuantPacked, x: &HostTensor,
+                   r0: usize, r1: usize, out_t: &mut [f32],
+                   group: usize, panel: usize,
+                   x_t: &mut [f32], qbuf: &mut [i8], gacc: &mut [f32]) {
+    let (m, k) = x.dims2();
+    debug_assert_eq!(k, w.cols);
+    debug_assert_eq!(out_t.len(), (r1 - r0) * m);
     let ng = w.n_groups();
-    let mut x_t = vec![0.0f32; panel * m]; // (k-panel, m) scratch
-    let mut qbuf = vec![0i8; panel];
-    let mut gacc = vec![0.0f32; m];
     for rb in (r0..r1).step_by(ROW_BLOCK) {
         let rb_end = (rb + ROW_BLOCK).min(r1);
         let mut kb = 0usize;
@@ -169,7 +232,7 @@ fn quant_rows_kernel(w: &QuantPacked, x: &HostTensor,
                 }
             }
             for r in rb..rb_end {
-                w.decode_row_range(r, kb, cb, &mut qbuf);
+                w.decode_row_range(r, kb, cb, qbuf);
                 let acc = &mut out_t[(r - r0) * m..(r - r0 + 1) * m];
                 let mut c0 = 0usize;
                 while c0 < cb {
@@ -215,6 +278,21 @@ pub fn matmul_quant_packed(x: &HostTensor, w: &QuantPacked,
     assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
     blocked_rows_driver(m, k, w.rows, threads,
                         |r0, r1, slab| quant_rows_kernel(w, x, r0, r1, slab))
+}
+
+/// Allocation-free batched k-bit quant matmul: identical math and
+/// partitioning to [`matmul_quant_packed`] (results are bitwise equal
+/// at the pool's thread count), but executed on a persistent
+/// [`WorkerPool`] with the accumulation slab and output tensor reused
+/// from caller-owned scratch.
+pub fn matmul_quant_packed_into(x: &HostTensor, w: &QuantPacked,
+                                pool: &WorkerPool, out_t: &mut Vec<f32>,
+                                out: &mut HostTensor) {
+    let (m, k) = x.dims2();
+    assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
+    blocked_rows_driver_pooled(
+        m, k, w.rows, pool, out_t, out,
+        |r0, r1, slab| quant_rows_kernel(w, x, r0, r1, slab));
 }
 
 #[cfg(test)]
@@ -299,6 +377,27 @@ mod tests {
             let x1 = HostTensor::stack_rows(&[xb.row(mi)]);
             let solo = matmul_quant_packed(&x1, &qp, 4);
             assert_eq!(solo.data, reference.row(mi), "lane {mi}");
+        }
+    }
+
+    #[test]
+    fn pooled_quant_matmul_is_bitwise_identical_to_scoped() {
+        use crate::runtime::WorkerPool;
+        let (_, qp) = quantized(ROW_BLOCK + 9, COL_BLOCK_VALS + 37, 3, 128,
+                                23);
+        let mut out_t = Vec::new();
+        let mut out = HostTensor::zeros(vec![0, 0]);
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            for m in [1usize, 8] {
+                let x = HostTensor::randn(vec![m, qp.cols], 1.0,
+                                          29 ^ (m as u64));
+                let want = matmul_quant_packed(&x, &qp, threads);
+                matmul_quant_packed_into(&x, &qp, &pool, &mut out_t,
+                                         &mut out);
+                assert_eq!(out.shape, want.shape, "t{threads} m{m}");
+                assert_eq!(out.data, want.data, "t{threads} m{m}");
+            }
         }
     }
 

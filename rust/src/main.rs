@@ -39,6 +39,7 @@ commands:
   serve-bench   --family float,quant3,quant4,ternary --group 128
                 --requests 32 --max-tokens 32 --batches 1,2,4,8
                 --threads 1,2,4 --hidden 256 --glu 704 --layers 4
+                [--json BENCH_serve.json]
   bench-report  --results runs/suite/suite_results.json --experiment all
 
 global: --artifacts artifacts --runs runs";
@@ -223,7 +224,10 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// bits-vs-throughput story on the serving path), plus the ternary
 /// batch/thread sweep against the single-thread scalar reference and
 /// the analytic per-family decode roofline keyed by each model's
-/// measured bit rate.
+/// measured bit rate. `--json <path>` additionally writes the
+/// machine-readable sweep (BENCH_serve.json schema: per-family
+/// tokens/sec at batch 1 and batch max, bits/param, thread count,
+/// dims) and re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentLm,
                          LmDims, Scheduler};
@@ -274,29 +278,82 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
 
     // Cross-family sweep: every family serves the *same* latent model
-    // on the same traffic at the largest batch/thread setting.
+    // on the same traffic, measured at batch 1 and at the largest
+    // batch/thread setting (the two points the perf trajectory in
+    // BENCH_serve.json tracks).
     let fam_batch = batches.iter().copied().max().unwrap_or(8);
     let fam_threads = threads_list.iter().copied().max().unwrap_or(1);
-    let mut rows: Vec<(String, f64, f64, usize)> = Vec::new();
+    let mut rows: Vec<(String, f64, f64, f64, usize)> = Vec::new();
     let mut float_tps = None;
     for spec in &families {
         let model = latent.build(*spec)?;
+        let (tps_b1, _) = run_once(model.as_ref(), 1, fam_threads);
         let (tps, steps) = run_once(model.as_ref(), fam_batch, fam_threads);
         if matches!(spec, FamilySpec::Float) {
             float_tps = Some(tps);
         }
-        rows.push((spec.label(), model.effective_bits_per_param(), tps,
-                   steps));
+        rows.push((spec.label(), model.effective_bits_per_param(), tps_b1,
+                   tps, steps));
     }
-    println!("\ncross-family @ batch {fam_batch}, {fam_threads} threads \
-              (identical latent weights)");
-    println!("{:<22} {:>10} {:>12} {:>7} {:>10}",
-             "family", "bits/param", "tokens/s", "steps", "vs float");
-    for (label, bits, tps, steps) in &rows {
+    println!("\ncross-family @ {fam_threads} threads (identical latent \
+              weights)");
+    println!("{:<22} {:>10} {:>12} {:>12} {:>7} {:>10}",
+             "family", "bits/param", "tok/s b1",
+             format!("tok/s b{fam_batch}"), "steps", "vs float");
+    for (label, bits, tps_b1, tps, steps) in &rows {
         let rel = float_tps
             .map(|f| format!("{:.2}x", tps / f))
             .unwrap_or_else(|| "-".into());
-        println!("{label:<22} {bits:>10.2} {tps:>12.0} {steps:>7} {rel:>10}");
+        println!("{label:<22} {bits:>10.2} {tps_b1:>12.0} {tps:>12.0} \
+                  {steps:>7} {rel:>10}");
+    }
+
+    // Machine-readable trajectory point: --json <path> writes the
+    // sweep (and re-parses it, so a malformed file fails the run —
+    // ci.sh leans on that).
+    if let Some(path) = args.opt("json") {
+        use spectra::util::json::Json;
+        let fam_json: Vec<Json> = rows.iter()
+            .map(|(label, bits, tps_b1, tps, steps)| Json::obj(vec![
+                ("family", Json::str(label.as_str())),
+                ("bits_per_param", Json::num(*bits)),
+                ("tokens_per_sec_batch1", Json::num(*tps_b1)),
+                ("tokens_per_sec_batch_max", Json::num(*tps)),
+                ("batch_max", Json::num(fam_batch as f64)),
+                ("batch_steps", Json::num(*steps as f64)),
+            ]))
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::str("serve")),
+            ("schema", Json::num(1.0)),
+            ("dims", Json::obj(vec![
+                ("vocab", Json::num(dims.vocab as f64)),
+                ("hidden", Json::num(dims.hidden as f64)),
+                ("glu", Json::num(dims.glu as f64)),
+                ("layers", Json::num(dims.layers as f64)),
+            ])),
+            ("threads", Json::num(fam_threads as f64)),
+            ("requests", Json::num(n_req as f64)),
+            ("max_new_tokens", Json::num(max_new as f64)),
+            ("group", Json::num(group as f64)),
+            ("mp", Json::num(mp as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("families", Json::Arr(fam_json)),
+        ]);
+        let path = PathBuf::from(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, doc.to_string())?;
+        let back = std::fs::read_to_string(&path)?;
+        let parsed = Json::parse(&back)
+            .map_err(|e| anyhow::anyhow!(
+                "BENCH json at {} failed to re-parse: {e}", path.display()))?;
+        let n_fams = parsed.get("families")?.as_arr()?.len();
+        println!("\nwrote {} ({n_fams} families, parse-checked)",
+                 path.display());
     }
 
     // Ternary batch/thread sweep vs the single-thread scalar reference.
@@ -334,7 +391,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                               saturation_batch_bits};
         println!("\nroofline @7B on {} (speedup vs fp16 by measured \
                   bits/param):", hw.name);
-        for (label, bits, _, _) in &rows {
+        for (label, bits, _, _, _) in &rows {
             println!("  {label:<22} {bits:>6.2} bits -> {:>5.1}x (b=1) \
                       {:>5.1}x (b=8) {:>5.1}x (b=256); saturates at \
                       batch {:.0}",

@@ -6,14 +6,20 @@
 //! client and runs them with concrete inputs. HLO *text* is the
 //! interchange format (jax>=0.5 protos use 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! The [`pool`] submodule is the *CPU* execution substrate: the
+//! persistent [`WorkerPool`] and reusable [`DecodeScratch`] the serve
+//! engine's allocation-free decode hot path runs on.
 
 pub mod manifest;
+pub mod pool;
 pub mod tensor;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 pub use manifest::{GraphSpec, Manifest, ModelEntry};
+pub use pool::{DecodeScratch, WorkerPool};
 pub use tensor::{HostTensor, SplitMix64};
 
 use crate::Result;

@@ -1,0 +1,439 @@
+//! Persistent worker pool + reusable decode workspace: the serving
+//! engine's execution substrate.
+//!
+//! The paper's §2.1 decode-speedup claim is a *bandwidth* story, and it
+//! only survives measurement if the runtime does not burn the saved
+//! bytes on per-step overhead. The first serving iteration spawned a
+//! fresh `std::thread::scope` inside every blocked matmul — several
+//! spawn/join cycles per layer per decode step — and allocated fresh
+//! output tensors and transposed scratch on every call. This module
+//! provides the two pieces that remove that overhead:
+//!
+//! - [`WorkerPool`] — long-lived worker threads with condvar job
+//!   dispatch. [`WorkerPool::scope`] runs a borrowed parallel-for body
+//!   (`Fn(usize)`) across the workers *and* the calling thread, and
+//!   does not return until every job index has completed, so borrowed
+//!   data stays valid exactly as it would under `std::thread::scope`.
+//!   Work items are claimed dynamically, but the *partitioning* of rows
+//!   into items is computed by the caller with the same arithmetic as
+//!   the scoped-thread driver, and every item writes a disjoint output
+//!   slab — results are therefore bitwise identical to scoped-thread
+//!   execution at every thread count (`tests/pool_equivalence.rs`).
+//! - [`DecodeScratch`] — the per-scheduler workspace: the transposed
+//!   accumulation slab shared by the blocked drivers plus every
+//!   activation buffer of the serve model's forward pass. One scratch
+//!   lives as long as its [`crate::serve::Scheduler`]; buffers are
+//!   reshaped in place ([`HostTensor::reset2`]) and only grow.
+//!
+//! Ownership contract: the *caller* owns pool and scratch and threads
+//! `&WorkerPool` / `&mut DecodeScratch` down the hot path
+//! (`Scheduler::step` -> `DecodeModel::step_batch_into` ->
+//! `LinearFormat::matmul_batch_into` -> the pooled blocked drivers).
+//! Per-worker panel scratch (the transposed x panels, quant decode
+//! buffers) is thread-local inside the kernel modules — workers are
+//! long-lived, so those buffers also persist across decode steps.
+//!
+//! `threads = 1` (or 0 resolving to 1) spawns no workers at all:
+//! `scope` runs every job inline on the caller, the exact fallback the
+//! scoped driver had.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::tensor::HostTensor;
+
+/// A type-erased pointer to the current parallel-for body. The 'static
+/// lifetime is a lie told only inside [`WorkerPool::scope`], which does
+/// not return until every job finished — the same soundness argument
+/// `std::thread::scope` makes.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (shared-callable from any thread) and
+// `scope` keeps it alive for the whole dispatch window.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    /// Body of the in-flight `scope` call, if any.
+    job: Option<JobPtr>,
+    /// Total job indices of the in-flight call.
+    n_jobs: usize,
+    /// Next unclaimed job index.
+    next_idx: usize,
+    /// Claimed-or-unclaimed jobs not yet completed.
+    unfinished: usize,
+    /// A job body panicked; re-raised on the calling thread.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new task (or shutdown).
+    work_cv: Condvar,
+    /// The caller waits here for task completion.
+    done_cv: Condvar,
+}
+
+impl Shared {
+    /// Poisoning is ignored on purpose: a panicking job is reported via
+    /// `PoolState::panicked` and re-raised by `scope`; the pool itself
+    /// stays usable.
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Decrements `unfinished` when a job body returns *or unwinds*, so a
+/// panicking kernel can never leave `scope` (or its workers) waiting
+/// forever.
+struct DoneGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        if std::thread::panicking() {
+            st.panicked = true;
+        }
+        st.unfinished -= 1;
+        if st.unfinished == 0 {
+            self.shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn run_job(shared: &Shared, job: JobPtr, idx: usize) {
+    let _guard = DoneGuard { shared };
+    // SAFETY: `scope` keeps the pointee alive until `unfinished == 0`,
+    // and `_guard` only decrements after this call returns or unwinds.
+    unsafe { (&*job.0)(idx) };
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.lock();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if let Some(job) = st.job {
+            if st.next_idx < st.n_jobs {
+                let idx = st.next_idx;
+                st.next_idx += 1;
+                drop(st);
+                // Contain a panicking job body: DoneGuard has already
+                // recorded it (re-raised on the calling thread), and
+                // swallowing the unwind here keeps this worker alive —
+                // otherwise every job panic would silently shrink the
+                // pool below its advertised `threads()` width.
+                let _ = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        run_job(shared, job, idx);
+                    }));
+                st = shared.lock();
+                continue;
+            }
+        }
+        st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// Clears the finished task on exit from [`WorkerPool::scope`] — even
+/// when the caller's own share of the work panicked — after waiting for
+/// every outstanding job, so borrowed closures never outlive `scope`.
+struct TaskGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for TaskGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        while st.unfinished > 0 {
+            st = self.shared.done_cv.wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        st.n_jobs = 0;
+        st.next_idx = 0;
+        self.shared.done_cv.notify_all();
+    }
+}
+
+/// A persistent pool of `threads - 1` worker threads (the caller is the
+/// remaining executor). Created once per [`crate::serve::Scheduler`]
+/// and reused for every matmul of every decode step.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// `threads = 0` resolves to `std::thread::available_parallelism()`
+    /// — the same convention the kernel `threads` hint always had.
+    /// `threads = 1` spawns no workers (inline execution).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                n_jobs: 0,
+                next_idx: 0,
+                unfinished: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads).map(|i| {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("spectra-pool-{i}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn pool worker")
+        }).collect();
+        WorkerPool { shared, workers, threads }
+    }
+
+    /// The execution width: worker threads + the calling thread. This
+    /// is the number the blocked drivers feed into their partitioning
+    /// arithmetic, exactly where the scoped drivers used the `threads`
+    /// hint — so pooled and scoped partitioning are identical.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `body(0..n_jobs)` across the pool, blocking until every job
+    /// index has completed. Jobs are claimed dynamically (any thread
+    /// may run any index), so bodies must write disjoint data keyed by
+    /// index — the blocked drivers' row slabs do exactly that. Panics
+    /// in a body are re-raised here after all jobs settle.
+    pub fn scope(&self, n_jobs: usize, body: &(dyn Fn(usize) + Sync)) {
+        if n_jobs == 0 {
+            return;
+        }
+        if self.workers.is_empty() {
+            // threads = 1 fallback: pure inline execution, no locking.
+            for idx in 0..n_jobs {
+                body(idx);
+            }
+            return;
+        }
+        let raw: *const (dyn Fn(usize) + Sync + '_) = body;
+        // SAFETY: only the trait-object lifetime is erased (fat-pointer
+        // layout is unchanged); `TaskGuard` and the completion loop
+        // below keep the pointee alive until every job has run.
+        let job = JobPtr(unsafe { std::mem::transmute(raw) });
+        let shared = &*self.shared;
+        let mut st = shared.lock();
+        // A previous task can only still be pending if its caller
+        // panicked mid-scope on another thread; wait it out.
+        while st.job.is_some() || st.unfinished > 0 {
+            st = shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = Some(job);
+        st.n_jobs = n_jobs;
+        st.next_idx = 0;
+        st.unfinished = n_jobs;
+        // A prior scope that unwound out of its own job share leaves
+        // the flag set after propagating its panic; a fresh task must
+        // not inherit it.
+        st.panicked = false;
+        drop(st);
+        shared.work_cv.notify_all();
+
+        let guard = TaskGuard { shared };
+        // The caller is executor #0: claim jobs alongside the workers.
+        let mut st = shared.lock();
+        loop {
+            if st.next_idx < st.n_jobs {
+                let idx = st.next_idx;
+                st.next_idx += 1;
+                drop(st);
+                run_job(shared, job, idx);
+                st = shared.lock();
+            } else if st.unfinished > 0 {
+                st = shared.done_cv.wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            } else {
+                break;
+            }
+        }
+        let panicked = std::mem::replace(&mut st.panicked, false);
+        drop(st);
+        drop(guard);
+        if panicked {
+            panic!("WorkerPool: a pooled job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The reusable decode workspace: one per scheduler, threaded by `&mut`
+/// through `step_batch_into` -> `matmul_batch_into`. Buffers are
+/// reshaped in place each step and only ever grow, so a steady-state
+/// decode step allocates nothing here (the scheduler's one remaining
+/// per-step allocation is its batch-sized vector of lane-state
+/// borrows, which cannot be cached across steps).
+pub struct DecodeScratch {
+    /// (n, m)-transposed accumulation slab shared by every pooled
+    /// blocked driver call (gate/up/down/head reuse it in turn).
+    pub out_t: Vec<f32>,
+    /// (batch, hidden) residual-stream input (`gather_input_into`).
+    pub x: HostTensor,
+    /// (batch, hidden) RMS-normed activations (`rmsnorm_into`).
+    pub norm: HostTensor,
+    /// (batch, glu) gate projection, fused in place into the GLU
+    /// activation.
+    pub gate: HostTensor,
+    /// (batch, glu) up projection.
+    pub up: HostTensor,
+    /// (batch, hidden) down projection (residual delta).
+    pub down: HostTensor,
+    /// (batch, vocab) output logits — the step's result lives here.
+    pub logits: HostTensor,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        let empty = || HostTensor::zeros(vec![0, 0]);
+        DecodeScratch {
+            out_t: Vec::new(),
+            x: empty(),
+            norm: empty(),
+            gate: empty(),
+            up: empty(),
+            down: empty(),
+            logits: empty(),
+        }
+    }
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        DecodeScratch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_job_index_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> =
+            (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope(97, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_scopes() {
+        // The whole point: one pool, many dispatches (a decode step
+        // issues several matmuls; a serve run issues thousands).
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for round in 0..200 {
+            let jobs = 1 + round % 7;
+            pool.scope(jobs, &|i| {
+                total.fetch_add(i + 1, Ordering::SeqCst);
+            });
+        }
+        let want: usize = (0..200).map(|r| {
+            let j = 1 + r % 7;
+            j * (j + 1) / 2
+        }).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut out = vec![0usize; 8];
+        // With no workers, bodies run on the caller: &mut capture via
+        // interior mutability is unnecessary for the pool's own test —
+        // use a Mutex to keep the body Fn + Sync like real callers.
+        let cells = Mutex::new(&mut out);
+        pool.scope(8, &|i| {
+            cells.lock().unwrap()[i] = i * i;
+        });
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn zero_jobs_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.scope(0, &|_| panic!("no jobs should run"));
+    }
+
+    #[test]
+    fn more_jobs_than_threads_all_complete() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.scope(64, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.threads() >= 1);
+        let count = AtomicUsize::new(0);
+        pool.scope(5, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn job_panic_is_reraised_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the caller");
+        // The pool must still dispatch correctly afterwards.
+        let count = AtomicUsize::new(0);
+        pool.scope(6, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn scratch_starts_empty() {
+        let s = DecodeScratch::new();
+        assert!(s.out_t.is_empty());
+        assert_eq!(s.logits.len(), 0);
+    }
+}

@@ -69,6 +69,18 @@ impl HostTensor {
         &self.data[r0 * cols..r1 * cols]
     }
 
+    /// Reshape to (rows, cols) in place, reusing the allocation. The
+    /// contents are unspecified afterwards — callers must overwrite
+    /// every element. This is the reuse primitive behind
+    /// [`crate::runtime::DecodeScratch`]: steady-state decode steps
+    /// resize within capacity instead of allocating fresh tensors.
+    pub fn reset2(&mut self, rows: usize, cols: usize) {
+        self.shape.clear();
+        self.shape.push(rows);
+        self.shape.push(cols);
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Stack equal-length row slices into a (len, cols) batch tensor.
     pub fn stack_rows(rows: &[&[f32]]) -> HostTensor {
         assert!(!rows.is_empty(), "cannot stack zero rows");
@@ -172,6 +184,19 @@ mod tests {
         assert_eq!(t.rows_range(1, 1), &[] as &[f32]);
         t.row_mut(0)[1] = 9.0;
         assert_eq!(t.row(0), &[1., 9.]);
+    }
+
+    #[test]
+    fn reset2_reuses_allocation() {
+        let mut t = HostTensor::new(vec![4, 3], vec![1.0; 12]);
+        let cap = t.data.capacity();
+        t.reset2(2, 3); // shrink within capacity: no realloc
+        assert_eq!(t.dims2(), (2, 3));
+        assert_eq!(t.data.capacity(), cap);
+        t.reset2(4, 3); // grow back within original capacity
+        assert_eq!(t.dims2(), (4, 3));
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.data.capacity(), cap);
     }
 
     #[test]

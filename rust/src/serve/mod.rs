@@ -26,11 +26,16 @@
 //! walk in [`crate::ternary::matmul::ROW_BLOCK`]-row blocks by
 //! [`crate::ternary::matmul::COL_BLOCK_TRITS`]-element column panels
 //! with the x panel transposed once per block (L1-resident at batch 8),
-//! and w-rows are partitioned across `std::thread` workers. Every
-//! format keeps accumulation order batch- and thread-invariant, which
-//! is what makes serving deterministic: the same request decodes to the
-//! same tokens at any batch size, in any family
-//! (`tests/serve_determinism.rs`).
+//! and w-rows are partitioned across the scheduler's persistent
+//! [`crate::runtime::WorkerPool`] (dispatched, not spawned — see
+//! `runtime::pool` for the execution substrate and the
+//! [`crate::runtime::DecodeScratch`] buffer-reuse contract; the decode
+//! hot path is allocation-free at steady state). Every format keeps
+//! accumulation order batch- and thread-invariant, which is what makes
+//! serving deterministic: the same request decodes to the same tokens
+//! at any batch size, in any family (`tests/serve_determinism.rs`),
+//! and pooled execution is bitwise identical to the scoped-thread
+//! reference (`tests/pool_equivalence.rs`).
 //!
 //! Throughput: `benches/serve_throughput.rs` and `spectra serve-bench
 //! --family float,quant3,quant4,ternary` report tokens/sec and

@@ -30,7 +30,7 @@ use crate::checkpoint::Checkpoint;
 use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
 use crate::linear::{DenseF32, LinearFormat, QuantPacked};
 use crate::quant::QuantTensor;
-use crate::runtime::{HostTensor, SplitMix64};
+use crate::runtime::{DecodeScratch, HostTensor, SplitMix64, WorkerPool};
 use crate::ternary::{matmul_dense, PackedMatrix, TernaryTensor};
 use crate::Result;
 
@@ -65,8 +65,26 @@ pub trait DecodeModel {
     /// Contract: lane i's outputs and state update depend only on
     /// (`states[i]`, `tokens[i]`) — never on the other lanes — so a
     /// request decodes identically at any batch size.
+    ///
+    /// Compatibility entry point: allocates its activations and output
+    /// per call. The pooled scheduler drives
+    /// [`DecodeModel::step_batch_into`] instead.
     fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
                   threads: usize) -> HostTensor;
+
+    /// Scratch-aware decode step: identical math and numerics to
+    /// [`DecodeModel::step_batch`] at `threads = pool.threads()`
+    /// (bitwise — the serve determinism suite checks this), but
+    /// executed on a persistent [`WorkerPool`] with every activation
+    /// buffer reused from `scratch`. The logits land in
+    /// `scratch.logits` as a (batch, vocab) tensor.
+    ///
+    /// The default falls back to the allocating path so external
+    /// models stay correct.
+    fn step_batch_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                       pool: &WorkerPool, scratch: &mut DecodeScratch) {
+        scratch.logits = self.step_batch(states, tokens, pool.threads());
+    }
 
     /// Storage-format label of the linears (e.g. "fp32", "q4g128",
     /// "ternary") — serving telemetry for the cross-family table.
@@ -114,28 +132,39 @@ fn silu(v: f32) -> f32 {
     v / (1.0 + (-v).exp())
 }
 
-/// Row-wise RMS norm (no learned gain — the serve model keeps norms
-/// parameter-free so checkpoint import only needs the linears).
-fn rmsnorm(x: &HostTensor) -> HostTensor {
+/// Row-wise RMS norm into a reused buffer (no learned gain — the serve
+/// model keeps norms parameter-free so checkpoint import only needs
+/// the linears). `out` is reshaped in place and fully overwritten; the
+/// decode hot path feeds it from [`DecodeScratch`] instead of cloning
+/// the full activation tensor every layer.
+fn rmsnorm_into(x: &HostTensor, out: &mut HostTensor) {
     let (rows, cols) = x.dims2();
-    let mut out = x.clone();
+    out.reset2(rows, cols);
     for r in 0..rows {
-        let row = out.row_mut(r);
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / cols as f32;
+        let xr = x.row(r);
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / cols as f32;
         let inv = 1.0 / (ms + RMS_EPS).sqrt();
-        for v in row {
-            *v *= inv;
+        for (o, &v) in out.row_mut(r).iter_mut().zip(xr) {
+            *o = v * inv;
         }
     }
+}
+
+/// Allocating [`rmsnorm_into`] wrapper (calibration + compatibility
+/// paths; bitwise-identical output).
+fn rmsnorm(x: &HostTensor) -> HostTensor {
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    rmsnorm_into(x, &mut out);
     out
 }
 
-/// x = embed[token] + state, stacked to a (batch, hidden) tensor.
-fn gather_input(embed: &HostTensor, states: &[&mut [f32]], tokens: &[u32])
-                -> HostTensor {
+/// x = embed[token] + state, written into a reused (batch, hidden)
+/// buffer (reshaped in place, fully overwritten).
+fn gather_input_into(embed: &HostTensor, states: &[&mut [f32]],
+                     tokens: &[u32], x: &mut HostTensor) {
     let (vocab, hidden) = embed.dims2();
     assert_eq!(states.len(), tokens.len());
-    let mut x = HostTensor::zeros(vec![tokens.len(), hidden]);
+    x.reset2(tokens.len(), hidden);
     for (bi, (&tok, st)) in tokens.iter().zip(states.iter()).enumerate() {
         assert_eq!(st.len(), hidden, "lane {bi} state len");
         let e = embed.row(tok as usize % vocab);
@@ -144,6 +173,13 @@ fn gather_input(embed: &HostTensor, states: &[&mut [f32]], tokens: &[u32])
             row[j] = e[j] + st[j];
         }
     }
+}
+
+/// Allocating [`gather_input_into`] wrapper (compatibility path).
+fn gather_input(embed: &HostTensor, states: &[&mut [f32]], tokens: &[u32])
+                -> HostTensor {
+    let mut x = HostTensor::zeros(vec![0, 0]);
+    gather_input_into(embed, states, tokens, &mut x);
     x
 }
 
@@ -181,6 +217,40 @@ impl<L: LinearFormat> DecodeModel for SpectraLm<L> {
         let y = rmsnorm(&x);
         update_states(states, &x);
         self.head.matmul_batch(&y, threads)
+    }
+
+    /// The allocation-free decode step: every buffer lives in
+    /// `scratch`, every matmul runs on `pool`. Identical math (and
+    /// bitwise-identical results) to [`SpectraLm::step_batch`]; the
+    /// only differences are where buffers come from and that threads
+    /// are dispatched instead of spawned.
+    fn step_batch_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                       pool: &WorkerPool, scratch: &mut DecodeScratch) {
+        gather_input_into(&self.embed, states, tokens, &mut scratch.x);
+        for blk in &self.blocks {
+            rmsnorm_into(&scratch.x, &mut scratch.norm);
+            blk.gate.matmul_batch_into(&scratch.norm, pool,
+                                       &mut scratch.out_t, &mut scratch.gate);
+            blk.up.matmul_batch_into(&scratch.norm, pool,
+                                     &mut scratch.out_t, &mut scratch.up);
+            // Fuse the GLU activation in place into the gate buffer.
+            for (av, &uv) in scratch.gate.data.iter_mut()
+                .zip(scratch.up.data.iter())
+            {
+                *av = silu(*av) * uv;
+            }
+            blk.down.matmul_batch_into(&scratch.gate, pool,
+                                       &mut scratch.out_t, &mut scratch.down);
+            for (xv, &dv) in scratch.x.data.iter_mut()
+                .zip(scratch.down.data.iter())
+            {
+                *xv += dv;
+            }
+        }
+        rmsnorm_into(&scratch.x, &mut scratch.norm);
+        update_states(states, &scratch.x);
+        self.head.matmul_batch_into(&scratch.norm, pool, &mut scratch.out_t,
+                                    &mut scratch.logits);
     }
 
     fn family_label(&self) -> String {
@@ -691,6 +761,41 @@ mod tests {
             assert_eq!(logits.shape, vec![1, 64], "{}", spec.label());
             assert!(logits.data.iter().all(|v| v.is_finite()),
                     "{}: non-finite logits", spec.label());
+        }
+    }
+
+    #[test]
+    fn step_batch_into_matches_step_batch_bitwise() {
+        // The pooled/scratch decode step is the allocating step, run on
+        // different plumbing: logits AND updated states must be
+        // bitwise identical, for every family, with one scratch reused
+        // across families and steps.
+        let latent = LatentLm::synthetic(small_dims(), 1, 12);
+        let pool = WorkerPool::new(2);
+        let mut scratch = DecodeScratch::new();
+        let specs = [
+            FamilySpec::Float,
+            FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+            FamilySpec::Ternary,
+        ];
+        for spec in specs {
+            let m = latent.build(spec).unwrap();
+            let mut st_a = vec![vec![0.0f32; 32]; 3];
+            let mut st_b = st_a.clone();
+            for (step, toks) in [[1u32, 9, 60], [4, 4, 31]].iter().enumerate() {
+                let mut refs_a: Vec<&mut [f32]> =
+                    st_a.iter_mut().map(|s| s.as_mut_slice()).collect();
+                let want = m.step_batch(&mut refs_a, toks, pool.threads());
+                let mut refs_b: Vec<&mut [f32]> =
+                    st_b.iter_mut().map(|s| s.as_mut_slice()).collect();
+                m.step_batch_into(&mut refs_b, toks, &pool, &mut scratch);
+                assert_eq!(scratch.logits.shape, want.shape,
+                           "{} step {step}", spec.label());
+                assert_eq!(scratch.logits.data, want.data,
+                           "{} step {step}: logits diverge", spec.label());
+                assert_eq!(st_a, st_b,
+                           "{} step {step}: states diverge", spec.label());
+            }
         }
     }
 

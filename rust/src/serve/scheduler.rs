@@ -21,7 +21,7 @@
 
 use std::collections::VecDeque;
 
-use crate::runtime::SplitMix64;
+use crate::runtime::{DecodeScratch, SplitMix64, WorkerPool};
 use crate::serve::model::DecodeModel;
 
 /// Per-lane sampling policy.
@@ -89,13 +89,17 @@ struct Lane {
 }
 
 impl Lane {
-    fn new(req: GenRequest, hidden: usize) -> Lane {
+    /// `state` is a zeroed hidden-state buffer — freshly allocated or
+    /// recycled from a retired lane (the scheduler's admission path
+    /// reuses buffers so steady-state traffic stops allocating one
+    /// `Vec<f32>` per admitted request).
+    fn new(req: GenRequest, state: Vec<f32>) -> Lane {
         let seed = match req.sampling {
             Sampling::TopK { seed, .. } => seed,
             Sampling::Greedy => req.id as u64,
         };
         Lane {
-            state: vec![0.0; hidden],
+            state,
             pos: 0,
             generated: Vec::with_capacity(req.max_new_tokens),
             rng: SplitMix64::new(seed),
@@ -116,26 +120,44 @@ impl Lane {
 
 /// Continuous-batching decode engine over any [`DecodeModel`]
 /// (including trait objects).
+///
+/// The scheduler owns the serving execution substrate for its whole
+/// lifetime: one persistent [`WorkerPool`] (kernel threads are
+/// dispatched, never spawned, across every matmul of every step) and
+/// one [`DecodeScratch`] (activation/logit/accumulator buffers reused
+/// across steps), plus recycled lane-state buffers — steady-state
+/// tensor/thread traffic is gone; the only per-step heap use left is
+/// one small vector of lane-state borrows (it cannot outlive the step,
+/// so it cannot be cached).
 pub struct Scheduler<'m, M: DecodeModel + ?Sized> {
     model: &'m M,
     max_batch: usize,
-    threads: usize,
+    pool: WorkerPool,
+    scratch: DecodeScratch,
     queue: VecDeque<GenRequest>,
     lanes: Vec<Option<Lane>>,
+    /// Zeroable hidden-state buffers handed back by retired lanes,
+    /// reused on admission.
+    free_states: Vec<Vec<f32>>,
+    /// Next-token staging buffer reused across steps.
+    token_buf: Vec<u32>,
     stats: ServeStats,
 }
 
 impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
-    /// `max_batch` lanes; `threads` is passed through to the kernels
+    /// `max_batch` lanes; `threads` sizes the persistent kernel pool
     /// (0 = auto).
     pub fn new(model: &'m M, max_batch: usize, threads: usize) -> Self {
         let max_batch = max_batch.max(1);
         Scheduler {
             model,
             max_batch,
-            threads,
+            pool: WorkerPool::new(threads),
+            scratch: DecodeScratch::new(),
             queue: VecDeque::new(),
             lanes: (0..max_batch).map(|_| None).collect(),
+            free_states: Vec::new(),
+            token_buf: Vec::new(),
             stats: ServeStats::default(),
         }
     }
@@ -164,33 +186,66 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         for slot in &mut self.lanes {
             if slot.is_none() {
                 let Some(req) = self.queue.pop_front() else { break };
-                *slot = Some(Lane::new(req, hidden));
+                // Recycle a retired lane's state buffer when one is
+                // available (zeroed here; `free_states` holds them
+                // as-retired).
+                let state = match self.free_states.pop() {
+                    Some(mut s) => {
+                        debug_assert_eq!(s.len(), hidden);
+                        s.fill(0.0);
+                        s
+                    }
+                    None => vec![0.0; hidden],
+                };
+                *slot = Some(Lane::new(req, state));
             }
         }
     }
 
     /// One batched step across all live lanes. Returns any requests
     /// that finished on this step.
+    ///
+    /// Compatibility wrapper over [`Scheduler::step_into`] — it
+    /// allocates the completion vector per call; callers that step in
+    /// a loop should pass one reusable vector to `step_into` (as
+    /// [`Scheduler::run`] does).
     pub fn step(&mut self) -> Vec<Completion> {
+        let mut done = Vec::new();
+        self.step_into(&mut done);
+        done
+    }
+
+    /// One batched step across all live lanes; requests that finished
+    /// on this step are appended to `done`. Steady-state allocation is
+    /// reduced to the one unavoidable piece: tokens stage in a reused
+    /// buffer, the kernel invocation runs through the scheduler's
+    /// pool + scratch, nothing is allocated when no lane retires — only
+    /// the batch-sized vector of `&mut` lane-state borrows is built per
+    /// step (a borrow cannot be stored across steps).
+    pub fn step_into(&mut self, done: &mut Vec<Completion>) {
         self.admit();
-        let tokens: Vec<u32> = self.lanes.iter()
-            .filter_map(|s| s.as_ref().map(Lane::next_token))
-            .collect();
-        if tokens.is_empty() {
-            return Vec::new();
+        self.token_buf.clear();
+        for s in self.lanes.iter() {
+            if let Some(lane) = s {
+                self.token_buf.push(lane.next_token());
+            }
+        }
+        if self.token_buf.is_empty() {
+            return;
         }
         let mut state_refs: Vec<&mut [f32]> = self.lanes.iter_mut()
             .filter_map(|s| s.as_mut().map(|l| l.state.as_mut_slice()))
             .collect();
-        let logits =
-            self.model.step_batch(&mut state_refs, &tokens, self.threads);
+        self.model.step_batch_into(&mut state_refs, &self.token_buf,
+                                   &self.pool, &mut self.scratch);
         drop(state_refs);
+        let logits = &self.scratch.logits;
 
         self.stats.batch_steps += 1;
-        self.stats.lane_steps += tokens.len();
-        self.stats.peak_occupancy = self.stats.peak_occupancy.max(tokens.len());
+        self.stats.lane_steps += self.token_buf.len();
+        self.stats.peak_occupancy =
+            self.stats.peak_occupancy.max(self.token_buf.len());
 
-        let mut done = Vec::new();
         let mut ai = 0usize; // index into the batch = live-lane ordinal
         for slot in &mut self.lanes {
             let Some(lane) = slot.as_mut() else { continue };
@@ -209,6 +264,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 self.stats.generated_tokens += 1;
                 if lane.generated.len() >= lane.req.max_new_tokens {
                     let lane = slot.take().unwrap();
+                    self.free_states.push(lane.state);
                     done.push(Completion {
                         id: lane.req.id,
                         prompt_len: lane.req.prompt.len(),
@@ -219,7 +275,6 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             }
             ai += 1;
         }
-        done
     }
 
     /// Drain the queue: step until every submitted request completes.
@@ -227,7 +282,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
     pub fn run(&mut self) -> Vec<Completion> {
         let mut out = Vec::new();
         while self.pending() > 0 {
-            out.extend(self.step());
+            self.step_into(&mut out);
         }
         out.sort_by_key(|c| c.id);
         out
@@ -348,6 +403,50 @@ mod tests {
         let mut t = Scheduler::new(&lm, 1, 1);
         t.submit(GenRequest::top_k(0, vec![7], 5, 1, 1.0, 42));
         assert_eq!(g.run()[0].tokens, t.run()[0].tokens);
+    }
+
+    #[test]
+    fn recycled_state_buffers_do_not_leak_context() {
+        // A second wave served by a scheduler whose lanes all recycle
+        // retired-state buffers must decode exactly like a fresh
+        // scheduler: recycling is invisible (buffers are re-zeroed).
+        let lm = small_model();
+        let reqs = |base: usize| -> Vec<GenRequest> {
+            (0..6).map(|i| GenRequest::greedy(
+                base + i, vec![(3 * i) as u32, 11], 4)).collect()
+        };
+        let mut warm = Scheduler::new(&lm, 3, 2);
+        for r in reqs(0) {
+            warm.submit(r);
+        }
+        let _ = warm.run(); // every lane has now retired at least once
+        for r in reqs(100) {
+            warm.submit(r);
+        }
+        let warm_tokens: Vec<Vec<u32>> =
+            warm.run().into_iter().map(|c| c.tokens).collect();
+
+        let mut fresh = Scheduler::new(&lm, 3, 2);
+        for r in reqs(100) {
+            fresh.submit(r);
+        }
+        let fresh_tokens: Vec<Vec<u32>> =
+            fresh.run().into_iter().map(|c| c.tokens).collect();
+        assert_eq!(warm_tokens, fresh_tokens);
+    }
+
+    #[test]
+    fn step_into_appends_without_clearing() {
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 2, 1);
+        for id in 0..4 {
+            sched.submit(GenRequest::greedy(id, vec![1], 2));
+        }
+        let mut done = Vec::new();
+        while sched.pending() > 0 {
+            sched.step_into(&mut done);
+        }
+        assert_eq!(done.len(), 4, "completions must accumulate in place");
     }
 
     #[test]

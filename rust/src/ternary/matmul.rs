@@ -25,12 +25,37 @@
 //! logits are bitwise identical whether it decodes alone or batched —
 //! see `tests/serve_determinism.rs`.
 //!
+//! Execution substrates — two drivers share every kernel body:
+//!
+//! - [`blocked_rows_driver`] (scoped): spawns a fresh
+//!   `std::thread::scope` per call and allocates its own output
+//!   buffers. The original path; kept as the compatibility wrapper
+//!   behind [`matmul_ternary_packed`] and as the reference the pooled
+//!   path is tested bitwise against.
+//! - [`blocked_rows_driver_pooled`] (hot path): dispatches the same
+//!   row partition onto a persistent [`crate::runtime::WorkerPool`]
+//!   and accumulates into a caller-owned scratch slab
+//!   ([`matmul_ternary_packed_into`]). Zero spawns, zero allocations
+//!   at steady state. Partition arithmetic is shared, every row chunk
+//!   writes a disjoint slab, and per-worker panel scratch is
+//!   thread-local (workers are long-lived), so pooled results are
+//!   bitwise identical to scoped results at every thread count —
+//!   `tests/pool_equivalence.rs` locks this in.
+//!
+//! Scratch ownership: the caller owns the `(n, m)` transposed slab and
+//! the output tensor (threaded down from
+//! [`crate::runtime::DecodeScratch`]); the transposed x panel each
+//! worker transposes per (row-block, panel) pair lives in a
+//! thread-local buffer that persists across calls.
+//!
 //! `benches/ternary_matmul.rs` and `benches/serve_throughput.rs`
 //! measure the realized ratios.
 
+use std::cell::RefCell;
+
 use super::pack::{Packed2Bit, PackedMatrix};
 use super::TernaryTensor;
-use crate::runtime::HostTensor;
+use crate::runtime::{HostTensor, WorkerPool};
 
 /// Rows of packed weights processed per column-panel pass. Sized so a
 /// block's accumulators (`ROW_BLOCK * batch` f32, 4 KiB at batch 8)
@@ -183,20 +208,53 @@ pub fn matmul_ternary_dense(x: &HostTensor, t: &TernaryTensor) -> HostTensor {
     HostTensor::new(vec![m, t.rows], out)
 }
 
+/// Per-thread transposed-x-panel scratch. Persistent because both
+/// executors keep their threads alive across calls: pool workers live
+/// for the scheduler's lifetime, and the calling thread is long-lived
+/// by definition — so steady-state decode steps never allocate here.
+/// Scoped-thread workers (the legacy driver) get a fresh buffer per
+/// spawn, which is exactly the allocation the pool removes. The buffer
+/// is only ever *written-then-read* within one panel (`[..cb * m]`), so
+/// stale contents can never leak into results.
+fn with_panel_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    thread_local! {
+        static X_PANEL: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+    }
+    X_PANEL.with(|buf| {
+        let mut buf = buf.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
 /// The blocked batched-decode kernel body for w-rows `[r0, r1)`.
 ///
 /// `out_t` is the (rows, m)-transposed output slab for this row range:
-/// `out_t[(r - r0) * m + mi]` accumulates x-row `mi` against w-row `r`.
-/// Walks column panels of [`COL_BLOCK_TRITS`]; per panel the x block is
-/// transposed into `(k, m)` scratch so each decoded trit updates all m
+/// `out_t[(r - r0) * m + mi]` accumulates x-row `mi` against w-row `r`
+/// (the slab must arrive zeroed). Walks column panels of
+/// [`COL_BLOCK_TRITS`]; per panel the x block is transposed into
+/// `(k, m)` thread-local scratch so each decoded trit updates all m
 /// lanes with one broadcast multiply-add over a contiguous m-vector.
 fn packed_rows_kernel(w: &PackedMatrix, x: &HostTensor,
                       r0: usize, r1: usize, out_t: &mut [f32]) {
+    let m = x.dims2().0;
+    with_panel_scratch(COL_BLOCK_TRITS * m, |x_t| {
+        packed_rows_body(w, x, r0, r1, out_t, x_t)
+    })
+}
+
+/// [`packed_rows_kernel`] with the `(k-panel, m)` transpose scratch
+/// passed explicitly (scratch acquisition split out for readability).
+fn packed_rows_body(w: &PackedMatrix, x: &HostTensor,
+                    r0: usize, r1: usize, out_t: &mut [f32],
+                    x_t: &mut [f32]) {
     let (m, k) = x.dims2();
     debug_assert_eq!(k, w.cols);
     debug_assert_eq!(out_t.len(), (r1 - r0) * m);
+    debug_assert_eq!(x_t.len(), COL_BLOCK_TRITS * m);
     let lut = trit_lut();
-    let mut x_t = vec![0.0f32; COL_BLOCK_TRITS * m]; // (k-panel, m) scratch
     for rb in (r0..r1).step_by(ROW_BLOCK) {
         let rb_end = (rb + ROW_BLOCK).min(r1);
         let mut kb = 0usize;
@@ -255,10 +313,13 @@ fn packed_rows_kernel(w: &PackedMatrix, x: &HostTensor,
     }
 }
 
-/// Shared threaded driver for blocked row-partitioned matmul kernels
-/// (the ternary kernel here and the k-bit quant kernel in
+/// Shared *scoped-thread* driver for blocked row-partitioned matmul
+/// kernels (the ternary kernel here and the k-bit quant kernel in
 /// `linear::qmatmul` run through the same scaffold, so their threading
-/// behavior cannot diverge).
+/// behavior cannot diverge). Spawns fresh threads and allocates fresh
+/// buffers per call; [`blocked_rows_driver_pooled`] is the
+/// overhead-free twin the serving hot path uses, with partitioning
+/// shared via [`effective_threads`].
 ///
 /// `threads = 0` uses `std::thread::available_parallelism()`. The `n`
 /// weight rows (output columns) are partitioned into contiguous
@@ -276,15 +337,7 @@ pub(crate) fn blocked_rows_driver(
     if m == 0 || n == 0 {
         return HostTensor::new(vec![m, n], vec![0.0; m * n]);
     }
-    let work = n.saturating_mul(k).saturating_mul(m);
-    let threads = if threads == 0 {
-        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
-    } else {
-        threads
-    }
-    .min(n)
-    .min((work / MIN_WORK_PER_THREAD).max(1))
-    .max(1);
+    let threads = effective_threads(m, k, n, threads);
 
     let mut out_t = vec![0.0f32; n * m]; // (n, m) transposed
     if threads == 1 {
@@ -309,18 +362,108 @@ pub(crate) fn blocked_rows_driver(
     HostTensor::new(vec![m, n], out)
 }
 
+/// Effective worker count for an (m, k, n) matmul given a requested
+/// thread budget: capped by the row count and by
+/// [`MIN_WORK_PER_THREAD`]. Shared by the scoped and pooled drivers so
+/// their row partitioning can never diverge (the bitwise-equivalence
+/// contract of `tests/pool_equivalence.rs`).
+pub(crate) fn effective_threads(m: usize, k: usize, n: usize,
+                                requested: usize) -> usize {
+    let work = n.saturating_mul(k).saturating_mul(m);
+    let requested = if requested == 0 {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    requested.min(n).min((work / MIN_WORK_PER_THREAD).max(1)).max(1)
+}
+
+/// `*mut f32` that can cross into pool jobs. Each job derives a
+/// disjoint slab from it (`[r0 * m, r1 * m)` with non-overlapping row
+/// ranges), so concurrent writes never alias.
+#[derive(Clone, Copy)]
+struct SlabBase(*mut f32);
+unsafe impl Send for SlabBase {}
+unsafe impl Sync for SlabBase {}
+
+/// The pooled twin of [`blocked_rows_driver`]: same row partitioning,
+/// same kernel bodies, but jobs dispatch onto a persistent
+/// [`WorkerPool`] and accumulation reuses the caller's `out_t` slab
+/// and `out` tensor — no thread spawns and no allocations at steady
+/// state (buffers grow once, then stabilize). `out` is reshaped to
+/// (m, n) in place and fully overwritten.
+pub(crate) fn blocked_rows_driver_pooled(
+    m: usize, k: usize, n: usize, pool: &WorkerPool,
+    out_t: &mut Vec<f32>, out: &mut HostTensor,
+    kernel: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    out.reset2(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = effective_threads(m, k, n, pool.threads());
+    // clear + resize = one memset of the slab the kernels accumulate
+    // into (they require zero-initialized accumulators).
+    out_t.clear();
+    out_t.resize(n * m, 0.0);
+    let chunk = n.div_ceil(threads);
+    let jobs = n.div_ceil(chunk);
+    if jobs == 1 {
+        kernel(0, n, &mut out_t[..]);
+    } else {
+        let base = SlabBase(out_t.as_mut_ptr());
+        pool.scope(jobs, &|ti| {
+            let r0 = ti * chunk;
+            let r1 = (r0 + chunk).min(n);
+            // SAFETY: job `ti` exclusively owns rows [r0, r1) of the
+            // (n, m) slab; ranges are disjoint across jobs and `out_t`
+            // is not touched elsewhere until `scope` returns.
+            let slab = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r0 * m),
+                                               (r1 - r0) * m)
+            };
+            kernel(r0, r1, slab);
+        });
+    }
+    // Assemble row-major (m, n) from the (n, m) accumulation slab.
+    for r in 0..n {
+        for mi in 0..m {
+            out.data[mi * n + r] = out_t[r * m + mi];
+        }
+    }
+}
+
 /// Batched packed-ternary matmul: y = x @ w_packed^T with per-shard
 /// scales. x: (m, k), w: (n, k) packed -> (m, n).
 ///
 /// Threading via [`blocked_rows_driver`]. Accumulation order per
 /// output element is independent of both `threads` and `m` (fixed
 /// [`COL_BLOCK_TRITS`] panels), so results are batch-invariant.
+///
+/// Compatibility wrapper: spawns scoped threads and allocates its
+/// output per call. The serving hot path uses
+/// [`matmul_ternary_packed_into`] instead.
 pub fn matmul_ternary_packed(x: &HostTensor, w: &PackedMatrix,
                              threads: usize) -> HostTensor {
     let (m, k) = x.dims2();
     assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
     blocked_rows_driver(m, k, w.rows, threads,
                         |r0, r1, slab| packed_rows_kernel(w, x, r0, r1, slab))
+}
+
+/// Allocation-free batched packed-ternary matmul: identical math and
+/// partitioning to [`matmul_ternary_packed`] (results are bitwise
+/// equal at the pool's thread count), but executed on a persistent
+/// [`WorkerPool`] with the accumulation slab and output tensor reused
+/// from caller-owned scratch.
+pub fn matmul_ternary_packed_into(x: &HostTensor, w: &PackedMatrix,
+                                  pool: &WorkerPool, out_t: &mut Vec<f32>,
+                                  out: &mut HostTensor) {
+    let (m, k) = x.dims2();
+    assert_eq!(k, w.cols, "x cols {k} != packed weight cols {}", w.cols);
+    blocked_rows_driver_pooled(
+        m, k, w.rows, pool, out_t, out,
+        |r0, r1, slab| packed_rows_kernel(w, x, r0, r1, slab));
 }
 
 #[cfg(test)]
@@ -431,6 +574,33 @@ mod tests {
             let solo = matmul_ternary_packed(&x1, &pm, 1);
             assert_eq!(solo.data, batched.row(mi),
                        "lane {mi} diverges between batch sizes");
+        }
+    }
+
+    #[test]
+    fn pooled_matmul_is_bitwise_identical_to_scoped() {
+        use crate::runtime::WorkerPool;
+        let w = HostTensor::randn(vec![ROW_BLOCK + 9, COL_BLOCK_TRITS + 37],
+                                  0.05, 27);
+        // mp=1: 137 rows are not divisible into multiple scale shards.
+        let t = TernaryTensor::from_latent(&w, 1);
+        let pm = PackedMatrix::from_ternary(&t);
+        let mut out_t = Vec::new();
+        let mut out = HostTensor::zeros(vec![0, 0]);
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            for m in [1usize, 3, 8] {
+                let x = HostTensor::randn(vec![m, t.cols], 1.0,
+                                          28 ^ (m as u64));
+                let want = matmul_ternary_packed(&x, &pm, threads);
+                // Reuse the same scratch across calls: stale contents
+                // from the previous (larger or smaller) shape must not
+                // leak through.
+                matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t,
+                                           &mut out);
+                assert_eq!(out.shape, want.shape, "t{threads} m{m}");
+                assert_eq!(out.data, want.data, "t{threads} m{m}");
+            }
         }
     }
 

@@ -26,7 +26,8 @@ pub mod matmul;
 pub mod pack;
 
 pub use matmul::{matvec_dense, matvec_ternary_packed, matmul_dense,
-                 matmul_ternary_dense, matmul_ternary_packed};
+                 matmul_ternary_dense, matmul_ternary_packed,
+                 matmul_ternary_packed_into};
 pub use pack::{Packed2Bit, PackedBase3, PackedMatrix};
 
 use crate::runtime::HostTensor;

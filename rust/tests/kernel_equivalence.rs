@@ -18,6 +18,12 @@
 //! same batch/thread grid; acceptance bar max |err| < 1e-3 plus bitwise
 //! batch/thread invariance. All inputs come from seeded SplitMix64
 //! streams.
+//!
+//! This suite checks the *scoped-thread* kernels against the dequant
+//! reference; `tests/pool_equivalence.rs` then pins the pooled serving
+//! path (`matmul_*_packed_into` on a persistent `WorkerPool`) bitwise
+//! against these — so accuracy is proven once here and inherited by
+//! the allocation-free hot path.
 
 use spectra::linear::{matmul_quant_packed, QuantPacked};
 use spectra::quant::QuantTensor;

@@ -1,0 +1,173 @@
+//! Pooled-execution equivalence harness: the persistent-[`WorkerPool`]
+//! serving path against the scoped-thread reference, bitwise.
+//!
+//! The pool removes per-matmul thread spawns and per-step allocations
+//! from the decode hot path; this suite pins down that it removes
+//! *only* overhead, never numerics:
+//!
+//! - pooled vs scoped blocked kernels (ternary and k-bit quant) are
+//!   bitwise identical over the kernel-equivalence shape grid, at
+//!   every tested batch size and thread count (including the
+//!   threads=1 inline fallback);
+//! - one pool + one scratch reused across many calls of many shapes
+//!   produces the same results as fresh per-call execution (stale
+//!   scratch can never leak);
+//! - the pooled dense path is bitwise identical to `matmul_dense`.
+
+use spectra::linear::{matmul_quant_packed, matmul_quant_packed_into,
+                      DenseF32, LinearFormat, QuantPacked};
+use spectra::quant::QuantTensor;
+use spectra::runtime::{HostTensor, WorkerPool};
+use spectra::ternary::matmul::{COL_BLOCK_TRITS, ROW_BLOCK};
+use spectra::ternary::{matmul_dense, matmul_ternary_packed,
+                       matmul_ternary_packed_into, PackedMatrix,
+                       TernaryTensor};
+
+/// The kernel-equivalence shape grid (edge + tile-spanning shapes).
+fn shape_grid() -> Vec<(usize, usize)> {
+    vec![
+        (1, 4),
+        (1, 7),
+        (3, 5),
+        (7, 10),
+        (16, 16),
+        (33, 64),
+        (ROW_BLOCK + 9, COL_BLOCK_TRITS + 37),
+        (64, 48),
+    ]
+}
+
+#[test]
+fn pooled_ternary_matches_scoped_bitwise_over_grid() {
+    let mut seed = 0x900Du64;
+    let mut out_t = Vec::new();
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    for threads in [1usize, 2, 5] {
+        let pool = WorkerPool::new(threads);
+        assert_eq!(pool.threads(), threads);
+        for (rows, cols) in shape_grid() {
+            seed += 1;
+            let w = HostTensor::randn(vec![rows, cols], 0.05, seed);
+            let t = TernaryTensor::from_latent(&w, 1);
+            let pm = PackedMatrix::from_ternary(&t);
+            for m in [1usize, 3, 8] {
+                let x = HostTensor::randn(vec![m, cols], 1.0,
+                                          seed ^ (m as u64) << 8);
+                let want = matmul_ternary_packed(&x, &pm, threads);
+                matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t,
+                                           &mut out);
+                assert_eq!(out.shape, want.shape,
+                           "{rows}x{cols} m{m} t{threads}");
+                assert_eq!(out.data, want.data,
+                           "{rows}x{cols} m{m} t{threads}: pooled ternary \
+                            diverges from scoped");
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_quant_matches_scoped_bitwise_over_grid() {
+    let mut seed = 0x900Eu64;
+    let mut out_t = Vec::new();
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    for bits in [3u32, 4] {
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            for (rows, cols) in [(1usize, 7usize), (8, 100), (33, 130),
+                                 (ROW_BLOCK + 9, COL_BLOCK_TRITS + 37)] {
+                seed += 1;
+                let w = HostTensor::randn(vec![rows, cols], 0.05, seed);
+                let qp = QuantPacked::from_quant(
+                    &QuantTensor::quantize_rtn(&w, bits, 128));
+                for m in [1usize, 8] {
+                    let x = HostTensor::randn(vec![m, cols], 1.0,
+                                              seed ^ (m as u64) << 8);
+                    let want = matmul_quant_packed(&x, &qp, threads);
+                    matmul_quant_packed_into(&x, &qp, &pool, &mut out_t,
+                                             &mut out);
+                    assert_eq!(out.data, want.data,
+                               "{rows}x{cols} b{bits} m{m} t{threads}: \
+                                pooled quant diverges from scoped");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_dense_matches_matmul_dense_bitwise() {
+    let pool = WorkerPool::new(3);
+    let mut out_t = Vec::new();
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    for (rows, cols) in [(16usize, 16usize), (ROW_BLOCK + 9, 70)] {
+        let d = DenseF32 { w: HostTensor::randn(vec![rows, cols], 0.1, 51) };
+        for m in [1usize, 8] {
+            let x = HostTensor::randn(vec![m, cols], 1.0, 52 + m as u64);
+            let want = matmul_dense(&x, &d.w);
+            d.matmul_batch_into(&x, &pool, &mut out_t, &mut out);
+            assert_eq!(out.data, want.data, "{rows}x{cols} m{m}");
+        }
+    }
+}
+
+#[test]
+fn one_pool_and_scratch_survive_many_mixed_calls() {
+    // The serving pattern: one pool + one scratch, thousands of
+    // dispatches over shapes that shrink and grow between calls. Every
+    // result must match per-call scoped execution — stale out_t/out
+    // contents and stale thread-local panels must never leak.
+    let pool = WorkerPool::new(4);
+    let mut out_t = Vec::new();
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    let shapes = [(40usize, 24usize), (7, 10), (ROW_BLOCK + 1, 64),
+                  (3, COL_BLOCK_TRITS + 5), (40, 24)];
+    for round in 0..30 {
+        let (rows, cols) = shapes[round % shapes.len()];
+        let w = HostTensor::randn(vec![rows, cols], 0.05, 60 + round as u64);
+        let t = TernaryTensor::from_latent(&w, 1);
+        let pm = PackedMatrix::from_ternary(&t);
+        let m = 1 + round % 8;
+        let x = HostTensor::randn(vec![m, cols], 1.0, 90 + round as u64);
+        let want = matmul_ternary_packed(&x, &pm, 4);
+        matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t, &mut out);
+        assert_eq!(out.data, want.data, "round {round} {rows}x{cols} m{m}");
+    }
+}
+
+#[test]
+fn single_thread_pool_is_the_inline_fallback() {
+    // threads = 1 must mean: no workers, no dispatch, results bitwise
+    // equal to the single-threaded scoped path.
+    let pool = WorkerPool::new(1);
+    let w = HostTensor::randn(vec![48, COL_BLOCK_TRITS + 11], 0.05, 71);
+    let t = TernaryTensor::from_latent(&w, 2);
+    let pm = PackedMatrix::from_ternary(&t);
+    let x = HostTensor::randn(vec![8, t.cols], 1.0, 72);
+    let want = matmul_ternary_packed(&x, &pm, 1);
+    let mut out_t = Vec::new();
+    let mut out = HostTensor::zeros(vec![0, 0]);
+    matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t, &mut out);
+    assert_eq!(out.data, want.data);
+}
+
+#[test]
+fn pooled_results_are_thread_count_invariant() {
+    // The serve determinism contract, stated directly on the pooled
+    // kernels: the thread count only partitions rows, it never
+    // reorders accumulation.
+    let w = HostTensor::randn(vec![96, COL_BLOCK_TRITS + 19], 0.05, 81);
+    let t = TernaryTensor::from_latent(&w, 2);
+    let pm = PackedMatrix::from_ternary(&t);
+    let x = HostTensor::randn(vec![8, t.cols], 1.0, 82);
+    let mut out_t = Vec::new();
+    let mut reference = HostTensor::zeros(vec![0, 0]);
+    matmul_ternary_packed_into(&x, &pm, &WorkerPool::new(1), &mut out_t,
+                               &mut reference);
+    for threads in [2usize, 3, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut got = HostTensor::zeros(vec![0, 0]);
+        matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t, &mut got);
+        assert_eq!(got.data, reference.data, "threads={threads}");
+    }
+}

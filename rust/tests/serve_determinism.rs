@@ -10,9 +10,15 @@
 //! both the ternary and the k-bit quant kernel bitwise), and (c)
 //! greedy ties break by token id while top-k draws from a per-request
 //! seeded stream.
+//!
+//! The scheduler now executes on a persistent worker pool with reused
+//! decode scratch (see `runtime::pool`); every test here therefore
+//! also exercises the pooled hot path, and the suite additionally
+//! cross-checks it against the allocating scoped-thread
+//! `step_batch` reference end-to-end.
 
-use spectra::serve::{FamilySpec, GenRequest, LatentLm, LmDims, QuantMethod,
-                     Scheduler, TernaryLm};
+use spectra::serve::{DecodeModel, FamilySpec, GenRequest, LatentLm, LmDims,
+                     QuantMethod, Sampling, Scheduler, TernaryLm};
 
 fn dims() -> LmDims {
     LmDims { vocab: 128, hidden: 64, glu: 96, layers: 3 }
@@ -117,6 +123,52 @@ fn families_share_traffic_but_not_streams() {
     assert_ne!(streams[0], streams[1],
                "3-bit quantization changed nothing — storage formats \
                 are not actually being exercised");
+}
+
+#[test]
+fn pooled_scheduler_matches_allocating_step_batch_reference() {
+    // End-to-end cross-check of the execution substrates: greedy
+    // streams from the pooled scheduler (WorkerPool + DecodeScratch)
+    // must be identical to a manual decode loop over the allocating
+    // scoped-thread `step_batch` — for every storage family.
+    let latent = LatentLm::synthetic(dims(), 1, 49);
+    for spec in four_families() {
+        let model = latent.build(spec).unwrap();
+        for req in request_set() {
+            // Manual reference: one lane, allocating path.
+            let mut state = vec![0.0f32; dims().hidden];
+            let mut reference = Vec::new();
+            let mut next = req.prompt[0];
+            let mut pos = 1usize;
+            while reference.len() < req.max_new_tokens {
+                let mut refs = [state.as_mut_slice()];
+                let logits = model.step_batch(&mut refs, &[next], 2);
+                if pos < req.prompt.len() {
+                    next = req.prompt[pos];
+                    pos += 1;
+                } else {
+                    let row = logits.row(0);
+                    let mut best = 0usize;
+                    for (i, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = i;
+                        }
+                    }
+                    reference.push(best as u32);
+                    next = best as u32;
+                }
+            }
+            assert!(matches!(req.sampling, Sampling::Greedy));
+            let mut sched = Scheduler::new(model.as_ref(), 4, 2);
+            let id = req.id;
+            sched.submit(req);
+            let done = sched.run();
+            assert_eq!(done[0].tokens, reference,
+                       "{}: request {id} diverges between the pooled \
+                        scheduler and the allocating step_batch",
+                       spec.label());
+        }
+    }
 }
 
 #[test]
