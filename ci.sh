@@ -19,6 +19,13 @@ if [[ "${1:-}" == "--fast" ]]; then
     exit 0
 fi
 
+# Docs rot gate: module-level rustdoc is part of this repo's contract
+# (serve/runtime/linear invariants are documented where the code
+# lives), so broken intra-doc links or malformed docs fail CI. Scoped
+# to the spectra crate: the vendored stand-ins are not a doc surface.
+echo "== rustdoc gate (cargo doc --no-deps, warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet -p spectra
+
 echo "== compile examples =="
 cargo build --release --examples
 
@@ -44,6 +51,21 @@ cargo run --release --quiet -- serve-bench \
 if command -v python3 >/dev/null 2>&1; then
     python3 -m json.tool runs/BENCH_serve_smoke.json >/dev/null
     echo "runs/BENCH_serve_smoke.json: valid json (python3 cross-check)"
+fi
+
+# Attention serve smoke: the paged KV-cache decode model at tiny dims,
+# all four families through the same scheduler — catches paging/
+# admission/attention runtime panics and checks the schema-2 JSON
+# (kv_bytes_per_token) re-parses.
+echo "== paged kv-cache attention serve smoke (--attn) =="
+cargo run --release --quiet -- serve-bench \
+    --family float,quant3,quant4,ternary --attn --heads 4 \
+    --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
+    --requests 4 --max-tokens 4 --batches 1,2 --threads 1 \
+    --json runs/BENCH_serve_attn_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 -m json.tool runs/BENCH_serve_attn_smoke.json >/dev/null
+    echo "runs/BENCH_serve_attn_smoke.json: valid json (python3 cross-check)"
 fi
 
 echo "ci: all green"

@@ -4,23 +4,27 @@
 //! packed ternary (TriLM) — the pure-Rust inference request path, no
 //! PJRT required.
 //!
-//! With a trained checkpoint, its mlp linears become the latent f32
+//! With a trained checkpoint, its linears become the latent f32
 //! weights and the prompts are BPE-tokenized against the run's
 //! dataset; without one, synthetic latent weights serve the same
 //! traffic so the demo (and its throughput readout) always runs. The
 //! `--family` flag picks the storage format the same weights are
-//! served in.
+//! served in; `--attn` serves the paged KV-cache attention model
+//! instead of the decay-state model (checkpoints must then carry
+//! `l{i}.attn_{q,k,v,o}` tensors; `--heads` sets the head count and
+//! must divide hidden).
 //!
 //!     cargo run --release --example generate -- \
 //!         --checkpoint runs/main/930k_ternary.spt --prompt "one day" \
-//!         --family ternary --batch 4 --threads 2 --max-tokens 24
+//!         --family ternary --batch 4 --threads 2 --max-tokens 24 \
+//!         [--attn] [--heads 4] [--group 128]
 
 use std::path::PathBuf;
 
 use spectra::checkpoint::Checkpoint;
 use spectra::data::Dataset;
-use spectra::serve::{DecodeModel, FamilySpec, GenRequest, LatentLm, LmDims,
-                     Scheduler};
+use spectra::serve::{DecodeModel, FamilySpec, GenRequest, LatentAttnLm,
+                     LatentLm, LmDims, Scheduler};
 use spectra::util::args::Args;
 use spectra::Result;
 
@@ -30,6 +34,8 @@ fn main() -> Result<()> {
     let batch = args.get_usize("batch", 4);
     let threads = args.get_usize("threads", 2);
     let group = args.get_usize("group", 128);
+    let attn = args.has("attn");
+    let heads = args.get_usize("heads", 4);
     let spec = FamilySpec::parse(&args.get("family", "ternary"), group)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown family (float | quant<bits> | gptq<bits> | ternary)"))?;
@@ -41,35 +47,66 @@ fn main() -> Result<()> {
                    "if it rains , then".to_string()];
 
     // Latent weights + tokenization differ by source; the family
-    // realization and the serve flow do not.
+    // realization and the serve flow do not. `--attn` swaps the decay-
+    // state model for the paged KV-cache attention model, cache sized
+    // for `batch` lanes at prompt+completion context.
     type Decode = Box<dyn Fn(&[u32]) -> String>;
-    let (latent, encoded, decode): (LatentLm, Vec<Vec<u32>>, Decode) =
+    let build = |encoded: &[Vec<u32>],
+                 mk_decay: &dyn Fn() -> Result<LatentLm>,
+                 mk_attn: &dyn Fn() -> Result<LatentAttnLm>|
+                -> Result<Box<dyn DecodeModel>> {
+        let max_context = encoded.iter().map(|t| t.len()).max().unwrap_or(1)
+            + max_tokens + 1;
+        if attn {
+            mk_attn()?.build(spec, batch.max(1), max_context)
+        } else {
+            mk_decay()?.build(spec)
+        }
+    };
+    let (lm, encoded, decode): (Box<dyn DecodeModel>, Vec<Vec<u32>>, Decode) =
         match Checkpoint::load(&ck_path) {
             Ok(ck) => {
-                let latent = LatentLm::from_checkpoint(&ck)?;
                 let data =
                     Dataset::build(&PathBuf::from("runs/data"), 400_000, 0)?;
-                let encoded =
+                let encoded: Vec<Vec<u32>> =
                     prompts.iter().map(|p| data.bpe.encode(p)).collect();
+                let lm = build(&encoded,
+                               &|| LatentLm::from_checkpoint(&ck),
+                               &|| LatentAttnLm::from_checkpoint(&ck, heads))?;
                 let bpe = data.bpe;
-                (latent, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
+                (lm, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
             }
             Err(e) => {
                 eprintln!("no checkpoint ({e}); serving synthetic latent \
                            weights");
                 let dims =
                     LmDims { vocab: 512, hidden: 128, glu: 352, layers: 4 };
-                let latent = LatentLm::synthetic(dims, 1, 0);
-                let encoded = prompts.iter()
+                // Same clean failure as serve-bench --attn --heads: the
+                // checkpoint path validates in from_checkpoint; the
+                // synthetic path must not die on an assert instead.
+                if attn && (heads == 0 || dims.hidden % heads != 0) {
+                    anyhow::bail!("--heads {heads} must divide hidden {} \
+                                   (attention head width is hidden/heads)",
+                                  dims.hidden);
+                }
+                let encoded: Vec<Vec<u32>> = prompts.iter()
                     .map(|p| p.bytes().map(|b| b as u32 % 512).collect())
                     .collect();
-                (latent, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
+                let lm = build(&encoded,
+                               &|| Ok(LatentLm::synthetic(dims.clone(), 1, 0)),
+                               &|| Ok(LatentAttnLm::synthetic(dims.clone(),
+                                                              heads, 1, 0)))?;
+                (lm, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
             }
         };
 
-    let lm = latent.build(spec)?;
-    println!("family {} ({}, {:.2} bits/param)", spec.label(),
-             lm.family_label(), lm.effective_bits_per_param());
+    println!("family {} ({}, {:.2} bits/param{})", spec.label(),
+             lm.family_label(), lm.effective_bits_per_param(),
+             if attn {
+                 format!(", {:.0} kv B/token", lm.kv_bytes_per_token())
+             } else {
+                 String::new()
+             });
 
     let mut sched = Scheduler::new(lm.as_ref(), batch, threads);
     for (id, toks) in encoded.into_iter().enumerate() {

@@ -14,8 +14,8 @@
 //! [`WorkerPool`] with reused scratch (the scheduler's hot path).
 
 use spectra::runtime::{HostTensor, WorkerPool};
-use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentLm,
-                     LmDims, Scheduler, TernaryLm};
+use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentAttnLm,
+                     LatentLm, LmDims, Scheduler, TernaryLm};
 use spectra::ternary::{matmul_ternary_packed, matmul_ternary_packed_into,
                        PackedMatrix, TernaryTensor};
 use spectra::util::bench::{bench_few, black_box};
@@ -50,6 +50,23 @@ fn main() {
         let r = bench_few(
             &format!("family {} ({:.2} bits/param) batch=8",
                      spec.label(), model.effective_bits_per_param()),
+            3, || {
+                assert_eq!(drain(model.as_ref(), 8, 2),
+                           N_REQUESTS * MAX_NEW);
+            });
+        r.report_throughput("tokens", total_tokens);
+    }
+
+    // Attention serving: the paged KV-cache decode path on the same
+    // traffic — measures what real per-token cache growth (reported as
+    // kv B/token) costs next to the cache-free decay-state rows above.
+    let attn_latent = LatentAttnLm::synthetic(dims.clone(), 4, 2, 1);
+    for fam in ["float", "ternary"] {
+        let spec = FamilySpec::parse(fam, 128).unwrap();
+        let model = attn_latent.build(spec, 8, 16 + MAX_NEW + 1).unwrap();
+        let r = bench_few(
+            &format!("attn family {} ({:.0} kv B/token) batch=8",
+                     spec.label(), model.kv_bytes_per_token()),
             3, || {
                 assert_eq!(drain(model.as_ref(), 8, 2),
                            N_REQUESTS * MAX_NEW);

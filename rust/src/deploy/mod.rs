@@ -110,6 +110,44 @@ pub fn decode_tokens_per_sec_bits(params: f64, linear_bits: f64,
     batch / t_bw.max(t_compute)
 }
 
+/// FP16 KV-cache bytes appended per decoded token at parameter count
+/// `params` under the LLaMa aspect recipe (k + v, `layers x hidden`
+/// halfprec each): the per-token bandwidth tax attention serving pays
+/// on top of weight streaming. The serving engine's measured analog is
+/// `DecodeModel::kv_bytes_per_token` (f32 cache at bench scale);
+/// `spectra serve-bench --attn` cross-references the two.
+pub fn kv_bytes_per_token_fp16(params: f64) -> f64 {
+    let hidden = hidden_for_params(params);
+    let layers = hidden / 128.0;
+    2.0 * layers * hidden * 2.0
+}
+
+/// KV-aware decode roofline: [`decode_tokens_per_sec_bits`] plus the
+/// attention bandwidth term. Per decode step the weights stream once
+/// (amortized over the batch) but *every lane* additionally streams
+/// its own KV cache — `context * kv_bytes_per_token` bytes that
+/// compression of the weights does not shrink:
+///
+///   t_step = max((W + batch*context*kv) / BW, batch * 2P / FLOPS)
+///   tokens/sec = batch / t_step
+///
+/// With `kv_bytes_per_token = 0` this degrades exactly to
+/// [`decode_tokens_per_sec_bits`]. As context grows, the KV term
+/// dominates and the families' speedups converge — the reason KV-cache
+/// layout is the load-bearing design axis for ternary serving
+/// (TernaryLLM 2406.07177, Ma et al. 2409.17870).
+pub fn decode_tokens_per_sec_bits_kv(params: f64, linear_bits: f64,
+                                     kv_bytes_per_token: f64, context: f64,
+                                     hw: &Accelerator, batch: f64) -> f64 {
+    assert!(batch >= 1.0, "batch must be >= 1");
+    assert!(context >= 0.0 && kv_bytes_per_token >= 0.0);
+    let weight_bytes = size_gb_at_bits(params, linear_bits) * 1e9;
+    let kv_bytes = batch * context * kv_bytes_per_token;
+    let t_bw = (weight_bytes + kv_bytes) / (hw.bw_gbs * 1e9);
+    let t_compute = batch * 2.0 * params / (hw.tflops_fp16 * 1e12);
+    batch / t_bw.max(t_compute)
+}
+
 /// Decode speedup over FP16 at a given batch size for an arbitrary
 /// linear-weight bit rate.
 pub fn batched_speedup_vs_fp16_bits(params: f64, linear_bits: f64,
@@ -301,6 +339,44 @@ mod tests {
         // fp32 storage serves *slower* than the fp16 reference.
         assert!(batched_speedup_vs_fp16_bits(7e9, 32.0, hw, 1.0) < 1.0);
         assert!(batched_speedup_vs_fp16_bits(7e9, 3f64.log2(), hw, 1.0) > 4.0);
+    }
+
+    #[test]
+    fn kv_aware_roofline_degrades_to_plain_at_zero_kv() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        for bits in [16.0, 4.125, 3f64.log2()] {
+            for b in [1.0, 8.0, 64.0] {
+                assert_eq!(
+                    decode_tokens_per_sec_bits_kv(7e9, bits, 0.0, 4096.0,
+                                                  hw, b),
+                    decode_tokens_per_sec_bits(7e9, bits, hw, b));
+            }
+        }
+    }
+
+    #[test]
+    fn kv_traffic_is_monotone_tax_and_erodes_compression_speedup() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let kv = kv_bytes_per_token_fp16(7e9);
+        assert!(kv > 0.0);
+        // More context -> more bytes per step -> fewer tokens/sec.
+        let mut last = f64::INFINITY;
+        for ctx in [0.0, 512.0, 4096.0, 32768.0] {
+            let tps = decode_tokens_per_sec_bits_kv(7e9, 4.125, kv, ctx,
+                                                    hw, 8.0);
+            assert!(tps <= last, "ctx {ctx}: {tps} > {last}");
+            last = tps;
+        }
+        // The KV stream is family-independent, so at long context the
+        // ternary-vs-fp16 advantage shrinks below the weights-only
+        // ratio — the §2.1 speedup claim needs the cache story told.
+        let tern = 3f64.log2();
+        let speedup = |ctx: f64| {
+            decode_tokens_per_sec_bits_kv(7e9, tern, kv, ctx, hw, 8.0)
+                / decode_tokens_per_sec_bits_kv(7e9, 16.0, kv, ctx, hw, 8.0)
+        };
+        assert!(speedup(16384.0) < speedup(0.0),
+                "kv traffic should erode the compression speedup");
     }
 
     #[test]

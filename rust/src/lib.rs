@@ -26,9 +26,12 @@
 //! - [`deploy`] — hardware DB, model-bits accounting, memory-wall model
 //!   (incl. the batched decode roofline).
 //! - [`eval`] — perplexity + downstream benchmark harness.
-//! - [`serve`] — batched ternary decode engine: continuous-batching
-//!   scheduler + blocked multi-threaded packed kernels (the §2.1
-//!   bandwidth win realized as a serving path).
+//! - [`serve`] — batched decode engine: continuous-batching scheduler
+//!   + blocked multi-threaded packed kernels (the §2.1 bandwidth win
+//!   realized as a serving path), with two context mechanisms behind
+//!   one `DecodeModel` trait: the decay-state [`serve::SpectraLm`] and
+//!   the paged KV-cache attention [`serve::AttnLm`]
+//!   ([`serve::kvcache`]).
 //! - [`util`] — offline stand-ins for serde/clap/criterion/tempfile.
 
 pub mod analysis;

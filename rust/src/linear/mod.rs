@@ -18,7 +18,13 @@
 //! All three honor the same numerical contract: per-output-element
 //! accumulation order is fixed by `k` alone, so a lane's result is
 //! bitwise identical at any batch size and thread count — the property
-//! `serve`'s continuous-batching determinism rests on.
+//! `serve`'s continuous-batching determinism rests on
+//! (`tests/kernel_equivalence.rs` checks it bitwise per kernel;
+//! `tests/pool_equivalence.rs` checks the pooled `_into` twins against
+//! the scoped reference). Because the trait is storage-only, *every*
+//! projection of the serve models — the gated MLP's gate/up/down, the
+//! output head, and the attention model's q/k/v/o — is just another
+//! `LinearFormat`, compressed and executed identically.
 //! [`LinearFormat::effective_bits_per_param`] keys the deploy roofline
 //! ([`crate::deploy::decode_tokens_per_sec_bits`]) so measured
 //! throughput and the analytic bits-vs-bandwidth story line up.

@@ -266,9 +266,9 @@ fn quant_rows_body(w: &QuantPacked, x: &HostTensor,
 /// Batched k-bit group-quantized matmul: y = x @ w_packed^T with
 /// per-group scales. x: (m, k), w: (n, k) packed -> (m, n).
 ///
-/// Threading via the shared
-/// [`crate::ternary::matmul::blocked_rows_driver`] (identical
-/// partitioning and [`crate::ternary::matmul::MIN_WORK_PER_THREAD`] capping as the ternary
+/// Threading via the shared `blocked_rows_driver` scaffold in
+/// `ternary::matmul` (identical partitioning and
+/// [`crate::ternary::matmul::MIN_WORK_PER_THREAD`] capping as the ternary
 /// kernel). Accumulation order per output element is fixed by `k`
 /// alone — independent of `threads` and `m` — so results are bitwise
 /// batch- and thread-invariant.

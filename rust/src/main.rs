@@ -10,8 +10,10 @@
 //!   analyze       scaling-law / entropy analysis
 //!   deploy        Table 4 / Fig 2 / Fig 21 analytics
 //!   generate      greedy text generation (Appendix H demo)
-//!   serve-bench   cross-family batched decode throughput (serve engine)
+//!   serve-bench   cross-family batched decode throughput (serve engine;
+//!                 --attn serves the paged KV-cache attention model)
 //!   bench-report  paper-style tables from a suite run
+//!   help          print the usage text
 
 use std::path::PathBuf;
 
@@ -29,20 +31,38 @@ const USAGE: &str = "\
 spectra <command> [--flags]
 
 commands:
-  train         --size 160k --family ternary --steps 200 [--fp16]
-  suite         --sizes 160k,430k,930k --families float,ternary --steps 300
-  configs
-  eval          --checkpoint runs/train/160k_ternary.spt
-  analyze       [--results runs/suite/suite_results.json] [--checkpoint x.spt]
-  deploy        --output 4|2a|2b|21
-  generate      --checkpoint x.spt --prompt 'one day'
-  serve-bench   --family float,quant3,quant4,ternary --group 128
+  train         train one model
+                --size 160k --family ternary --steps 200 [--fp16]
+                [--seed 0] [--tag train] [--data-chars 2000000]
+  suite         train + evaluate the size x family grid
+                --sizes 160k,430k,930k --families float,ternary
+                --steps 300 [--quant-bits 3,4,8] [--eval-items 50]
+                [--calib-batches 4] [--seed 0] [--tag suite]
+  configs       print the suite configuration grid (no flags)
+  eval          evaluate a saved checkpoint
+                --checkpoint runs/train/160k_ternary.spt [--eval-items 50]
+  analyze       scaling-law / entropy analysis
+                [--results runs/suite/suite_results.json] [--checkpoint x.spt]
+  deploy        Table 4 / Fig 2 / Fig 21 analytics
+                --output 4|2a|2b|21
+  generate      greedy generation via the PJRT next_logits graph
+                --checkpoint x.spt --prompt 'one day' [--max-tokens 48]
+  serve-bench   cross-family batched decode throughput (serve engine)
+                --family float,quant3,quant4,ternary --group 128
                 --requests 32 --max-tokens 32 --batches 1,2,4,8
-                --threads 1,2,4 --hidden 256 --glu 704 --layers 4
+                --threads 1,2,4 --vocab 512 --hidden 256 --glu 704
+                --layers 4 --mp 2 [--attn] [--heads 4] [--seed 0]
                 [--json BENCH_serve.json]
-  bench-report  --results runs/suite/suite_results.json --experiment all
+                --attn serves the paged KV-cache attention model (adds
+                kv_bytes_per_token to the table and JSON; see
+                docs/BENCH_SCHEMA.md)
+  bench-report  paper-style tables from a suite run
+                --results runs/suite/suite_results.json --experiment all
+  help          print this text (also: bare `spectra` or --help)
 
-global: --artifacts artifacts --runs runs";
+global: --artifacts artifacts --runs runs
+docs:   README.md (repo map + quickstart), docs/BENCH_SCHEMA.md
+        (serve-bench --json schema)";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -66,16 +86,19 @@ fn main() -> Result<()> {
             bench_report(&res, &args.get("experiment", "all"));
             Ok(())
         }
-        "" => {
-            // Bare `spectra` is a help request.
+        // Bare `spectra`, `spectra help`, and `spectra --help` (parsed
+        // as a bool flag, so command stays empty) are help requests.
+        "" | "help" => {
             println!("{USAGE}");
             Ok(())
         }
         other => {
             // A typo'd command must fail loudly: scripts and CI rely on
-            // a non-zero exit, not on someone reading the usage text.
+            // a non-zero exit, not on someone reading the usage text —
+            // but the human gets the full usage text too.
             eprintln!("{USAGE}");
-            anyhow::bail!("unknown command '{other}'");
+            anyhow::bail!("unknown command '{other}' (see usage above, or \
+                           run `spectra help`)");
         }
     }
 }
@@ -224,13 +247,17 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// bits-vs-throughput story on the serving path), plus the ternary
 /// batch/thread sweep against the single-thread scalar reference and
 /// the analytic per-family decode roofline keyed by each model's
-/// measured bit rate. `--json <path>` additionally writes the
-/// machine-readable sweep (BENCH_serve.json schema: per-family
-/// tokens/sec at batch 1 and batch max, bits/param, thread count,
-/// dims) and re-parses the file so a malformed write fails loudly.
+/// measured bit rate. `--attn` swaps in the paged KV-cache attention
+/// model (same latent-weight discipline, real attention + paging) and
+/// adds each family's measured KV bytes/token to the table, the JSON
+/// and the roofline. `--json <path>` additionally writes the
+/// machine-readable sweep (BENCH_serve.json, schema 2 — see
+/// docs/BENCH_SCHEMA.md: per-family tokens/sec at batch 1 and batch
+/// max, bits/param, kv_bytes_per_token, thread count, dims) and
+/// re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use spectra::serve::{bench_requests, DecodeModel, FamilySpec, LatentLm,
-                         LmDims, Scheduler};
+    use spectra::serve::{bench_requests, DecodeModel, FamilySpec,
+                         LatentAttnLm, LatentLm, LmDims, Scheduler};
 
     let dims = LmDims {
         vocab: args.get_usize("vocab", 512),
@@ -243,6 +270,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         anyhow::bail!("--mp {mp} must divide both --glu {} and --hidden {} \
                        (ternary scale shards are per row range)",
                       dims.glu, dims.hidden);
+    }
+    let attn = args.has("attn");
+    let heads = args.get_usize("heads", 4);
+    if attn && (heads == 0 || dims.hidden % heads != 0) {
+        anyhow::bail!("--heads {heads} must divide --hidden {} \
+                       (attention head width is hidden/heads)",
+                      dims.hidden);
     }
     let group = args.get_usize("group", 128);
     let seed = args.get_u64("seed", 0);
@@ -258,11 +292,33 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             "unknown family '{f}' (float | quant<bits> | gptq<bits> | \
              ternary)")))
         .collect::<Result<_>>()?;
+    let fam_batch = batches.iter().copied().max().unwrap_or(8);
+    let fam_threads = threads_list.iter().copied().max().unwrap_or(1);
+    // Bench prompts are capped at 16 tokens (see serve::bench_requests);
+    // +1 headroom keeps the page pool from running exactly dry.
+    let max_context = 16 + max_new + 1;
 
     println!("serve-bench: vocab {} hidden {} glu {} layers {} | \
-              {n_req} requests x {max_new} tokens | group {group}",
-             dims.vocab, dims.hidden, dims.glu, dims.layers);
-    let latent = LatentLm::synthetic(dims.clone(), mp, seed);
+              {n_req} requests x {max_new} tokens | group {group}{}",
+             dims.vocab, dims.hidden, dims.glu, dims.layers,
+             if attn {
+                 format!(" | attn ({heads} heads, paged kv cache)")
+             } else {
+                 String::new()
+             });
+    // One latent weight set per mode; every family serves the same
+    // model in a different storage format.
+    let decay_latent =
+        (!attn).then(|| LatentLm::synthetic(dims.clone(), mp, seed));
+    let attn_latent = attn
+        .then(|| LatentAttnLm::synthetic(dims.clone(), heads, mp, seed));
+    let build = |spec: FamilySpec| -> Result<Box<dyn DecodeModel>> {
+        match (&decay_latent, &attn_latent) {
+            (Some(latent), _) => latent.build(spec),
+            (_, Some(latent)) => latent.build(spec, fam_batch, max_context),
+            (None, None) => unreachable!("one latent mode is always built"),
+        }
+    };
 
     let run_once = |model: &dyn DecodeModel, batch: usize, threads: usize|
                    -> (f64, usize) {
@@ -281,31 +337,29 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // on the same traffic, measured at batch 1 and at the largest
     // batch/thread setting (the two points the perf trajectory in
     // BENCH_serve.json tracks).
-    let fam_batch = batches.iter().copied().max().unwrap_or(8);
-    let fam_threads = threads_list.iter().copied().max().unwrap_or(1);
-    let mut rows: Vec<(String, f64, f64, f64, usize)> = Vec::new();
+    let mut rows: Vec<(String, f64, f64, f64, usize, f64)> = Vec::new();
     let mut float_tps = None;
     for spec in &families {
-        let model = latent.build(*spec)?;
+        let model = build(*spec)?;
         let (tps_b1, _) = run_once(model.as_ref(), 1, fam_threads);
         let (tps, steps) = run_once(model.as_ref(), fam_batch, fam_threads);
         if matches!(spec, FamilySpec::Float) {
             float_tps = Some(tps);
         }
         rows.push((spec.label(), model.effective_bits_per_param(), tps_b1,
-                   tps, steps));
+                   tps, steps, model.kv_bytes_per_token()));
     }
     println!("\ncross-family @ {fam_threads} threads (identical latent \
               weights)");
-    println!("{:<22} {:>10} {:>12} {:>12} {:>7} {:>10}",
+    println!("{:<22} {:>10} {:>12} {:>12} {:>7} {:>8} {:>10}",
              "family", "bits/param", "tok/s b1",
-             format!("tok/s b{fam_batch}"), "steps", "vs float");
-    for (label, bits, tps_b1, tps, steps) in &rows {
+             format!("tok/s b{fam_batch}"), "steps", "kvB/tok", "vs float");
+    for (label, bits, tps_b1, tps, steps, kvb) in &rows {
         let rel = float_tps
             .map(|f| format!("{:.2}x", tps / f))
             .unwrap_or_else(|| "-".into());
         println!("{label:<22} {bits:>10.2} {tps_b1:>12.0} {tps:>12.0} \
-                  {steps:>7} {rel:>10}");
+                  {steps:>7} {kvb:>8.0} {rel:>10}");
     }
 
     // Machine-readable trajectory point: --json <path> writes the
@@ -314,24 +368,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("json") {
         use spectra::util::json::Json;
         let fam_json: Vec<Json> = rows.iter()
-            .map(|(label, bits, tps_b1, tps, steps)| Json::obj(vec![
+            .map(|(label, bits, tps_b1, tps, steps, kvb)| Json::obj(vec![
                 ("family", Json::str(label.as_str())),
                 ("bits_per_param", Json::num(*bits)),
                 ("tokens_per_sec_batch1", Json::num(*tps_b1)),
                 ("tokens_per_sec_batch_max", Json::num(*tps)),
                 ("batch_max", Json::num(fam_batch as f64)),
                 ("batch_steps", Json::num(*steps as f64)),
+                ("kv_bytes_per_token", Json::num(*kvb)),
             ]))
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(1.0)),
+            ("schema", Json::num(2.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
                 ("glu", Json::num(dims.glu as f64)),
                 ("layers", Json::num(dims.layers as f64)),
             ])),
+            ("attn", Json::num(if attn { 1.0 } else { 0.0 })),
+            ("heads", Json::num(if attn { heads as f64 } else { 0.0 })),
             ("threads", Json::num(fam_threads as f64)),
             ("requests", Json::num(n_req as f64)),
             ("max_new_tokens", Json::num(max_new as f64)),
@@ -358,8 +415,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     // Ternary batch/thread sweep vs the single-thread scalar reference.
     if families.contains(&FamilySpec::Ternary) {
-        let tlm = latent.build_ternary();
-        let (scalar_tps, _) = run_once(&tlm, 1, 1);
+        let tlm = build(FamilySpec::Ternary)?;
+        let tlm = tlm.as_ref();
+        let (scalar_tps, _) = run_once(tlm, 1, 1);
         println!("\n{:<10} {:>7} {:>14} {:>12} {:>10}",
                  "kernel", "batch", "threads", "tokens/s", "vs scalar");
         println!("{:<10} {:>7} {:>14} {:>12.0} {:>10}",
@@ -370,7 +428,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 if batch == 1 && threads == 1 {
                     continue;
                 }
-                let (tps, _) = run_once(&tlm, batch, threads);
+                let (tps, _) = run_once(tlm, batch, threads);
                 if batch == 8 {
                     best_b8 = best_b8.max(tps);
                 }
@@ -388,10 +446,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // keyed by the bits/param measured on the serving model itself.
     if let Some(hw) = spectra::deploy::hardware::by_name("H100-SXM") {
         use spectra::deploy::{batched_speedup_vs_fp16_bits,
+                              decode_tokens_per_sec_bits_kv,
+                              kv_bytes_per_token_fp16,
                               saturation_batch_bits};
         println!("\nroofline @7B on {} (speedup vs fp16 by measured \
                   bits/param):", hw.name);
-        for (label, bits, _, _, _) in &rows {
+        for (label, bits, _, _, _, _) in &rows {
             println!("  {label:<22} {bits:>6.2} bits -> {:>5.1}x (b=1) \
                       {:>5.1}x (b=8) {:>5.1}x (b=256); saturates at \
                       batch {:.0}",
@@ -399,6 +459,29 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                      batched_speedup_vs_fp16_bits(7e9, *bits, hw, 8.0),
                      batched_speedup_vs_fp16_bits(7e9, *bits, hw, 256.0),
                      saturation_batch_bits(7e9, *bits, hw));
+        }
+        if attn {
+            // The KV-aware roofline: the cache stream is family-blind
+            // (fp16 activations at scale), so long contexts erode the
+            // compression speedup — the serving story the paged cache
+            // makes measurable.
+            let kvb = kv_bytes_per_token_fp16(7e9);
+            println!("\nkv-aware roofline @7B, fp16 cache \
+                      ({kvb:.0} B/token), batch 8:");
+            let fp16_at = |ctx: f64| {
+                decode_tokens_per_sec_bits_kv(7e9, 16.0, kvb, ctx, hw, 8.0)
+            };
+            for (label, bits, _, _, _, _) in &rows {
+                let at = |ctx: f64| {
+                    decode_tokens_per_sec_bits_kv(7e9, *bits, kvb, ctx,
+                                                  hw, 8.0)
+                };
+                println!("  {label:<22} vs fp16: {:>5.1}x @ctx 1k \
+                          {:>5.1}x @ctx 8k {:>5.1}x @ctx 32k",
+                         at(1024.0) / fp16_at(1024.0),
+                         at(8192.0) / fp16_at(8192.0),
+                         at(32768.0) / fp16_at(32768.0));
+            }
         }
     }
     Ok(())

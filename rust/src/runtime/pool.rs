@@ -21,9 +21,17 @@
 //!   execution at every thread count (`tests/pool_equivalence.rs`).
 //! - [`DecodeScratch`] — the per-scheduler workspace: the transposed
 //!   accumulation slab shared by the blocked drivers plus every
-//!   activation buffer of the serve model's forward pass. One scratch
+//!   activation buffer of the serve model's forward pass (residual
+//!   stream, norms, GLU halves, logits, and the attention model's
+//!   q/k/v/attention-mix buffers and score vector). One scratch
 //!   lives as long as its [`crate::serve::Scheduler`]; buffers are
 //!   reshaped in place ([`HostTensor::reset2`]) and only grow.
+//!
+//! Scratch-reuse contract (what `tests/pool_equivalence.rs` enforces):
+//! every `_into` entry point fully overwrites the scratch regions it
+//! hands back, so contents left by a previous call of *any* shape or
+//! family can never leak into results — one scratch is shared across
+//! every model and step a scheduler ever runs.
 //!
 //! Ownership contract: the *caller* owns pool and scratch and threads
 //! `&WorkerPool` / `&mut DecodeScratch` down the hot path
@@ -305,10 +313,26 @@ pub struct DecodeScratch {
     pub gate: HostTensor,
     /// (batch, glu) up projection.
     pub up: HostTensor,
-    /// (batch, hidden) down projection (residual delta).
+    /// (batch, hidden) down projection (residual delta); the attention
+    /// model also reuses it for the attention-out projection.
     pub down: HostTensor,
     /// (batch, vocab) output logits — the step's result lives here.
     pub logits: HostTensor,
+    /// (batch, hidden) query projection (attention models only).
+    pub q: HostTensor,
+    /// (batch, hidden) key projection, appended to the KV cache.
+    pub k: HostTensor,
+    /// (batch, hidden) value projection, appended to the KV cache.
+    pub v: HostTensor,
+    /// (batch, hidden) per-lane attention mix softmax(q·k)·v — the
+    /// input to the attention-out projection.
+    pub attn: HostTensor,
+    /// Per-(lane, head) attention scores over the lane's cached
+    /// positions; cleared and refilled per head, grows to the longest
+    /// context served.
+    pub scores: Vec<f32>,
+    /// Lane -> KV-cache sequence bindings staged per step.
+    pub seqs: Vec<usize>,
 }
 
 impl DecodeScratch {
@@ -322,6 +346,12 @@ impl DecodeScratch {
             up: empty(),
             down: empty(),
             logits: empty(),
+            q: empty(),
+            k: empty(),
+            v: empty(),
+            attn: empty(),
+            scores: Vec::new(),
+            seqs: Vec::new(),
         }
     }
 }

@@ -1,0 +1,423 @@
+//! Block-paged KV cache: the attention serving path's memory substrate.
+//!
+//! The Spectra paper's inference claim (§2.1) is a bandwidth story, and
+//! in production decoding the bandwidth bill has two lines: the
+//! compressed weights (what the storage families change) and the KV
+//! cache (what they do not — cached activations stay f32 here in every
+//! family). This module provides the cache the attention decode model
+//! ([`crate::serve::model::AttnLm`]) streams per step, organized the
+//! way production engines organize it (vLLM-style paging): fixed-size
+//! *pages* of [`KvCacheConfig::page_tokens`] token slots, handed out
+//! from a free list as sequences grow and returned wholesale when a
+//! lane retires, so fragmentation never accumulates across lane churn
+//! and admission control is a single free-list length check.
+//!
+//! Layout: one flat f32 slab of `n_pages` pages. A page holds
+//! `page_tokens` token slots; a token slot holds the token's keys and
+//! values for *every* layer (`layers * 2 * hidden` f32), so one
+//! [`KvCache::begin_token`] claim covers the whole forward pass of one
+//! decode step. A sequence is a page table (`Vec<usize>`) plus a
+//! length; position `p` lives in `pages[p / page_tokens]` at slot
+//! `p % page_tokens`.
+//!
+//! Invariants the serve test suite leans on:
+//!
+//! - **Physical placement never affects values.** Reads go through the
+//!   page table in position order, and every claimed slot is fully
+//!   written ([`KvCache::write_kv`] per layer) before it is read — so
+//!   which physical page a token lands on (which varies with lane
+//!   churn) is invisible to decode results. This is what keeps the
+//!   scheduler's batch-1 == batch-N determinism contract intact for
+//!   attention models (`tests/serve_determinism.rs`).
+//! - **Lane independence.** A sequence only ever reads slots it
+//!   claimed itself; recycled pages are claimed-then-written before any
+//!   read, so no stale bytes from a retired lane can leak.
+//! - **Admission refusal is loud and harmless.** [`KvCache::begin_token`]
+//!   returns [`OutOfPages`] without mutating the sequence, so a refused
+//!   claim can be retried after a lane retires.
+
+/// Token slots per page. Small enough that a retiring short lane
+/// returns most of its memory, large enough that the page table stays
+/// tiny; fixed (never derived from batch or context) so page-table
+/// shapes are reproducible across runs.
+pub const KV_PAGE_TOKENS: usize = 16;
+
+/// Geometry of a paged KV cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheConfig {
+    /// Transformer layers caching k/v per token.
+    pub layers: usize,
+    /// Model width: k and v are `hidden` f32 each, per layer.
+    pub hidden: usize,
+    /// Token slots per page.
+    pub page_tokens: usize,
+    /// Total pages in the pool (the admission-control budget).
+    pub n_pages: usize,
+}
+
+impl KvCacheConfig {
+    /// f32 elements one token slot occupies (k + v across all layers).
+    pub fn token_stride(&self) -> usize {
+        2 * self.layers * self.hidden
+    }
+
+    /// f32 elements per page.
+    pub fn page_stride(&self) -> usize {
+        self.page_tokens * self.token_stride()
+    }
+
+    /// Bytes appended to the cache per decoded token — the per-token
+    /// bandwidth tax attention serving adds on top of weight streaming
+    /// (the `kv_bytes_per_token` field of BENCH_serve.json).
+    pub fn bytes_per_token(&self) -> usize {
+        self.token_stride() * std::mem::size_of::<f32>()
+    }
+
+    /// Total token capacity of the pool.
+    pub fn capacity_tokens(&self) -> usize {
+        self.n_pages * self.page_tokens
+    }
+}
+
+/// Admission refusal: the page pool is exhausted. The failed claim did
+/// not mutate the sequence; retry after a lane retires and returns its
+/// pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfPages {
+    /// Sequence that needed a fresh page.
+    pub seq: usize,
+    /// Its committed length at refusal time (unchanged by the refusal).
+    pub len: usize,
+}
+
+impl std::fmt::Display for OutOfPages {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv cache out of pages (seq {} at {} tokens)",
+               self.seq, self.len)
+    }
+}
+
+impl std::error::Error for OutOfPages {}
+
+/// One lane-bound sequence: a page table plus committed length.
+#[derive(Debug, Default)]
+struct Seq {
+    live: bool,
+    pages: Vec<usize>,
+    len: usize,
+}
+
+/// A block-paged KV cache over one flat f32 slab (see the module docs
+/// for layout and invariants). One cache serves all lanes of one
+/// [`crate::serve::model::AttnLm`]; sequences are allocated when the
+/// scheduler first steps a lane and freed when the lane retires
+/// (via [`crate::serve::model::DecodeModel::retire_state`]).
+pub struct KvCache {
+    cfg: KvCacheConfig,
+    data: Vec<f32>,
+    /// Unused page ids; `pop` hands out the most recently freed page
+    /// first (placement is invisible to results — see module docs).
+    free_pages: Vec<usize>,
+    seqs: Vec<Seq>,
+    /// Retired sequence ids available for reuse.
+    free_seq_ids: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvCacheConfig) -> KvCache {
+        assert!(cfg.layers >= 1 && cfg.hidden >= 1,
+                "kv cache needs layers >= 1 and hidden >= 1");
+        assert!(cfg.page_tokens >= 1, "kv cache needs page_tokens >= 1");
+        let data = vec![0.0; cfg.n_pages * cfg.page_stride()];
+        // Reversed so pop() hands out pages 0, 1, 2, ... initially —
+        // not load-bearing (placement is invisible), just easy to read
+        // in a debugger.
+        let free_pages = (0..cfg.n_pages).rev().collect();
+        KvCache { cfg, data, free_pages, seqs: Vec::new(),
+                  free_seq_ids: Vec::new() }
+    }
+
+    /// A cache sized for `lanes` concurrent sequences of up to
+    /// `max_context` tokens each: exactly `lanes * ceil(max_context /
+    /// page_tokens)` pages, so a full complement of max-length lanes
+    /// fits and one more page claim is refused.
+    pub fn for_lanes(layers: usize, hidden: usize, page_tokens: usize,
+                     lanes: usize, max_context: usize) -> KvCache {
+        let pages_per_lane = max_context.div_ceil(page_tokens).max(1);
+        KvCache::new(KvCacheConfig {
+            layers,
+            hidden,
+            page_tokens,
+            n_pages: lanes.max(1) * pages_per_lane,
+        })
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    /// Start a fresh sequence (no pages yet — they are claimed lazily
+    /// by [`KvCache::begin_token`]). Sequence ids are recycled after
+    /// [`KvCache::free_seq`], so long-running serving never grows the
+    /// sequence table past the peak lane count.
+    pub fn alloc_seq(&mut self) -> usize {
+        if let Some(id) = self.free_seq_ids.pop() {
+            debug_assert!(!self.seqs[id].live);
+            self.seqs[id].live = true;
+            self.seqs[id].len = 0;
+            debug_assert!(self.seqs[id].pages.is_empty());
+            return id;
+        }
+        self.seqs.push(Seq { live: true, pages: Vec::new(), len: 0 });
+        self.seqs.len() - 1
+    }
+
+    /// Retire a sequence: every page it held goes back to the free
+    /// list, its id becomes reusable. The lane-retire → page-recycle
+    /// path of the scheduler's state recycling lands here.
+    pub fn free_seq(&mut self, seq: usize) {
+        let s = &mut self.seqs[seq];
+        assert!(s.live, "free_seq({seq}) on a sequence that is not live");
+        s.live = false;
+        s.len = 0;
+        self.free_pages.append(&mut s.pages);
+        self.free_seq_ids.push(seq);
+    }
+
+    /// Claim the next token slot of `seq`, taking a page from the free
+    /// list when the sequence crosses a page boundary. Returns the new
+    /// position on success; on [`OutOfPages`] the sequence is
+    /// unchanged.
+    pub fn begin_token(&mut self, seq: usize)
+                       -> std::result::Result<usize, OutOfPages> {
+        let len = self.seqs[seq].len;
+        debug_assert!(self.seqs[seq].live, "begin_token on retired seq {seq}");
+        if len % self.cfg.page_tokens == 0 {
+            let Some(page) = self.free_pages.pop() else {
+                return Err(OutOfPages { seq, len });
+            };
+            self.seqs[seq].pages.push(page);
+        }
+        self.seqs[seq].len = len + 1;
+        Ok(len)
+    }
+
+    /// Committed length of `seq` in tokens.
+    pub fn seq_len(&self, seq: usize) -> usize {
+        self.seqs[seq].len
+    }
+
+    /// Flat-slab offset of (seq, layer, pos)'s k vector; v follows at
+    /// `+ hidden`.
+    fn offset(&self, seq: usize, layer: usize, pos: usize) -> usize {
+        let s = &self.seqs[seq];
+        debug_assert!(pos < s.len, "pos {pos} >= seq len {}", s.len);
+        debug_assert!(layer < self.cfg.layers);
+        let page = s.pages[pos / self.cfg.page_tokens];
+        page * self.cfg.page_stride()
+            + (pos % self.cfg.page_tokens) * self.cfg.token_stride()
+            + layer * 2 * self.cfg.hidden
+    }
+
+    /// Write layer `layer`'s k/v for the token slot most recently
+    /// claimed by [`KvCache::begin_token`] (position `seq_len - 1`).
+    pub fn write_kv(&mut self, seq: usize, layer: usize,
+                    k: &[f32], v: &[f32]) {
+        let hidden = self.cfg.hidden;
+        assert_eq!(k.len(), hidden, "k width");
+        assert_eq!(v.len(), hidden, "v width");
+        let pos = self.seqs[seq].len.checked_sub(1)
+            .expect("write_kv before begin_token");
+        let off = self.offset(seq, layer, pos);
+        self.data[off..off + hidden].copy_from_slice(k);
+        self.data[off + hidden..off + 2 * hidden].copy_from_slice(v);
+    }
+
+    /// Read (k, v) of (seq, layer, pos). `pos` must be < the committed
+    /// length, so every read hits a slot [`KvCache::write_kv`] filled.
+    pub fn kv(&self, seq: usize, layer: usize, pos: usize)
+              -> (&[f32], &[f32]) {
+        let hidden = self.cfg.hidden;
+        let off = self.offset(seq, layer, pos);
+        (&self.data[off..off + hidden],
+         &self.data[off + hidden..off + 2 * hidden])
+    }
+
+    /// Pages currently held by live sequences.
+    pub fn pages_in_use(&self) -> usize {
+        self.cfg.n_pages - self.free_pages.len()
+    }
+
+    /// Pages available for claims.
+    pub fn free_page_count(&self) -> usize {
+        self.free_pages.len()
+    }
+
+    /// Live (allocated, not yet freed) sequences.
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.iter().filter(|s| s.live).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n_pages: usize) -> KvCache {
+        KvCache::new(KvCacheConfig {
+            layers: 2,
+            hidden: 4,
+            page_tokens: 3,
+            n_pages,
+        })
+    }
+
+    #[test]
+    fn pages_are_claimed_lazily_and_freed_wholesale() {
+        let mut c = tiny(4);
+        assert_eq!(c.pages_in_use(), 0);
+        let s = c.alloc_seq();
+        assert_eq!(c.pages_in_use(), 0, "alloc_seq must not claim pages");
+        for i in 0..7 {
+            assert_eq!(c.begin_token(s).unwrap(), i);
+        }
+        // 7 tokens at 3 tokens/page = 3 pages.
+        assert_eq!(c.seq_len(s), 7);
+        assert_eq!(c.pages_in_use(), 3);
+        c.free_seq(s);
+        assert_eq!(c.pages_in_use(), 0);
+        assert_eq!(c.live_seqs(), 0);
+    }
+
+    #[test]
+    fn kv_roundtrip_is_exact_across_pages_and_layers() {
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        for pos in 0..5 {
+            c.begin_token(s).unwrap();
+            for layer in 0..2 {
+                let k: Vec<f32> =
+                    (0..4).map(|j| (100 * pos + 10 * layer + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.write_kv(s, layer, &k, &v);
+            }
+        }
+        for pos in 0..5 {
+            for layer in 0..2 {
+                let (k, v) = c.kv(s, layer, pos);
+                for j in 0..4 {
+                    let want = (100 * pos + 10 * layer + j) as f32;
+                    assert_eq!(k[j], want, "k seq pos {pos} layer {layer}");
+                    assert_eq!(v[j], -want, "v seq pos {pos} layer {layer}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequences_are_isolated() {
+        // Interleaved growth of two sequences: each reads back only its
+        // own writes.
+        let mut c = tiny(6);
+        let a = c.alloc_seq();
+        let b = c.alloc_seq();
+        for pos in 0..4 {
+            for (&s, sign) in [(&a, 1.0f32), (&b, -1.0)] {
+                c.begin_token(s).unwrap();
+                let k = vec![sign * (pos as f32 + 1.0); 4];
+                for layer in 0..2 {
+                    c.write_kv(s, layer, &k, &k);
+                }
+            }
+        }
+        for pos in 0..4 {
+            assert!(c.kv(a, 0, pos).0.iter().all(|&x| x > 0.0));
+            assert!(c.kv(b, 0, pos).0.iter().all(|&x| x < 0.0));
+        }
+    }
+
+    #[test]
+    fn out_of_pages_refuses_without_corrupting_the_sequence() {
+        let mut c = tiny(2); // 2 pages x 3 tokens = 6-token pool
+        let a = c.alloc_seq();
+        let b = c.alloc_seq();
+        for _ in 0..3 {
+            c.begin_token(a).unwrap();
+        }
+        for _ in 0..3 {
+            c.begin_token(b).unwrap();
+        }
+        // Both pages held; the next boundary crossing must refuse.
+        let err = c.begin_token(a).unwrap_err();
+        assert_eq!(err, OutOfPages { seq: a, len: 3 });
+        assert!(err.to_string().contains("out of pages"));
+        assert_eq!(c.seq_len(a), 3, "failed claim must not grow the seq");
+        // Retiring b makes the claim succeed — admission control, not a
+        // permanent failure.
+        c.free_seq(b);
+        assert_eq!(c.begin_token(a).unwrap(), 3);
+    }
+
+    #[test]
+    fn lane_churn_recycles_pages_and_seq_ids() {
+        // A serving-shaped workload: waves of short sequences over a
+        // pool sized for 3 concurrent lanes. Pages and seq ids must be
+        // reused, never exhausted, across many waves.
+        let mut c = KvCache::for_lanes(2, 4, 3, 3, 5);
+        assert_eq!(c.config().n_pages, 3 * 2); // ceil(5/3) = 2 per lane
+        for wave in 0..50 {
+            let seqs: Vec<usize> = (0..3).map(|_| c.alloc_seq()).collect();
+            for &s in &seqs {
+                for _ in 0..5 {
+                    c.begin_token(s).unwrap();
+                    for layer in 0..2 {
+                        c.write_kv(s, layer, &[wave as f32; 4],
+                                   &[wave as f32; 4]);
+                    }
+                }
+                assert_eq!(c.kv(s, 1, 4).0[0], wave as f32);
+            }
+            assert_eq!(c.pages_in_use(), 6, "wave {wave}");
+            for &s in &seqs {
+                c.free_seq(s);
+            }
+            assert_eq!(c.pages_in_use(), 0, "wave {wave}");
+        }
+        // Seq-id table stayed at the peak lane count.
+        assert!(c.seqs.len() <= 3, "seq table grew to {}", c.seqs.len());
+    }
+
+    #[test]
+    fn for_lanes_capacity_is_exact() {
+        // lanes * max_context tokens all admit; one more page claim
+        // refuses (the admission-control contract AttnLm sizes by).
+        let mut c = KvCache::for_lanes(1, 2, 4, 2, 8);
+        let seqs: Vec<usize> = (0..2).map(|_| c.alloc_seq()).collect();
+        for &s in &seqs {
+            for _ in 0..8 {
+                c.begin_token(s).unwrap();
+            }
+        }
+        assert!(c.begin_token(seqs[0]).is_err());
+        assert_eq!(c.config().capacity_tokens(), 16);
+    }
+
+    #[test]
+    fn bytes_per_token_accounts_all_layers() {
+        let cfg = KvCacheConfig { layers: 4, hidden: 256, page_tokens: 16,
+                                  n_pages: 8 };
+        // k + v, 4 layers, 256 f32 each: 2 * 4 * 256 * 4 bytes.
+        assert_eq!(cfg.bytes_per_token(), 8192);
+        assert_eq!(cfg.token_stride(), 2048);
+        assert_eq!(cfg.page_stride(), 16 * 2048);
+    }
+
+    #[test]
+    #[should_panic(expected = "not live")]
+    fn double_free_is_rejected() {
+        let mut c = tiny(2);
+        let s = c.alloc_seq();
+        c.free_seq(s);
+        c.free_seq(s);
+    }
+}

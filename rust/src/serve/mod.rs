@@ -21,6 +21,17 @@
 //!   and retires finished sequences with mid-flight refill
 //!   (continuous batching). It drives any [`model::DecodeModel`],
 //!   family-blind.
+//! - [`kvcache`] + [`model::AttnLm`] — the paged KV-cache attention
+//!   path: real pre-norm multi-head attention whose per-lane context
+//!   lives in fixed-size token pages ([`kvcache::KvCache`], free-list
+//!   allocated, recycled when a lane retires through
+//!   [`model::DecodeModel::retire_state`]). The QKV/attention-out
+//!   projections run through the same pooled blocked kernels as the
+//!   MLP, so all four families serve with real attention and the
+//!   KV-cache memory pressure production decoding actually has —
+//!   [`model::DecodeModel::kv_bytes_per_token`] reports the per-token
+//!   bandwidth tax ([`crate::deploy::decode_tokens_per_sec_bits_kv`]
+//!   is the matching analytic roofline).
 //!
 //! Kernel tiling (see `ternary::matmul` and `linear::qmatmul`): weights
 //! walk in [`crate::ternary::matmul::ROW_BLOCK`]-row blocks by
@@ -44,10 +55,13 @@
 //! `deploy::decode_tokens_per_sec_bits` gives the analytic roofline
 //! keyed by each model's [`model::DecodeModel::effective_bits_per_param`].
 
+pub mod kvcache;
 pub mod model;
 pub mod scheduler;
 
-pub use model::{DecodeModel, DenseLm, FamilySpec, LatentBlock, LatentLm,
+pub use kvcache::{KvCache, KvCacheConfig, OutOfPages, KV_PAGE_TOKENS};
+pub use model::{AttnBlock, AttnLm, DecodeModel, DenseLm, FamilySpec,
+                LatentAttnBlock, LatentAttnLm, LatentBlock, LatentLm,
                 LmDims, QuantLm, QuantMethod, SpectraBlock, SpectraLm,
                 TernaryLm};
 pub use scheduler::{Completion, GenRequest, Sampling, Scheduler, ServeStats};

@@ -25,7 +25,28 @@
 //! cross-family benches compare storage formats of the *same* model —
 //! the serving analog of the paper's matched-bit-budget comparison
 //! (§4.2, Table 4).
+//!
+//! Two context mechanisms share the [`DecodeModel`] trait:
+//!
+//! - [`SpectraLm`] — the per-lane exponential decay state above: no
+//!   attention, no per-token memory growth (the original serve model).
+//! - [`AttnLm`] — real pre-norm multi-head attention with a block-paged
+//!   [`KvCache`]: each lane binds a cache sequence on admission (the
+//!   binding rides in the lane's state buffer, so the scheduler stays
+//!   model-blind), appends one k/v per layer per step, and attends over
+//!   its own positions only. Retired lanes release their pages through
+//!   [`DecodeModel::retire_state`]. [`LatentAttnLm`] is the attention
+//!   analog of [`LatentLm`], realizing all four storage families from
+//!   one latent weight set.
+//!
+//! Both uphold the same scheduler contract: lane i's outputs depend
+//! only on lane i's state/tokens, so token streams are identical at
+//! any batch size, and the pooled `_into` path is bitwise identical to
+//! the allocating path.
 
+use std::sync::{Mutex, MutexGuard};
+
+use super::kvcache::{KvCache, KV_PAGE_TOKENS};
 use crate::checkpoint::Checkpoint;
 use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
 use crate::linear::{DenseF32, LinearFormat, QuantPacked};
@@ -84,6 +105,25 @@ pub trait DecodeModel {
     fn step_batch_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
                        pool: &WorkerPool, scratch: &mut DecodeScratch) {
         scratch.logits = self.step_batch(states, tokens, pool.threads());
+    }
+
+    /// Release any model-side per-lane resource bound to `state` (the
+    /// paged KV-cache sequence of an [`AttnLm`] lane) and clear the
+    /// binding. The scheduler calls this exactly once per retired lane,
+    /// *before* recycling the state buffer — the lane-retire → page-
+    /// recycle path. Decay-state models hold no per-lane resources; the
+    /// default is a no-op.
+    fn retire_state(&self, state: &mut [f32]) {
+        let _ = state;
+    }
+
+    /// Bytes this model appends to its KV cache per lane per decode
+    /// step (0 for cache-free decay-state models). Serving telemetry:
+    /// the `kv_bytes_per_token` field of BENCH_serve.json and the key
+    /// of the KV-aware deploy roofline
+    /// ([`crate::deploy::decode_tokens_per_sec_bits_kv`]).
+    fn kv_bytes_per_token(&self) -> f64 {
+        0.0
     }
 
     /// Storage-format label of the linears (e.g. "fp32", "q4g128",
@@ -621,6 +661,667 @@ impl SpectraLm<PackedMatrix> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Paged KV-cache attention serving
+// ---------------------------------------------------------------------------
+
+/// x = embed[token], written into a reused (batch, hidden) buffer
+/// (reshaped in place, fully overwritten). The attention model carries
+/// no decay state: context arrives through the KV cache, so the
+/// residual stream starts from the embedding alone.
+fn gather_embed_into(embed: &HostTensor, tokens: &[u32], x: &mut HostTensor) {
+    let (vocab, hidden) = embed.dims2();
+    x.reset2(tokens.len(), hidden);
+    for (bi, &tok) in tokens.iter().enumerate() {
+        x.row_mut(bi).copy_from_slice(embed.row(tok as usize % vocab));
+    }
+}
+
+/// Allocating [`gather_embed_into`] wrapper (compatibility path).
+fn gather_embed(embed: &HostTensor, tokens: &[u32]) -> HostTensor {
+    let mut x = HostTensor::zeros(vec![0, 0]);
+    gather_embed_into(embed, tokens, &mut x);
+    x
+}
+
+/// Single-query multi-head attention for one lane over its own cached
+/// positions: per head, dot(q, k)/sqrt(dh) scores over positions
+/// `0..seq_len`, max-subtracted softmax, then the weighted sum of the
+/// cached values into `out` (fully overwritten).
+///
+/// Determinism contract: the loops run in position order with a fixed
+/// f32 accumulation order, and only `seq`'s own slots are read — so a
+/// lane's attention output is bitwise identical at any batch size,
+/// thread count, and physical page placement. `scores` is a reused
+/// per-(lane, head) buffer; it is cleared and refilled before use.
+fn attend_one(cache: &KvCache, seq: usize, layer: usize, heads: usize,
+              q: &[f32], out: &mut [f32], scores: &mut Vec<f32>) {
+    let hidden = q.len();
+    debug_assert_eq!(out.len(), hidden);
+    debug_assert_eq!(hidden % heads, 0);
+    let dh = hidden / heads;
+    let len = cache.seq_len(seq);
+    debug_assert!(len >= 1, "attend before begin_token");
+    let scale = 1.0 / (dh as f32).sqrt();
+    out.fill(0.0);
+    for h in 0..heads {
+        let qh = &q[h * dh..(h + 1) * dh];
+        scores.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for pos in 0..len {
+            let (k, _) = cache.kv(seq, layer, pos);
+            let kh = &k[h * dh..(h + 1) * dh];
+            let mut s = 0.0f32;
+            for j in 0..dh {
+                s += qh[j] * kh[j];
+            }
+            let s = s * scale;
+            scores.push(s);
+            if s > mx {
+                mx = s;
+            }
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            denom += *s;
+        }
+        // The max-score position contributes exp(0) = 1, so denom >= 1.
+        let inv = 1.0 / denom;
+        let oh = &mut out[h * dh..(h + 1) * dh];
+        for pos in 0..len {
+            let w = scores[pos] * inv;
+            let (_, v) = cache.kv(seq, layer, pos);
+            let vh = &v[h * dh..(h + 1) * dh];
+            for (o, &vv) in oh.iter_mut().zip(vh) {
+                *o += w * vv;
+            }
+        }
+    }
+}
+
+/// Bind a lane's state buffer to a KV-cache sequence and claim this
+/// step's token slot. The binding is the state's first element
+/// (`seq_id + 1`; `0.0` = unbound — exactly what the scheduler's
+/// zeroed fresh/recycled buffers carry), so the scheduler stays
+/// model-blind: admission needs no new plumbing, and retirement goes
+/// through [`DecodeModel::retire_state`].
+fn bind_and_begin(cache: &mut KvCache, st: &mut [f32]) -> usize {
+    let seq = if st[0] == 0.0 {
+        let seq = cache.alloc_seq();
+        st[0] = (seq + 1) as f32;
+        seq
+    } else {
+        st[0] as usize - 1
+    };
+    if let Err(e) = cache.begin_token(seq) {
+        panic!("AttnLm: {e} — size the cache for max_batch lanes x \
+                (prompt + max_new_tokens) context");
+    }
+    seq
+}
+
+/// One attention + gated-MLP residual block over any linear storage
+/// format. The four attention projections are plain (hidden, hidden)
+/// [`LinearFormat`]s, so every family compresses them exactly like the
+/// MLP linears.
+pub struct AttnBlock<L> {
+    /// (hidden, hidden) query projection.
+    pub wq: L,
+    /// (hidden, hidden) key projection.
+    pub wk: L,
+    /// (hidden, hidden) value projection.
+    pub wv: L,
+    /// (hidden, hidden) attention-out projection.
+    pub wo: L,
+    /// (glu, hidden)
+    pub gate: L,
+    /// (glu, hidden)
+    pub up: L,
+    /// (hidden, glu)
+    pub down: L,
+}
+
+/// The paged KV-cache attention serving model: pre-norm multi-head
+/// attention + gated MLP per block, every linear an `L`, per-lane
+/// context held in a block-paged [`KvCache`] instead of the decay
+/// state [`SpectraLm`] uses.
+///
+/// Scheduler integration (the lane lifecycle, with the `Scheduler`
+/// itself unchanged and model-blind):
+///
+/// - *Admit*: the scheduler hands a zeroed state buffer to the first
+///   `step_batch*` call; the model allocates a cache sequence and
+///   stores the binding in `state[0]` (`bind_and_begin`).
+/// - *Step*: each live lane claims one token slot, appends one k/v per
+///   layer, and attends over its own positions only — lane
+///   independence, so batch-1 == batch-N token streams hold exactly as
+///   for the decay-state model.
+/// - *Retire*: the scheduler's state-recycling path calls
+///   [`DecodeModel::retire_state`], which frees the sequence — its
+///   pages return to the free list for the next admitted lane.
+///
+/// The cache is interior-mutable (`Mutex`) because the scheduler holds
+/// the model by shared reference; the lock is uncontended (one
+/// scheduler thread) and never held by kernel workers.
+pub struct AttnLm<L: LinearFormat> {
+    pub dims: LmDims,
+    /// Attention heads (`hidden % heads == 0`).
+    pub heads: usize,
+    /// (vocab, hidden) f32 input embeddings.
+    pub embed: HostTensor,
+    pub blocks: Vec<AttnBlock<L>>,
+    /// (vocab, hidden) output head.
+    pub head: L,
+    cache: Mutex<KvCache>,
+}
+
+impl<L: LinearFormat> AttnLm<L> {
+    /// Build from realized parts, sizing the page pool for `lanes`
+    /// concurrent sequences of up to `max_context` tokens each.
+    pub fn new(dims: LmDims, heads: usize, embed: HostTensor,
+               blocks: Vec<AttnBlock<L>>, head: L,
+               lanes: usize, max_context: usize) -> AttnLm<L> {
+        assert!(heads >= 1 && dims.hidden % heads == 0,
+                "heads {heads} must divide hidden {}", dims.hidden);
+        assert_eq!(embed.dims2(), (dims.vocab, dims.hidden),
+                   "embed shape mismatch");
+        assert_eq!(blocks.len(), dims.layers, "block count != layers");
+        let cache = KvCache::for_lanes(dims.layers, dims.hidden,
+                                       KV_PAGE_TOKENS, lanes, max_context);
+        AttnLm { dims, heads, embed, blocks, head, cache: Mutex::new(cache) }
+    }
+
+    fn lock_cache(&self) -> MutexGuard<'_, KvCache> {
+        // Poisoning ignored on purpose (a panicking step is re-raised
+        // by the caller; the cache data itself stays well-formed).
+        self.cache.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pages currently held by live lanes — serving telemetry; drops
+    /// back to 0 once every submitted request has retired.
+    pub fn kv_pages_in_use(&self) -> usize {
+        self.lock_cache().pages_in_use()
+    }
+
+    /// Live (bound, not yet retired) cache sequences.
+    pub fn kv_live_seqs(&self) -> usize {
+        self.lock_cache().live_seqs()
+    }
+
+    /// Every linear in the model (per block: q, k, v, o, gate, up,
+    /// down; then the head).
+    pub fn linears(&self) -> Vec<&L> {
+        let mut out = Vec::with_capacity(7 * self.blocks.len() + 1);
+        for b in &self.blocks {
+            out.extend([&b.wq, &b.wk, &b.wv, &b.wo,
+                        &b.gate, &b.up, &b.down]);
+        }
+        out.push(&self.head);
+        out
+    }
+}
+
+impl<L: LinearFormat> DecodeModel for AttnLm<L> {
+    fn dims(&self) -> &LmDims {
+        &self.dims
+    }
+
+    fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                  threads: usize) -> HostTensor {
+        assert_eq!(states.len(), tokens.len());
+        let mut cache = self.lock_cache();
+        let seqs: Vec<usize> = states.iter_mut()
+            .map(|st| bind_and_begin(&mut cache, st)).collect();
+        let mut x = gather_embed(&self.embed, tokens);
+        let mut scores = Vec::new();
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let y = rmsnorm(&x);
+            let q = blk.wq.matmul_batch(&y, threads);
+            let k = blk.wk.matmul_batch(&y, threads);
+            let v = blk.wv.matmul_batch(&y, threads);
+            for (bi, &seq) in seqs.iter().enumerate() {
+                cache.write_kv(seq, l, k.row(bi), v.row(bi));
+            }
+            let mut attn =
+                HostTensor::zeros(vec![tokens.len(), self.dims.hidden]);
+            for (bi, &seq) in seqs.iter().enumerate() {
+                attend_one(&cache, seq, l, self.heads, q.row(bi),
+                           attn.row_mut(bi), &mut scores);
+            }
+            let o = blk.wo.matmul_batch(&attn, threads);
+            for (xv, &ov) in x.data.iter_mut().zip(o.data.iter()) {
+                *xv += ov;
+            }
+            let y2 = rmsnorm(&x);
+            let g = blk.gate.matmul_batch(&y2, threads);
+            let u = blk.up.matmul_batch(&y2, threads);
+            let mut a = g;
+            for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
+                *av = silu(*av) * uv;
+            }
+            let d = blk.down.matmul_batch(&a, threads);
+            for (xv, &dv) in x.data.iter_mut().zip(d.data.iter()) {
+                *xv += dv;
+            }
+        }
+        let y = rmsnorm(&x);
+        self.head.matmul_batch(&y, threads)
+    }
+
+    /// The pooled/scratch twin: identical math and bitwise-identical
+    /// logits, state tags, and cache contents to
+    /// [`AttnLm::step_batch`] at `threads = pool.threads()` — only the
+    /// buffer sources (scratch vs fresh) and the execution substrate
+    /// (dispatched pool vs spawned scope) differ.
+    fn step_batch_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                       pool: &WorkerPool, scratch: &mut DecodeScratch) {
+        assert_eq!(states.len(), tokens.len());
+        let mut cache = self.lock_cache();
+        scratch.seqs.clear();
+        for st in states.iter_mut() {
+            scratch.seqs.push(bind_and_begin(&mut cache, st));
+        }
+        gather_embed_into(&self.embed, tokens, &mut scratch.x);
+        for (l, blk) in self.blocks.iter().enumerate() {
+            rmsnorm_into(&scratch.x, &mut scratch.norm);
+            blk.wq.matmul_batch_into(&scratch.norm, pool,
+                                     &mut scratch.out_t, &mut scratch.q);
+            blk.wk.matmul_batch_into(&scratch.norm, pool,
+                                     &mut scratch.out_t, &mut scratch.k);
+            blk.wv.matmul_batch_into(&scratch.norm, pool,
+                                     &mut scratch.out_t, &mut scratch.v);
+            for (bi, &seq) in scratch.seqs.iter().enumerate() {
+                cache.write_kv(seq, l, scratch.k.row(bi), scratch.v.row(bi));
+            }
+            scratch.attn.reset2(tokens.len(), self.dims.hidden);
+            for (bi, &seq) in scratch.seqs.iter().enumerate() {
+                attend_one(&cache, seq, l, self.heads, scratch.q.row(bi),
+                           scratch.attn.row_mut(bi), &mut scratch.scores);
+            }
+            // The attention-out projection reuses the down buffer (both
+            // are (batch, hidden) residual deltas).
+            blk.wo.matmul_batch_into(&scratch.attn, pool,
+                                     &mut scratch.out_t, &mut scratch.down);
+            for (xv, &ov) in scratch.x.data.iter_mut()
+                .zip(scratch.down.data.iter())
+            {
+                *xv += ov;
+            }
+            rmsnorm_into(&scratch.x, &mut scratch.norm);
+            blk.gate.matmul_batch_into(&scratch.norm, pool,
+                                       &mut scratch.out_t, &mut scratch.gate);
+            blk.up.matmul_batch_into(&scratch.norm, pool,
+                                     &mut scratch.out_t, &mut scratch.up);
+            for (av, &uv) in scratch.gate.data.iter_mut()
+                .zip(scratch.up.data.iter())
+            {
+                *av = silu(*av) * uv;
+            }
+            blk.down.matmul_batch_into(&scratch.gate, pool,
+                                       &mut scratch.out_t, &mut scratch.down);
+            for (xv, &dv) in scratch.x.data.iter_mut()
+                .zip(scratch.down.data.iter())
+            {
+                *xv += dv;
+            }
+        }
+        rmsnorm_into(&scratch.x, &mut scratch.norm);
+        self.head.matmul_batch_into(&scratch.norm, pool, &mut scratch.out_t,
+                                    &mut scratch.logits);
+    }
+
+    fn retire_state(&self, state: &mut [f32]) {
+        if state[0] != 0.0 {
+            let seq = state[0] as usize - 1;
+            self.lock_cache().free_seq(seq);
+            state[0] = 0.0;
+        }
+    }
+
+    fn kv_bytes_per_token(&self) -> f64 {
+        self.lock_cache().config().bytes_per_token() as f64
+    }
+
+    fn family_label(&self) -> String {
+        self.head.label()
+    }
+
+    fn effective_bits_per_param(&self) -> f64 {
+        let mut bits = 0.0f64;
+        let mut params = 0.0f64;
+        for l in self.linears() {
+            let p = (l.out_features() * l.in_features()) as f64;
+            bits += l.effective_bits_per_param() * p;
+            params += p;
+        }
+        bits / params.max(1.0)
+    }
+}
+
+/// One block of family-agnostic latent f32 attention + MLP weights.
+pub struct LatentAttnBlock {
+    pub wq: HostTensor,
+    pub wk: HostTensor,
+    pub wv: HostTensor,
+    pub wo: HostTensor,
+    pub gate: HostTensor,
+    pub up: HostTensor,
+    pub down: HostTensor,
+}
+
+/// Family-agnostic latent weights for the attention serving model —
+/// the [`LatentLm`] analog with per-block q/k/v/o projections, so
+/// cross-family attention benches compare storage formats of the
+/// *same* model.
+pub struct LatentAttnLm {
+    pub dims: LmDims,
+    pub heads: usize,
+    /// (vocab, hidden) f32 embeddings (stay float in every family).
+    pub embed: HostTensor,
+    pub blocks: Vec<LatentAttnBlock>,
+    /// (vocab, hidden) latent output head.
+    pub head: HostTensor,
+    /// Ternary scale shards per block matrix (§A.5); head uses 1.
+    pub mp: usize,
+}
+
+impl LatentAttnLm {
+    /// Seeded random latent weights (the synthetic bench/test model).
+    pub fn synthetic(dims: LmDims, heads: usize, mp: usize, seed: u64)
+                     -> LatentAttnLm {
+        assert!(heads >= 1 && dims.hidden % heads == 0,
+                "heads {heads} must divide hidden {}", dims.hidden);
+        let embed = HostTensor::randn(vec![dims.vocab, dims.hidden], 0.5,
+                                      seed ^ 0xA77E0);
+        let mut blocks = Vec::with_capacity(dims.layers);
+        for l in 0..dims.layers {
+            let ls = seed ^ ((l as u64 + 1) << 24);
+            let sq = |shape: Vec<usize>, salt: u64| {
+                HostTensor::randn(shape, 0.08, ls ^ salt)
+            };
+            blocks.push(LatentAttnBlock {
+                wq: sq(vec![dims.hidden, dims.hidden], 0x11),
+                wk: sq(vec![dims.hidden, dims.hidden], 0x12),
+                wv: sq(vec![dims.hidden, dims.hidden], 0x13),
+                wo: sq(vec![dims.hidden, dims.hidden], 0x14),
+                gate: sq(vec![dims.glu, dims.hidden], 0x15),
+                up: sq(vec![dims.glu, dims.hidden], 0x16),
+                down: sq(vec![dims.hidden, dims.glu], 0x17),
+            });
+        }
+        let head = HostTensor::randn(vec![dims.vocab, dims.hidden], 0.08,
+                                     seed ^ 0xA77E1);
+        LatentAttnLm { dims, heads, embed, blocks, head, mp }
+    }
+
+    /// Latent attention weights from a trained checkpoint: `embed` plus
+    /// every `l{i}.attn_{q,k,v,o}` and `l{i}.mlp_{gate,up,down}`
+    /// linear; the head falls back to the tied embedding table.
+    pub fn from_checkpoint(ck: &Checkpoint, heads: usize)
+                           -> Result<LatentAttnLm> {
+        let embed = ck.get("embed")
+            .ok_or_else(|| anyhow::anyhow!(
+                "checkpoint has no 'embed' tensor; cannot build serve model"))?
+            .clone();
+        let (vocab, hidden) = embed.dims2();
+        if heads == 0 || hidden % heads != 0 {
+            anyhow::bail!("heads {heads} must divide hidden {hidden}");
+        }
+        let mut blocks = Vec::new();
+        let mut glu = 0usize;
+        for l in 0.. {
+            let Some(wq) = ck.get(&format!("l{l}.attn_q")) else { break };
+            let get = |name: &str| {
+                ck.get(&format!("l{l}.{name}")).ok_or_else(
+                    || anyhow::anyhow!("layer {l}: attn_q without {name}"))
+            };
+            let wk = get("attn_k")?;
+            let wv = get("attn_v")?;
+            let wo = get("attn_o")?;
+            let gate = get("mlp_gate")?;
+            let up = get("mlp_up")?;
+            let down = get("mlp_down")?;
+            if l == 0 {
+                glu = gate.dims2().0;
+            }
+            // Same shape-drift rejection as LatentLm::from_checkpoint:
+            // mismatched tensors must fail at build time, not serve
+            // truncated garbage.
+            for (name, t, want) in [("attn_q", wq, (hidden, hidden)),
+                                    ("attn_k", wk, (hidden, hidden)),
+                                    ("attn_v", wv, (hidden, hidden)),
+                                    ("attn_o", wo, (hidden, hidden)),
+                                    ("mlp_gate", gate, (glu, hidden)),
+                                    ("mlp_up", up, (glu, hidden)),
+                                    ("mlp_down", down, (hidden, glu))] {
+                if t.dims2() != want {
+                    anyhow::bail!(
+                        "layer {l}: {name} is {:?}, expected {:?} (from \
+                         embed hidden {hidden} and l0 glu {glu})",
+                        t.dims2(), want);
+                }
+            }
+            blocks.push(LatentAttnBlock {
+                wq: wq.clone(),
+                wk: wk.clone(),
+                wv: wv.clone(),
+                wo: wo.clone(),
+                gate: gate.clone(),
+                up: up.clone(),
+                down: down.clone(),
+            });
+        }
+        if blocks.is_empty() {
+            anyhow::bail!("checkpoint has no l0.attn_q — not an attention \
+                           LM (serve it with the decay-state LatentLm \
+                           instead)");
+        }
+        let head = ck.get("head").unwrap_or(&embed).clone();
+        if head.dims2().1 != hidden {
+            anyhow::bail!("head is {:?}, expected (vocab, {hidden})",
+                          head.dims2());
+        }
+        let layers = blocks.len();
+        Ok(LatentAttnLm {
+            dims: LmDims { vocab, hidden, glu, layers },
+            heads,
+            embed,
+            blocks,
+            head,
+            mp: 1,
+        })
+    }
+
+    fn realize<L: LinearFormat>(&self, lanes: usize, max_context: usize,
+                                f: impl Fn(&HostTensor) -> L) -> AttnLm<L> {
+        AttnLm::new(
+            self.dims.clone(), self.heads, self.embed.clone(),
+            self.blocks.iter().map(|b| AttnBlock {
+                wq: f(&b.wq),
+                wk: f(&b.wk),
+                wv: f(&b.wv),
+                wo: f(&b.wo),
+                gate: f(&b.gate),
+                up: f(&b.up),
+                down: f(&b.down),
+            }).collect(),
+            f(&self.head), lanes, max_context)
+    }
+
+    /// FloatLM storage: the latent f32 weights served directly.
+    pub fn build_float(&self, lanes: usize, max_context: usize)
+                       -> AttnLm<DenseF32> {
+        self.realize(lanes, max_context, |w| DenseF32 { w: w.clone() })
+    }
+
+    /// TriLM storage: absmean-ternarized (§A.5, mp shards per block
+    /// matrix, single-shard head) and packed 2-bit.
+    pub fn build_ternary(&self, lanes: usize, max_context: usize)
+                         -> AttnLm<PackedMatrix> {
+        let tern = |w: &HostTensor, mp: usize| {
+            PackedMatrix::from_ternary(&TernaryTensor::from_latent(w, mp))
+        };
+        AttnLm::new(
+            self.dims.clone(), self.heads, self.embed.clone(),
+            self.blocks.iter().map(|b| AttnBlock {
+                wq: tern(&b.wq, self.mp),
+                wk: tern(&b.wk, self.mp),
+                wv: tern(&b.wv, self.mp),
+                wo: tern(&b.wo, self.mp),
+                gate: tern(&b.gate, self.mp),
+                up: tern(&b.up, self.mp),
+                down: tern(&b.down, self.mp),
+            }).collect(),
+            tern(&self.head, 1), lanes, max_context)
+    }
+
+    /// QuantLM storage via round-to-nearest group quantization.
+    pub fn build_quant_rtn(&self, bits: u32, group: usize,
+                           lanes: usize, max_context: usize)
+                           -> AttnLm<QuantPacked> {
+        self.realize(lanes, max_context, |w| {
+            QuantPacked::from_quant(&QuantTensor::quantize_rtn(w, bits, group))
+        })
+    }
+
+    /// QuantLM storage via GPTQ with serve-side synthetic calibration:
+    /// the latent f32 *attention* forward (including a real paged KV
+    /// cache) is driven on seeded token traffic to accumulate every
+    /// linear's input Hessian, then each linear is quantized with
+    /// second-order error compensation.
+    pub fn build_quant_gptq(&self, bits: u32, group: usize, seed: u64,
+                            lanes: usize, max_context: usize)
+                            -> Result<AttnLm<QuantPacked>> {
+        let (acc_qkv, acc_o, acc_mlp, acc_g, acc_head) =
+            self.calibration_hessians(seed);
+        let cfg = GptqConfig::new(bits, group);
+        let qp = |w: &HostTensor, acc: &HessianAccumulator|
+                 -> Result<QuantPacked> {
+            Ok(QuantPacked::from_quant(
+                &gptq_quantize(w, &acc.finalize(), cfg)?))
+        };
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (l, b) in self.blocks.iter().enumerate() {
+            blocks.push(AttnBlock {
+                wq: qp(&b.wq, &acc_qkv[l])?,
+                wk: qp(&b.wk, &acc_qkv[l])?,
+                wv: qp(&b.wv, &acc_qkv[l])?,
+                wo: qp(&b.wo, &acc_o[l])?,
+                gate: qp(&b.gate, &acc_mlp[l])?,
+                up: qp(&b.up, &acc_mlp[l])?,
+                down: qp(&b.down, &acc_g[l])?,
+            });
+        }
+        Ok(AttnLm::new(self.dims.clone(), self.heads, self.embed.clone(),
+                       blocks, qp(&self.head, &acc_head)?,
+                       lanes, max_context))
+    }
+
+    /// Realize any family as a boxed [`DecodeModel`], page pool sized
+    /// for `lanes` concurrent sequences of `max_context` tokens — the
+    /// entry point `serve-bench --attn` and the attention test
+    /// harnesses use.
+    pub fn build(&self, spec: FamilySpec, lanes: usize, max_context: usize)
+                 -> Result<Box<dyn DecodeModel>> {
+        let model: Box<dyn DecodeModel> = match spec {
+            FamilySpec::Float => {
+                Box::new(self.build_float(lanes, max_context))
+            }
+            FamilySpec::Ternary => {
+                Box::new(self.build_ternary(lanes, max_context))
+            }
+            FamilySpec::Quant { bits, group, method: QuantMethod::Rtn } => {
+                Box::new(self.build_quant_rtn(bits, group, lanes,
+                                              max_context))
+            }
+            FamilySpec::Quant { bits, group, method: QuantMethod::Gptq } => {
+                Box::new(self.build_quant_gptq(bits, group, 0, lanes,
+                                               max_context)?)
+            }
+        };
+        Ok(model)
+    }
+
+    /// Drive the latent f32 attention forward on seeded token traffic,
+    /// accumulating every linear's input Hessian: q/k/v share the
+    /// block-input accumulator (identical inputs), o gets the attention
+    /// mix, gate/up share the post-attention norm, down gets the
+    /// activated GLU, the head gets the final norm.
+    #[allow(clippy::type_complexity)]
+    fn calibration_hessians(&self, seed: u64)
+                            -> (Vec<HessianAccumulator>,
+                                Vec<HessianAccumulator>,
+                                Vec<HessianAccumulator>,
+                                Vec<HessianAccumulator>,
+                                HessianAccumulator) {
+        let d = &self.dims;
+        let mut acc_qkv: Vec<HessianAccumulator> = (0..d.layers)
+            .map(|_| HessianAccumulator::new(d.hidden)).collect();
+        let mut acc_o: Vec<HessianAccumulator> = (0..d.layers)
+            .map(|_| HessianAccumulator::new(d.hidden)).collect();
+        let mut acc_mlp: Vec<HessianAccumulator> = (0..d.layers)
+            .map(|_| HessianAccumulator::new(d.hidden)).collect();
+        let mut acc_g: Vec<HessianAccumulator> = (0..d.layers)
+            .map(|_| HessianAccumulator::new(d.glu)).collect();
+        let mut acc_head = HessianAccumulator::new(d.hidden);
+        let mut rng = SplitMix64::new(seed ^ 0xA77CA1);
+        let mut cache = KvCache::for_lanes(d.layers, d.hidden,
+                                           KV_PAGE_TOKENS, CALIB_LANES,
+                                           CALIB_STEPS);
+        let seqs: Vec<usize> =
+            (0..CALIB_LANES).map(|_| cache.alloc_seq()).collect();
+        let mut scores = Vec::new();
+        for _ in 0..CALIB_STEPS {
+            for &s in &seqs {
+                cache.begin_token(s)
+                    .expect("calibration cache sized for CALIB_STEPS");
+            }
+            let mut x = HostTensor::zeros(vec![CALIB_LANES, d.hidden]);
+            for b in 0..CALIB_LANES {
+                x.row_mut(b).copy_from_slice(self.embed.row(
+                    rng.below(d.vocab)));
+            }
+            for (l, blk) in self.blocks.iter().enumerate() {
+                let y = rmsnorm(&x);
+                acc_qkv[l].add_batch(&y);
+                let q = matmul_dense(&y, &blk.wq);
+                let k = matmul_dense(&y, &blk.wk);
+                let v = matmul_dense(&y, &blk.wv);
+                for (bi, &s) in seqs.iter().enumerate() {
+                    cache.write_kv(s, l, k.row(bi), v.row(bi));
+                }
+                let mut attn =
+                    HostTensor::zeros(vec![CALIB_LANES, d.hidden]);
+                for (bi, &s) in seqs.iter().enumerate() {
+                    attend_one(&cache, s, l, self.heads, q.row(bi),
+                               attn.row_mut(bi), &mut scores);
+                }
+                acc_o[l].add_batch(&attn);
+                let o = matmul_dense(&attn, &blk.wo);
+                for (xv, &ov) in x.data.iter_mut().zip(o.data.iter()) {
+                    *xv += ov;
+                }
+                let y2 = rmsnorm(&x);
+                acc_mlp[l].add_batch(&y2);
+                let g = matmul_dense(&y2, &blk.gate);
+                let u = matmul_dense(&y2, &blk.up);
+                let mut a = g;
+                for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
+                    *av = silu(*av) * uv;
+                }
+                acc_g[l].add_batch(&a);
+                let dd = matmul_dense(&a, &blk.down);
+                for (xv, &dv) in x.data.iter_mut().zip(dd.data.iter()) {
+                    *xv += dv;
+                }
+            }
+            acc_head.add_batch(&rmsnorm(&x));
+        }
+        (acc_qkv, acc_o, acc_mlp, acc_g, acc_head)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -839,6 +1540,210 @@ mod tests {
         let e3 = mean_err(&latent.build_quant_rtn(3, 128));
         assert!(e4 < e3, "4-bit err {e4} should beat 3-bit err {e3}");
         assert!(e4 > 0.0, "quantization must not be a no-op");
+    }
+
+    fn attn_latent(seed: u64) -> LatentAttnLm {
+        LatentAttnLm::synthetic(small_dims(), 4, 1, seed)
+    }
+
+    #[test]
+    fn attn_history_carries_context_through_the_cache() {
+        // Two lanes fed different first tokens then the same second
+        // token: the cached context must make their logits diverge.
+        let lm = attn_latent(21).build_float(2, 8);
+        let mut s = vec![vec![0.0f32; 32]; 2];
+        let mut refs: Vec<&mut [f32]> =
+            s.iter_mut().map(|v| v.as_mut_slice()).collect();
+        lm.step_batch(&mut refs, &[1, 2], 1);
+        let mut refs: Vec<&mut [f32]> =
+            s.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let logits = lm.step_batch(&mut refs, &[7, 7], 1);
+        let diff: f32 = logits.row(0).iter().zip(logits.row(1))
+            .map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "attention ignored history (diff {diff})");
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn attn_lane_is_batch_composition_invariant() {
+        // The scheduler contract at the model level: a lane decoding
+        // alone and the same lane decoding beside a neighbour produce
+        // bitwise-identical logits (two instances: the cache is
+        // stateful).
+        let latent = attn_latent(22);
+        let solo = latent.build_float(1, 8);
+        let pair = latent.build_float(2, 8);
+        let mut s1 = vec![0.0f32; 32];
+        let mut p = vec![vec![0.0f32; 32]; 2];
+        for (step, (tok_a, tok_b)) in [(3u32, 50u32), (9, 1)].iter()
+            .enumerate()
+        {
+            let mut refs = [s1.as_mut_slice()];
+            let want = solo.step_batch(&mut refs, &[*tok_a], 1);
+            let mut refs: Vec<&mut [f32]> =
+                p.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let got = pair.step_batch(&mut refs, &[*tok_a, *tok_b], 1);
+            assert_eq!(want.data.as_slice(), got.row(0),
+                       "step {step}: batch neighbour changed lane 0");
+        }
+    }
+
+    #[test]
+    fn attn_every_family_builds_and_steps() {
+        let latent = attn_latent(23);
+        let specs = [
+            FamilySpec::Float,
+            FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+            FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Gptq },
+            FamilySpec::Ternary,
+        ];
+        for spec in specs {
+            let m = latent.build(spec, 1, 8).unwrap();
+            assert_eq!(m.dims(), &small_dims(), "{}", spec.label());
+            assert_eq!(m.kv_bytes_per_token(), (2 * 2 * 32 * 4) as f64,
+                       "{}", spec.label());
+            let mut st = vec![0.0f32; 32];
+            let logits = step_one(m.as_ref(), &mut st, 9);
+            assert_eq!(logits.shape, vec![1, 64], "{}", spec.label());
+            assert!(logits.data.iter().all(|v| v.is_finite()),
+                    "{}: non-finite logits", spec.label());
+            assert_ne!(st[0], 0.0, "{}: lane did not bind a sequence",
+                       spec.label());
+        }
+    }
+
+    #[test]
+    fn attn_step_batch_into_matches_step_batch_bitwise() {
+        // Pooled/scratch vs allocating/scoped, on two instances holding
+        // identical weights (the cache is stateful, so one instance
+        // cannot run both paths): logits AND state tags must be
+        // bitwise identical, with one scratch reused across families.
+        let latent = attn_latent(24);
+        let pool = WorkerPool::new(2);
+        let mut scratch = DecodeScratch::new();
+        let specs = [
+            FamilySpec::Float,
+            FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+            FamilySpec::Ternary,
+        ];
+        for spec in specs {
+            let m_a = latent.build(spec, 3, 8).unwrap();
+            let m_b = latent.build(spec, 3, 8).unwrap();
+            let mut st_a = vec![vec![0.0f32; 32]; 3];
+            let mut st_b = st_a.clone();
+            for (step, toks) in [[1u32, 9, 60], [4, 4, 31]].iter().enumerate() {
+                let mut refs_a: Vec<&mut [f32]> =
+                    st_a.iter_mut().map(|s| s.as_mut_slice()).collect();
+                let want = m_a.step_batch(&mut refs_a, toks, pool.threads());
+                let mut refs_b: Vec<&mut [f32]> =
+                    st_b.iter_mut().map(|s| s.as_mut_slice()).collect();
+                m_b.step_batch_into(&mut refs_b, toks, &pool, &mut scratch);
+                assert_eq!(scratch.logits.shape, want.shape,
+                           "{} step {step}", spec.label());
+                assert_eq!(scratch.logits.data, want.data,
+                           "{} step {step}: logits diverge", spec.label());
+                assert_eq!(st_a, st_b,
+                           "{} step {step}: states diverge", spec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn attn_retire_recycles_pages_and_rebinding_is_clean() {
+        // Lane lifecycle: stepping binds a sequence and claims pages;
+        // retire_state frees them; a rebound lane on the recycled pages
+        // decodes exactly like a fresh model (no stale-KV leakage).
+        let latent = attn_latent(25);
+        let lm = latent.build_float(1, 8);
+        let mut st = vec![0.0f32; 32];
+        let first_a = step_one(&lm, &mut st, 3);
+        step_one(&lm, &mut st, 9);
+        assert_eq!(lm.kv_live_seqs(), 1);
+        assert!(lm.kv_pages_in_use() >= 1);
+        lm.retire_state(&mut st);
+        assert_eq!(st[0], 0.0, "retire must clear the binding tag");
+        assert_eq!(lm.kv_live_seqs(), 0);
+        assert_eq!(lm.kv_pages_in_use(), 0);
+        // Second retire on an unbound state is a no-op, not a crash.
+        lm.retire_state(&mut st);
+        let first_b = step_one(&lm, &mut st, 3);
+        assert_eq!(first_a.data, first_b.data,
+                   "recycled pages leaked stale context");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of pages")]
+    fn attn_overcommitted_lanes_panic_loudly() {
+        // A cache sized for one lane cannot serve two concurrent lanes:
+        // the second bind must refuse loudly, not serve garbage.
+        let lm = attn_latent(26).build_float(1, 4);
+        let mut s = vec![vec![0.0f32; 32]; 2];
+        let mut refs: Vec<&mut [f32]> =
+            s.iter_mut().map(|v| v.as_mut_slice()).collect();
+        lm.step_batch(&mut refs, &[1, 2], 1);
+    }
+
+    #[test]
+    fn attn_effective_bits_order_matches_table4() {
+        let latent = attn_latent(27);
+        let f = latent.build_float(1, 4).effective_bits_per_param();
+        let q4 = latent.build_quant_rtn(4, 128, 1, 4)
+            .effective_bits_per_param();
+        let q3 = latent.build_quant_rtn(3, 128, 1, 4)
+            .effective_bits_per_param();
+        let t = latent.build_ternary(1, 4).effective_bits_per_param();
+        assert!(f > q4 && q4 > q3 && q3 > t,
+                "bits ordering broken: f={f} q4={q4} q3={q3} t={t}");
+        // 7 linears per block + head: the label comes from the head.
+        assert_eq!(latent.build_float(1, 4).family_label(), "fp32");
+        assert_eq!(latent.build_float(1, 4).linears().len(), 7 * 2 + 1);
+    }
+
+    #[test]
+    fn attn_checkpoint_roundtrip_builds_model() {
+        let h = |shape: Vec<usize>, seed: u64| {
+            HostTensor::randn(shape, 0.1, seed)
+        };
+        let ck = Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![64, 32], 0.5, 1)),
+            ("l0.attn_q".into(), h(vec![32, 32], 2)),
+            ("l0.attn_k".into(), h(vec![32, 32], 3)),
+            ("l0.attn_v".into(), h(vec![32, 32], 4)),
+            ("l0.attn_o".into(), h(vec![32, 32], 5)),
+            ("l0.mlp_gate".into(), h(vec![48, 32], 6)),
+            ("l0.mlp_up".into(), h(vec![48, 32], 7)),
+            ("l0.mlp_down".into(), h(vec![32, 48], 8)),
+        ]);
+        let latent = LatentAttnLm::from_checkpoint(&ck, 4).unwrap();
+        assert_eq!(latent.dims, LmDims { vocab: 64, hidden: 32, glu: 48,
+                                         layers: 1 });
+        let lm = latent.build_ternary(1, 8);
+        let mut st = vec![0.0f32; 32];
+        let logits = step_one(&lm, &mut st, 5);
+        assert_eq!(logits.shape, vec![1, 64]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        // Missing attn tensors -> not an attention checkpoint.
+        let ck = Checkpoint::new(vec![
+            ("embed".into(), HostTensor::randn(vec![64, 32], 0.5, 1)),
+            ("l0.mlp_gate".into(), h(vec![48, 32], 6)),
+            ("l0.mlp_up".into(), h(vec![48, 32], 7)),
+            ("l0.mlp_down".into(), h(vec![32, 48], 8)),
+        ]);
+        let err = LatentAttnLm::from_checkpoint(&ck, 4)
+            .unwrap_err().to_string();
+        assert!(err.contains("attn_q"), "unhelpful error: {err}");
+        // Heads must divide hidden.
+        assert!(LatentAttnLm::from_checkpoint(&ck, 5).is_err());
+    }
+
+    #[test]
+    fn decay_model_reports_no_kv_and_ignores_retire() {
+        let latent = LatentLm::synthetic(small_dims(), 1, 28);
+        let m = latent.build_float();
+        assert_eq!(m.kv_bytes_per_token(), 0.0);
+        let mut st = vec![1.5f32; 32];
+        m.retire_state(&mut st);
+        assert_eq!(st, vec![1.5f32; 32], "default retire must be a no-op");
     }
 
     #[test]

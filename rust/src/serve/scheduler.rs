@@ -18,6 +18,14 @@
 //! [`SplitMix64`]. The same request set therefore yields identical
 //! token streams at batch 1 and batch 8 — `tests/serve_determinism.rs`
 //! locks this in.
+//!
+//! Lane lifecycle stays model-blind: the scheduler hands every
+//! admitted lane a zeroed state buffer and, when the lane retires,
+//! calls [`DecodeModel::retire_state`] exactly once before recycling
+//! the buffer. Decay-state models treat both as plain memory; the
+//! attention model uses the zeroed buffer as "unbound" and the retire
+//! hook to free its paged KV-cache sequence — so paged attention
+//! serving needs no scheduler changes beyond this one hook.
 
 use std::collections::VecDeque;
 
@@ -263,7 +271,11 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 lane.generated.push(tok);
                 self.stats.generated_tokens += 1;
                 if lane.generated.len() >= lane.req.max_new_tokens {
-                    let lane = slot.take().unwrap();
+                    let mut lane = slot.take().unwrap();
+                    // Lane retire: release model-side per-lane resources
+                    // (an AttnLm frees its KV-cache pages here) before
+                    // the state buffer is recycled.
+                    self.model.retire_state(&mut lane.state);
                     self.free_states.push(lane.state);
                     done.push(Completion {
                         id: lane.req.id,
@@ -286,6 +298,20 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         }
         out.sort_by_key(|c| c.id);
         out
+    }
+}
+
+impl<M: DecodeModel + ?Sized> Drop for Scheduler<'_, M> {
+    /// Abandoned mid-flight lanes still release their model-side
+    /// resources (KV-cache pages): a scheduler dropped before draining
+    /// must not leak pages out of the model's pool.
+    fn drop(&mut self) {
+        let model = self.model;
+        for slot in &mut self.lanes {
+            if let Some(lane) = slot.as_mut() {
+                model.retire_state(&mut lane.state);
+            }
+        }
     }
 }
 
@@ -447,6 +473,35 @@ mod tests {
             sched.step_into(&mut done);
         }
         assert_eq!(done.len(), 4, "completions must accumulate in place");
+    }
+
+    #[test]
+    fn attention_lanes_release_pages_on_retire_and_drop() {
+        // The lane-retire -> page-recycle path, end to end through the
+        // unmodified scheduler: a drained run leaves the model's page
+        // pool empty, and a scheduler dropped mid-flight releases the
+        // pages its live lanes held.
+        use crate::serve::model::LatentAttnLm;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 13);
+        let lm = latent.build_float(3, 8);
+        let mut sched = Scheduler::new(&lm, 3, 1);
+        for id in 0..6 {
+            sched.submit(GenRequest::greedy(id, vec![id as u32, 5], 3));
+        }
+        let done = sched.run();
+        assert_eq!(done.len(), 6);
+        assert_eq!(lm.kv_pages_in_use(), 0,
+                   "drained scheduler must leave no pages in use");
+        let mut sched = Scheduler::new(&lm, 3, 1);
+        for id in 0..3 {
+            sched.submit(GenRequest::greedy(id, vec![1, 2, 3], 5));
+        }
+        sched.step();
+        assert!(lm.kv_pages_in_use() > 0, "live lanes must hold pages");
+        drop(sched);
+        assert_eq!(lm.kv_pages_in_use(), 0,
+                   "dropped scheduler leaked kv pages");
     }
 
     #[test]

@@ -27,12 +27,12 @@
 //!
 //! Execution substrates — two drivers share every kernel body:
 //!
-//! - [`blocked_rows_driver`] (scoped): spawns a fresh
+//! - `blocked_rows_driver` (scoped): spawns a fresh
 //!   `std::thread::scope` per call and allocates its own output
 //!   buffers. The original path; kept as the compatibility wrapper
 //!   behind [`matmul_ternary_packed`] and as the reference the pooled
 //!   path is tested bitwise against.
-//! - [`blocked_rows_driver_pooled`] (hot path): dispatches the same
+//! - `blocked_rows_driver_pooled` (hot path): dispatches the same
 //!   row partition onto a persistent [`crate::runtime::WorkerPool`]
 //!   and accumulates into a caller-owned scratch slab
 //!   ([`matmul_ternary_packed_into`]). Zero spawns, zero allocations
@@ -436,7 +436,7 @@ pub(crate) fn blocked_rows_driver_pooled(
 /// Batched packed-ternary matmul: y = x @ w_packed^T with per-shard
 /// scales. x: (m, k), w: (n, k) packed -> (m, n).
 ///
-/// Threading via [`blocked_rows_driver`]. Accumulation order per
+/// Threading via the internal `blocked_rows_driver`. Accumulation order per
 /// output element is independent of both `threads` and `m` (fixed
 /// [`COL_BLOCK_TRITS`] panels), so results are batch-invariant.
 ///

@@ -12,12 +12,17 @@
 //! - one pool + one scratch reused across many calls of many shapes
 //!   produces the same results as fresh per-call execution (stale
 //!   scratch can never leak);
-//! - the pooled dense path is bitwise identical to `matmul_dense`.
+//! - the pooled dense path is bitwise identical to `matmul_dense`;
+//! - the paged KV-cache attention model's scratch-aware step is
+//!   bitwise identical to its allocating scoped-thread step, for every
+//!   storage family.
 
 use spectra::linear::{matmul_quant_packed, matmul_quant_packed_into,
                       DenseF32, LinearFormat, QuantPacked};
 use spectra::quant::QuantTensor;
-use spectra::runtime::{HostTensor, WorkerPool};
+use spectra::runtime::{DecodeScratch, HostTensor, WorkerPool};
+use spectra::serve::{DecodeModel, FamilySpec, LatentAttnLm, LmDims,
+                     QuantMethod};
 use spectra::ternary::matmul::{COL_BLOCK_TRITS, ROW_BLOCK};
 use spectra::ternary::{matmul_dense, matmul_ternary_packed,
                        matmul_ternary_packed_into, PackedMatrix,
@@ -132,6 +137,50 @@ fn one_pool_and_scratch_survive_many_mixed_calls() {
         let want = matmul_ternary_packed(&x, &pm, 4);
         matmul_ternary_packed_into(&x, &pm, &pool, &mut out_t, &mut out);
         assert_eq!(out.data, want.data, "round {round} {rows}x{cols} m{m}");
+    }
+}
+
+#[test]
+fn attn_pooled_step_matches_scoped_step_bitwise() {
+    // The attention decode path rides the same pooled drivers as the
+    // gated MLP; its scratch-aware step must be bitwise identical to
+    // the allocating scoped-thread step — logits and state tags — for
+    // every storage family, with ONE scratch reused across families,
+    // shapes, and thread counts. Two instances per family: the paged
+    // KV cache is stateful, so one instance cannot run both paths.
+    let dims = LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 };
+    let latent = LatentAttnLm::synthetic(dims, 4, 1, 0x477);
+    let mut scratch = DecodeScratch::new();
+    let specs = [
+        FamilySpec::Float,
+        FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+        FamilySpec::Ternary,
+    ];
+    for threads in [1usize, 2, 4] {
+        let pool = WorkerPool::new(threads);
+        for spec in specs {
+            let m_a = latent.build(spec, 3, 12).unwrap();
+            let m_b = latent.build(spec, 3, 12).unwrap();
+            let mut st_a = vec![vec![0.0f32; 32]; 3];
+            let mut st_b = st_a.clone();
+            for (step, toks) in [[5u32, 9, 60], [4, 4, 31], [7, 0, 2]]
+                .iter().enumerate()
+            {
+                let mut refs_a: Vec<&mut [f32]> =
+                    st_a.iter_mut().map(|s| s.as_mut_slice()).collect();
+                let want = m_a.step_batch(&mut refs_a, toks, threads);
+                let mut refs_b: Vec<&mut [f32]> =
+                    st_b.iter_mut().map(|s| s.as_mut_slice()).collect();
+                m_b.step_batch_into(&mut refs_b, toks, &pool, &mut scratch);
+                assert_eq!(scratch.logits.shape, want.shape,
+                           "{} t{threads} step {step}", spec.label());
+                assert_eq!(scratch.logits.data, want.data,
+                           "{} t{threads} step {step}: attn pooled step \
+                            diverges from scoped", spec.label());
+                assert_eq!(st_a, st_b, "{} t{threads} step {step}: states",
+                           spec.label());
+            }
+        }
     }
 }
 
