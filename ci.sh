@@ -68,4 +68,23 @@ if command -v python3 >/dev/null 2>&1; then
     echo "runs/BENCH_serve_attn_smoke.json: valid json (python3 cross-check)"
 fi
 
+# Chunked-prefill + KV-backpressure smoke: long prompts (--prompt-tokens)
+# ingested in chunks (--prefill-chunk) on the paged attention model,
+# with the cache deliberately undersized (--kv-context 12 < prompt +
+# max-tokens at 4 lanes) so admission defers and mid-flight lanes
+# requeue — pre-fix this panicked in bind_and_begin. The schema-3 JSON
+# (prefill_tokens_per_sec, ttft_steps, prefill_chunk, requeued) is
+# parse-checked like the other BENCH smokes.
+echo "== chunked prefill + kv-backpressure serve smoke =="
+cargo run --release --quiet -- serve-bench \
+    --family float,ternary --attn --heads 4 \
+    --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
+    --requests 6 --max-tokens 4 --batches 1,4 --threads 1 \
+    --prefill-chunk 4 --prompt-tokens 24 --kv-context 12 \
+    --json runs/BENCH_serve_chunked_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 -m json.tool runs/BENCH_serve_chunked_smoke.json >/dev/null
+    echo "runs/BENCH_serve_chunked_smoke.json: valid json (python3 cross-check)"
+fi
+
 echo "ci: all green"

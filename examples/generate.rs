@@ -14,10 +14,14 @@
 //! `l{i}.attn_{q,k,v,o}` tensors; `--heads` sets the head count and
 //! must divide hidden).
 //!
+//! `--prefill-chunk` ingests up to N prompt tokens per batched step
+//! (chunked prefill — fewer steps to first token; the generated text
+//! is bitwise identical at any chunk size).
+//!
 //!     cargo run --release --example generate -- \
 //!         --checkpoint runs/main/930k_ternary.spt --prompt "one day" \
 //!         --family ternary --batch 4 --threads 2 --max-tokens 24 \
-//!         [--attn] [--heads 4] [--group 128]
+//!         [--attn] [--heads 4] [--group 128] [--prefill-chunk 8]
 
 use std::path::PathBuf;
 
@@ -34,6 +38,7 @@ fn main() -> Result<()> {
     let batch = args.get_usize("batch", 4);
     let threads = args.get_usize("threads", 2);
     let group = args.get_usize("group", 128);
+    let prefill_chunk = args.get_usize("prefill-chunk", 8);
     let attn = args.has("attn");
     let heads = args.get_usize("heads", 4);
     let spec = FamilySpec::parse(&args.get("family", "ternary"), group)
@@ -108,17 +113,23 @@ fn main() -> Result<()> {
                  String::new()
              });
 
-    let mut sched = Scheduler::new(lm.as_ref(), batch, threads);
+    let mut sched = Scheduler::with_prefill_chunk(lm.as_ref(), batch,
+                                                  threads, prefill_chunk);
+    let mut n_req = 0usize;
     for (id, toks) in encoded.into_iter().enumerate() {
         sched.submit(GenRequest::greedy(id, toks, max_tokens));
+        n_req += 1;
     }
     let t0 = std::time::Instant::now();
     let done = sched.run();
     let stats = sched.stats();
-    println!("served {} tokens ({} prefill) in {} batched steps, \
-              peak occupancy {}: {:.0} tokens/s\n",
+    println!("served {} tokens ({} prefill, chunk {}) in {} batched \
+              steps, peak occupancy {}, mean ttft {:.1} steps: \
+              {:.0} tokens/s\n",
              stats.generated_tokens, stats.prefill_tokens,
-             stats.batch_steps, stats.peak_occupancy,
+             sched.prefill_chunk(), stats.batch_steps,
+             stats.peak_occupancy,
+             stats.ttft_steps as f64 / n_req.max(1) as f64,
              stats.generated_tokens as f64
                  / t0.elapsed().as_secs_f64().max(1e-9));
     for c in done {

@@ -148,6 +148,44 @@ pub fn decode_tokens_per_sec_bits_kv(params: f64, linear_bits: f64,
     batch / t_bw.max(t_compute)
 }
 
+/// Chunked-prefill roofline: prompt tokens/sec when prompts are
+/// ingested `chunk` positions per forward pass (batch 1 lane). Prefill
+/// reuses the decode roofline with the batch axis replaced by the
+/// chunk axis: the weights stream once per pass and amortize over the
+/// `chunk` positions flattened into the batch dimension, while compute
+/// grows linearly with the chunk —
+///
+///   t_pass = max(weight_bytes / BW,  chunk * 2 * params / FLOPS)
+///   prompt tokens/sec = chunk / t_pass
+///
+/// At chunk 1 (the one-token prefill the serve engine shipped with)
+/// prompt ingestion is as bandwidth-bound as decode and low-bit
+/// families keep their full §2.1 advantage; past
+/// [`saturation_batch_bits`] positions per pass it turns
+/// *compute*-bound and the families converge — compression buys
+/// bandwidth, not FLOPs. This asymmetry (memory-bound decode vs
+/// compute-bound prefill) is the serving regime the companion Spectra
+/// study frames, and `spectra serve-bench --prefill-chunk` measures
+/// its engine-side analog (`prefill_tokens_per_sec` in
+/// BENCH_serve.json).
+pub fn prefill_tokens_per_sec_bits(params: f64, linear_bits: f64,
+                                   hw: &Accelerator, chunk: f64) -> f64 {
+    assert!(chunk >= 1.0, "chunk must be >= 1");
+    let weight_bytes = size_gb_at_bits(params, linear_bits) * 1e9;
+    let t_bw = weight_bytes / (hw.bw_gbs * 1e9);
+    let t_compute = chunk * 2.0 * params / (hw.tflops_fp16 * 1e12);
+    chunk / t_bw.max(t_compute)
+}
+
+/// Prefill speedup of chunked ingestion over the one-token path at the
+/// same bit rate — linear in `chunk` while bandwidth-bound, flat once
+/// the chunk saturates compute.
+pub fn prefill_speedup_vs_one_token(params: f64, linear_bits: f64,
+                                    hw: &Accelerator, chunk: f64) -> f64 {
+    prefill_tokens_per_sec_bits(params, linear_bits, hw, chunk)
+        / prefill_tokens_per_sec_bits(params, linear_bits, hw, 1.0)
+}
+
 /// Decode speedup over FP16 at a given batch size for an arbitrary
 /// linear-weight bit rate.
 pub fn batched_speedup_vs_fp16_bits(params: f64, linear_bits: f64,
@@ -377,6 +415,40 @@ mod tests {
         };
         assert!(speedup(16384.0) < speedup(0.0),
                 "kv traffic should erode the compression speedup");
+    }
+
+    #[test]
+    fn prefill_roofline_is_linear_then_compute_bound() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let tern = 3f64.log2();
+        // Chunk 1 prefill IS the decode roofline at batch 1 — the
+        // one-token prompt path the engine used to have.
+        assert_eq!(prefill_tokens_per_sec_bits(7e9, tern, hw, 1.0),
+                   decode_tokens_per_sec_bits(7e9, tern, hw, 1.0));
+        // Linear while bandwidth-bound...
+        let sat = saturation_batch_bits(7e9, tern, hw);
+        assert!(sat > 1.0);
+        let c = (sat / 2.0).max(1.0);
+        let s = prefill_speedup_vs_one_token(7e9, tern, hw, c);
+        assert!((s - c).abs() / c < 1e-6, "speedup {s} at chunk {c}");
+        // ...and flat at the compute roof, where the families converge
+        // (compression buys bandwidth, not FLOPs).
+        let t_huge = prefill_tokens_per_sec_bits(7e9, tern, hw, 16384.0);
+        let f_huge = prefill_tokens_per_sec_bits(7e9, 16.0, hw, 16384.0);
+        assert!((t_huge / f_huge - 1.0).abs() < 0.01,
+                "compute-bound prefill must be family-blind: {t_huge} vs \
+                 {f_huge}");
+        // Monotone nondecreasing in chunk throughout.
+        let mut last = 0.0;
+        for chunk in [1.0, 4.0, 64.0, 1024.0, 65536.0] {
+            let tps = prefill_tokens_per_sec_bits(7e9, tern, hw, chunk);
+            assert!(tps >= last * 0.999, "chunk {chunk}: {tps} < {last}");
+            last = tps;
+        }
+        // Low-bit prefill saturates at a smaller chunk: fewer bytes
+        // streamed means the bandwidth headroom runs out sooner.
+        assert!(saturation_batch_bits(7e9, tern, hw)
+                    < saturation_batch_bits(7e9, 16.0, hw));
     }
 
     #[test]

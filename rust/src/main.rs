@@ -52,10 +52,17 @@ commands:
                 --requests 32 --max-tokens 32 --batches 1,2,4,8
                 --threads 1,2,4 --vocab 512 --hidden 256 --glu 704
                 --layers 4 --mp 2 [--attn] [--heads 4] [--seed 0]
-                [--json BENCH_serve.json]
+                [--prefill-chunk 1] [--prompt-tokens 16]
+                [--kv-context N] [--json BENCH_serve.json]
                 --attn serves the paged KV-cache attention model (adds
                 kv_bytes_per_token to the table and JSON; see
-                docs/BENCH_SCHEMA.md)
+                docs/BENCH_SCHEMA.md). --prefill-chunk ingests up to N
+                prompt tokens per batched step (chunked prefill;
+                streams are bitwise chunk-invariant), --prompt-tokens
+                sets the exact prompt length of the bench traffic, and
+                --kv-context caps the attention cache's per-lane
+                context (sizes below prompt+max-tokens exercise
+                KV backpressure: refused lanes requeue, never panic)
   bench-report  paper-style tables from a suite run
                 --results runs/suite/suite_results.json --experiment all
   help          print this text (also: bare `spectra` or --help)
@@ -243,20 +250,22 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 }
 
 /// Benchmark the serve engine across storage families: one table of
-/// tokens/sec + effective bits/param per family (the paper's
-/// bits-vs-throughput story on the serving path), plus the ternary
-/// batch/thread sweep against the single-thread scalar reference and
-/// the analytic per-family decode roofline keyed by each model's
-/// measured bit rate. `--attn` swaps in the paged KV-cache attention
-/// model (same latent-weight discipline, real attention + paging) and
-/// adds each family's measured KV bytes/token to the table, the JSON
-/// and the roofline. `--json <path>` additionally writes the
-/// machine-readable sweep (BENCH_serve.json, schema 2 — see
-/// docs/BENCH_SCHEMA.md: per-family tokens/sec at batch 1 and batch
-/// max, bits/param, kv_bytes_per_token, thread count, dims) and
+/// decode + prefill tokens/sec, TTFT and effective bits/param per
+/// family (the paper's bits-vs-throughput story on the serving path),
+/// plus the ternary batch/thread sweep against the single-thread
+/// scalar reference and the analytic per-family decode *and prefill*
+/// rooflines keyed by each model's measured bit rate. `--attn` swaps
+/// in the paged KV-cache attention model (same latent-weight
+/// discipline, real attention + paging) and adds each family's
+/// measured KV bytes/token; `--prefill-chunk` ingests prompts in
+/// chunks (bitwise stream-invariant); `--prompt-tokens` fixes the
+/// traffic's prompt length; `--kv-context` can undersize the cache to
+/// exercise the backpressure path (requeues reported per family).
+/// `--json <path>` additionally writes the machine-readable sweep
+/// (BENCH_serve.json, schema 3 — see docs/BENCH_SCHEMA.md) and
 /// re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use spectra::serve::{bench_requests, DecodeModel, FamilySpec,
+    use spectra::serve::{bench_requests_sized, DecodeModel, FamilySpec,
                          LatentAttnLm, LatentLm, LmDims, Scheduler};
 
     let dims = LmDims {
@@ -294,15 +303,22 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let fam_batch = batches.iter().copied().max().unwrap_or(8);
     let fam_threads = threads_list.iter().copied().max().unwrap_or(1);
-    // Bench prompts are capped at 16 tokens (see serve::bench_requests);
-    // +1 headroom keeps the page pool from running exactly dry.
-    let max_context = 16 + max_new + 1;
+    let prefill_chunk = args.get_usize("prefill-chunk", 1).max(1);
+    let prompt_tokens = args.get_usize("prompt-tokens", 16).max(1);
+    // Default cache sizing: full prompt + completion per lane, +1
+    // headroom so the page pool never runs exactly dry. --kv-context
+    // overrides it downward to exercise KV backpressure (refused lanes
+    // requeue; the run still completes).
+    let max_context = args.get_usize("kv-context",
+                                     prompt_tokens + max_new + 1);
 
     println!("serve-bench: vocab {} hidden {} glu {} layers {} | \
-              {n_req} requests x {max_new} tokens | group {group}{}",
+              {n_req} requests x {prompt_tokens} prompt + {max_new} new \
+              tokens | prefill chunk {prefill_chunk} | group {group}{}",
              dims.vocab, dims.hidden, dims.glu, dims.layers,
              if attn {
-                 format!(" | attn ({heads} heads, paged kv cache)")
+                 format!(" | attn ({heads} heads, paged kv cache, \
+                          {max_context}-token context/lane)")
              } else {
                  String::new()
              });
@@ -320,46 +336,90 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         }
     };
 
+    struct RunPoint {
+        tps: f64,
+        prefill_tps: f64,
+        steps: usize,
+        ttft: f64,
+        requeued: usize,
+    }
+    struct FamRow {
+        label: String,
+        bits: f64,
+        tps_b1: f64,
+        tps: f64,
+        prefill_tps: f64,
+        ttft: f64,
+        steps: usize,
+        kvb: f64,
+        requeued: usize,
+    }
     let run_once = |model: &dyn DecodeModel, batch: usize, threads: usize|
-                   -> (f64, usize) {
-        let mut sched = Scheduler::new(model, batch, threads);
-        for r in bench_requests(dims.vocab, n_req, max_new, seed) {
+                   -> RunPoint {
+        let mut sched = Scheduler::with_prefill_chunk(model, batch, threads,
+                                                      prefill_chunk);
+        for r in bench_requests_sized(dims.vocab, n_req, max_new, seed,
+                                      prompt_tokens) {
             sched.submit(r);
         }
         let t0 = std::time::Instant::now();
         let done = sched.run();
         let secs = t0.elapsed().as_secs_f64();
-        let toks: usize = done.iter().map(|c| c.tokens.len()).sum();
-        (toks as f64 / secs, sched.stats().batch_steps)
+        let st = sched.stats();
+        RunPoint {
+            tps: st.generated_tokens as f64 / secs,
+            prefill_tps: st.prefill_tokens as f64 / secs,
+            steps: st.batch_steps,
+            ttft: st.ttft_steps as f64 / done.len().max(1) as f64,
+            requeued: st.requeued,
+        }
     };
 
     // Cross-family sweep: every family serves the *same* latent model
     // on the same traffic, measured at batch 1 and at the largest
     // batch/thread setting (the two points the perf trajectory in
     // BENCH_serve.json tracks).
-    let mut rows: Vec<(String, f64, f64, f64, usize, f64)> = Vec::new();
+    let mut rows: Vec<FamRow> = Vec::new();
     let mut float_tps = None;
     for spec in &families {
         let model = build(*spec)?;
-        let (tps_b1, _) = run_once(model.as_ref(), 1, fam_threads);
-        let (tps, steps) = run_once(model.as_ref(), fam_batch, fam_threads);
+        let b1 = run_once(model.as_ref(), 1, fam_threads);
+        let bx = run_once(model.as_ref(), fam_batch, fam_threads);
         if matches!(spec, FamilySpec::Float) {
-            float_tps = Some(tps);
+            float_tps = Some(bx.tps);
         }
-        rows.push((spec.label(), model.effective_bits_per_param(), tps_b1,
-                   tps, steps, model.kv_bytes_per_token()));
+        rows.push(FamRow {
+            label: spec.label(),
+            bits: model.effective_bits_per_param(),
+            tps_b1: b1.tps,
+            tps: bx.tps,
+            prefill_tps: bx.prefill_tps,
+            ttft: bx.ttft,
+            steps: bx.steps,
+            kvb: model.kv_bytes_per_token(),
+            requeued: bx.requeued + b1.requeued,
+        });
     }
     println!("\ncross-family @ {fam_threads} threads (identical latent \
               weights)");
-    println!("{:<22} {:>10} {:>12} {:>12} {:>7} {:>8} {:>10}",
+    println!("{:<22} {:>10} {:>11} {:>11} {:>11} {:>6} {:>6} {:>8} {:>9}",
              "family", "bits/param", "tok/s b1",
-             format!("tok/s b{fam_batch}"), "steps", "kvB/tok", "vs float");
-    for (label, bits, tps_b1, tps, steps, kvb) in &rows {
+             format!("tok/s b{fam_batch}"), "prefill/s", "ttft", "steps",
+             "kvB/tok", "vs float");
+    for r in &rows {
         let rel = float_tps
-            .map(|f| format!("{:.2}x", tps / f))
+            .map(|f| format!("{:.2}x", r.tps / f))
             .unwrap_or_else(|| "-".into());
-        println!("{label:<22} {bits:>10.2} {tps_b1:>12.0} {tps:>12.0} \
-                  {steps:>7} {kvb:>8.0} {rel:>10}");
+        println!("{:<22} {:>10.2} {:>11.0} {:>11.0} {:>11.0} {:>6.1} \
+                  {:>6} {:>8.0} {:>9}",
+                 r.label, r.bits, r.tps_b1, r.tps, r.prefill_tps, r.ttft,
+                 r.steps, r.kvb, rel);
+    }
+    let total_requeued: usize = rows.iter().map(|r| r.requeued).sum();
+    if total_requeued > 0 {
+        println!("kv backpressure: {total_requeued} lane requeue(s) — the \
+                  cache is smaller than the offered concurrency; requests \
+                  queued instead of failing");
     }
 
     // Machine-readable trajectory point: --json <path> writes the
@@ -368,19 +428,22 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("json") {
         use spectra::util::json::Json;
         let fam_json: Vec<Json> = rows.iter()
-            .map(|(label, bits, tps_b1, tps, steps, kvb)| Json::obj(vec![
-                ("family", Json::str(label.as_str())),
-                ("bits_per_param", Json::num(*bits)),
-                ("tokens_per_sec_batch1", Json::num(*tps_b1)),
-                ("tokens_per_sec_batch_max", Json::num(*tps)),
+            .map(|r| Json::obj(vec![
+                ("family", Json::str(r.label.as_str())),
+                ("bits_per_param", Json::num(r.bits)),
+                ("tokens_per_sec_batch1", Json::num(r.tps_b1)),
+                ("tokens_per_sec_batch_max", Json::num(r.tps)),
+                ("prefill_tokens_per_sec", Json::num(r.prefill_tps)),
+                ("ttft_steps", Json::num(r.ttft)),
                 ("batch_max", Json::num(fam_batch as f64)),
-                ("batch_steps", Json::num(*steps as f64)),
-                ("kv_bytes_per_token", Json::num(*kvb)),
+                ("batch_steps", Json::num(r.steps as f64)),
+                ("kv_bytes_per_token", Json::num(r.kvb)),
+                ("requeued", Json::num(r.requeued as f64)),
             ]))
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(2.0)),
+            ("schema", Json::num(3.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
@@ -392,6 +455,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("threads", Json::num(fam_threads as f64)),
             ("requests", Json::num(n_req as f64)),
             ("max_new_tokens", Json::num(max_new as f64)),
+            ("prompt_tokens", Json::num(prompt_tokens as f64)),
+            ("prefill_chunk", Json::num(prefill_chunk as f64)),
+            ("kv_context", Json::num(if attn {
+                max_context as f64
+            } else {
+                0.0
+            })),
             ("group", Json::num(group as f64)),
             ("mp", Json::num(mp as f64)),
             ("seed", Json::num(seed as f64)),
@@ -417,7 +487,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if families.contains(&FamilySpec::Ternary) {
         let tlm = build(FamilySpec::Ternary)?;
         let tlm = tlm.as_ref();
-        let (scalar_tps, _) = run_once(tlm, 1, 1);
+        let scalar_tps = run_once(tlm, 1, 1).tps;
         println!("\n{:<10} {:>7} {:>14} {:>12} {:>10}",
                  "kernel", "batch", "threads", "tokens/s", "vs scalar");
         println!("{:<10} {:>7} {:>14} {:>12.0} {:>10}",
@@ -428,7 +498,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 if batch == 1 && threads == 1 {
                     continue;
                 }
-                let (tps, _) = run_once(tlm, batch, threads);
+                let tps = run_once(tlm, batch, threads).tps;
                 if batch == 8 {
                     best_b8 = best_b8.max(tps);
                 }
@@ -448,17 +518,38 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         use spectra::deploy::{batched_speedup_vs_fp16_bits,
                               decode_tokens_per_sec_bits_kv,
                               kv_bytes_per_token_fp16,
+                              prefill_speedup_vs_one_token,
+                              prefill_tokens_per_sec_bits,
                               saturation_batch_bits};
         println!("\nroofline @7B on {} (speedup vs fp16 by measured \
                   bits/param):", hw.name);
-        for (label, bits, _, _, _, _) in &rows {
-            println!("  {label:<22} {bits:>6.2} bits -> {:>5.1}x (b=1) \
+        for r in &rows {
+            println!("  {:<22} {:>6.2} bits -> {:>5.1}x (b=1) \
                       {:>5.1}x (b=8) {:>5.1}x (b=256); saturates at \
                       batch {:.0}",
-                     batched_speedup_vs_fp16_bits(7e9, *bits, hw, 1.0),
-                     batched_speedup_vs_fp16_bits(7e9, *bits, hw, 8.0),
-                     batched_speedup_vs_fp16_bits(7e9, *bits, hw, 256.0),
-                     saturation_batch_bits(7e9, *bits, hw));
+                     r.label, r.bits,
+                     batched_speedup_vs_fp16_bits(7e9, r.bits, hw, 1.0),
+                     batched_speedup_vs_fp16_bits(7e9, r.bits, hw, 8.0),
+                     batched_speedup_vs_fp16_bits(7e9, r.bits, hw, 256.0),
+                     saturation_batch_bits(7e9, r.bits, hw));
+        }
+        // The prefill roofline beside the decode one: chunked prompt
+        // ingestion amortizes the weight stream over the chunk, so it
+        // is linear in chunk until the compute roof — where the
+        // families converge (compression buys bandwidth, not FLOPs).
+        // Decode stays bandwidth-bound; prefill is the compute-bound
+        // half of the serving asymmetry.
+        let chunk = prefill_chunk.max(64) as f64;
+        println!("\nprefill roofline @7B on {} (chunked ingestion, \
+                  weights streamed once per chunk):", hw.name);
+        for r in &rows {
+            println!("  {:<22} chunk 1: {:>9.0} tok/s; chunk {:.0}: \
+                      {:>5.1}x one-token; compute-bound past chunk {:.0}",
+                     r.label,
+                     prefill_tokens_per_sec_bits(7e9, r.bits, hw, 1.0),
+                     chunk,
+                     prefill_speedup_vs_one_token(7e9, r.bits, hw, chunk),
+                     saturation_batch_bits(7e9, r.bits, hw));
         }
         if attn {
             // The KV-aware roofline: the cache stream is family-blind
@@ -471,13 +562,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             let fp16_at = |ctx: f64| {
                 decode_tokens_per_sec_bits_kv(7e9, 16.0, kvb, ctx, hw, 8.0)
             };
-            for (label, bits, _, _, _, _) in &rows {
+            for r in &rows {
                 let at = |ctx: f64| {
-                    decode_tokens_per_sec_bits_kv(7e9, *bits, kvb, ctx,
+                    decode_tokens_per_sec_bits_kv(7e9, r.bits, kvb, ctx,
                                                   hw, 8.0)
                 };
-                println!("  {label:<22} vs fp16: {:>5.1}x @ctx 1k \
+                println!("  {:<22} vs fp16: {:>5.1}x @ctx 1k \
                           {:>5.1}x @ctx 8k {:>5.1}x @ctx 32k",
+                         r.label,
                          at(1024.0) / fp16_at(1024.0),
                          at(8192.0) / fp16_at(8192.0),
                          at(32768.0) / fp16_at(32768.0));

@@ -333,6 +333,29 @@ pub struct DecodeScratch {
     pub scores: Vec<f32>,
     /// Lane -> KV-cache sequence bindings staged per step.
     pub seqs: Vec<usize>,
+    /// Lane ordinals the model *rejected* on the current span step
+    /// (KV-capacity backpressure; see
+    /// [`crate::serve::model::DecodeModel::step_spans_into`]). Cleared
+    /// by the model on entry, always sorted ascending; the scheduler
+    /// reads it after the step to requeue refused lanes.
+    pub rejected: Vec<usize>,
+    /// Accepted lanes' first claimed cache position this span step
+    /// (attention models only).
+    pub starts: Vec<usize>,
+    /// Accepted lanes' span lengths this span step.
+    pub spans: Vec<usize>,
+    /// Accepted lanes' tokens, flattened in lane order, for this span
+    /// step (rejected lanes' tokens are dropped from the batch).
+    pub span_tokens: Vec<u32>,
+    /// (lanes, hidden) gathered final-span-position activations that
+    /// feed the output head on span steps — only each lane's last
+    /// position needs logits, so the head never runs over whole
+    /// prefill chunks.
+    pub head_in: HostTensor,
+    /// (lanes, vocab) staging for per-lane final logits while the
+    /// default span driver iterates sub-steps (sequential-state
+    /// models).
+    pub sample_logits: HostTensor,
 }
 
 impl DecodeScratch {
@@ -352,6 +375,12 @@ impl DecodeScratch {
             attn: empty(),
             scores: Vec::new(),
             seqs: Vec::new(),
+            rejected: Vec::new(),
+            starts: Vec::new(),
+            spans: Vec::new(),
+            span_tokens: Vec::new(),
+            head_in: empty(),
+            sample_logits: empty(),
         }
     }
 }

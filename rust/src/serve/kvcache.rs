@@ -190,15 +190,32 @@ impl KvCache {
     /// unchanged.
     pub fn begin_token(&mut self, seq: usize)
                        -> std::result::Result<usize, OutOfPages> {
+        self.begin_tokens(seq, 1)
+    }
+
+    /// Claim the next `n` token slots of `seq` in one all-or-nothing
+    /// transaction (chunked prefill claims a whole prompt chunk up
+    /// front), taking as many pages from the free list as the new
+    /// length requires. Returns the first claimed position on success;
+    /// on [`OutOfPages`] neither the sequence nor the free list has
+    /// changed, so a refused lane can be deferred and retried after
+    /// another lane retires.
+    pub fn begin_tokens(&mut self, seq: usize, n: usize)
+                        -> std::result::Result<usize, OutOfPages> {
+        assert!(n >= 1, "begin_tokens needs n >= 1");
         let len = self.seqs[seq].len;
-        debug_assert!(self.seqs[seq].live, "begin_token on retired seq {seq}");
-        if len % self.cfg.page_tokens == 0 {
-            let Some(page) = self.free_pages.pop() else {
-                return Err(OutOfPages { seq, len });
-            };
+        debug_assert!(self.seqs[seq].live,
+                      "begin_tokens on retired seq {seq}");
+        let need_pages = (len + n).div_ceil(self.cfg.page_tokens)
+            .saturating_sub(self.seqs[seq].pages.len());
+        if need_pages > self.free_pages.len() {
+            return Err(OutOfPages { seq, len });
+        }
+        for _ in 0..need_pages {
+            let page = self.free_pages.pop().expect("free count checked");
             self.seqs[seq].pages.push(page);
         }
-        self.seqs[seq].len = len + 1;
+        self.seqs[seq].len = len + n;
         Ok(len)
     }
 
@@ -223,11 +240,20 @@ impl KvCache {
     /// claimed by [`KvCache::begin_token`] (position `seq_len - 1`).
     pub fn write_kv(&mut self, seq: usize, layer: usize,
                     k: &[f32], v: &[f32]) {
+        let pos = self.seqs[seq].len.checked_sub(1)
+            .expect("write_kv before begin_token");
+        self.write_kv_at(seq, layer, pos, k, v);
+    }
+
+    /// Write layer `layer`'s k/v for an explicit claimed position
+    /// (`pos < seq_len`). Chunked prefill claims a whole span with
+    /// [`KvCache::begin_tokens`] and then fills each position of the
+    /// span in order through this entry point.
+    pub fn write_kv_at(&mut self, seq: usize, layer: usize, pos: usize,
+                       k: &[f32], v: &[f32]) {
         let hidden = self.cfg.hidden;
         assert_eq!(k.len(), hidden, "k width");
         assert_eq!(v.len(), hidden, "v width");
-        let pos = self.seqs[seq].len.checked_sub(1)
-            .expect("write_kv before begin_token");
         let off = self.offset(seq, layer, pos);
         self.data[off..off + hidden].copy_from_slice(k);
         self.data[off + hidden..off + 2 * hidden].copy_from_slice(v);
@@ -410,6 +436,60 @@ mod tests {
         assert_eq!(cfg.bytes_per_token(), 8192);
         assert_eq!(cfg.token_stride(), 2048);
         assert_eq!(cfg.page_stride(), 16 * 2048);
+    }
+
+    #[test]
+    fn begin_tokens_claims_spans_across_page_boundaries() {
+        // One 7-slot span over 3-token pages: 3 pages claimed at once,
+        // positions numbered contiguously, per-position writes land
+        // exactly where one-token claims would have put them.
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        assert_eq!(c.begin_tokens(s, 7).unwrap(), 0);
+        assert_eq!(c.seq_len(s), 7);
+        assert_eq!(c.pages_in_use(), 3);
+        for pos in 0..7 {
+            for layer in 0..2 {
+                let k = vec![(10 * pos + layer) as f32; 4];
+                c.write_kv_at(s, layer, pos, &k, &k);
+            }
+        }
+        // A follow-up span continues from the committed length.
+        assert_eq!(c.begin_tokens(s, 2).unwrap(), 7);
+        assert_eq!(c.pages_in_use(), 3); // 9 tokens still fit 3 pages
+        for pos in 0..7 {
+            assert_eq!(c.kv(s, 1, pos).0[0], (10 * pos + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn begin_tokens_refusal_is_all_or_nothing() {
+        // 2 pages x 3 tokens = 6 slots; a 3-slot span by seq b leaves
+        // room for nothing more: a 4-slot claim must refuse without
+        // claiming the one free page it could have taken.
+        let mut c = tiny(2);
+        let a = c.alloc_seq();
+        let b = c.alloc_seq();
+        c.begin_tokens(b, 3).unwrap();
+        let err = c.begin_tokens(a, 4).unwrap_err();
+        assert_eq!(err, OutOfPages { seq: a, len: 0 });
+        assert_eq!(c.seq_len(a), 0, "failed span claim must not grow seq");
+        assert_eq!(c.free_page_count(), 1,
+                   "failed span claim must not take partial pages");
+        // A span that does fit still succeeds afterwards.
+        assert_eq!(c.begin_tokens(a, 3).unwrap(), 0);
+        assert_eq!(c.free_page_count(), 0);
+    }
+
+    #[test]
+    fn single_and_multi_token_claims_interleave() {
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        assert_eq!(c.begin_token(s).unwrap(), 0);
+        assert_eq!(c.begin_tokens(s, 4).unwrap(), 1);
+        assert_eq!(c.begin_token(s).unwrap(), 5);
+        assert_eq!(c.seq_len(s), 6);
+        assert_eq!(c.pages_in_use(), 2);
     }
 
     #[test]

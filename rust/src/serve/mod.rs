@@ -16,11 +16,17 @@
 //!   any [`model::FamilySpec`] from them, so every family serves the
 //!   *same* model in a different storage format.
 //! - [`scheduler`] — [`scheduler::Scheduler`]: admits N concurrent
-//!   [`scheduler::GenRequest`]s, groups the live lanes into one
-//!   (batch x hidden) kernel step, samples per lane (greedy / top-k),
-//!   and retires finished sequences with mid-flight refill
-//!   (continuous batching). It drives any [`model::DecodeModel`],
-//!   family-blind.
+//!   [`scheduler::GenRequest`]s, groups the live lanes' token *spans*
+//!   into one flattened kernel step — a lane with unconsumed prompt
+//!   feeds up to `prefill_chunk` tokens per step (chunked prefill,
+//!   bitwise stream-invariant; TTFT drops from `prompt_len` to
+//!   `ceil(prompt_len / chunk)` steps) — samples per lane (greedy /
+//!   top-k), and retires finished sequences with mid-flight refill
+//!   (continuous batching). KV-capacity exhaustion surfaces as
+//!   per-lane rejection that the scheduler absorbs by deferring
+//!   admission and requeueing refused lanes with their pages released
+//!   (an overcommitted server queues; it never panics). It drives any
+//!   [`model::DecodeModel`], family-blind.
 //! - [`kvcache`] + [`model::AttnLm`] — the paged KV-cache attention
 //!   path: real pre-norm multi-head attention whose per-lane context
 //!   lives in fixed-size token pages ([`kvcache::KvCache`], free-list
@@ -88,6 +94,30 @@ pub fn bench_requests(vocab: usize, n: usize, max_new_tokens: usize,
         .collect()
 }
 
+/// [`bench_requests`] with an explicit prompt length: every request's
+/// prompt bytes are *cycled* to exactly `prompt_tokens` tokens, so the
+/// traffic's prefill share is controlled precisely — the long-prompt
+/// workload `serve-bench --prompt-tokens` uses to measure chunked
+/// prefill throughput and TTFT (one-token prefill pays `prompt_tokens`
+/// steps before the first sampled token; a chunk of c pays
+/// `ceil(prompt_tokens / c)`).
+pub fn bench_requests_sized(vocab: usize, n: usize, max_new_tokens: usize,
+                            seed: u64, prompt_tokens: usize)
+                            -> Vec<GenRequest> {
+    let world = crate::data::World::new(seed);
+    crate::eval::serve_prompts(&world, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(id, prompt)| {
+            let toks: Vec<u32> = prompt.bytes().cycle()
+                .take(prompt_tokens.max(1))
+                .map(|b| b as u32 % vocab as u32)
+                .collect();
+            GenRequest::greedy(id, toks, max_new_tokens)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +132,19 @@ mod tests {
             assert_eq!(x.prompt, y.prompt);
             assert_eq!(x.max_new_tokens, 8);
             assert!(!x.prompt.is_empty() && x.prompt.len() <= 16);
+            assert!(x.prompt.iter().all(|&t| t < 512));
+        }
+    }
+
+    #[test]
+    fn sized_bench_requests_hit_exact_prompt_length() {
+        let a = bench_requests_sized(512, 6, 4, 3, 48);
+        let b = bench_requests_sized(512, 6, 4, 3, 48);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.prompt, y.prompt, "sized traffic must be seeded");
+            assert_eq!(x.prompt.len(), 48,
+                       "prompt bytes must cycle to the requested length");
             assert!(x.prompt.iter().all(|&t| t < 512));
         }
     }

@@ -46,7 +46,7 @@
 
 use std::sync::{Mutex, MutexGuard};
 
-use super::kvcache::{KvCache, KV_PAGE_TOKENS};
+use super::kvcache::{KvCache, OutOfPages, KV_PAGE_TOKENS};
 use crate::checkpoint::Checkpoint;
 use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
 use crate::linear::{DenseF32, LinearFormat, QuantPacked};
@@ -105,6 +105,91 @@ pub trait DecodeModel {
     fn step_batch_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
                        pool: &WorkerPool, scratch: &mut DecodeScratch) {
         scratch.logits = self.step_batch(states, tokens, pool.threads());
+    }
+
+    /// Advance every lane by a *span* of consecutive tokens in one
+    /// call — the chunked-prefill entry point the scheduler drives.
+    /// `spans[i] >= 1` is the number of tokens lane i consumes this
+    /// step; lane i's tokens sit at `tokens[o_i..o_i + spans[i]]`
+    /// where `o_i` is the prefix sum of earlier spans. Logits for each
+    /// lane's *final* span position land in `scratch.logits`, one row
+    /// per lane that ran, in lane order — intermediate prompt
+    /// positions produce no logits row, so the output head never runs
+    /// over whole prefill chunks.
+    ///
+    /// Backpressure: a model with per-lane admission control (the
+    /// paged-KV [`AttnLm`]) may *reject* lanes whose cache claim fails
+    /// this step. Rejected lane ordinals (indices into
+    /// `states`/`spans`) are recorded in `scratch.rejected` (cleared
+    /// on entry, sorted ascending); rejected lanes contribute no batch
+    /// rows and no logits row, their `states` entry is untouched, and
+    /// nothing is claimed on their behalf. The scheduler requeues them
+    /// — capacity exhaustion degrades to queueing, never to a panic.
+    /// Models without per-lane resources never reject.
+    ///
+    /// Bitwise contract: every kernel keeps per-element accumulation
+    /// order batch-invariant and lanes are independent, so a span of n
+    /// tokens must produce exactly the logits and state the same lane
+    /// would reach through n one-token steps — `tests/
+    /// prefill_chunking.rs` locks this in per family and model kind.
+    ///
+    /// The default implementation *iterates* the chunk: sub-step j
+    /// re-batches every lane with `spans[i] > j` through
+    /// [`DecodeModel::step_batch_into`], staging each lane's
+    /// final-position logits. Sequential-state models ([`SpectraLm`]'s
+    /// decay carry needs position t's full forward before position
+    /// t+1's input) are served correctly by this; models whose span
+    /// positions flatten into the batch dimension ([`AttnLm`], via
+    /// intra-chunk causal attention) override it with a true
+    /// multi-token forward.
+    fn step_spans_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                       spans: &[usize], pool: &WorkerPool,
+                       scratch: &mut DecodeScratch) {
+        debug_assert_eq!(states.len(), spans.len());
+        debug_assert_eq!(tokens.len(), spans.iter().sum::<usize>());
+        scratch.rejected.clear();
+        if spans.iter().all(|&s| s == 1) {
+            // Decode steady state: a span step of all-1 spans *is* a
+            // plain batched step — no staging, no extra copies.
+            self.step_batch_into(states, tokens, pool, scratch);
+            return;
+        }
+        let n = spans.len();
+        scratch.sample_logits.reset2(n, self.dims().vocab);
+        let mut offs = Vec::with_capacity(n);
+        let mut off = 0usize;
+        for &s in spans {
+            debug_assert!(s >= 1, "spans must be >= 1");
+            offs.push(off);
+            off += s;
+        }
+        let max_span = spans.iter().copied().max().unwrap_or(0);
+        let mut sub_tokens: Vec<u32> = Vec::with_capacity(n);
+        let mut participants: Vec<usize> = Vec::with_capacity(n);
+        for j in 0..max_span {
+            sub_tokens.clear();
+            participants.clear();
+            for (i, &s) in spans.iter().enumerate() {
+                if j < s {
+                    participants.push(i);
+                    sub_tokens.push(tokens[offs[i] + j]);
+                }
+            }
+            let mut refs: Vec<&mut [f32]> = states.iter_mut().enumerate()
+                .filter(|(i, _)| j < spans[*i])
+                .map(|(_, s)| &mut **s)
+                .collect();
+            self.step_batch_into(&mut refs, &sub_tokens, pool, scratch);
+            drop(refs);
+            for (row, &i) in participants.iter().enumerate() {
+                if spans[i] == j + 1 {
+                    let (dst, src) =
+                        (&mut scratch.sample_logits, &scratch.logits);
+                    dst.row_mut(i).copy_from_slice(src.row(row));
+                }
+            }
+        }
+        std::mem::swap(&mut scratch.logits, &mut scratch.sample_logits);
     }
 
     /// Release any model-side per-lane resource bound to `state` (the
@@ -686,22 +771,32 @@ fn gather_embed(embed: &HostTensor, tokens: &[u32]) -> HostTensor {
 
 /// Single-query multi-head attention for one lane over its own cached
 /// positions: per head, dot(q, k)/sqrt(dh) scores over positions
-/// `0..seq_len`, max-subtracted softmax, then the weighted sum of the
+/// `0..limit`, max-subtracted softmax, then the weighted sum of the
 /// cached values into `out` (fully overwritten).
+///
+/// `limit` is the number of attendable positions — `seq_len` for a
+/// one-token decode step; `start + j + 1` for the j-th position of a
+/// prefill chunk, which is what makes intra-chunk attention *causal*:
+/// a chunk position never sees the chunk positions after it, so a
+/// multi-token forward reads exactly the cache prefix the one-token
+/// path would have seen.
 ///
 /// Determinism contract: the loops run in position order with a fixed
 /// f32 accumulation order, and only `seq`'s own slots are read — so a
 /// lane's attention output is bitwise identical at any batch size,
-/// thread count, and physical page placement. `scores` is a reused
-/// per-(lane, head) buffer; it is cleared and refilled before use.
+/// chunk size, thread count, and physical page placement. `scores` is
+/// a reused per-(lane, head) buffer; it is cleared and refilled before
+/// use.
 fn attend_one(cache: &KvCache, seq: usize, layer: usize, heads: usize,
-              q: &[f32], out: &mut [f32], scores: &mut Vec<f32>) {
+              q: &[f32], out: &mut [f32], scores: &mut Vec<f32>,
+              limit: usize) {
     let hidden = q.len();
     debug_assert_eq!(out.len(), hidden);
     debug_assert_eq!(hidden % heads, 0);
     let dh = hidden / heads;
-    let len = cache.seq_len(seq);
+    let len = limit;
     debug_assert!(len >= 1, "attend before begin_token");
+    debug_assert!(len <= cache.seq_len(seq), "attend past committed slots");
     let scale = 1.0 / (dh as f32).sqrt();
     out.fill(0.0);
     for h in 0..heads {
@@ -740,25 +835,54 @@ fn attend_one(cache: &KvCache, seq: usize, layer: usize, heads: usize,
     }
 }
 
-/// Bind a lane's state buffer to a KV-cache sequence and claim this
-/// step's token slot. The binding is the state's first element
+/// Bind a lane's state buffer to a KV-cache sequence and claim an
+/// `n`-token span of slots. The binding is the state's first element
 /// (`seq_id + 1`; `0.0` = unbound — exactly what the scheduler's
 /// zeroed fresh/recycled buffers carry), so the scheduler stays
 /// model-blind: admission needs no new plumbing, and retirement goes
 /// through [`DecodeModel::retire_state`].
-fn bind_and_begin(cache: &mut KvCache, st: &mut [f32]) -> usize {
-    let seq = if st[0] == 0.0 {
+///
+/// On success returns `(seq, start_position)`. On [`OutOfPages`] the
+/// refusal is *harmless*: a fresh lane's just-allocated sequence is
+/// given straight back (the state stays unbound, zero), a mid-flight
+/// lane's sequence and pages are left exactly as they were — so the
+/// scheduler can defer or requeue the lane and retry later. This is
+/// the backpressure path that replaced the old hard panic.
+fn try_bind_and_begin(cache: &mut KvCache, st: &mut [f32], n: usize)
+                      -> std::result::Result<(usize, usize), OutOfPages> {
+    if st[0] == 0.0 {
         let seq = cache.alloc_seq();
-        st[0] = (seq + 1) as f32;
-        seq
+        match cache.begin_tokens(seq, n) {
+            Ok(start) => {
+                st[0] = (seq + 1) as f32;
+                Ok((seq, start))
+            }
+            Err(e) => {
+                // Hand the empty sequence straight back: a refused
+                // admission must leave no trace.
+                cache.free_seq(seq);
+                Err(e)
+            }
+        }
     } else {
-        st[0] as usize - 1
-    };
-    if let Err(e) = cache.begin_token(seq) {
-        panic!("AttnLm: {e} — size the cache for max_batch lanes x \
-                (prompt + max_new_tokens) context");
+        let seq = st[0] as usize - 1;
+        cache.begin_tokens(seq, n).map(|start| (seq, start))
     }
-    seq
+}
+
+/// Strict single-token [`try_bind_and_begin`]: the legacy
+/// [`DecodeModel::step_batch`] entry point has no rejection channel,
+/// so capacity exhaustion can only panic there. The serving path
+/// ([`DecodeModel::step_spans_into`]) rejects gracefully instead.
+fn bind_and_begin(cache: &mut KvCache, st: &mut [f32]) -> usize {
+    match try_bind_and_begin(cache, st, 1) {
+        Ok((seq, _)) => seq,
+        Err(e) => panic!(
+            "AttnLm: {e} — the legacy step path cannot defer lanes; \
+             serve through the scheduler (which requeues on \
+             backpressure) or size the cache for max_batch lanes x \
+             (prompt + max_new_tokens) context"),
+    }
 }
 
 /// One attention + gated-MLP residual block over any linear storage
@@ -887,7 +1011,8 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
                 HostTensor::zeros(vec![tokens.len(), self.dims.hidden]);
             for (bi, &seq) in seqs.iter().enumerate() {
                 attend_one(&cache, seq, l, self.heads, q.row(bi),
-                           attn.row_mut(bi), &mut scores);
+                           attn.row_mut(bi), &mut scores,
+                           cache.seq_len(seq));
             }
             let o = blk.wo.matmul_batch(&attn, threads);
             for (xv, &ov) in x.data.iter_mut().zip(o.data.iter()) {
@@ -913,16 +1038,74 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
     /// logits, state tags, and cache contents to
     /// [`AttnLm::step_batch`] at `threads = pool.threads()` — only the
     /// buffer sources (scratch vs fresh) and the execution substrate
-    /// (dispatched pool vs spawned scope) differ.
+    /// (dispatched pool vs spawned scope) differ. Implemented as the
+    /// all-ones span step; like [`AttnLm::step_batch`] this legacy
+    /// entry point has no rejection channel, so a lane the span step
+    /// would merely defer becomes a panic here.
     fn step_batch_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
                        pool: &WorkerPool, scratch: &mut DecodeScratch) {
         assert_eq!(states.len(), tokens.len());
-        let mut cache = self.lock_cache();
-        scratch.seqs.clear();
-        for st in states.iter_mut() {
-            scratch.seqs.push(bind_and_begin(&mut cache, st));
+        let spans = vec![1usize; tokens.len()];
+        self.step_spans_into(states, tokens, &spans, pool, scratch);
+        if let Some(&lane) = scratch.rejected.first() {
+            panic!("AttnLm: kv cache out of pages for lane {lane} — the \
+                    legacy step path cannot defer lanes; serve through \
+                    the scheduler (which requeues on backpressure) or \
+                    size the cache for max_batch lanes x (prompt + \
+                    max_new_tokens) context");
         }
-        gather_embed_into(&self.embed, tokens, &mut scratch.x);
+    }
+
+    /// The true multi-token forward behind chunked prefill: every
+    /// accepted lane's whole span is flattened into the batch
+    /// dimension of one kernel pass per projection, with intra-chunk
+    /// *causal* attention (span position j attends over `start + j + 1`
+    /// cache positions — exactly the prefix the one-token path would
+    /// see), so a chunk of n tokens is bitwise identical to n
+    /// one-token steps while invoking each kernel once instead of n
+    /// times.
+    ///
+    /// Admission is per lane and all-or-nothing: each lane claims its
+    /// whole span via [`KvCache::begin_tokens`] up front; a lane whose
+    /// claim is refused is recorded in `scratch.rejected`, contributes
+    /// nothing to the batch, and keeps its sequence (or unbound state)
+    /// untouched — the KV-capacity backpressure contract of
+    /// [`DecodeModel::step_spans_into`].
+    fn step_spans_into(&self, states: &mut [&mut [f32]], tokens: &[u32],
+                       spans: &[usize], pool: &WorkerPool,
+                       scratch: &mut DecodeScratch) {
+        debug_assert_eq!(states.len(), spans.len());
+        debug_assert_eq!(tokens.len(), spans.iter().sum::<usize>());
+        scratch.rejected.clear();
+        scratch.seqs.clear();
+        scratch.starts.clear();
+        scratch.spans.clear();
+        scratch.span_tokens.clear();
+        let mut cache = self.lock_cache();
+        let mut off = 0usize;
+        for (i, st) in states.iter_mut().enumerate() {
+            let span = spans[i];
+            debug_assert!(span >= 1, "lane {i}: span must be >= 1");
+            match try_bind_and_begin(&mut cache, st, span) {
+                Ok((seq, start)) => {
+                    scratch.seqs.push(seq);
+                    scratch.starts.push(start);
+                    scratch.spans.push(span);
+                    scratch.span_tokens
+                        .extend_from_slice(&tokens[off..off + span]);
+                }
+                Err(_) => scratch.rejected.push(i),
+            }
+            off += span;
+        }
+        let rows = scratch.span_tokens.len();
+        if rows == 0 {
+            // Every lane refused this step: no forward runs, the
+            // scheduler requeues them all.
+            scratch.logits.reset2(0, self.dims.vocab);
+            return;
+        }
+        gather_embed_into(&self.embed, &scratch.span_tokens, &mut scratch.x);
         for (l, blk) in self.blocks.iter().enumerate() {
             rmsnorm_into(&scratch.x, &mut scratch.norm);
             blk.wq.matmul_batch_into(&scratch.norm, pool,
@@ -931,16 +1114,31 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
                                      &mut scratch.out_t, &mut scratch.k);
             blk.wv.matmul_batch_into(&scratch.norm, pool,
                                      &mut scratch.out_t, &mut scratch.v);
-            for (bi, &seq) in scratch.seqs.iter().enumerate() {
-                cache.write_kv(seq, l, scratch.k.row(bi), scratch.v.row(bi));
+            // Commit the whole span's k/v first (position order), then
+            // attend causally — position j never reads past start+j.
+            let mut row = 0usize;
+            for (ai, &seq) in scratch.seqs.iter().enumerate() {
+                for j in 0..scratch.spans[ai] {
+                    cache.write_kv_at(seq, l, scratch.starts[ai] + j,
+                                      scratch.k.row(row),
+                                      scratch.v.row(row));
+                    row += 1;
+                }
             }
-            scratch.attn.reset2(tokens.len(), self.dims.hidden);
-            for (bi, &seq) in scratch.seqs.iter().enumerate() {
-                attend_one(&cache, seq, l, self.heads, scratch.q.row(bi),
-                           scratch.attn.row_mut(bi), &mut scratch.scores);
+            scratch.attn.reset2(rows, self.dims.hidden);
+            let mut row = 0usize;
+            for (ai, &seq) in scratch.seqs.iter().enumerate() {
+                for j in 0..scratch.spans[ai] {
+                    attend_one(&cache, seq, l, self.heads,
+                               scratch.q.row(row),
+                               scratch.attn.row_mut(row),
+                               &mut scratch.scores,
+                               scratch.starts[ai] + j + 1);
+                    row += 1;
+                }
             }
             // The attention-out projection reuses the down buffer (both
-            // are (batch, hidden) residual deltas).
+            // are (rows, hidden) residual deltas).
             blk.wo.matmul_batch_into(&scratch.attn, pool,
                                      &mut scratch.out_t, &mut scratch.down);
             for (xv, &ov) in scratch.x.data.iter_mut()
@@ -967,8 +1165,22 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             }
         }
         rmsnorm_into(&scratch.x, &mut scratch.norm);
-        self.head.matmul_batch_into(&scratch.norm, pool, &mut scratch.out_t,
-                                    &mut scratch.logits);
+        // Only each lane's final span position feeds the head: gather
+        // those rows (row-wise identical to running the head over the
+        // full chunk and discarding, but prefill never pays vocab-width
+        // compute for intermediate positions).
+        {
+            let (head_in, norm, spans_a) =
+                (&mut scratch.head_in, &scratch.norm, &scratch.spans);
+            head_in.reset2(spans_a.len(), self.dims.hidden);
+            let mut row = 0usize;
+            for (ai, &s) in spans_a.iter().enumerate() {
+                row += s;
+                head_in.row_mut(ai).copy_from_slice(norm.row(row - 1));
+            }
+        }
+        self.head.matmul_batch_into(&scratch.head_in, pool,
+                                    &mut scratch.out_t, &mut scratch.logits);
     }
 
     fn retire_state(&self, state: &mut [f32]) {
@@ -1295,7 +1507,8 @@ impl LatentAttnLm {
                     HostTensor::zeros(vec![CALIB_LANES, d.hidden]);
                 for (bi, &s) in seqs.iter().enumerate() {
                     attend_one(&cache, s, l, self.heads, q.row(bi),
-                               attn.row_mut(bi), &mut scores);
+                               attn.row_mut(bi), &mut scores,
+                               cache.seq_len(s));
                 }
                 acc_o[l].add_batch(&attn);
                 let o = matmul_dense(&attn, &blk.wo);
@@ -1672,15 +1885,91 @@ mod tests {
     }
 
     #[test]
+    fn attn_overcommitted_spans_reject_gracefully() {
+        // Polarity flip of the old overcommit-panic test: a cache sized
+        // for one lane cannot serve two concurrent lanes, but the span
+        // step path now *rejects* the second lane (backpressure) instead
+        // of panicking — the first lane serves normally, the refused
+        // lane's state stays unbound and nothing leaks from the refusal.
+        let lm = attn_latent(26).build_float(1, 4);
+        let pool = WorkerPool::new(1);
+        let mut scratch = DecodeScratch::new();
+        let mut s = vec![vec![0.0f32; 32]; 2];
+        let mut refs: Vec<&mut [f32]> =
+            s.iter_mut().map(|v| v.as_mut_slice()).collect();
+        lm.step_spans_into(&mut refs, &[1, 2], &[1, 1], &pool, &mut scratch);
+        drop(refs);
+        assert_eq!(scratch.rejected, vec![1]);
+        assert_eq!(scratch.logits.shape, vec![1, 64],
+                   "one logits row for the one lane that ran");
+        assert!(scratch.logits.data.iter().all(|v| v.is_finite()));
+        assert_ne!(s[0][0], 0.0, "accepted lane must be bound");
+        assert_eq!(s[1][0], 0.0, "rejected lane must stay unbound");
+        assert_eq!(lm.kv_live_seqs(), 1,
+                   "a refused admission must not leak a sequence");
+        // Once the first lane retires, the refused lane admits cleanly.
+        lm.retire_state(&mut s[0]);
+        let mut refs: Vec<&mut [f32]> =
+            s.iter_mut().map(|v| v.as_mut_slice()).collect();
+        lm.step_spans_into(&mut refs, &[1, 2], &[1, 1], &pool, &mut scratch);
+        assert_eq!(scratch.rejected, vec![1],
+                   "lane 0 rebinds first and wins the single page again");
+    }
+
+    #[test]
     #[should_panic(expected = "out of pages")]
-    fn attn_overcommitted_lanes_panic_loudly() {
-        // A cache sized for one lane cannot serve two concurrent lanes:
-        // the second bind must refuse loudly, not serve garbage.
+    fn attn_legacy_step_batch_still_panics_on_overcommit() {
+        // The legacy step_batch entry point has no rejection channel:
+        // overcommit there stays a loud panic (never silent garbage).
         let lm = attn_latent(26).build_float(1, 4);
         let mut s = vec![vec![0.0f32; 32]; 2];
         let mut refs: Vec<&mut [f32]> =
             s.iter_mut().map(|v| v.as_mut_slice()).collect();
         lm.step_batch(&mut refs, &[1, 2], 1);
+    }
+
+    #[test]
+    fn attn_span_step_is_bitwise_identical_to_token_steps() {
+        // The chunked-prefill tentpole at the model level: one span
+        // step over ragged chunks [3, 2] must produce bitwise the
+        // logits and binding tags that three/two one-token steps
+        // produce on a twin instance (same weights, own cache).
+        let latent = attn_latent(31);
+        for spec in [FamilySpec::Float, FamilySpec::Ternary] {
+            let chunked = latent.build(spec, 2, 8).unwrap();
+            let tokenwise = latent.build(spec, 2, 8).unwrap();
+            let pool = WorkerPool::new(2);
+            let mut scratch = DecodeScratch::new();
+            let toks = [3u32, 9, 60, 4, 31]; // lane 0: 3,9,60; lane 1: 4,31
+            let mut sc = vec![vec![0.0f32; 32]; 2];
+            let mut refs: Vec<&mut [f32]> =
+                sc.iter_mut().map(|v| v.as_mut_slice()).collect();
+            chunked.step_spans_into(&mut refs, &toks, &[3, 2], &pool,
+                                    &mut scratch);
+            drop(refs);
+            assert!(scratch.rejected.is_empty(), "{}", spec.label());
+            assert_eq!(scratch.logits.shape, vec![2, 64],
+                       "{}: one logits row per lane", spec.label());
+
+            // Reference: the scoped allocating one-token path, ragged
+            // tail (lane 1 has no third token).
+            let mut st = vec![vec![0.0f32; 32]; 2];
+            let mut refs: Vec<&mut [f32]> =
+                st.iter_mut().map(|v| v.as_mut_slice()).collect();
+            tokenwise.step_batch(&mut refs, &[3, 4], 1);
+            let mut refs: Vec<&mut [f32]> =
+                st.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let l2 = tokenwise.step_batch(&mut refs, &[9, 31], 1);
+            let mut refs = [st[0].as_mut_slice()];
+            let l3 = tokenwise.step_batch(&mut refs, &[60], 1);
+            assert_eq!(scratch.logits.row(0), l3.row(0),
+                       "{}: lane 0 chunk-of-3 logits diverge",
+                       spec.label());
+            assert_eq!(scratch.logits.row(1), l2.row(1),
+                       "{}: lane 1 chunk-of-2 logits diverge",
+                       spec.label());
+            assert_eq!(sc, st, "{}: binding tags diverge", spec.label());
+        }
     }
 
     #[test]

@@ -4,20 +4,44 @@
 //!
 //! The scheduler owns `max_batch` *lanes*. Each step it (1) admits
 //! queued requests into empty lanes, (2) assembles the live lanes'
-//! states + next tokens into one (batch, hidden) kernel invocation,
-//! (3) advances every lane — prompt tokens are consumed one per step
-//! (prefill), then sampling starts — and (4) retires finished lanes,
-//! whose slots are refilled from the queue on the next step while the
-//! remaining lanes continue mid-flight (continuous batching: the batch
-//! never drains to refill).
+//! states + per-lane token *spans* into one flattened kernel
+//! invocation, (3) advances every lane — a lane with unconsumed prompt
+//! feeds up to [`Scheduler::prefill_chunk()`] tokens this step (chunked
+//! prefill; the default chunk of 1 is the classic one-token path),
+//! then sampling starts on the final prompt position — and (4) retires
+//! finished lanes, whose slots are refilled from the queue on the next
+//! step while the remaining lanes continue mid-flight (continuous
+//! batching: the batch never drains to refill).
 //!
 //! Determinism: a lane's computation depends only on its own state and
-//! token stream ([`DecodeModel::step_batch`]'s contract + the kernels'
-//! batch-invariant accumulation order), greedy argmax breaks ties by
-//! token id, and top-k sampling draws from a per-request seeded
-//! [`SplitMix64`]. The same request set therefore yields identical
-//! token streams at batch 1 and batch 8 — `tests/serve_determinism.rs`
-//! locks this in.
+//! token stream ([`DecodeModel::step_spans_into`]'s contract + the
+//! kernels' batch-invariant accumulation order), greedy argmax breaks
+//! ties by token id, and top-k sampling draws from a per-request
+//! seeded [`SplitMix64`]. The same request set therefore yields
+//! identical token streams at batch 1 and batch 8 *and at any prefill
+//! chunk size* — `tests/serve_determinism.rs` and
+//! `tests/prefill_chunking.rs` lock this in.
+//!
+//! Backpressure: a model with per-lane admission control (the paged-KV
+//! [`crate::serve::AttnLm`]) may reject lanes whose cache claim fails.
+//! The scheduler treats a rejection as *deferral*, never as an error:
+//! the lane's model-side resources are released
+//! ([`DecodeModel::retire_state`]) and the request returns to the head
+//! of the queue to restart later — decoding is deterministic, so the
+//! retry reproduces the identical stream. Admission backs off with
+//! one-step hysteresis: after a step that bounced a lane, no fresh
+//! request is admitted until the survivors run one clean step (and
+//! after a full drain, exactly one request is readmitted, serializing
+//! the restart). Readmitted lanes may bounce again while capacity is
+//! still held — requeue churn under sustained overcommit is expected.
+//! Its cost is recompute: a refused claim itself runs no kernels, but
+//! a bounced *mid-flight* lane discards the prefill/decode work it had
+//! done and redoes it after restart (recompute-preemption, the
+//! vLLM-style trade; swapped preemption is a ROADMAP refinement). An
+//! overcommitted
+//! server therefore degrades to queueing; the only loud failure left
+//! is a *single* request whose context alone exceeds the whole cache
+//! (a sizing error no amount of queueing can fix).
 //!
 //! Lane lifecycle stays model-blind: the scheduler hands every
 //! admitted lane a zeroed state buffer and, when the lane retires,
@@ -72,6 +96,11 @@ pub struct Completion {
     pub tokens: Vec<u32>,
     /// Batched steps this request occupied a lane for (prefill + decode).
     pub lane_steps: usize,
+    /// Batched steps from (the last) admission to the first generated
+    /// token — time-to-first-token in scheduler steps. One-token
+    /// prefill pays `prompt_len` steps; a prefill chunk >= prompt_len
+    /// pays 1.
+    pub ttft_steps: usize,
 }
 
 /// Aggregate serving counters for throughput reporting.
@@ -79,11 +108,28 @@ pub struct Completion {
 pub struct ServeStats {
     /// Kernel invocations (batched steps with >= 1 live lane).
     pub batch_steps: usize,
-    /// Sum over steps of live lanes (batch_steps * avg occupancy).
+    /// Sum over steps of lanes that ran (batch_steps * avg occupancy).
+    /// Counts kernel work actually executed, including attempts later
+    /// abandoned to backpressure.
     pub lane_steps: usize,
+    /// Prompt tokens ingested for *delivered* work: an attempt
+    /// abandoned to backpressure is rolled back out, so after a drain
+    /// this equals the sum of completed prompts' lengths even under
+    /// heavy requeueing (throughput numbers never count redone work).
     pub prefill_tokens: usize,
+    /// Tokens generated for *delivered* work (abandoned attempts
+    /// rolled back, as above).
     pub generated_tokens: usize,
     pub peak_occupancy: usize,
+    /// Sum over completed requests of steps-to-first-token; divide by
+    /// completions for the mean TTFT in steps. Delivered-work counter
+    /// like the token counts: a requeued lane's abandoned TTFT is
+    /// rolled back and the restart's TTFT is what lands here.
+    pub ttft_steps: usize,
+    /// Lanes bounced by model backpressure (KV pages exhausted) and
+    /// requeued. The restarted request re-decodes deterministically,
+    /// so requeues never change completion streams — only latency.
+    pub requeued: usize,
 }
 
 struct Lane {
@@ -94,6 +140,9 @@ struct Lane {
     generated: Vec<u32>,
     rng: SplitMix64,
     steps: usize,
+    /// Steps from admission to the first generated token (0 until it
+    /// exists).
+    ttft_steps: usize,
 }
 
 impl Lane {
@@ -112,17 +161,28 @@ impl Lane {
             generated: Vec::with_capacity(req.max_new_tokens),
             rng: SplitMix64::new(seed),
             steps: 0,
+            ttft_steps: 0,
             req,
         }
     }
 
-    /// The token this lane feeds into the next batched step.
-    fn next_token(&self) -> u32 {
-        if self.pos < self.req.prompt.len() {
-            self.req.prompt[self.pos]
+    /// The token this lane feeds at position `pos` of the next step's
+    /// span (prompt positions during prefill; the last sampled token
+    /// once the prompt is consumed).
+    fn token_at(&self, pos: usize) -> u32 {
+        if pos < self.req.prompt.len() {
+            self.req.prompt[pos]
         } else {
             *self.generated.last().expect("generating lane has a last token")
         }
+    }
+
+    /// Tokens this lane feeds into the next batched step: up to `chunk`
+    /// unconsumed prompt tokens (chunked prefill), or exactly 1 once
+    /// sampling has started.
+    fn span_len(&self, chunk: usize) -> usize {
+        let remaining = self.req.prompt.len().saturating_sub(self.pos);
+        remaining.clamp(1, chunk.max(1))
     }
 }
 
@@ -147,14 +207,28 @@ pub struct Scheduler<'m, M: DecodeModel + ?Sized> {
     /// Zeroable hidden-state buffers handed back by retired lanes,
     /// reused on admission.
     free_states: Vec<Vec<f32>>,
-    /// Next-token staging buffer reused across steps.
+    /// Flattened span-token staging buffer reused across steps.
     token_buf: Vec<u32>,
+    /// Per-live-lane span lengths staged alongside `token_buf`.
+    span_buf: Vec<usize>,
+    /// Max prompt tokens a lane feeds per step (>= 1; 1 = the classic
+    /// one-token prefill).
+    prefill_chunk: usize,
+    /// True after a step saw KV backpressure: admission of fresh
+    /// requests pauses until the surviving lanes run a clean step, so
+    /// capacity drains instead of thrashing.
+    defer_admission: bool,
+    /// Consecutive steps in which no lane ran (every live lane was
+    /// rejected) — the wedge detector behind the sizing panic.
+    stalled_steps: usize,
     stats: ServeStats,
 }
 
 impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
     /// `max_batch` lanes; `threads` sizes the persistent kernel pool
-    /// (0 = auto).
+    /// (0 = auto). Prefill is one-token ([`Scheduler::set_prefill_chunk`]
+    /// / [`Scheduler::with_prefill_chunk`] turn on chunked prompt
+    /// ingestion).
     pub fn new(model: &'m M, max_batch: usize, threads: usize) -> Self {
         let max_batch = max_batch.max(1);
         Scheduler {
@@ -166,8 +240,35 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             lanes: (0..max_batch).map(|_| None).collect(),
             free_states: Vec::new(),
             token_buf: Vec::new(),
+            span_buf: Vec::new(),
+            prefill_chunk: 1,
+            defer_admission: false,
+            stalled_steps: 0,
             stats: ServeStats::default(),
         }
+    }
+
+    /// [`Scheduler::new`] with chunked prefill enabled: a lane with
+    /// unconsumed prompt feeds up to `prefill_chunk` tokens per batched
+    /// step. Chunking changes step counts and TTFT, never streams —
+    /// generated tokens are bitwise identical at every chunk size
+    /// (`tests/prefill_chunking.rs`).
+    pub fn with_prefill_chunk(model: &'m M, max_batch: usize,
+                              threads: usize, prefill_chunk: usize) -> Self {
+        let mut s = Scheduler::new(model, max_batch, threads);
+        s.set_prefill_chunk(prefill_chunk);
+        s
+    }
+
+    /// Set the prefill chunk (clamped to >= 1). Takes effect from the
+    /// next step; safe to change mid-serve.
+    pub fn set_prefill_chunk(&mut self, prefill_chunk: usize) {
+        self.prefill_chunk = prefill_chunk.max(1);
+    }
+
+    /// Max prompt tokens a lane feeds per batched step.
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     /// Enqueue a request. Empty prompts are normalized to `[0]` and
@@ -189,9 +290,16 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         &self.stats
     }
 
-    fn admit(&mut self) {
+    /// Fill empty lanes from the queue, at most `cap` this call (the
+    /// backpressure path admits one at a time to serialize restarts;
+    /// the healthy path admits without limit).
+    fn admit(&mut self, cap: usize) {
         let hidden = self.model.dims().hidden;
+        let mut admitted = 0usize;
         for slot in &mut self.lanes {
+            if admitted >= cap {
+                break;
+            }
             if slot.is_none() {
                 let Some(req) = self.queue.pop_front() else { break };
                 // Recycle a retired lane's state buffer when one is
@@ -206,6 +314,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                     None => vec![0.0; hidden],
                 };
                 *slot = Some(Lane::new(req, state));
+                admitted += 1;
             }
         }
     }
@@ -225,51 +334,126 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
 
     /// One batched step across all live lanes; requests that finished
     /// on this step are appended to `done`. Steady-state allocation is
-    /// reduced to the one unavoidable piece: tokens stage in a reused
-    /// buffer, the kernel invocation runs through the scheduler's
-    /// pool + scratch, nothing is allocated when no lane retires — only
-    /// the batch-sized vector of `&mut` lane-state borrows is built per
-    /// step (a borrow cannot be stored across steps).
+    /// reduced to the one unavoidable piece: tokens and spans stage in
+    /// reused buffers, the kernel invocation runs through the
+    /// scheduler's pool + scratch, nothing is allocated when no lane
+    /// retires — only the batch-sized vector of `&mut` lane-state
+    /// borrows is built per step (a borrow cannot be stored across
+    /// steps), plus a tiny requeue vector on the rare backpressure
+    /// step.
     pub fn step_into(&mut self, done: &mut Vec<Completion>) {
-        self.admit();
+        // Backpressure defers admission: after a step that bounced a
+        // lane, no fresh request is admitted until the survivors run a
+        // clean step, so held KV capacity is released instead of
+        // fought over. If pressure drained *every* lane, exactly one
+        // request is readmitted — the lone lane claims from a fully
+        // free pool and runs to completion, which breaks the symmetric
+        // wedge where identically-restarted lanes would hit the same
+        // page boundary in lockstep forever.
+        let live_before = self.lanes.iter().filter(|l| l.is_some()).count();
+        if !self.defer_admission {
+            self.admit(usize::MAX);
+        } else if live_before == 0 {
+            self.admit(1);
+        }
         self.token_buf.clear();
+        self.span_buf.clear();
         for s in self.lanes.iter() {
             if let Some(lane) = s {
-                self.token_buf.push(lane.next_token());
+                let span = lane.span_len(self.prefill_chunk);
+                for j in 0..span {
+                    self.token_buf.push(lane.token_at(lane.pos + j));
+                }
+                self.span_buf.push(span);
             }
         }
-        if self.token_buf.is_empty() {
+        if self.span_buf.is_empty() {
             return;
         }
         let mut state_refs: Vec<&mut [f32]> = self.lanes.iter_mut()
             .filter_map(|s| s.as_mut().map(|l| l.state.as_mut_slice()))
             .collect();
-        self.model.step_batch_into(&mut state_refs, &self.token_buf,
-                                   &self.pool, &mut self.scratch);
+        self.model.step_spans_into(&mut state_refs, &self.token_buf,
+                                   &self.span_buf, &self.pool,
+                                   &mut self.scratch);
         drop(state_refs);
-        let logits = &self.scratch.logits;
 
+        let live = self.span_buf.len();
+        let ran = live - self.scratch.rejected.len();
+        if ran == 0 && live == 1 {
+            // Requeueing cannot help a lane refused while no other lane
+            // holds pages: its context alone exceeds the whole pool.
+            panic!("serve: kv cache smaller than a single request's \
+                    context (claim refused with every other lane idle) — \
+                    size the cache for at least prompt + max_new_tokens \
+                    tokens per lane");
+        }
+        if ran == 0 {
+            self.stalled_steps += 1;
+            // After an all-rejected step every lane releases its pages,
+            // so the next admission claims from a free pool — repeated
+            // all-rejected steps mean the requests can never fit.
+            if self.stalled_steps > self.max_batch + 1 {
+                panic!("serve: {} consecutive steps without progress — \
+                        the kv cache cannot fit any admitted request's \
+                        next claim; size the cache for at least prompt + \
+                        max_new_tokens tokens per lane",
+                       self.stalled_steps);
+            }
+        } else {
+            self.stalled_steps = 0;
+        }
         self.stats.batch_steps += 1;
-        self.stats.lane_steps += self.token_buf.len();
-        self.stats.peak_occupancy =
-            self.stats.peak_occupancy.max(self.token_buf.len());
+        self.stats.lane_steps += ran;
+        self.stats.peak_occupancy = self.stats.peak_occupancy.max(ran);
 
-        let mut ai = 0usize; // index into the batch = live-lane ordinal
+        let logits = &self.scratch.logits;
+        let mut requeue: Vec<GenRequest> = Vec::new();
+        let mut ai = 0usize; // logits row: ordinal among lanes that ran
+        let mut si = 0usize; // live-lane ordinal (indexes span_buf)
         for slot in &mut self.lanes {
             let Some(lane) = slot.as_mut() else { continue };
+            let span = self.span_buf[si];
+            let rejected = self.scratch.rejected.contains(&si);
+            si += 1;
+            if rejected {
+                // KV backpressure: release this lane's model-side
+                // resources and put the request back at the head of the
+                // queue. Decoding is deterministic, so the restarted
+                // request reproduces the same stream from scratch —
+                // requeues cost latency, never correctness.
+                let mut lane = slot.take().unwrap();
+                self.model.retire_state(&mut lane.state);
+                self.free_states.push(lane.state);
+                self.stats.requeued += 1;
+                // Roll the abandoned attempt back out of the delivered-
+                // work counters: the restart will re-earn them, and
+                // token/prefill/TTFT totals must never double-count
+                // discarded work (throughput reporting divides these by
+                // wall clock). batch_steps/lane_steps stay — they
+                // measure kernel work actually executed.
+                self.stats.generated_tokens -= lane.generated.len();
+                self.stats.prefill_tokens -= lane.pos;
+                self.stats.ttft_steps -= lane.ttft_steps;
+                requeue.push(lane.req);
+                continue;
+            }
             lane.steps += 1;
-            let fed_prompt = lane.pos < lane.req.prompt.len();
-            if fed_prompt {
-                lane.pos += 1;
-                self.stats.prefill_tokens += 1;
+            if lane.pos < lane.req.prompt.len() {
+                lane.pos += span;
+                self.stats.prefill_tokens += span;
             }
             // Once the final prompt token has been fed, every step's
-            // logits produce one sampled continuation token.
+            // logits row produces one sampled continuation token.
             if lane.pos == lane.req.prompt.len() {
                 let tok = sample(logits.row(ai), &lane.req.sampling,
                                  &mut lane.rng);
                 lane.generated.push(tok);
                 self.stats.generated_tokens += 1;
+                if lane.generated.len() == 1 {
+                    lane.ttft_steps = lane.steps;
+                    self.stats.ttft_steps += lane.steps;
+                }
                 if lane.generated.len() >= lane.req.max_new_tokens {
                     let mut lane = slot.take().unwrap();
                     // Lane retire: release model-side per-lane resources
@@ -282,10 +466,17 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                         prompt_len: lane.req.prompt.len(),
                         tokens: lane.generated,
                         lane_steps: lane.steps,
+                        ttft_steps: lane.ttft_steps,
                     });
                 }
             }
             ai += 1;
+        }
+        self.defer_admission = !requeue.is_empty();
+        // Deferred lanes go back to the *head* of the queue in their
+        // original relative order — they were already in flight.
+        for req in requeue.into_iter().rev() {
+            self.queue.push_front(req);
         }
     }
 
@@ -319,10 +510,15 @@ fn sample(row: &[f32], sampling: &Sampling, rng: &mut SplitMix64) -> u32 {
     match *sampling {
         Sampling::Greedy => {
             // Strict-greater scan: ties keep the lowest token id, which
-            // is batch-independent (no float-order ambiguity).
+            // is batch-independent (no float-order ambiguity). A NaN
+            // incumbent is evicted by the first finite logit — without
+            // that, a NaN at token 0 would win every comparison by
+            // making them all false. All-NaN rows degrade to token 0,
+            // matching the top-k policy below.
             let mut best = 0usize;
             for (i, &v) in row.iter().enumerate() {
-                if v > row[best] {
+                let b = row[best];
+                if (b.is_nan() && !v.is_nan()) || v > b {
                     best = i;
                 }
             }
@@ -330,14 +526,25 @@ fn sample(row: &[f32], sampling: &Sampling, rng: &mut SplitMix64) -> u32 {
         }
         Sampling::TopK { k, temperature, .. } => {
             let k = k.clamp(1, row.len());
-            // Total order (logit desc, then token id) makes the top-k
-            // *set* unique even under ties, so an unstable partition
-            // selects deterministically; only the k survivors are
-            // sorted, not the whole vocab.
+            // Total order (finite logits desc, then NaNs, then token
+            // id) makes the top-k *set* unique even under ties, so an
+            // unstable partition selects deterministically; only the k
+            // survivors are sorted, not the whole vocab.
+            //
+            // NaN needs explicit handling: `partial_cmp` returns None
+            // for any NaN comparison, and mapping that to `Equal` (the
+            // old code) silently produces a *non-transitive* relation —
+            // selection would then depend on element order inside
+            // `select_nth_unstable_by`, breaking the batch-invariance
+            // determinism contract the moment any logit goes NaN. NaNs
+            // instead sort deterministically *behind* every finite
+            // logit (a NaN is never preferred over a real candidate)
+            // and get zero sampling weight below.
             let desc = |a: &usize, b: &usize| {
-                row[*b].partial_cmp(&row[*a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(b))
+                row[*a].is_nan().cmp(&row[*b].is_nan())
+                    .then_with(|| row[*b].partial_cmp(&row[*a])
+                        .unwrap_or(std::cmp::Ordering::Equal))
+                    .then_with(|| a.cmp(b))
             };
             let mut idx: Vec<usize> = (0..row.len()).collect();
             if k < idx.len() {
@@ -347,8 +554,15 @@ fn sample(row: &[f32], sampling: &Sampling, rng: &mut SplitMix64) -> u32 {
             idx.sort_by(desc);
             let t = temperature.max(1e-6);
             let mx = row[idx[0]];
+            // NaN survivors (possible only when fewer than k finite
+            // logits exist) weigh 0 and are never drawn; an all-NaN row
+            // degrades to the lowest token id — deterministic, and the
+            // rng still advances exactly one draw either way.
             let ws: Vec<f64> = idx.iter()
-                .map(|&j| (((row[j] - mx) / t) as f64).exp())
+                .map(|&j| {
+                    let w = (((row[j] - mx) / t) as f64).exp();
+                    if w.is_nan() { 0.0 } else { w }
+                })
                 .collect();
             idx[rng.weighted(&ws)] as u32
         }
@@ -510,5 +724,140 @@ mod tests {
         let sched = Scheduler::new(&lm, 2, 1);
         assert_eq!(sched.pending(), 0);
         assert_eq!(sched.stats().batch_steps, 0);
+        assert_eq!(sched.stats().ttft_steps, 0);
+        assert_eq!(sched.stats().requeued, 0);
+    }
+
+    #[test]
+    fn chunked_prefill_compresses_steps_and_ttft_not_streams() {
+        // Prompt of 6 at chunk 6: the whole prompt is ingested in one
+        // batched step (TTFT 1 instead of 6), total prefill accounting
+        // is unchanged, and the generated stream is bitwise identical.
+        let lm = small_model();
+        let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9];
+        let run = |chunk: usize| {
+            let mut sched = Scheduler::with_prefill_chunk(&lm, 2, 1, chunk);
+            sched.submit(GenRequest::greedy(0, prompt.clone(), 4));
+            let done = sched.run();
+            (done[0].clone(), sched.stats().clone())
+        };
+        let (c1, s1) = run(1);
+        let (c6, s6) = run(6);
+        assert_eq!(c1.tokens, c6.tokens, "chunking changed the stream");
+        assert_eq!(s1.prefill_tokens, 6);
+        assert_eq!(s6.prefill_tokens, 6,
+                   "prefill accounting must not depend on chunking");
+        assert_eq!(c1.ttft_steps, 6);
+        assert_eq!(c6.ttft_steps, 1);
+        assert_eq!(s6.ttft_steps, 1);
+        // 6 prefill steps + 3 more decode steps vs 1 + 3.
+        assert_eq!(c1.lane_steps, 9);
+        assert_eq!(c6.lane_steps, 4);
+        assert_eq!(s6.batch_steps, 4);
+        // A chunk larger than any prompt behaves like chunk=prompt_len.
+        let (c99, _) = run(99);
+        assert_eq!(c99.tokens, c1.tokens);
+        assert_eq!(c99.ttft_steps, 1);
+    }
+
+    #[test]
+    fn overcommitted_attn_scheduler_completes_without_panicking() {
+        // THE backpressure regression (polarity flip of the old
+        // overcommit panic): a page pool sized for 2 lanes serving 6
+        // requests on 4 scheduler lanes used to panic in bind_and_begin
+        // the moment lane 3 claimed its first page; now the refused
+        // lanes are requeued and every request completes — with the
+        // exact streams an uncontended cache produces.
+        use crate::serve::model::LatentAttnLm;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 33);
+        let reqs = || -> Vec<GenRequest> {
+            (0..6).map(|id| GenRequest::greedy(
+                id, vec![id as u32, 7, 11], 4)).collect()
+        };
+        // Uncontended reference: room for all 6 lanes at once.
+        let roomy = latent.build_float(6, 8);
+        let mut sched = Scheduler::new(&roomy, 6, 1);
+        for r in reqs() {
+            sched.submit(r);
+        }
+        let want: Vec<Vec<u32>> =
+            sched.run().into_iter().map(|c| c.tokens).collect();
+
+        // Overcommitted: 2 lanes' worth of pages, 4 lanes, 6 requests.
+        let tight = latent.build_float(2, 8);
+        let mut sched = Scheduler::new(&tight, 4, 1);
+        for r in reqs() {
+            sched.submit(r);
+        }
+        let done = sched.run();
+        assert_eq!(done.len(), 6, "all requests must complete");
+        let got: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+        assert_eq!(got, want, "backpressure must never change streams");
+        assert!(sched.stats().requeued > 0,
+                "this workload must actually exercise backpressure");
+        assert_eq!(tight.kv_pages_in_use(), 0,
+                   "drained overcommitted scheduler must leak no pages");
+        // Delivered-work accounting survives requeues: abandoned
+        // attempts are rolled back, so the totals equal exactly what
+        // was handed to callers (throughput numbers never inflate).
+        assert_eq!(sched.stats().generated_tokens, 6 * 4,
+                   "generated_tokens must count delivered tokens only");
+        assert_eq!(sched.stats().prefill_tokens, 6 * 3,
+                   "prefill_tokens must count delivered prompts only");
+    }
+
+    #[test]
+    fn nan_wide_k_never_draws_nan() {
+        // k spanning the whole vocab: the NaN survivor is selected into
+        // the set (fewer finite candidates than k) but weighs zero.
+        let mut row = vec![0.0f32; 8];
+        row[2] = 5.0;
+        row[5] = f32::NAN;
+        let s = Sampling::TopK { k: 8, temperature: 1.0, seed: 7 };
+        for trial in 0..64u64 {
+            let t = sample(&row, &s, &mut SplitMix64::new(trial));
+            assert_ne!(t, 5, "zero-weight NaN survivor was drawn");
+        }
+    }
+
+    #[test]
+    fn top_k_orders_nan_deterministically_last() {
+        // partial_cmp maps NaN to Equal, which is non-transitive under
+        // select_nth_unstable_by — the old comparator could pick
+        // NaN-dependent top-k sets. NaNs now lose to every finite
+        // logit and are never sampled while finite candidates fill k.
+        let mut row = vec![0.0f32; 8];
+        row[2] = 5.0;
+        row[5] = f32::NAN;
+        row[6] = 4.0;
+        row[7] = 3.0;
+        let s = Sampling::TopK { k: 3, temperature: 1.0, seed: 7 };
+        for trial in 0..64u64 {
+            let mut rng = SplitMix64::new(trial);
+            let t = sample(&row, &s, &mut rng);
+            assert_ne!(t, 5, "NaN logit must never be sampled while \
+                              finite candidates fill k");
+            assert!(t == 2 || t == 6 || t == 7,
+                    "token {t} outside the finite top-3");
+        }
+        // Identical rng state -> identical draw (sample is a function).
+        let a = sample(&row, &s, &mut SplitMix64::new(9));
+        let b = sample(&row, &s, &mut SplitMix64::new(9));
+        assert_eq!(a, b);
+        // An all-NaN row degrades to the lowest token id, not chaos.
+        let nan_row = vec![f32::NAN; 4];
+        assert_eq!(sample(&nan_row, &s, &mut SplitMix64::new(3)), 0);
+        // Greedy never prefers NaN over a finite logit either — not
+        // even a NaN at token 0, which would otherwise win every
+        // strict-greater comparison by making them all false.
+        assert_eq!(sample(&row, &Sampling::Greedy,
+                          &mut SplitMix64::new(1)), 2);
+        let mut nan_first = row.clone();
+        nan_first[0] = f32::NAN;
+        assert_eq!(sample(&nan_first, &Sampling::Greedy,
+                          &mut SplitMix64::new(1)), 2);
+        assert_eq!(sample(&nan_row, &Sampling::Greedy,
+                          &mut SplitMix64::new(1)), 0);
     }
 }
