@@ -87,4 +87,35 @@ if command -v python3 >/dev/null 2>&1; then
     echo "runs/BENCH_serve_chunked_smoke.json: valid json (python3 cross-check)"
 fi
 
+# Shared-prefix + copy-on-write smoke: requests sharing a 20-token
+# prefix (--shared-prefix-tokens) on the paged attention model with the
+# cache again undersized (--kv-context 12), so prefix pins, CoW
+# divergence, KV backpressure and the evict-pins-before-requeue path
+# all run together — pre-fix, pinned pages under pressure tripped the
+# scheduler's stall/sizing panics. The schema-4 JSON must re-parse and
+# actually record prefix reuse: a run that silently never hits the
+# prefix cache fails this step.
+echo "== shared-prefix + copy-on-write serve smoke =="
+cargo run --release --quiet -- serve-bench \
+    --family float,ternary --attn --heads 4 \
+    --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
+    --requests 6 --max-tokens 4 --batches 1,4 --threads 1 \
+    --prefill-chunk 4 --prompt-tokens 24 --shared-prefix-tokens 20 \
+    --kv-context 12 \
+    --json runs/BENCH_serve_prefix_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 - runs/BENCH_serve_prefix_smoke.json <<'PYEOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == 4, f"schema {doc['schema']} != 4"
+assert doc["shared_prefix_tokens"] == 20, doc["shared_prefix_tokens"]
+hits = sum(f["prefix_hits"] for f in doc["families"])
+reused = sum(f["prefix_tokens_reused"] for f in doc["families"])
+assert hits > 0, "no serve-bench run ever hit the prefix cache"
+assert reused >= hits, f"{hits} hits reused only {reused} tokens"
+print(f"runs/BENCH_serve_prefix_smoke.json: schema 4, "
+      f"{hits} prefix hits, {reused} tokens reused")
+PYEOF
+fi
+
 echo "ci: all green"

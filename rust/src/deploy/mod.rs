@@ -186,6 +186,37 @@ pub fn prefill_speedup_vs_one_token(params: f64, linear_bits: f64,
         / prefill_tokens_per_sec_bits(params, linear_bits, hw, 1.0)
 }
 
+/// Prefix-aware TTFT roofline: scheduler steps from admission to the
+/// first sampled token when `reused_tokens` of a `prompt_tokens`-long
+/// prompt are *mapped* from a warm prefix cache instead of prefilled —
+/// `ceil((prompt - reused) / chunk)`, never below 1 (the final prompt
+/// token is always fed through the model, because its logits seed
+/// sampling; the serve engine's `prefix_reuse` caps reuse at
+/// `prompt - 1` for exactly this reason). With `reused_tokens = 0`
+/// this is the cold-cache `ceil(prompt / chunk)` the chunked-prefill
+/// roofline prices, and a fully warm cache pins TTFT at 1 step —
+/// the "repeated prompts become nearly free" limit of vLLM-style
+/// prefix sharing. Steps, not seconds: multiply by the per-step time
+/// from [`prefill_tokens_per_sec_bits`] for wall-clock TTFT.
+pub fn prefix_ttft_steps(prompt_tokens: usize, reused_tokens: usize,
+                         chunk: usize) -> usize {
+    assert!(prompt_tokens >= 1, "prompt must be >= 1 token");
+    assert!(reused_tokens < prompt_tokens,
+            "reuse must leave >= 1 token to feed");
+    let chunk = chunk.max(1);
+    (prompt_tokens - reused_tokens).div_ceil(chunk).max(1)
+}
+
+/// TTFT speedup a warm prefix cache buys over a cold one at the same
+/// prefill chunk: `ceil(P/c) / ceil((P-reused)/c)`. Grows toward P/c
+/// as reuse approaches P-1 — prefix sharing is to TTFT what chunking
+/// is to prefill throughput, and the two compose multiplicatively.
+pub fn prefix_ttft_speedup(prompt_tokens: usize, reused_tokens: usize,
+                           chunk: usize) -> f64 {
+    prefix_ttft_steps(prompt_tokens, 0, chunk) as f64
+        / prefix_ttft_steps(prompt_tokens, reused_tokens, chunk) as f64
+}
+
 /// Decode speedup over FP16 at a given batch size for an arbitrary
 /// linear-weight bit rate.
 pub fn batched_speedup_vs_fp16_bits(params: f64, linear_bits: f64,
@@ -449,6 +480,37 @@ mod tests {
         // streamed means the bandwidth headroom runs out sooner.
         assert!(saturation_batch_bits(7e9, tern, hw)
                     < saturation_batch_bits(7e9, 16.0, hw));
+    }
+
+    #[test]
+    fn prefix_ttft_roofline_counts_only_unshared_tokens() {
+        // Cold cache: the chunked-prefill step count.
+        assert_eq!(prefix_ttft_steps(48, 0, 1), 48);
+        assert_eq!(prefix_ttft_steps(48, 0, 16), 3);
+        // Warm cache: only the divergent tail pays prefill steps.
+        assert_eq!(prefix_ttft_steps(48, 32, 16), 1);
+        assert_eq!(prefix_ttft_steps(48, 32, 1), 16);
+        assert_eq!(prefix_ttft_steps(48, 40, 16), 1);
+        // Max reuse (P-1 tokens) pins TTFT at one step — "repeated
+        // prompts become nearly free".
+        assert_eq!(prefix_ttft_steps(48, 47, 1), 1);
+        assert!((prefix_ttft_speedup(48, 47, 1) - 48.0).abs() < 1e-12);
+        // Speedup composes with chunking and is 1.0 with no reuse.
+        assert!((prefix_ttft_speedup(48, 0, 16) - 1.0).abs() < 1e-12);
+        assert!((prefix_ttft_speedup(48, 32, 16) - 3.0).abs() < 1e-12);
+        // Monotone nondecreasing in reuse.
+        let mut last = 0.0;
+        for reused in [0, 8, 16, 24, 32, 40, 47] {
+            let s = prefix_ttft_speedup(48, reused, 4);
+            assert!(s >= last, "reuse {reused}: {s} < {last}");
+            last = s;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "reuse must leave")]
+    fn prefix_ttft_rejects_full_reuse() {
+        prefix_ttft_steps(16, 16, 4);
     }
 
     #[test]

@@ -53,16 +53,22 @@ commands:
                 --threads 1,2,4 --vocab 512 --hidden 256 --glu 704
                 --layers 4 --mp 2 [--attn] [--heads 4] [--seed 0]
                 [--prefill-chunk 1] [--prompt-tokens 16]
-                [--kv-context N] [--json BENCH_serve.json]
+                [--shared-prefix-tokens 0] [--kv-context N]
+                [--json BENCH_serve.json]
                 --attn serves the paged KV-cache attention model (adds
                 kv_bytes_per_token to the table and JSON; see
                 docs/BENCH_SCHEMA.md). --prefill-chunk ingests up to N
                 prompt tokens per batched step (chunked prefill;
                 streams are bitwise chunk-invariant), --prompt-tokens
-                sets the exact prompt length of the bench traffic, and
-                --kv-context caps the attention cache's per-lane
-                context (sizes below prompt+max-tokens exercise
-                KV backpressure: refused lanes requeue, never panic)
+                sets the exact prompt length of the bench traffic,
+                --shared-prefix-tokens gives every request the same
+                first N prompt tokens (with --attn the prefix cache
+                maps them instead of re-running prefill: prefix_hits /
+                prefix_tokens_reused / cow_copies land in the table
+                and JSON), and --kv-context caps the attention cache's
+                per-lane context (sizes below prompt+max-tokens
+                exercise KV backpressure: refused lanes requeue —
+                pinned prefixes are evicted first — never panic)
   bench-report  paper-style tables from a suite run
                 --results runs/suite/suite_results.json --experiment all
   help          print this text (also: bare `spectra` or --help)
@@ -259,13 +265,17 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// discipline, real attention + paging) and adds each family's
 /// measured KV bytes/token; `--prefill-chunk` ingests prompts in
 /// chunks (bitwise stream-invariant); `--prompt-tokens` fixes the
-/// traffic's prompt length; `--kv-context` can undersize the cache to
-/// exercise the backpressure path (requeues reported per family).
-/// `--json <path>` additionally writes the machine-readable sweep
-/// (BENCH_serve.json, schema 3 — see docs/BENCH_SCHEMA.md) and
+/// traffic's prompt length; `--shared-prefix-tokens` makes the first N
+/// prompt tokens identical across requests, so the attention model's
+/// prefix cache + copy-on-write path carries real traffic (hits,
+/// reused tokens and CoW copies reported per family); `--kv-context`
+/// can undersize the cache to exercise the backpressure path (requeues
+/// reported per family; pinned prefixes are evicted before any lane
+/// requeues). `--json <path>` additionally writes the machine-readable
+/// sweep (BENCH_serve.json, schema 4 — see docs/BENCH_SCHEMA.md) and
 /// re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use spectra::serve::{bench_requests_sized, DecodeModel, FamilySpec,
+    use spectra::serve::{bench_requests_shared, DecodeModel, FamilySpec,
                          LatentAttnLm, LatentLm, LmDims, Scheduler};
 
     let dims = LmDims {
@@ -305,6 +315,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let fam_threads = threads_list.iter().copied().max().unwrap_or(1);
     let prefill_chunk = args.get_usize("prefill-chunk", 1).max(1);
     let prompt_tokens = args.get_usize("prompt-tokens", 16).max(1);
+    let shared_prefix = args.get_usize("shared-prefix-tokens", 0)
+        .min(prompt_tokens.saturating_sub(1));
     // Default cache sizing: full prompt + completion per lane, +1
     // headroom so the page pool never runs exactly dry. --kv-context
     // overrides it downward to exercise KV backpressure (refused lanes
@@ -313,7 +325,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                                      prompt_tokens + max_new + 1);
 
     println!("serve-bench: vocab {} hidden {} glu {} layers {} | \
-              {n_req} requests x {prompt_tokens} prompt + {max_new} new \
+              {n_req} requests x {prompt_tokens} prompt ({shared_prefix} \
+              shared) + {max_new} new \
               tokens | prefill chunk {prefill_chunk} | group {group}{}",
              dims.vocab, dims.hidden, dims.glu, dims.layers,
              if attn {
@@ -342,6 +355,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         steps: usize,
         ttft: f64,
         requeued: usize,
+        prefix_hits: usize,
+        prefix_reused: usize,
+        cow_copies: usize,
     }
     struct FamRow {
         label: String,
@@ -353,13 +369,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         steps: usize,
         kvb: f64,
         requeued: usize,
+        prefix_hits: usize,
+        prefix_reused: usize,
+        cow_copies: usize,
     }
     let run_once = |model: &dyn DecodeModel, batch: usize, threads: usize|
                    -> RunPoint {
         let mut sched = Scheduler::with_prefill_chunk(model, batch, threads,
                                                       prefill_chunk);
-        for r in bench_requests_sized(dims.vocab, n_req, max_new, seed,
-                                      prompt_tokens) {
+        for r in bench_requests_shared(dims.vocab, n_req, max_new, seed,
+                                       prompt_tokens, shared_prefix) {
             sched.submit(r);
         }
         let t0 = std::time::Instant::now();
@@ -372,6 +391,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             steps: st.batch_steps,
             ttft: st.ttft_steps as f64 / done.len().max(1) as f64,
             requeued: st.requeued,
+            prefix_hits: st.prefix_hits,
+            prefix_reused: st.prefix_tokens_reused,
+            cow_copies: st.cow_copies,
         }
     };
 
@@ -398,6 +420,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             steps: bx.steps,
             kvb: model.kv_bytes_per_token(),
             requeued: bx.requeued + b1.requeued,
+            prefix_hits: bx.prefix_hits + b1.prefix_hits,
+            prefix_reused: bx.prefix_reused + b1.prefix_reused,
+            cow_copies: bx.cow_copies + b1.cow_copies,
         });
     }
     println!("\ncross-family @ {fam_threads} threads (identical latent \
@@ -421,6 +446,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                   cache is smaller than the offered concurrency; requests \
                   queued instead of failing");
     }
+    let total_hits: usize = rows.iter().map(|r| r.prefix_hits).sum();
+    if total_hits > 0 {
+        let total_reused: usize = rows.iter().map(|r| r.prefix_reused).sum();
+        let total_cow: usize = rows.iter().map(|r| r.cow_copies).sum();
+        println!("prefix cache: {total_hits} hit(s), {total_reused} prompt \
+                  token(s) mapped instead of prefilled, {total_cow} \
+                  copy-on-write page cop{} at divergence",
+                 if total_cow == 1 { "y" } else { "ies" });
+    }
 
     // Machine-readable trajectory point: --json <path> writes the
     // sweep (and re-parses it, so a malformed file fails the run —
@@ -439,11 +473,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("batch_steps", Json::num(r.steps as f64)),
                 ("kv_bytes_per_token", Json::num(r.kvb)),
                 ("requeued", Json::num(r.requeued as f64)),
+                ("prefix_hits", Json::num(r.prefix_hits as f64)),
+                ("prefix_tokens_reused",
+                 Json::num(r.prefix_reused as f64)),
+                ("cow_copies", Json::num(r.cow_copies as f64)),
             ]))
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(3.0)),
+            ("schema", Json::num(4.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
@@ -456,6 +494,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("requests", Json::num(n_req as f64)),
             ("max_new_tokens", Json::num(max_new as f64)),
             ("prompt_tokens", Json::num(prompt_tokens as f64)),
+            ("shared_prefix_tokens", Json::num(shared_prefix as f64)),
             ("prefill_chunk", Json::num(prefill_chunk as f64)),
             ("kv_context", Json::num(if attn {
                 max_context as f64
@@ -575,6 +614,28 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                          at(32768.0) / fp16_at(32768.0));
             }
         }
+    }
+
+    // Prefix-aware TTFT roofline: a warm prefix cache maps the shared
+    // region instead of prefilling it, so TTFT only pays
+    // ceil((prompt - reused) / chunk) steps. Family-blind (TTFT is
+    // counted in scheduler steps), hence one line, not one per family.
+    // Reuse needs at least one full page to index; past that the
+    // token-verified tail extension reuses the whole shared region.
+    if shared_prefix > 0 {
+        use spectra::deploy::{prefix_ttft_speedup, prefix_ttft_steps};
+        use spectra::serve::KV_PAGE_TOKENS;
+        let reused = if shared_prefix >= KV_PAGE_TOKENS {
+            shared_prefix
+        } else {
+            0
+        };
+        println!("\nprefix-aware ttft roofline: {prompt_tokens}-token \
+                  prompt, {reused} reusable -> {} prefill step(s) at \
+                  chunk {prefill_chunk} vs {} cold ({:.1}x)",
+                 prefix_ttft_steps(prompt_tokens, reused, prefill_chunk),
+                 prefix_ttft_steps(prompt_tokens, 0, prefill_chunk),
+                 prefix_ttft_speedup(prompt_tokens, reused, prefill_chunk));
     }
     Ok(())
 }

@@ -339,6 +339,11 @@ pub struct DecodeScratch {
     /// by the model on entry, always sorted ascending; the scheduler
     /// reads it after the step to requeue refused lanes.
     pub rejected: Vec<usize>,
+    /// Copy-on-write KV page copies the model performed on the current
+    /// span step (shared-prefix divergence; attention models only).
+    /// Cleared by the model on entry; the scheduler accumulates it
+    /// into [`crate::serve::ServeStats::cow_copies`].
+    pub cow_copies: usize,
     /// Accepted lanes' first claimed cache position this span step
     /// (attention models only).
     pub starts: Vec<usize>,
@@ -376,6 +381,7 @@ impl DecodeScratch {
             scores: Vec::new(),
             seqs: Vec::new(),
             rejected: Vec::new(),
+            cow_copies: 0,
             starts: Vec::new(),
             spans: Vec::new(),
             span_tokens: Vec::new(),

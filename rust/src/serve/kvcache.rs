@@ -20,6 +20,15 @@
 //! length; position `p` lives in `pages[p / page_tokens]` at slot
 //! `p % page_tokens`.
 //!
+//! Pages are *reference counted* so committed prompt prefixes can be
+//! shared across sequences ([`KvCache::share_prefix`]): a shared page
+//! sits in several page tables at once and returns to the free list
+//! only when the last holder retires. Writes never land on a shared
+//! page — [`KvCache::begin_tokens`] performs copy-on-write at claim
+//! time (claim a fresh page, copy the committed slots, swap the
+//! page-table entry), so divergence is physically isolated before the
+//! first write and the write path stays infallible.
+//!
 //! Invariants the serve test suite leans on:
 //!
 //! - **Physical placement never affects values.** Reads go through the
@@ -28,13 +37,18 @@
 //!   which physical page a token lands on (which varies with lane
 //!   churn) is invisible to decode results. This is what keeps the
 //!   scheduler's batch-1 == batch-N determinism contract intact for
-//!   attention models (`tests/serve_determinism.rs`).
+//!   attention models (`tests/serve_determinism.rs`). Sharing keeps
+//!   this: a shared slot holds exactly the bytes prefill would have
+//!   recomputed, and copy-on-write copies them bit-for-bit.
 //! - **Lane independence.** A sequence only ever reads slots it
-//!   claimed itself; recycled pages are claimed-then-written before any
-//!   read, so no stale bytes from a retired lane can leak.
+//!   claimed itself or mapped via [`KvCache::share_prefix`]; recycled
+//!   pages are claimed-then-written before any read, so no stale bytes
+//!   from a retired lane can leak. Copy-on-write means a sequence can
+//!   never write a slot a sibling reads.
 //! - **Admission refusal is loud and harmless.** [`KvCache::begin_token`]
 //!   returns [`OutOfPages`] without mutating the sequence, so a refused
-//!   claim can be retried after a lane retires.
+//!   claim can be retried after a lane retires. The copy-on-write page
+//!   is part of the same all-or-nothing claim.
 
 /// Token slots per page. Small enough that a retiring short lane
 /// returns most of its memory, large enough that the page table stays
@@ -118,9 +132,14 @@ pub struct KvCache {
     /// Unused page ids; `pop` hands out the most recently freed page
     /// first (placement is invisible to results — see module docs).
     free_pages: Vec<usize>,
+    /// Holders per page: 0 = free, 1 = exclusively owned, >1 = shared
+    /// via [`KvCache::share_prefix`] (read-only until copy-on-write).
+    refcounts: Vec<u32>,
     seqs: Vec<Seq>,
     /// Retired sequence ids available for reuse.
     free_seq_ids: Vec<usize>,
+    /// Copy-on-write page copies performed since construction.
+    cow_copies: usize,
 }
 
 impl KvCache {
@@ -133,8 +152,11 @@ impl KvCache {
         // not load-bearing (placement is invisible), just easy to read
         // in a debugger.
         let free_pages = (0..cfg.n_pages).rev().collect();
-        KvCache { cfg, data, free_pages, seqs: Vec::new(),
-                  free_seq_ids: Vec::new() }
+        KvCache { cfg, data, free_pages,
+                  refcounts: vec![0; cfg.n_pages],
+                  seqs: Vec::new(),
+                  free_seq_ids: Vec::new(),
+                  cow_copies: 0 }
     }
 
     /// A cache sized for `lanes` concurrent sequences of up to
@@ -172,16 +194,55 @@ impl KvCache {
         self.seqs.len() - 1
     }
 
-    /// Retire a sequence: every page it held goes back to the free
-    /// list, its id becomes reusable. The lane-retire → page-recycle
-    /// path of the scheduler's state recycling lands here.
+    /// Retire a sequence: drop one reference from every page it held —
+    /// a page returns to the free list only when its last holder lets
+    /// go, so retiring a lane never invalidates a prefix a sibling
+    /// still reads. The lane-retire → page-recycle path of the
+    /// scheduler's state recycling lands here.
     pub fn free_seq(&mut self, seq: usize) {
         let s = &mut self.seqs[seq];
         assert!(s.live, "free_seq({seq}) on a sequence that is not live");
         s.live = false;
         s.len = 0;
-        self.free_pages.append(&mut s.pages);
+        for page in s.pages.drain(..) {
+            let rc = self.refcounts[page].checked_sub(1)
+                .expect("free_seq on a page with refcount 0");
+            self.refcounts[page] = rc;
+            if rc == 0 {
+                self.free_pages.push(page);
+            }
+        }
         self.free_seq_ids.push(seq);
+    }
+
+    /// Map the first `n_tokens` committed tokens of `src` into the page
+    /// table of `dst` (a freshly allocated, empty sequence), bumping
+    /// the refcount of every covered page — including a partially
+    /// filled last page when `n_tokens` is not page-aligned (the case
+    /// copy-on-write exists for). No slab data moves and no free pages
+    /// are consumed, so sharing is infallible. Returns the number of
+    /// pages now shared. `dst` reads positions `< n_tokens` exactly as
+    /// `src` does; its first claim past a shared partial page triggers
+    /// copy-on-write in [`KvCache::begin_tokens`].
+    pub fn share_prefix(&mut self, src: usize, dst: usize,
+                        n_tokens: usize) -> usize {
+        assert!(src != dst, "share_prefix needs two distinct sequences");
+        assert!(self.seqs[src].live, "share_prefix from retired seq {src}");
+        assert!(self.seqs[dst].live, "share_prefix into retired seq {dst}");
+        assert!(self.seqs[dst].len == 0 && self.seqs[dst].pages.is_empty(),
+                "share_prefix target seq {dst} must be fresh");
+        assert!(n_tokens >= 1 && n_tokens <= self.seqs[src].len,
+                "share_prefix of {n_tokens} tokens from a {}-token seq",
+                self.seqs[src].len);
+        let n_pages = n_tokens.div_ceil(self.cfg.page_tokens);
+        let shared: Vec<usize> =
+            self.seqs[src].pages[..n_pages].to_vec();
+        for &page in &shared {
+            self.refcounts[page] += 1;
+        }
+        self.seqs[dst].pages = shared;
+        self.seqs[dst].len = n_tokens;
+        n_pages
     }
 
     /// Claim the next token slot of `seq`, taking a page from the free
@@ -200,19 +261,57 @@ impl KvCache {
     /// on [`OutOfPages`] neither the sequence nor the free list has
     /// changed, so a refused lane can be deferred and retried after
     /// another lane retires.
+    ///
+    /// Copy-on-write happens here, not at write time: when the slot at
+    /// position `len` lands inside a *shared* partially filled page
+    /// (refcount > 1, mapped by [`KvCache::share_prefix`]), the claim
+    /// needs one extra page — a fresh private copy of the committed
+    /// slots — counted in the same all-or-nothing check, so the write
+    /// path stays infallible and [`OutOfPages`] remains the single
+    /// refusal channel.
     pub fn begin_tokens(&mut self, seq: usize, n: usize)
                         -> std::result::Result<usize, OutOfPages> {
         assert!(n >= 1, "begin_tokens needs n >= 1");
         let len = self.seqs[seq].len;
         debug_assert!(self.seqs[seq].live,
                       "begin_tokens on retired seq {seq}");
+        // Is position `len` inside a shared page? Only possible when
+        // the last mapped page is partially filled (len not
+        // page-aligned); full shared pages are never written again.
+        let fill = len % self.cfg.page_tokens;
+        let cow = fill != 0 && {
+            let last = self.seqs[seq].pages[len / self.cfg.page_tokens];
+            self.refcounts[last] > 1
+        };
         let need_pages = (len + n).div_ceil(self.cfg.page_tokens)
-            .saturating_sub(self.seqs[seq].pages.len());
+            .saturating_sub(self.seqs[seq].pages.len())
+            + usize::from(cow);
         if need_pages > self.free_pages.len() {
             return Err(OutOfPages { seq, len });
         }
-        for _ in 0..need_pages {
+        if cow {
+            let idx = len / self.cfg.page_tokens;
+            let old = self.seqs[seq].pages[idx];
             let page = self.free_pages.pop().expect("free count checked");
+            debug_assert_eq!(self.refcounts[page], 0);
+            // Copy the committed slots; the remainder of the fresh page
+            // is claimed-then-written before any read, as always.
+            let stride = self.cfg.page_stride();
+            let filled = fill * self.cfg.token_stride();
+            let (src, dst) = (old * stride, page * stride);
+            self.data.copy_within(src..src + filled, dst);
+            self.seqs[seq].pages[idx] = page;
+            self.refcounts[page] = 1;
+            self.refcounts[old] -= 1;
+            debug_assert!(self.refcounts[old] >= 1,
+                          "cow source page must still have a holder");
+            self.cow_copies += 1;
+        }
+        while (len + n).div_ceil(self.cfg.page_tokens)
+            > self.seqs[seq].pages.len() {
+            let page = self.free_pages.pop().expect("free count checked");
+            debug_assert_eq!(self.refcounts[page], 0);
+            self.refcounts[page] = 1;
             self.seqs[seq].pages.push(page);
         }
         self.seqs[seq].len = len + n;
@@ -254,6 +353,9 @@ impl KvCache {
         let hidden = self.cfg.hidden;
         assert_eq!(k.len(), hidden, "k width");
         assert_eq!(v.len(), hidden, "v width");
+        debug_assert_eq!(
+            self.refcounts[self.seqs[seq].pages[pos / self.cfg.page_tokens]],
+            1, "write into a shared page: copy-on-write was skipped");
         let off = self.offset(seq, layer, pos);
         self.data[off..off + hidden].copy_from_slice(k);
         self.data[off + hidden..off + 2 * hidden].copy_from_slice(v);
@@ -269,9 +371,22 @@ impl KvCache {
          &self.data[off + hidden..off + 2 * hidden])
     }
 
-    /// Pages currently held by live sequences.
+    /// *Physical* pages currently held by live sequences — a page
+    /// shared by N page tables counts once (that is the capacity
+    /// multiplier prefix sharing buys).
     pub fn pages_in_use(&self) -> usize {
         self.cfg.n_pages - self.free_pages.len()
+    }
+
+    /// Copy-on-write page copies performed since construction.
+    pub fn cow_copies(&self) -> usize {
+        self.cow_copies
+    }
+
+    /// Current holder count of the page containing position `pos` of
+    /// `seq` (test/diagnostic visibility into sharing state).
+    pub fn page_refcount(&self, seq: usize, pos: usize) -> u32 {
+        self.refcounts[self.seqs[seq].pages[pos / self.cfg.page_tokens]]
     }
 
     /// Pages available for claims.
@@ -499,5 +614,158 @@ mod tests {
         let s = c.alloc_seq();
         c.free_seq(s);
         c.free_seq(s);
+    }
+
+    /// Fill `n` positions of `seq` with per-position values scaled by
+    /// `tag` so reads identify exactly which write they see.
+    fn fill(c: &mut KvCache, seq: usize, from: usize, to: usize, tag: f32) {
+        for pos in from..to {
+            for layer in 0..2 {
+                let k = vec![tag * (pos as f32 + 1.0); 4];
+                c.write_kv_at(seq, layer, pos, &k, &k);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_pages_are_counted_once() {
+        // A 5-token prefix over 3-token pages = 2 pages; three sharers
+        // hold them physically once.
+        let mut c = tiny(6);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 5).unwrap();
+        fill(&mut c, src, 0, 5, 1.0);
+        assert_eq!(c.pages_in_use(), 2);
+        for _ in 0..2 {
+            let dst = c.alloc_seq();
+            assert_eq!(c.share_prefix(src, dst, 5), 2);
+            assert_eq!(c.seq_len(dst), 5);
+        }
+        assert_eq!(c.pages_in_use(), 2, "sharing must not consume pages");
+        assert_eq!(c.page_refcount(src, 0), 3);
+        assert_eq!(c.page_refcount(src, 4), 3);
+    }
+
+    #[test]
+    fn shared_reads_match_the_source_bitwise() {
+        let mut c = tiny(4);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 5).unwrap();
+        fill(&mut c, src, 0, 5, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 5);
+        for pos in 0..5 {
+            for layer in 0..2 {
+                assert_eq!(c.kv(src, layer, pos), c.kv(dst, layer, pos),
+                           "shared read pos {pos} layer {layer}");
+            }
+        }
+    }
+
+    #[test]
+    fn cow_isolates_divergence_from_the_sibling() {
+        // Share a partial last page (4 tokens over 3-token pages: page 1
+        // holds one committed slot), then grow the sharer: the claim
+        // must copy page 1, and the sharer's writes must never reach
+        // the source's reads.
+        let mut c = tiny(6);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 4).unwrap();
+        fill(&mut c, src, 0, 4, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 4);
+        assert_eq!(c.pages_in_use(), 2);
+        assert_eq!(c.cow_copies(), 0);
+        assert_eq!(c.begin_tokens(dst, 2).unwrap(), 4);
+        assert_eq!(c.cow_copies(), 1, "partial shared page must copy");
+        assert_eq!(c.pages_in_use(), 3, "one private copy of page 1");
+        assert_eq!(c.page_refcount(src, 3), 1, "src owns its tail again");
+        assert_eq!(c.page_refcount(dst, 3), 1, "dst owns the copy");
+        // The copy carried the committed slot bit-for-bit...
+        for layer in 0..2 {
+            assert_eq!(c.kv(dst, layer, 3), c.kv(src, layer, 3));
+        }
+        // ...and divergent writes stay private in both directions.
+        fill(&mut c, dst, 4, 6, -1.0);
+        fill(&mut c, src, 3, 4, 7.0);
+        assert_eq!(c.kv(dst, 0, 3).0[0], 4.0, "sibling write must not leak");
+        assert_eq!(c.kv(src, 0, 3).0[0], 7.0 * 4.0);
+    }
+
+    #[test]
+    fn aligned_share_grows_without_cow() {
+        // A page-aligned prefix (3 tokens = exactly page 0) leaves no
+        // partial page to diverge in: growth claims a fresh page, no
+        // copy.
+        let mut c = tiny(4);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 3).unwrap();
+        fill(&mut c, src, 0, 3, 1.0);
+        let dst = c.alloc_seq();
+        assert_eq!(c.share_prefix(src, dst, 3), 1);
+        c.begin_tokens(dst, 1).unwrap();
+        assert_eq!(c.cow_copies(), 0, "aligned divergence needs no copy");
+        assert_eq!(c.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn cow_page_is_part_of_the_all_or_nothing_claim() {
+        // 2 pages, both held: the sharer's 1-token claim needs one CoW
+        // page and must refuse without mutating anything. Once the
+        // source retires, the sharer owns the pages exclusively and the
+        // same claim succeeds with no copy at all.
+        let mut c = tiny(2);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 4).unwrap(); // both pages
+        fill(&mut c, src, 0, 4, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 4);
+        let err = c.begin_token(dst).unwrap_err();
+        assert_eq!(err, OutOfPages { seq: dst, len: 4 });
+        assert_eq!(c.seq_len(dst), 4, "refused cow claim must not grow seq");
+        assert_eq!(c.cow_copies(), 0, "refused claim must not copy");
+        assert_eq!(c.page_refcount(dst, 3), 2, "refusal leaves sharing intact");
+        c.free_seq(src);
+        assert_eq!(c.page_refcount(dst, 3), 1);
+        assert_eq!(c.begin_token(dst).unwrap(), 4);
+        assert_eq!(c.cow_copies(), 0,
+                   "exclusive ownership regained: no copy needed");
+        assert_eq!(c.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn refcounted_free_releases_pages_only_at_zero() {
+        let mut c = tiny(4);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 5).unwrap();
+        fill(&mut c, src, 0, 5, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 5);
+        c.free_seq(src);
+        assert_eq!(c.pages_in_use(), 2,
+                   "sharer still holds both pages after src retires");
+        for pos in 0..5 {
+            assert_eq!(c.kv(dst, 0, pos).0[0], pos as f32 + 1.0,
+                       "prefix must survive the source retiring");
+        }
+        c.free_seq(dst);
+        assert_eq!(c.pages_in_use(), 0, "last holder frees the pages");
+        // Churn after sharing: everything is recyclable.
+        let s = c.alloc_seq();
+        c.begin_tokens(s, 12).unwrap(); // the whole pool
+        assert_eq!(c.free_page_count(), 0);
+        c.free_seq(s);
+        assert_eq!(c.free_page_count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be fresh")]
+    fn share_into_a_grown_sequence_is_rejected() {
+        let mut c = tiny(4);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 3).unwrap();
+        let dst = c.alloc_seq();
+        c.begin_token(dst).unwrap();
+        c.share_prefix(src, dst, 3);
     }
 }

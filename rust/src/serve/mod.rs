@@ -118,6 +118,43 @@ pub fn bench_requests_sized(vocab: usize, n: usize, max_new_tokens: usize,
         .collect()
 }
 
+/// [`bench_requests_sized`] with a *shared* prompt prefix: every
+/// request's first `min(shared_prefix_tokens, prompt_tokens - 1)`
+/// tokens are one fixed seeded sequence (the "system prompt" of the
+/// workload), the rest are the request's own cycled prompt bytes — so
+/// requests diverge after the shared region and the prefix-cache +
+/// copy-on-write path is actually exercised. `shared_prefix_tokens =
+/// 0` degrades to [`bench_requests_sized`] exactly. At least one
+/// trailing token is always per-request, matching the serving
+/// invariant that a lane feeds >= 1 prompt token.
+pub fn bench_requests_shared(vocab: usize, n: usize, max_new_tokens: usize,
+                             seed: u64, prompt_tokens: usize,
+                             shared_prefix_tokens: usize)
+                             -> Vec<GenRequest> {
+    let prompt_tokens = prompt_tokens.max(1);
+    let shared = shared_prefix_tokens.min(prompt_tokens - 1);
+    if shared == 0 {
+        return bench_requests_sized(vocab, n, max_new_tokens, seed,
+                                    prompt_tokens);
+    }
+    let mut rng = crate::runtime::SplitMix64::new(seed ^ 0x5f3759df);
+    let prefix: Vec<u32> = (0..shared)
+        .map(|_| rng.next_u64() as u32 % vocab as u32)
+        .collect();
+    let world = crate::data::World::new(seed);
+    crate::eval::serve_prompts(&world, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(id, prompt)| {
+            let mut toks = prefix.clone();
+            toks.extend(prompt.bytes().cycle()
+                .take(prompt_tokens - shared)
+                .map(|b| b as u32 % vocab as u32));
+            GenRequest::greedy(id, toks, max_new_tokens)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +170,35 @@ mod tests {
             assert_eq!(x.max_new_tokens, 8);
             assert!(!x.prompt.is_empty() && x.prompt.len() <= 16);
             assert!(x.prompt.iter().all(|&t| t < 512));
+        }
+    }
+
+    #[test]
+    fn shared_bench_requests_share_exactly_the_prefix() {
+        let a = bench_requests_shared(512, 6, 4, 3, 48, 32);
+        let b = bench_requests_shared(512, 6, 4, 3, 48, 32);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.prompt, y.prompt, "shared traffic must be seeded");
+            assert_eq!(x.prompt.len(), 48);
+            assert_eq!(x.prompt[..32], a[0].prompt[..32],
+                       "first 32 tokens must be the shared prefix");
+        }
+        // Tails diverge for at least one pair (requests are distinct).
+        assert!(a.iter().any(|x| x.prompt[32..] != a[0].prompt[32..]),
+                "per-request tails must diverge");
+        // A shared prefix >= prompt length is capped to leave one
+        // per-request token; 0 degrades to the sized generator.
+        let capped = bench_requests_shared(512, 4, 4, 3, 16, 99);
+        for x in &capped {
+            assert_eq!(x.prompt.len(), 16);
+            assert_eq!(x.prompt[..15], capped[0].prompt[..15]);
+        }
+        let zero = bench_requests_shared(512, 4, 4, 3, 16, 0);
+        let sized = bench_requests_sized(512, 4, 4, 3, 16);
+        for (x, y) in zero.iter().zip(sized.iter()) {
+            assert_eq!(x.prompt, y.prompt,
+                       "shared=0 must match the sized generator");
         }
     }
 

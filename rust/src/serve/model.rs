@@ -44,6 +44,7 @@
 //! any batch size, and the pooled `_into` path is bitwise identical to
 //! the allocating path.
 
+use std::collections::HashMap;
 use std::sync::{Mutex, MutexGuard};
 
 use super::kvcache::{KvCache, OutOfPages, KV_PAGE_TOKENS};
@@ -148,6 +149,7 @@ pub trait DecodeModel {
         debug_assert_eq!(states.len(), spans.len());
         debug_assert_eq!(tokens.len(), spans.iter().sum::<usize>());
         scratch.rejected.clear();
+        scratch.cow_copies = 0;
         if spans.iter().all(|&s| s == 1) {
             // Decode steady state: a span step of all-1 spans *is* a
             // plain batched step — no staging, no extra copies.
@@ -200,6 +202,42 @@ pub trait DecodeModel {
     /// default is a no-op.
     fn retire_state(&self, state: &mut [f32]) {
         let _ = state;
+    }
+
+    /// Try to serve a prefix of `prompt` from a model-side prefix cache
+    /// by *mapping* already-committed KV pages into the lane bound to
+    /// `state` instead of re-running prefill over them. Returns the
+    /// number of prompt tokens now committed for this lane (0 = miss);
+    /// on a hit the scheduler starts prefill at that position, so the
+    /// returned count is always `< prompt.len()` (at least one token
+    /// must be fed to produce sampling logits). Called by the scheduler
+    /// at admission, before the lane's first step. Models without a KV
+    /// cache never hit; the default is a no-op miss.
+    fn prefix_reuse(&self, state: &mut [f32], prompt: &[u32]) -> usize {
+        let _ = (state, prompt);
+        0
+    }
+
+    /// Offer a lane's fully-prefilled prompt to the model's prefix
+    /// cache (the scheduler calls this once per lane, right after the
+    /// lane's first sampled token proves the whole prompt is
+    /// committed). The model may pin the covered KV pages so later
+    /// [`DecodeModel::prefix_reuse`] calls can map them. Default: no
+    /// cache, no-op.
+    fn prefix_register(&self, state: &mut [f32], prompt: &[u32]) {
+        let _ = (state, prompt);
+    }
+
+    /// Release every page the model's prefix cache has pinned. The
+    /// scheduler calls this when lanes are being rejected for KV
+    /// capacity (backpressure): pinned prefixes are a *cache*, and
+    /// under memory pressure cached pages must yield to live lanes —
+    /// otherwise an all-rejected drain would free nothing and the
+    /// stall guard would fire on a recoverable state. Returns whether
+    /// anything was actually released (the scheduler counts a release
+    /// as forward progress). Default: nothing pinned, `false`.
+    fn release_cached_pages(&self) -> bool {
+        false
     }
 
     /// Bytes this model appends to its KV cache per lane per decode
@@ -885,6 +923,88 @@ fn bind_and_begin(cache: &mut KvCache, st: &mut [f32]) -> usize {
     }
 }
 
+/// Order-independent FNV-1a over token ids — the prefix-index key.
+/// Deterministic across runs (unlike `RandomState`-seeded hashers), so
+/// hit/miss behavior is reproducible; every lookup is token-verified,
+/// so a collision can only cost a miss, never a wrong mapping.
+fn hash_tokens(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// One pinned prompt held alive in the KV cache: a dedicated sequence
+/// whose page table maps the donor lane's committed prefix pages
+/// ([`KvCache::share_prefix`]), plus the full prompt for verified
+/// lookups and tail extension past the last page boundary.
+struct PrefixPin {
+    seq: usize,
+    tokens: Vec<u32>,
+}
+
+/// The model-side prompt prefix cache: pins plus a page-boundary-keyed
+/// index. Keys are hashes of `prompt[..b]` for every page boundary `b`
+/// of a pinned prompt (first writer wins per key); lookups walk a new
+/// prompt's boundaries longest-first, verify tokens against the pin,
+/// then extend reuse token-by-token through the pin's unaligned tail —
+/// so two identical P-token prompts share P-1 tokens, not just the
+/// aligned floor. Pins are a cache, not a reservation: under KV
+/// backpressure [`DecodeModel::release_cached_pages`] drops them all
+/// and the index rebuilds from live traffic.
+#[derive(Default)]
+struct PrefixIndex {
+    pins: Vec<PrefixPin>,
+    /// hash of `tokens[..boundary]` -> (pin index, boundary).
+    by_hash: HashMap<u64, (usize, usize)>,
+}
+
+impl PrefixIndex {
+    /// Longest verified reuse for `prompt`: `(pin index, tokens)` with
+    /// `tokens < prompt.len()` (at least one prompt token is always
+    /// left to feed, so the lane's first step produces sampling
+    /// logits), or `None` on a miss.
+    fn lookup(&self, prompt: &[u32], page_tokens: usize)
+              -> Option<(usize, usize)> {
+        if prompt.len() < 2 {
+            return None;
+        }
+        let top = ((prompt.len() - 1) / page_tokens) * page_tokens;
+        let mut b = top;
+        while b >= page_tokens {
+            if let Some(&(pin_idx, stored_b)) =
+                self.by_hash.get(&hash_tokens(&prompt[..b]))
+            {
+                let pin = &self.pins[pin_idx];
+                if stored_b == b && pin.tokens.len() >= b
+                    && pin.tokens[..b] == prompt[..b]
+                {
+                    let cap = (prompt.len() - 1).min(pin.tokens.len());
+                    let mut r = b;
+                    while r < cap && pin.tokens[r] == prompt[r] {
+                        r += 1;
+                    }
+                    return Some((pin_idx, r));
+                }
+            }
+            b -= page_tokens;
+        }
+        None
+    }
+}
+
+/// Interior state behind [`AttnLm`]'s mutex: the paged cache plus the
+/// prefix index that pins pages inside it (one lock, so a reuse/
+/// register/evict decision and its page-table effect are atomic).
+struct KvState {
+    cache: KvCache,
+    prefix: PrefixIndex,
+}
+
 /// One attention + gated-MLP residual block over any linear storage
 /// format. The four attention projections are plain (hidden, hidden)
 /// [`LinearFormat`]s, so every family compresses them exactly like the
@@ -937,7 +1057,7 @@ pub struct AttnLm<L: LinearFormat> {
     pub blocks: Vec<AttnBlock<L>>,
     /// (vocab, hidden) output head.
     pub head: L,
-    cache: Mutex<KvCache>,
+    kv: Mutex<KvState>,
 }
 
 impl<L: LinearFormat> AttnLm<L> {
@@ -953,24 +1073,38 @@ impl<L: LinearFormat> AttnLm<L> {
         assert_eq!(blocks.len(), dims.layers, "block count != layers");
         let cache = KvCache::for_lanes(dims.layers, dims.hidden,
                                        KV_PAGE_TOKENS, lanes, max_context);
-        AttnLm { dims, heads, embed, blocks, head, cache: Mutex::new(cache) }
+        AttnLm { dims, heads, embed, blocks, head,
+                 kv: Mutex::new(KvState { cache,
+                                          prefix: PrefixIndex::default() }) }
     }
 
-    fn lock_cache(&self) -> MutexGuard<'_, KvCache> {
+    fn lock_cache(&self) -> MutexGuard<'_, KvState> {
         // Poisoning ignored on purpose (a panicking step is re-raised
         // by the caller; the cache data itself stays well-formed).
-        self.cache.lock().unwrap_or_else(|e| e.into_inner())
+        self.kv.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Pages currently held by live lanes — serving telemetry; drops
-    /// back to 0 once every submitted request has retired.
+    /// *Physical* pages currently held by live lanes and prefix pins
+    /// (a shared page counts once) — serving telemetry; drops back to
+    /// 0 once every request has retired and every pin is released.
     pub fn kv_pages_in_use(&self) -> usize {
-        self.lock_cache().pages_in_use()
+        self.lock_cache().cache.pages_in_use()
     }
 
-    /// Live (bound, not yet retired) cache sequences.
+    /// Live (bound, not yet retired) cache sequences, prefix-pin
+    /// sequences included.
     pub fn kv_live_seqs(&self) -> usize {
-        self.lock_cache().live_seqs()
+        self.lock_cache().cache.live_seqs()
+    }
+
+    /// Prompts currently pinned by the prefix cache.
+    pub fn kv_prefix_pins(&self) -> usize {
+        self.lock_cache().prefix.pins.len()
+    }
+
+    /// Copy-on-write page copies performed since construction.
+    pub fn kv_cow_copies(&self) -> usize {
+        self.lock_cache().cache.cow_copies()
     }
 
     /// Every linear in the model (per block: q, k, v, o, gate, up,
@@ -994,9 +1128,10 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
     fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
                   threads: usize) -> HostTensor {
         assert_eq!(states.len(), tokens.len());
-        let mut cache = self.lock_cache();
+        let mut guard = self.lock_cache();
+        let cache = &mut guard.cache;
         let seqs: Vec<usize> = states.iter_mut()
-            .map(|st| bind_and_begin(&mut cache, st)).collect();
+            .map(|st| bind_and_begin(cache, st)).collect();
         let mut x = gather_embed(&self.embed, tokens);
         let mut scores = Vec::new();
         for (l, blk) in self.blocks.iter().enumerate() {
@@ -1010,7 +1145,7 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             let mut attn =
                 HostTensor::zeros(vec![tokens.len(), self.dims.hidden]);
             for (bi, &seq) in seqs.iter().enumerate() {
-                attend_one(&cache, seq, l, self.heads, q.row(bi),
+                attend_one(cache, seq, l, self.heads, q.row(bi),
                            attn.row_mut(bi), &mut scores,
                            cache.seq_len(seq));
             }
@@ -1077,16 +1212,19 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
         debug_assert_eq!(states.len(), spans.len());
         debug_assert_eq!(tokens.len(), spans.iter().sum::<usize>());
         scratch.rejected.clear();
+        scratch.cow_copies = 0;
         scratch.seqs.clear();
         scratch.starts.clear();
         scratch.spans.clear();
         scratch.span_tokens.clear();
-        let mut cache = self.lock_cache();
+        let mut guard = self.lock_cache();
+        let cache = &mut guard.cache;
+        let cow_before = cache.cow_copies();
         let mut off = 0usize;
         for (i, st) in states.iter_mut().enumerate() {
             let span = spans[i];
             debug_assert!(span >= 1, "lane {i}: span must be >= 1");
-            match try_bind_and_begin(&mut cache, st, span) {
+            match try_bind_and_begin(cache, st, span) {
                 Ok((seq, start)) => {
                     scratch.seqs.push(seq);
                     scratch.starts.push(start);
@@ -1098,6 +1236,9 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             }
             off += span;
         }
+        // Claims are where copy-on-write happens (shared-prefix lanes
+        // diverging); report this step's copies to the scheduler.
+        scratch.cow_copies = cache.cow_copies() - cow_before;
         let rows = scratch.span_tokens.len();
         if rows == 0 {
             // Every lane refused this step: no forward runs, the
@@ -1129,7 +1270,7 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             let mut row = 0usize;
             for (ai, &seq) in scratch.seqs.iter().enumerate() {
                 for j in 0..scratch.spans[ai] {
-                    attend_one(&cache, seq, l, self.heads,
+                    attend_one(cache, seq, l, self.heads,
                                scratch.q.row(row),
                                scratch.attn.row_mut(row),
                                &mut scratch.scores,
@@ -1186,13 +1327,104 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
     fn retire_state(&self, state: &mut [f32]) {
         if state[0] != 0.0 {
             let seq = state[0] as usize - 1;
-            self.lock_cache().free_seq(seq);
+            self.lock_cache().cache.free_seq(seq);
             state[0] = 0.0;
         }
     }
 
+    /// Map the longest pinned, token-verified prefix of `prompt` into
+    /// a fresh sequence bound to `state`. Consumes no free pages
+    /// ([`KvCache::share_prefix`] only bumps refcounts), so a hit can
+    /// never be refused — backpressure shows up later, on the lane's
+    /// first *claim* past the shared prefix.
+    fn prefix_reuse(&self, state: &mut [f32], prompt: &[u32]) -> usize {
+        if state[0] != 0.0 {
+            return 0; // already bound: only fresh lanes can map a prefix
+        }
+        let g = &mut *self.lock_cache();
+        let Some((pin_idx, reuse)) =
+            g.prefix.lookup(prompt, g.cache.config().page_tokens)
+        else {
+            return 0;
+        };
+        debug_assert!(reuse >= 1 && reuse < prompt.len());
+        let seq = g.cache.alloc_seq();
+        g.cache.share_prefix(g.prefix.pins[pin_idx].seq, seq, reuse);
+        state[0] = (seq + 1) as f32;
+        reuse
+    }
+
+    /// Pin `prompt`'s committed pages: a dedicated sequence maps them
+    /// via [`KvCache::share_prefix`] (the donor lane's later growth
+    /// copy-on-writes away from the shared tail page, so the pin stays
+    /// frozen at prompt contents), and every page boundary of the
+    /// prompt is indexed (first pin wins per key). Prompts shorter
+    /// than a full page pin nothing — there is no aligned prefix to
+    /// share — and a pool with no free page left pins nothing either
+    /// (the donor's next claim would bounce off its own pin).
+    fn prefix_register(&self, state: &mut [f32], prompt: &[u32]) {
+        if state[0] == 0.0 {
+            return;
+        }
+        let src = state[0] as usize - 1;
+        let g = &mut *self.lock_cache();
+        let pt = g.cache.config().page_tokens;
+        if prompt.len() <= pt {
+            return;
+        }
+        let top = ((prompt.len() - 1) / pt) * pt;
+        let mut boundaries: Vec<(usize, u64)> = Vec::new();
+        let mut b = pt;
+        while b <= top {
+            let h = hash_tokens(&prompt[..b]);
+            if !g.prefix.by_hash.contains_key(&h) {
+                boundaries.push((b, h));
+            }
+            b += pt;
+        }
+        if boundaries.is_empty() {
+            return; // every boundary already pinned by an earlier prompt
+        }
+        if g.cache.free_page_count() == 0 {
+            // A full pool is no place to grow a cache. Pinning now
+            // would trap the donor: its very next claim needs one free
+            // page (tail copy-on-write, or plain page growth) and gets
+            // refused, the eviction hook drops the just-made pin, the
+            // requeued donor re-registers on restart — a livelock the
+            // stall guard cannot see, because eviction counts as
+            // progress. Skipping the pin breaks the cycle: the donor
+            // keeps exclusive pages and its in-page claims stay free.
+            return;
+        }
+        debug_assert!(g.cache.seq_len(src) >= prompt.len(),
+                      "prefix_register before the prompt is committed");
+        let seq = g.cache.alloc_seq();
+        g.cache.share_prefix(src, seq, prompt.len());
+        let pin_idx = g.prefix.pins.len();
+        g.prefix.pins.push(PrefixPin { seq, tokens: prompt.to_vec() });
+        for (b, h) in boundaries {
+            g.prefix.by_hash.insert(h, (pin_idx, b));
+        }
+    }
+
+    /// Drop every prefix pin, returning their pages' refcounts to the
+    /// live lanes that still map them (pages with no other holder go
+    /// back to the free list). The scheduler calls this under KV
+    /// backpressure — cached prefixes always yield to live traffic.
+    fn release_cached_pages(&self) -> bool {
+        let g = &mut *self.lock_cache();
+        if g.prefix.pins.is_empty() {
+            return false;
+        }
+        for pin in g.prefix.pins.drain(..) {
+            g.cache.free_seq(pin.seq);
+        }
+        g.prefix.by_hash.clear();
+        true
+    }
+
     fn kv_bytes_per_token(&self) -> f64 {
-        self.lock_cache().config().bytes_per_token() as f64
+        self.lock_cache().cache.config().bytes_per_token() as f64
     }
 
     fn family_label(&self) -> String {

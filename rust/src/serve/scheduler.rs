@@ -41,7 +41,13 @@
 //! overcommitted
 //! server therefore degrades to queueing; the only loud failure left
 //! is a *single* request whose context alone exceeds the whole cache
-//! (a sizing error no amount of queueing can fix).
+//! (a sizing error no amount of queueing can fix). Models with a
+//! prefix cache add one more relief valve: on any step that rejects a
+//! lane, the scheduler asks the model to drop its pinned prefix pages
+//! ([`DecodeModel::release_cached_pages`]) *before* requeueing —
+//! cached pages always yield to live traffic, and an eviction counts
+//! as forward progress for the stall/sizing guards (pages held by
+//! pins, unlike pages held by wedged lanes, are always recoverable).
 //!
 //! Lane lifecycle stays model-blind: the scheduler hands every
 //! admitted lane a zeroed state buffer and, when the lane retires,
@@ -130,12 +136,29 @@ pub struct ServeStats {
     /// requeued. The restarted request re-decodes deterministically,
     /// so requeues never change completion streams — only latency.
     pub requeued: usize,
+    /// Admissions whose prompt prefix was served from the model's
+    /// prefix cache ([`DecodeModel::prefix_reuse`]). Delivered-work
+    /// counter: a hit lane later bounced by backpressure is rolled
+    /// back out (the restart re-earns its own hit or miss).
+    pub prefix_hits: usize,
+    /// Prompt tokens served by *mapping* cached KV pages instead of
+    /// running prefill over them. Disjoint from `prefill_tokens` (which
+    /// keeps counting only tokens actually fed through kernels), so
+    /// `prefill_tokens + prefix_tokens_reused` sums completed prompts'
+    /// lengths. Rolled back on requeue like the other delivered-work
+    /// counters.
+    pub prefix_tokens_reused: usize,
+    /// Copy-on-write KV page copies (shared-prefix lanes diverging).
+    /// Like `lane_steps`, this measures work actually executed and is
+    /// never rolled back.
+    pub cow_copies: usize,
 }
 
 struct Lane {
     req: GenRequest,
     state: Vec<f32>,
-    /// Prompt tokens consumed so far.
+    /// Prompt tokens consumed so far (starts at `prefix_reused` when
+    /// admission mapped a cached prefix).
     pos: usize,
     generated: Vec<u32>,
     rng: SplitMix64,
@@ -143,6 +166,10 @@ struct Lane {
     /// Steps from admission to the first generated token (0 until it
     /// exists).
     ttft_steps: usize,
+    /// Prompt tokens served from the prefix cache at admission (0 on a
+    /// miss) — the slice of `pos` that was mapped, not fed, so requeue
+    /// rollback can split the two.
+    prefix_reused: usize,
 }
 
 impl Lane {
@@ -162,6 +189,7 @@ impl Lane {
             rng: SplitMix64::new(seed),
             steps: 0,
             ttft_steps: 0,
+            prefix_reused: 0,
             req,
         }
     }
@@ -313,7 +341,24 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                     }
                     None => vec![0.0; hidden],
                 };
-                *slot = Some(Lane::new(req, state));
+                let mut lane = Lane::new(req, state);
+                // Prefix cache: a hit maps the cached pages into the
+                // fresh lane (consuming no free pages, so it cannot be
+                // refused) and prefill starts at the first unshared
+                // token. The reused slice is accounted separately from
+                // prefill_tokens — those keep counting only tokens fed
+                // through kernels.
+                let reused = self.model.prefix_reuse(&mut lane.state,
+                                                     &lane.req.prompt);
+                if reused > 0 {
+                    debug_assert!(reused < lane.req.prompt.len(),
+                                  "prefix_reuse must leave >= 1 token");
+                    lane.pos = reused;
+                    lane.prefix_reused = reused;
+                    self.stats.prefix_hits += 1;
+                    self.stats.prefix_tokens_reused += reused;
+                }
+                *slot = Some(lane);
                 admitted += 1;
             }
         }
@@ -380,15 +425,25 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
 
         let live = self.span_buf.len();
         let ran = live - self.scratch.rejected.len();
-        if ran == 0 && live == 1 {
-            // Requeueing cannot help a lane refused while no other lane
-            // holds pages: its context alone exceeds the whole pool.
-            panic!("serve: kv cache smaller than a single request's \
-                    context (claim refused with every other lane idle) — \
-                    size the cache for at least prompt + max_new_tokens \
-                    tokens per lane");
-        }
-        if ran == 0 {
+        // Under backpressure, evict the model's prefix-cache pins
+        // *before* any lane is requeued: pinned pages are a cache, and
+        // an all-rejected drain only frees the whole pool if nothing
+        // stays pinned behind it. Without this, the stall/sizing
+        // guards below would fire spuriously on a recoverable state
+        // (pages held by evictable pins, not by any lane). An eviction
+        // is forward progress — freed pages are what the requeued
+        // lanes restart into.
+        let evicted = ran < live && self.model.release_cached_pages();
+        if ran == 0 && !evicted {
+            if live == 1 {
+                // Requeueing cannot help a lane refused while no other
+                // lane holds pages and nothing is pinned: its context
+                // alone exceeds the whole pool.
+                panic!("serve: kv cache smaller than a single request's \
+                        context (claim refused with every other lane \
+                        idle) — size the cache for at least prompt + \
+                        max_new_tokens tokens per lane");
+            }
             self.stalled_steps += 1;
             // After an all-rejected step every lane releases its pages,
             // so the next admission claims from a free pool — repeated
@@ -405,16 +460,26 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         }
         self.stats.batch_steps += 1;
         self.stats.lane_steps += ran;
+        self.stats.cow_copies += self.scratch.cow_copies;
         self.stats.peak_occupancy = self.stats.peak_occupancy.max(ran);
 
         let logits = &self.scratch.logits;
         let mut requeue: Vec<GenRequest> = Vec::new();
         let mut ai = 0usize; // logits row: ordinal among lanes that ran
         let mut si = 0usize; // live-lane ordinal (indexes span_buf)
+        // `rejected` is sorted ascending (the model contract) and `si`
+        // walks live lanes in order, so one cursor replaces a per-lane
+        // `contains` scan — O(live), not O(live x rejected).
+        debug_assert!(self.scratch.rejected.windows(2).all(|w| w[0] < w[1]),
+                      "model rejected list must be sorted ascending");
+        let mut rj = 0usize; // cursor into scratch.rejected
         for slot in &mut self.lanes {
             let Some(lane) = slot.as_mut() else { continue };
             let span = self.span_buf[si];
-            let rejected = self.scratch.rejected.contains(&si);
+            let rejected = self.scratch.rejected.get(rj) == Some(&si);
+            if rejected {
+                rj += 1;
+            }
             si += 1;
             if rejected {
                 // KV backpressure: release this lane's model-side
@@ -430,11 +495,32 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 // work counters: the restart will re-earn them, and
                 // token/prefill/TTFT totals must never double-count
                 // discarded work (throughput reporting divides these by
-                // wall clock). batch_steps/lane_steps stay — they
-                // measure kernel work actually executed.
-                self.stats.generated_tokens -= lane.generated.len();
-                self.stats.prefill_tokens -= lane.pos;
-                self.stats.ttft_steps -= lane.ttft_steps;
+                // wall clock). batch_steps/lane_steps/cow_copies stay —
+                // they measure kernel work actually executed. Checked
+                // subtraction: accounting drift here would otherwise
+                // wrap silently and poison every later benchmark
+                // number.
+                self.stats.generated_tokens = self.stats.generated_tokens
+                    .checked_sub(lane.generated.len())
+                    .expect("requeue rollback underflowed generated_tokens");
+                let fed = lane.pos.checked_sub(lane.prefix_reused)
+                    .expect("lane.pos fell below its reused prefix");
+                self.stats.prefill_tokens = self.stats.prefill_tokens
+                    .checked_sub(fed)
+                    .expect("requeue rollback underflowed prefill_tokens");
+                self.stats.ttft_steps = self.stats.ttft_steps
+                    .checked_sub(lane.ttft_steps)
+                    .expect("requeue rollback underflowed ttft_steps");
+                if lane.prefix_reused > 0 {
+                    self.stats.prefix_tokens_reused =
+                        self.stats.prefix_tokens_reused
+                        .checked_sub(lane.prefix_reused)
+                        .expect("requeue rollback underflowed \
+                                 prefix_tokens_reused");
+                    self.stats.prefix_hits = self.stats.prefix_hits
+                        .checked_sub(1)
+                        .expect("requeue rollback underflowed prefix_hits");
+                }
                 requeue.push(lane.req);
                 continue;
             }
@@ -453,6 +539,12 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 if lane.generated.len() == 1 {
                     lane.ttft_steps = lane.steps;
                     self.stats.ttft_steps += lane.steps;
+                    // First sampled token proves the whole prompt is
+                    // committed in the model's cache: offer it to the
+                    // prefix cache so later identical/shared prompts
+                    // map these pages instead of re-running prefill.
+                    self.model.prefix_register(&mut lane.state,
+                                               &lane.req.prompt);
                 }
                 if lane.generated.len() >= lane.req.max_new_tokens {
                     let mut lane = slot.take().unwrap();
@@ -726,6 +818,9 @@ mod tests {
         assert_eq!(sched.stats().batch_steps, 0);
         assert_eq!(sched.stats().ttft_steps, 0);
         assert_eq!(sched.stats().requeued, 0);
+        assert_eq!(sched.stats().prefix_hits, 0);
+        assert_eq!(sched.stats().prefix_tokens_reused, 0);
+        assert_eq!(sched.stats().cow_copies, 0);
     }
 
     #[test]
@@ -805,6 +900,51 @@ mod tests {
                    "generated_tokens must count delivered tokens only");
         assert_eq!(sched.stats().prefill_tokens, 6 * 3,
                    "prefill_tokens must count delivered prompts only");
+    }
+
+    #[test]
+    fn stochastic_sampling_survives_requeue_bitwise() {
+        // "Requeues cost latency, never correctness" must hold for
+        // *sampled* lanes too: a top-k lane bounced by backpressure had
+        // already drawn from its rng, and the restart must reproduce
+        // the identical stream — which only works because `Lane::new`
+        // re-seeds the rng from the request instead of resuming the
+        // half-consumed stream. Same overcommit geometry as the greedy
+        // test above, so backpressure is actually exercised.
+        use crate::serve::model::LatentAttnLm;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 57);
+        let reqs = || -> Vec<GenRequest> {
+            (0..6).map(|id| GenRequest::top_k(
+                id, vec![id as u32, 7, 11], 4, 5, 0.9,
+                1000 + id as u64)).collect()
+        };
+        // Uncontended reference: room for all 6 lanes at once.
+        let roomy = latent.build_float(6, 8);
+        let mut sched = Scheduler::new(&roomy, 6, 1);
+        for r in reqs() {
+            sched.submit(r);
+        }
+        let want: Vec<Vec<u32>> =
+            sched.run().into_iter().map(|c| c.tokens).collect();
+
+        // Overcommitted: 2 lanes' worth of pages, 4 lanes, 6 requests.
+        let tight = latent.build_float(2, 8);
+        let mut sched = Scheduler::new(&tight, 4, 1);
+        for r in reqs() {
+            sched.submit(r);
+        }
+        let done = sched.run();
+        assert_eq!(done.len(), 6, "all requests must complete");
+        let got: Vec<Vec<u32>> =
+            done.into_iter().map(|c| c.tokens).collect();
+        assert_eq!(got, want,
+                   "a requeued top-k lane must restart its rng from the \
+                    request seed and reproduce the uncontended stream");
+        assert!(sched.stats().requeued > 0,
+                "this workload must actually exercise backpressure");
+        assert_eq!(tight.kv_pages_in_use(), 0,
+                   "drained overcommitted scheduler must leak no pages");
     }
 
     #[test]

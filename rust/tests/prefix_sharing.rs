@@ -1,0 +1,357 @@
+//! Prefix-shared copy-on-write KV pages, end to end: N lanes serving
+//! prompts with a common prefix hold the shared pages *once*
+//! physically, diverge through claim-time copy-on-write without ever
+//! touching a sibling's reads, and release everything through the
+//! refcounted free path — while the scheduler's backpressure machinery
+//! (requeue, eviction-before-requeue, stall/sizing guards) stays
+//! correct with pinned cache pages in the pool.
+//!
+//! The correctness heart: a prefix pin is a *cache*, not a
+//! reservation. Under KV backpressure the scheduler evicts pins before
+//! any lane is requeued, so page pressure caused by cached prefixes is
+//! recoverable and must never trip the "cache smaller than a single
+//! request" sizing panic or the consecutive-stall guard. And reuse is
+//! an operational optimization only: a prefix-hit lane's token stream
+//! is bitwise identical to a cold full-prefill decode, in every
+//! storage family (`tests/serve_determinism.rs` is the no-sharing
+//! baseline this file extends).
+
+use spectra::serve::{DecodeModel, FamilySpec, GenRequest, KvCache,
+                     LatentAttnLm, LmDims, QuantMethod, Scheduler,
+                     KV_PAGE_TOKENS};
+
+fn dims() -> LmDims {
+    LmDims { vocab: 128, hidden: 64, glu: 96, layers: 3 }
+}
+
+/// `n` requests with `total`-token prompts whose first `shared` tokens
+/// are one fixed sequence and whose tail is per-request —
+/// `bench_requests_shared` in miniature, with hand-rolled tokens so
+/// the divergence point is explicit. Request 0 is the donor whose
+/// prefill seeds the prefix cache.
+fn shared_requests(n: usize, shared: usize, total: usize,
+                   max_new: usize) -> Vec<GenRequest> {
+    (0..n).map(|id| {
+        let prompt: Vec<u32> = (0..total).map(|j| {
+            if j < shared {
+                ((3 * j + 11) % 128) as u32
+            } else {
+                ((7 * id + 5 * j + 1) % 128) as u32
+            }
+        }).collect();
+        GenRequest::greedy(id, prompt, max_new)
+    }).collect()
+}
+
+/// Acceptance (a) + (d): lanes sharing a 20-of-24-token prefix map the
+/// pinned pages instead of claiming fresh ones — `ceil(P /
+/// page_tokens)` physical pages held once, not once per lane — CoW
+/// fires exactly once per diverging lane, and the refcounted free path
+/// returns every page when lanes retire and the pin is released.
+#[test]
+fn shared_prefix_holds_physical_pages_once_across_lanes() {
+    assert_eq!(KV_PAGE_TOKENS, 16, "test geometry assumes 16-token pages");
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 60);
+    let model = latent.build_float(8, 64); // 32-page pool: no pressure
+
+    // Donor run: full prefill, then the first sampled token registers
+    // the 24-token prompt as a pin holding ceil(24/16) = 2 pages. The
+    // donor's own next claim copy-on-writes away from the pin's
+    // partially filled tail page (cow == 1), so the pin stays frozen.
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(shared_requests(1, 20, 24, 6).pop().unwrap());
+    let done = sched.run();
+    assert_eq!(done.len(), 1);
+    assert_eq!(sched.stats().prefix_hits, 0, "donor must be a miss");
+    assert_eq!(model.kv_prefix_pins(), 1);
+    assert_eq!(model.kv_pages_in_use(), 24usize.div_ceil(KV_PAGE_TOKENS),
+               "after the donor retires only the pin holds pages");
+    assert_eq!(model.kv_cow_copies(), 1,
+               "the donor CoWs off the pin's tail page exactly once");
+    assert_eq!(model.kv_live_seqs(), 1, "the pin is the only live seq");
+
+    // Four followers, admitted together: each maps 20 shared tokens
+    // (boundary 16 verified, tail-extended to the divergence point at
+    // 20) and CoWs one private tail page on its first claim.
+    let mut sched = Scheduler::new(&model, 4, 2);
+    for r in shared_requests(5, 20, 24, 6).into_iter().skip(1) {
+        sched.submit(r);
+    }
+    let mut done = sched.step();
+    // Physically: 2 pin pages (page 0 shared five ways, counted once)
+    // + 4 private CoW tails = 6. Unshared serving would need 2 + 4*2
+    // = 10 pages for the same lanes.
+    assert_eq!(model.kv_pages_in_use(), 6,
+               "shared prefix pages must be counted once across lanes");
+    while sched.pending() > 0 {
+        sched.step_into(&mut done);
+    }
+    assert_eq!(done.len(), 4);
+    assert_eq!(sched.stats().prefix_hits, 4);
+    assert_eq!(sched.stats().prefix_tokens_reused, 4 * 20);
+    assert_eq!(sched.stats().requeued, 0);
+    assert_eq!(model.kv_cow_copies(), 5, "one CoW per diverging lane");
+    assert_eq!(model.kv_pages_in_use(), 2,
+               "follower retirement must free every non-pin page");
+
+    // Refcounted release: dropping the pin returns the last holders'
+    // pages to the free list; a second release has nothing to drop.
+    assert!(model.release_cached_pages());
+    assert_eq!(model.kv_prefix_pins(), 0);
+    assert_eq!(model.kv_pages_in_use(), 0, "no page may leak");
+    assert_eq!(model.kv_live_seqs(), 0);
+    assert!(!model.release_cached_pages());
+}
+
+/// Acceptance (b): a prefix-hit lane's post-divergence stream is
+/// bitwise identical to an unshared decode — for FloatLM, QuantLM-RTN,
+/// QuantLM-GPTQ and TriLM storage. The unshared reference is a manual
+/// one-lane `step_batch` loop on a second model instance (the legacy
+/// path never consults the prefix cache).
+#[test]
+fn prefix_hit_streams_match_unshared_decode_in_every_family() {
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 61);
+    let specs = [
+        FamilySpec::Float,
+        FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+        FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Gptq },
+        FamilySpec::Ternary,
+    ];
+    let requests = shared_requests(4, 20, 24, 6);
+    for spec in specs {
+        let shared_model = latent.build(spec, 4, 32).unwrap();
+        let manual_model = latent.build(spec, 4, 32).unwrap();
+        // Unshared reference: full prefill for every request.
+        let mut reference: Vec<Vec<u32>> = Vec::new();
+        for req in &requests {
+            let mut state = vec![0.0f32; dims().hidden];
+            let mut toks = Vec::new();
+            let mut next = req.prompt[0];
+            let mut pos = 1usize;
+            while toks.len() < req.max_new_tokens {
+                let mut refs = [state.as_mut_slice()];
+                let logits = manual_model.step_batch(&mut refs, &[next], 2);
+                if pos < req.prompt.len() {
+                    next = req.prompt[pos];
+                    pos += 1;
+                } else {
+                    let row = logits.row(0);
+                    let mut best = 0usize;
+                    for (i, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = i;
+                        }
+                    }
+                    toks.push(best as u32);
+                    next = best as u32;
+                }
+            }
+            reference.push(toks);
+        }
+        // Shared run: sequential lanes so the donor's pin exists before
+        // any follower is admitted — every follower must hit.
+        let mut sched = Scheduler::new(shared_model.as_ref(), 1, 2);
+        for r in requests.clone() {
+            sched.submit(r);
+        }
+        let done = sched.run();
+        assert_eq!(sched.stats().prefix_hits, 3,
+                   "{}: every follower must reuse the pinned prefix",
+                   spec.label());
+        assert_eq!(sched.stats().prefix_tokens_reused, 3 * 20,
+                   "{}", spec.label());
+        for (c, want) in done.iter().zip(reference.iter()) {
+            assert_eq!(&c.tokens, want,
+                       "{}: request {} diverged from the unshared \
+                        reference after a prefix hit", spec.label(), c.id);
+        }
+    }
+}
+
+/// Acceptance (c): copy-on-write isolation at the cache layer, both
+/// directions — a sibling's post-share writes never reach the source's
+/// slots, and the source's later growth never reaches the sibling.
+/// Small geometry (4-token pages) so the shared partial tail page is
+/// easy to point at.
+#[test]
+fn cow_keeps_sibling_reads_intact_both_directions() {
+    let mut cache = KvCache::for_lanes(2, 4, 4, 4, 16);
+    let src = cache.alloc_seq();
+    cache.begin_tokens(src, 6).unwrap();
+    let stamp = |tag: f32, layer: usize, pos: usize| -> Vec<f32> {
+        (0..4).map(|i| tag + (layer * 100 + pos * 10 + i) as f32).collect()
+    };
+    for pos in 0..6 {
+        for layer in 0..2 {
+            cache.write_kv_at(src, layer, pos,
+                              &stamp(1000.0, layer, pos),
+                              &stamp(2000.0, layer, pos));
+        }
+    }
+    let dst = cache.alloc_seq();
+    assert_eq!(cache.share_prefix(src, dst, 6), 2);
+    assert_eq!(cache.page_refcount(src, 0), 2);
+    assert_eq!(cache.page_refcount(src, 5), 2, "partial tail is shared");
+
+    // Sibling diverges: the claim CoWs the partial tail, the write
+    // lands in the private copy only.
+    cache.begin_tokens(dst, 1).unwrap();
+    assert_eq!(cache.cow_copies(), 1);
+    for layer in 0..2 {
+        cache.write_kv_at(dst, layer, 6,
+                          &stamp(5000.0, layer, 6), &stamp(6000.0, layer, 6));
+    }
+    assert_eq!(cache.page_refcount(src, 5), 1, "src owns its tail again");
+    assert_eq!(cache.page_refcount(dst, 5), 1);
+    assert_eq!(cache.page_refcount(src, 0), 2, "full page stays shared");
+    for pos in 0..6 {
+        for layer in 0..2 {
+            let (k, v) = cache.kv(src, layer, pos);
+            assert_eq!(k, &stamp(1000.0, layer, pos)[..],
+                       "src k corrupted at layer {layer} pos {pos}");
+            assert_eq!(v, &stamp(2000.0, layer, pos)[..]);
+            let (dk, dv) = cache.kv(dst, layer, pos);
+            assert_eq!(dk, k, "shared slots must read identically");
+            assert_eq!(dv, v);
+        }
+    }
+
+    // Source grows past the (formerly shared) tail: no CoW needed now
+    // (it is the sole holder again), and the sibling's view of the
+    // committed prefix is untouched.
+    cache.begin_tokens(src, 1).unwrap();
+    assert_eq!(cache.cow_copies(), 1, "exclusive tail needs no copy");
+    for layer in 0..2 {
+        cache.write_kv_at(src, layer, 6,
+                          &stamp(7000.0, layer, 6), &stamp(8000.0, layer, 6));
+    }
+    for layer in 0..2 {
+        let (dk, dv) = cache.kv(dst, layer, 6);
+        assert_eq!(dk, &stamp(5000.0, layer, 6)[..],
+                   "src growth leaked into the sibling's copy");
+        assert_eq!(dv, &stamp(6000.0, layer, 6)[..]);
+    }
+
+    // Refcounted free: retiring the source keeps the shared full page
+    // alive for the sibling; retiring the sibling returns everything.
+    let before = cache.free_page_count();
+    cache.free_seq(src);
+    assert_eq!(cache.free_page_count(), before + 1,
+               "only src's exclusive tail page may return to the free \
+                list; the shared full page still has a holder");
+    let (dk, _) = cache.kv(dst, 0, 0);
+    assert_eq!(dk, &stamp(1000.0, 0, 0)[..],
+               "freeing the source invalidated the sibling's prefix");
+    cache.free_seq(dst);
+    assert_eq!(cache.pages_in_use(), 0, "no page may leak after churn");
+}
+
+/// Acceptance (d): page-churn soak — shared traffic through a pool
+/// tight enough to force requeues (and possibly pin evictions), on one
+/// long-lived model across two scheduler lifetimes. Streams stay
+/// bitwise identical to a roomy run, and the only pages still held at
+/// the end belong to surviving pins, all reclaimed by one release.
+#[test]
+fn churn_and_requeue_leak_no_pages_and_keep_streams() {
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 62);
+    let roomy = latent.build_float(8, 64);
+    let mut sched = Scheduler::new(&roomy, 1, 2);
+    for r in shared_requests(8, 20, 24, 6) {
+        sched.submit(r);
+    }
+    let reference: Vec<Vec<u32>> =
+        sched.run().into_iter().map(|c| c.tokens).collect();
+
+    let tight = latent.build_float(3, 24); // 6 pages for 4-lane traffic
+    let mut requeued_total = 0usize;
+    for _round in 0..2 {
+        let mut sched = Scheduler::new(&tight, 4, 2);
+        for r in shared_requests(8, 20, 24, 6) {
+            sched.submit(r);
+        }
+        let got: Vec<Vec<u32>> =
+            sched.run().into_iter().map(|c| c.tokens).collect();
+        assert_eq!(got, reference,
+                   "requeue/eviction churn must never change streams");
+        requeued_total += sched.stats().requeued;
+        // Between rounds (and after the last): only pins hold pages.
+        assert_eq!(tight.kv_pages_in_use(),
+                   tight.kv_prefix_pins() * 24usize.div_ceil(KV_PAGE_TOKENS),
+                   "a retired fleet may leave behind pin pages only");
+    }
+    assert!(requeued_total > 0,
+            "geometry failed to exercise KV backpressure requeues");
+    if tight.kv_prefix_pins() > 0 {
+        assert!(tight.release_cached_pages());
+    }
+    assert_eq!(tight.kv_pages_in_use(), 0, "no page may leak");
+    assert_eq!(tight.kv_live_seqs(), 0);
+}
+
+/// Acceptance (e): the correctness heart. A sole live lane refused its
+/// claim because *pinned* pages fill the pool is a recoverable state:
+/// the scheduler must evict the pins before requeueing the lane —
+/// never trip the "cache smaller than a single request" sizing panic
+/// (pre-eviction behavior) — and the restarted lane's stream must be
+/// bitwise identical to an uncontended run.
+#[test]
+fn pinned_pages_under_backpressure_evict_instead_of_panicking() {
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 63);
+    let model = latent.build_float(2, 32); // 4-page pool
+
+    // Donor leaves a 2-page pin behind (24-token prompt, free pool has
+    // slack for its own CoW).
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(shared_requests(1, 20, 24, 6).pop().unwrap());
+    sched.run();
+    assert_eq!(model.kv_prefix_pins(), 1);
+    assert_eq!(model.kv_pages_in_use(), 2);
+
+    // An unrelated long request (36 tokens = 3 pages) misses the cache
+    // and needs more pages than the 2 the pin left free. Its third
+    // page claim is refused with every other lane idle — exactly the
+    // sizing-panic trigger — but the pinned pages are evictable, so
+    // the step must instead release them, requeue the lane once, and
+    // complete.
+    let long = GenRequest::greedy(
+        99, (0..24u32).map(|j| (13 * j + 5) % 128).collect(), 12);
+    let uncontended = {
+        let roomy = latent.build_float(8, 64);
+        let mut sched = Scheduler::new(&roomy, 1, 2);
+        sched.submit(long.clone());
+        sched.run().pop().unwrap().tokens
+    };
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(long);
+    let done = sched.run();
+    assert_eq!(done.len(), 1, "the refused lane must complete");
+    assert_eq!(done[0].tokens, uncontended,
+               "evict-then-requeue must reproduce the uncontended stream");
+    assert_eq!(sched.stats().requeued, 1,
+               "the lane restarts exactly once after the eviction");
+    assert_eq!(sched.stats().prefix_hits, 0, "unrelated prompt: a miss");
+    assert_eq!(model.kv_prefix_pins(), 0, "the pin was evicted");
+    assert_eq!(model.kv_pages_in_use(), 0);
+}
+
+/// Livelock regression for the eviction relief valve: when a prompt's
+/// prefill fills the *entire* pool, registering a pin would make the
+/// donor's very next claim bounce off its own pin — evict, requeue,
+/// re-register, forever (eviction counts as progress, so the stall
+/// guard never fires). `prefix_register` must skip pinning on a full
+/// pool; the request completes with no pin, no requeue.
+#[test]
+fn full_pool_skips_pinning_instead_of_looping() {
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 64);
+    let model = latent.build_float(1, 32); // 2 pages == the prompt
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(shared_requests(1, 20, 24, 6).pop().unwrap());
+    let done = sched.run();
+    assert_eq!(done.len(), 1);
+    assert_eq!(sched.stats().requeued, 0,
+               "a zero-slack donor must run straight through");
+    assert_eq!(model.kv_prefix_pins(), 0,
+               "a full pool must never grow the prefix cache");
+    assert_eq!(model.kv_cow_copies(), 0);
+    assert_eq!(model.kv_pages_in_use(), 0);
+}
