@@ -92,9 +92,12 @@ fi
 # cache again undersized (--kv-context 12), so prefix pins, CoW
 # divergence, KV backpressure and the evict-pins-before-requeue path
 # all run together — pre-fix, pinned pages under pressure tripped the
-# scheduler's stall/sizing panics. The schema-4 JSON must re-parse and
+# scheduler's stall/sizing panics. The schema-5 JSON must re-parse and
 # actually record prefix reuse: a run that silently never hits the
-# prefix cache fails this step.
+# prefix cache fails this step. The server-side counters
+# (queue_depth_max / rejected_429 / rejected_413) must be present and
+# zero on this socketless path — the HTTP smoke below is where they
+# move.
 echo "== shared-prefix + copy-on-write serve smoke =="
 cargo run --release --quiet -- serve-bench \
     --family float,ternary --attn --heads 4 \
@@ -107,14 +110,109 @@ if command -v python3 >/dev/null 2>&1; then
     python3 - runs/BENCH_serve_prefix_smoke.json <<'PYEOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == 4, f"schema {doc['schema']} != 4"
+assert doc["schema"] == 5, f"schema {doc['schema']} != 5"
 assert doc["shared_prefix_tokens"] == 20, doc["shared_prefix_tokens"]
 hits = sum(f["prefix_hits"] for f in doc["families"])
 reused = sum(f["prefix_tokens_reused"] for f in doc["families"])
 assert hits > 0, "no serve-bench run ever hit the prefix cache"
 assert reused >= hits, f"{hits} hits reused only {reused} tokens"
-print(f"runs/BENCH_serve_prefix_smoke.json: schema 4, "
+for fam in doc["families"]:
+    for key in ("queue_depth_max", "rejected_429", "rejected_413"):
+        assert fam[key] == 0, f"{fam['family']}: {key} != 0 off-HTTP"
+print(f"runs/BENCH_serve_prefix_smoke.json: schema 5, "
       f"{hits} prefix hits, {reused} tokens reused")
+PYEOF
+fi
+
+# HTTP serving smoke: `spectra serve` on an ephemeral port, sized to
+# choke — 1 shard, 1 lane, a cap-1 admission queue, and a KV context an
+# over-context probe must overflow. Concurrent /generate bursts must
+# produce at least one 429 (and at least one admitted stream), the
+# over-context probe must 413, /stats must parse cleanly, and POST
+# /shutdown must drain with zero leaked KV pages (`spectra serve`
+# itself exits non-zero on a leak, so the exit code is the leak check).
+echo "== http serving smoke (spectra serve) =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json, re, socket, subprocess, threading
+
+proc = subprocess.Popen(
+    ["target/release/spectra", "serve",
+     "--port", "0", "--shards", "1", "--lanes", "1", "--threads", "1",
+     "--queue-cap", "1", "--kv-context", "210", "--prefill-chunk", "4",
+     "--attn", "--heads", "4", "--family", "ternary",
+     "--vocab", "64", "--hidden", "32", "--glu", "48", "--layers", "2",
+     "--mp", "1"],
+    stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+try:
+    port = None
+    for _ in range(50):
+        line = proc.stdout.readline()
+        m = re.search(r"listening on 127\.0\.0\.1:(\d+)", line)
+        if m:
+            port = int(m.group(1))
+            break
+    assert port, "spectra serve never reported its address"
+
+    def raw(method, path, body=b"", read_body=True):
+        s = socket.create_connection(("127.0.0.1", port), timeout=60)
+        head = (f"{method} {path} HTTP/1.1\r\nHost: smoke\r\n"
+                f"Connection: close\r\nContent-Length: {len(body)}\r\n\r\n")
+        s.sendall(head.encode() + body)
+        f = s.makefile("rb")
+        status = int(f.readline().split()[1])
+        payload = b""
+        if read_body:
+            rest = f.read()
+            payload = rest.split(b"\r\n\r\n", 1)[1] if b"\r\n\r\n" in rest \
+                      else b""
+        s.close()
+        return status, payload
+
+    # Concurrent burst: 6 threads x 6 requests of 200 decode steps
+    # each against a single lane and a cap-1 queue. Arrivals land
+    # within milliseconds of each other while each admitted request
+    # holds the lane far longer, so the queue must overflow. Probes
+    # hang up after the status line; the server drains those lanes
+    # regardless (a client disconnect never leaks pages).
+    statuses, lock = [], threading.Lock()
+    def probe():
+        for _ in range(6):
+            st, _ = raw("POST", "/generate",
+                        b'{"prompt":[5,9],"max_new_tokens":200,'
+                        b'"tenant":"smoke"}', read_body=False)
+            with lock:
+                statuses.append(st)
+    threads = [threading.Thread(target=probe) for _ in range(6)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    assert statuses.count(200) >= 1, f"nothing admitted: {statuses}"
+    assert statuses.count(429) >= 1, f"no 429 under load: {statuses}"
+    assert set(statuses) <= {200, 429}, f"unexpected statuses: {statuses}"
+
+    st, _ = raw("POST", "/generate",
+                b'{"prompt":[1,2],"max_new_tokens":5000,"tenant":"big"}')
+    assert st == 413, f"over-context request got {st}, want 413"
+
+    st, body = raw("GET", "/stats")
+    assert st == 200
+    doc = json.loads(body)
+    assert doc["rejected_429"] == statuses.count(429), doc
+    assert doc["rejected_413"] == 1, doc
+    assert doc["queue_depth_max"] >= 1, doc
+    tenants = {t["tenant"]: t for t in doc["tenants"]}
+    assert tenants["smoke"]["rejected"] == statuses.count(429), tenants
+
+    st, _ = raw("POST", "/shutdown")
+    assert st == 200
+    out, _ = proc.communicate(timeout=300)
+    assert proc.returncode == 0, f"serve exited {proc.returncode}:\n{out}"
+    assert "0 kv pages leaked" in out, out
+    print(f"spectra serve smoke: {statuses.count(200)}x200 + "
+          f"{statuses.count(429)}x429, /stats parse clean, shutdown clean")
+finally:
+    if proc.poll() is None:
+        proc.kill()
 PYEOF
 fi
 

@@ -217,6 +217,43 @@ pub fn prefix_ttft_speedup(prompt_tokens: usize, reused_tokens: usize,
         / prefix_ttft_steps(prompt_tokens, reused_tokens, chunk) as f64
 }
 
+/// End-to-end prefill seconds for one prompt ingested `chunk` tokens
+/// per pass: `ceil(prompt / chunk)` passes, each priced by the
+/// chunked-prefill roofline (a partial final chunk still streams the
+/// full weights, which is why this is pass-counted rather than
+/// `prompt / tokens_per_sec`).
+pub fn e2e_prefill_seconds(params: f64, linear_bits: f64, hw: &Accelerator,
+                           prompt_tokens: usize, chunk: usize) -> f64 {
+    let chunk = chunk.max(1);
+    let passes = prompt_tokens.max(1).div_ceil(chunk) as f64;
+    let t_pass = chunk as f64
+        / prefill_tokens_per_sec_bits(params, linear_bits, hw, chunk as f64);
+    passes * t_pass
+}
+
+/// End-to-end request-latency roofline: seconds from admission to last
+/// token for one request on a `batch`-loaded server — the number the
+/// HTTP front end (`spectra serve`) turns every synthetic roofline
+/// into. Chunked prefill of the whole prompt
+/// ([`e2e_prefill_seconds`]), then `new_tokens` decode steps at the
+/// lane's share of the KV-aware batched throughput
+/// ([`decode_tokens_per_sec_bits_kv`] is aggregate across lanes, so
+/// one lane advances at `1/batch` of it). Queueing delay is excluded:
+/// this is the service-time floor a request pays once admitted, the
+/// baseline the server's measured `lane_steps`/`ttft_steps` compare
+/// against.
+pub fn e2e_request_latency_s(params: f64, linear_bits: f64,
+                             kv_bytes_per_token: f64, context: f64,
+                             hw: &Accelerator, batch: f64,
+                             prompt_tokens: usize, new_tokens: usize,
+                             chunk: usize) -> f64 {
+    let prefill_s = e2e_prefill_seconds(params, linear_bits, hw,
+                                        prompt_tokens, chunk);
+    let lane_tps = decode_tokens_per_sec_bits_kv(
+        params, linear_bits, kv_bytes_per_token, context, hw, batch) / batch;
+    prefill_s + new_tokens as f64 / lane_tps
+}
+
 /// Decode speedup over FP16 at a given batch size for an arbitrary
 /// linear-weight bit rate.
 pub fn batched_speedup_vs_fp16_bits(params: f64, linear_bits: f64,
@@ -283,6 +320,35 @@ pub fn fig2_series() -> Vec<Fig2Row> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn e2e_latency_roofline_is_monotone_and_rewards_compression() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let kvb = kv_bytes_per_token_fp16(7e9);
+        let lat = |bits: f64, ctx: f64, batch: f64, prompt: usize,
+                   new: usize, chunk: usize| {
+            e2e_request_latency_s(7e9, bits, kvb, ctx, hw, batch, prompt,
+                                  new, chunk)
+        };
+        let base = lat(16.0, 1024.0, 8.0, 256, 64, 64);
+        assert!(base > 0.0 && base.is_finite());
+        // More work, more context, more contending lanes: never faster.
+        assert!(lat(16.0, 1024.0, 8.0, 512, 64, 64) > base);
+        assert!(lat(16.0, 1024.0, 8.0, 256, 128, 64) > base);
+        assert!(lat(16.0, 8192.0, 8.0, 256, 64, 64) > base);
+        assert!(lat(16.0, 1024.0, 16.0, 256, 64, 64) > base);
+        // Bigger prefill chunks only help (fewer weight streams).
+        assert!(lat(16.0, 1024.0, 8.0, 256, 64, 256) <= base);
+        // Ternary bits beat fp16 end to end while bandwidth-bound.
+        assert!(lat(1.58, 1024.0, 8.0, 256, 64, 64) < base);
+        // Prefill is pass-counted: a 1-token and a full-chunk prompt
+        // pay the same single pass.
+        let one = e2e_prefill_seconds(7e9, 16.0, hw, 1, 64);
+        assert!((one - e2e_prefill_seconds(7e9, 16.0, hw, 64, 64)).abs()
+                < one * 1e-9);
+        assert!((e2e_prefill_seconds(7e9, 16.0, hw, 65, 64) - 2.0 * one)
+                .abs() < one * 1e-6);
+    }
 
     #[test]
     fn floatlm_hits_h100_wall_around_34b() {

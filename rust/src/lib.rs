@@ -32,6 +32,10 @@
 //!   one `DecodeModel` trait: the decay-state [`serve::SpectraLm`] and
 //!   the paged KV-cache attention [`serve::AttnLm`]
 //!   ([`serve::kvcache`]).
+//! - [`server`] — std-only HTTP/1.1 serving front end over [`serve`]:
+//!   chunked token streaming, prefix-hash sharding across schedulers,
+//!   tenant-fair bounded admission (429/413 instead of silent
+//!   requeue), `/stats`, graceful drain (`spectra serve`).
 //! - [`util`] — offline stand-ins for serde/clap/criterion/tempfile.
 
 pub mod analysis;
@@ -46,6 +50,7 @@ pub mod linear;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod server;
 pub mod ternary;
 pub mod util;
 

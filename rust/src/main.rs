@@ -12,6 +12,8 @@
 //!   generate      greedy text generation (Appendix H demo)
 //!   serve-bench   cross-family batched decode throughput (serve engine;
 //!                 --attn serves the paged KV-cache attention model)
+//!   serve         std-only HTTP serving front end (token streaming,
+//!                 sharded schedulers, tenant-fair admission)
 //!   bench-report  paper-style tables from a suite run
 //!   help          print the usage text
 
@@ -69,6 +71,22 @@ commands:
                 per-lane context (sizes below prompt+max-tokens
                 exercise KV backpressure: refused lanes requeue —
                 pinned prefixes are evicted first — never panic)
+  serve         std-only HTTP/1.1 serving front end over the serve engine
+                [--port 8080] [--shards 2] [--lanes 8] [--threads 0]
+                [--queue-cap 32] [--kv-context 256] [--prefill-chunk 8]
+                [--family float] [--attn] [--heads 4] [--group 128]
+                [--vocab 512] [--hidden 256] [--glu 704] [--layers 4]
+                [--mp 2] [--seed 0]
+                endpoints: POST /generate (JSON {\"prompt\":[ids],
+                \"max_new_tokens\":N, \"tenant\":\"x\", \"top_k\":K,
+                \"temperature\":T, \"seed\":S}; streams ndjson token
+                lines via chunked transfer encoding), GET /stats,
+                GET /healthz, POST /shutdown (graceful drain). Traffic
+                is routed across --shards schedulers by prefix hash;
+                each shard has a --queue-cap bounded tenant-fair
+                admission queue (429 + Retry-After when full; 413 when
+                prompt+max_new_tokens exceeds --kv-context; see the
+                README's \"Serving over HTTP\" section)
   bench-report  paper-style tables from a suite run
                 --results runs/suite/suite_results.json --experiment all
   help          print this text (also: bare `spectra` or --help)
@@ -93,6 +111,7 @@ fn main() -> Result<()> {
         }
         "generate" => cmd_generate(&args, &artifacts, &runs),
         "serve-bench" => cmd_serve_bench(&args),
+        "serve" => cmd_serve(&args),
         "bench-report" => {
             let res = coordinator::SuiteResults::load(
                 &PathBuf::from(args.get("results", "")))?;
@@ -272,7 +291,8 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// can undersize the cache to exercise the backpressure path (requeues
 /// reported per family; pinned prefixes are evicted before any lane
 /// requeues). `--json <path>` additionally writes the machine-readable
-/// sweep (BENCH_serve.json, schema 4 — see docs/BENCH_SCHEMA.md) and
+/// sweep (BENCH_serve.json, schema 5 — see docs/BENCH_SCHEMA.md; the
+/// schema-5 server-side fields are zero on this socketless path) and
 /// re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     use spectra::serve::{bench_requests_shared, DecodeModel, FamilySpec,
@@ -477,11 +497,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("prefix_tokens_reused",
                  Json::num(r.prefix_reused as f64)),
                 ("cow_copies", Json::num(r.cow_copies as f64)),
+                // Schema-5 server-side counters: serve-bench drives the
+                // scheduler directly (no HTTP admission layer), so the
+                // queue-depth and rejection counters are structurally
+                // zero here — `spectra serve`'s /stats is where they
+                // move. Kept in the schema so one parser reads both.
+                ("queue_depth_max", Json::num(0.0)),
+                ("rejected_429", Json::num(0.0)),
+                ("rejected_413", Json::num(0.0)),
             ]))
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(4.0)),
+            ("schema", Json::num(5.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
@@ -637,6 +665,109 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                  prefix_ttft_steps(prompt_tokens, 0, prefill_chunk),
                  prefix_ttft_speedup(prompt_tokens, reused, prefill_chunk));
     }
+    Ok(())
+}
+
+/// `spectra serve` — run the std-only HTTP serving front end until a
+/// `POST /shutdown` arrives, then drain gracefully and report per-shard
+/// serving counters plus the KV-page leak check. Prints the bound
+/// address on a parseable `listening on ...` line (ephemeral `--port 0`
+/// is how the ci.sh smoke finds it) and the analytic end-to-end
+/// request-latency roofline the measured traffic can be compared
+/// against. Exits non-zero if any shard still holds KV pages after the
+/// drain — a leak is a bug, not a statistic.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use spectra::serve::{FamilySpec, LmDims};
+    use spectra::server::{Server, ServerConfig};
+
+    let dims = LmDims {
+        vocab: args.get_usize("vocab", 512),
+        hidden: args.get_usize("hidden", 256),
+        glu: args.get_usize("glu", 704),
+        layers: args.get_usize("layers", 4),
+    };
+    let mp = args.get_usize("mp", 2);
+    if mp == 0 || dims.glu % mp != 0 || dims.hidden % mp != 0 {
+        anyhow::bail!("--mp {mp} must divide both --glu {} and --hidden {} \
+                       (ternary scale shards are per row range)",
+                      dims.glu, dims.hidden);
+    }
+    let attn = args.has("attn");
+    let heads = args.get_usize("heads", 4);
+    if attn && (heads == 0 || dims.hidden % heads != 0) {
+        anyhow::bail!("--heads {heads} must divide --hidden {} \
+                       (attention head width is hidden/heads)",
+                      dims.hidden);
+    }
+    let group = args.get_usize("group", 128);
+    let family_name = args.get("family", "float");
+    let family = FamilySpec::parse(&family_name, group)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown family '{family_name}' (float | quant<bits> | \
+             gptq<bits> | ternary)"))?;
+    let cfg = ServerConfig {
+        port: args.get_usize("port", 8080) as u16,
+        shards: args.get_usize("shards", 2).max(1),
+        lanes: args.get_usize("lanes", 8).max(1),
+        threads: args.get_usize("threads", 0),
+        prefill_chunk: args.get_usize("prefill-chunk", 8).max(1),
+        queue_cap: args.get_usize("queue-cap", 32).max(1),
+        kv_context: args.get_usize("kv-context", 256).max(2),
+        family,
+        attn,
+        heads,
+        dims,
+        mp,
+        seed: args.get_u64("seed", 0),
+    };
+    let shards = cfg.shards;
+    let lanes = cfg.lanes;
+    let server = Server::start(cfg.clone())?;
+    println!("spectra serve: listening on {} ({} shard(s) x {} lane(s), \
+              family {}, {}, queue cap {}, kv context {}/lane)",
+             server.addr(), shards, lanes, family.label(),
+             if attn { "paged-kv attention" } else { "decay state" },
+             cfg.queue_cap, cfg.kv_context);
+    // The analytic floor the measured traffic compares against: what
+    // one admitted request costs end to end at this batch depth, at
+    // paper scale on real hardware.
+    if let Some(hw) = spectra::deploy::hardware::by_name("H100-SXM") {
+        let kvb = spectra::deploy::kv_bytes_per_token_fp16(7e9);
+        let bits = match family {
+            FamilySpec::Float => 16.0,
+            FamilySpec::Quant { bits, .. } => bits as f64,
+            FamilySpec::Ternary => 1.58,
+        };
+        let lat = spectra::deploy::e2e_request_latency_s(
+            7e9, bits, kvb, cfg.kv_context as f64, hw, lanes as f64,
+            16, 32, cfg.prefill_chunk);
+        println!("e2e roofline @7B on {}: 16-token prompt + 32 new tokens \
+                  at batch {} ~ {:.1} ms/request ({:.1} bits/param)",
+                 hw.name, lanes, lat * 1e3, bits);
+    }
+    while !server.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("spectra serve: draining...");
+    let finals = server.shutdown();
+    let mut leaked = 0usize;
+    for s in &finals {
+        println!("shard {}: served {} | 429 {} | 413 {} | queue depth max \
+                  {} | generated {} tok | requeued {} | prefix hits {} | \
+                  kv pages after drain {}",
+                 s.shard, s.served, s.rejected_429, s.rejected_413,
+                 s.queue_depth_max, s.sched.generated_tokens,
+                 s.sched.requeued, s.sched.prefix_hits, s.kv_pages);
+        for t in &s.tenants {
+            println!("  tenant {:<12} served {} queued {} rejected {}",
+                     t.tenant, t.served, t.queued, t.rejected);
+        }
+        leaked += s.kv_pages;
+    }
+    if leaked > 0 {
+        anyhow::bail!("{leaked} kv page(s) leaked across shards after drain");
+    }
+    println!("spectra serve: shutdown clean, 0 kv pages leaked");
     Ok(())
 }
 

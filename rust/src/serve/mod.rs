@@ -27,6 +27,9 @@
 //!   admission and requeueing refused lanes with their pages released
 //!   (an overcommitted server queues; it never panics). It drives any
 //!   [`model::DecodeModel`], family-blind.
+//!   [`scheduler::Scheduler::step_observed`] adds an incremental
+//!   per-token observer ([`scheduler::StreamEvent`]) — the hook the
+//!   HTTP front end ([`crate::server`]) streams tokens through.
 //! - [`kvcache`] + [`model::AttnLm`] — the paged KV-cache attention
 //!   path: real pre-norm multi-head attention whose per-lane context
 //!   lives in fixed-size token pages ([`kvcache::KvCache`], free-list
@@ -70,7 +73,8 @@ pub use model::{AttnBlock, AttnLm, DecodeModel, DenseLm, FamilySpec,
                 LatentAttnBlock, LatentAttnLm, LatentBlock, LatentLm,
                 LmDims, QuantLm, QuantMethod, SpectraBlock, SpectraLm,
                 TernaryLm};
-pub use scheduler::{Completion, GenRequest, Sampling, Scheduler, ServeStats};
+pub use scheduler::{Completion, GenRequest, Sampling, Scheduler, ServeStats,
+                    StreamEvent, TenantStats};
 
 /// Deterministic corpus-shaped bench/demo traffic: prompt strings from
 /// [`crate::eval::serve_prompts`] (the eval task generator's contexts,

@@ -249,6 +249,15 @@ pub trait DecodeModel {
         0.0
     }
 
+    /// Physical KV pages currently held (live lanes + prefix pins; a
+    /// shared page counts once); 0 for cache-free models. Leak
+    /// telemetry for trait-object users: the HTTP server's
+    /// graceful-shutdown path asserts this returns to 0 after a drain,
+    /// and `/stats` reports it live. Default: no cache, always 0.
+    fn kv_pages_in_use(&self) -> usize {
+        0
+    }
+
     /// Storage-format label of the linears (e.g. "fp32", "q4g128",
     /// "ternary") — serving telemetry for the cross-family table.
     fn family_label(&self) -> String;
@@ -1425,6 +1434,10 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
 
     fn kv_bytes_per_token(&self) -> f64 {
         self.lock_cache().cache.config().bytes_per_token() as f64
+    }
+
+    fn kv_pages_in_use(&self) -> usize {
+        self.lock_cache().cache.pages_in_use()
     }
 
     fn family_label(&self) -> String {

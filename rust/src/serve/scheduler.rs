@@ -109,6 +109,43 @@ pub struct Completion {
     pub ttft_steps: usize,
 }
 
+/// An incremental streaming event emitted by
+/// [`Scheduler::step_observed`] — the hook the HTTP front end
+/// ([`crate::server`]) uses to stream tokens to clients as they are
+/// sampled instead of polling whole [`Completion`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// Request `id` sampled `token` as generated-stream position
+    /// `index` (0-based, prompt excluded) on this step. Emitted for
+    /// every sampled token, including the final one — a request's
+    /// `Token` events concatenated by `index` are exactly its
+    /// [`Completion::tokens`].
+    Token { id: usize, token: u32, index: usize },
+    /// Request `id` was bounced by KV backpressure and requeued after
+    /// having already emitted `discarded` `Token` events. Decoding is
+    /// deterministic, so its restart re-emits the *identical* tokens
+    /// from `index` 0 — a streaming consumer keeps a high-water mark
+    /// per request and forwards only `index >= emitted` (the dedupe
+    /// the [`crate::server`] shard workers perform), never a
+    /// correction to the client.
+    Requeued { id: usize, discarded: usize },
+}
+
+/// Per-tenant serving counters — filled by the HTTP front end's
+/// admission layer ([`crate::server`]); a scheduler driven directly
+/// (serve-bench, tests) has no tenants and leaves the list empty.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub tenant: String,
+    /// Completions delivered to this tenant.
+    pub served: usize,
+    /// Requests currently waiting in the admission queue.
+    pub queued: usize,
+    /// Requests refused at admission (429 queue-full + 413
+    /// context-too-large).
+    pub rejected: usize,
+}
+
 /// Aggregate serving counters for throughput reporting.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
@@ -152,6 +189,23 @@ pub struct ServeStats {
     /// Like `lane_steps`, this measures work actually executed and is
     /// never rolled back.
     pub cow_copies: usize,
+    /// Deepest the HTTP admission queue has been ([`crate::server`]'s
+    /// bounded per-shard queue; `Retry-After` fires past its cap).
+    /// Scheduler-only use (serve-bench, tests) leaves it 0.
+    pub queue_depth_max: usize,
+    /// Requests refused with `429 Retry-After` because the shard's
+    /// admission queue was full. Server-side counter, 0 off the HTTP
+    /// path.
+    pub rejected_429: usize,
+    /// Requests refused with `413` because prompt + max_new_tokens
+    /// exceeded the per-lane KV context the server was sized for (the
+    /// admission control that keeps a single oversized request from
+    /// tripping the scheduler's sizing panic). Server-side counter, 0
+    /// off the HTTP path.
+    pub rejected_413: usize,
+    /// Per-tenant served/queued/rejected counters (admission
+    /// fairness telemetry). Server-side; empty off the HTTP path.
+    pub tenants: Vec<TenantStats>,
 }
 
 struct Lane {
@@ -314,6 +368,19 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             + self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
+    /// Requests currently occupying a lane (admitted, not yet
+    /// retired). `pending() - live_lanes()` is the internal queue
+    /// depth.
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Requests waiting in the scheduler's internal queue (submitted
+    /// or requeued, not yet in a lane).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }
@@ -387,6 +454,21 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
     /// steps), plus a tiny requeue vector on the rare backpressure
     /// step.
     pub fn step_into(&mut self, done: &mut Vec<Completion>) {
+        self.step_observed(done, &mut |_| {});
+    }
+
+    /// [`Scheduler::step_into`] with an incremental per-token observer:
+    /// `obs` fires a [`StreamEvent::Token`] the moment each lane
+    /// samples a token — before the request completes — and a
+    /// [`StreamEvent::Requeued`] when backpressure bounces a lane that
+    /// had already emitted tokens (its restart re-emits the identical
+    /// stream from index 0; consumers dedupe by high-water mark, see
+    /// [`StreamEvent`]). The no-op observer is exactly `step_into`:
+    /// same admissions, same kernel work, same stats, bitwise-same
+    /// streams — the observer only *watches* sampling, it cannot
+    /// perturb it.
+    pub fn step_observed(&mut self, done: &mut Vec<Completion>,
+                         obs: &mut dyn FnMut(StreamEvent)) {
         // Backpressure defers admission: after a step that bounced a
         // lane, no fresh request is admitted until the survivors run a
         // clean step, so held KV capacity is released instead of
@@ -491,6 +573,8 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 self.model.retire_state(&mut lane.state);
                 self.free_states.push(lane.state);
                 self.stats.requeued += 1;
+                obs(StreamEvent::Requeued { id: lane.req.id,
+                                            discarded: lane.generated.len() });
                 // Roll the abandoned attempt back out of the delivered-
                 // work counters: the restart will re-earn them, and
                 // token/prefill/TTFT totals must never double-count
@@ -536,6 +620,8 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                                  &mut lane.rng);
                 lane.generated.push(tok);
                 self.stats.generated_tokens += 1;
+                obs(StreamEvent::Token { id: lane.req.id, token: tok,
+                                         index: lane.generated.len() - 1 });
                 if lane.generated.len() == 1 {
                     lane.ttft_steps = lane.steps;
                     self.stats.ttft_steps += lane.steps;
@@ -945,6 +1031,130 @@ mod tests {
                 "this workload must actually exercise backpressure");
         assert_eq!(tight.kv_pages_in_use(), 0,
                    "drained overcommitted scheduler must leak no pages");
+    }
+
+    #[test]
+    fn observer_streams_every_token_exactly_once_in_order() {
+        // The streaming contract: concatenating a request's Token
+        // events by index reproduces its Completion bitwise, and the
+        // no-op-observer path (step_into) yields identical streams.
+        use std::collections::BTreeMap;
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 3, 1);
+        for id in 0..5 {
+            sched.submit(GenRequest::greedy(id, vec![id as u32, 5], 3 + id));
+        }
+        let mut done = Vec::new();
+        let mut streams: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        while sched.pending() > 0 {
+            sched.step_observed(&mut done, &mut |ev| match ev {
+                StreamEvent::Token { id, token, index } => {
+                    let s = streams.entry(id).or_default();
+                    assert_eq!(index, s.len(),
+                               "tokens must stream in index order");
+                    s.push(token);
+                }
+                StreamEvent::Requeued { .. } => {
+                    panic!("no backpressure in this workload");
+                }
+            });
+        }
+        assert_eq!(done.len(), 5);
+        for c in &done {
+            assert_eq!(streams[&c.id], c.tokens,
+                       "streamed tokens must equal the completion");
+        }
+        // And the observer changed nothing vs the plain path.
+        let mut plain = Scheduler::new(&lm, 3, 1);
+        for id in 0..5 {
+            plain.submit(GenRequest::greedy(id, vec![id as u32, 5], 3 + id));
+        }
+        let want = plain.run();
+        let mut got = done.clone();
+        got.sort_by_key(|c| c.id);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(a.tokens, b.tokens, "observer perturbed decoding");
+        }
+    }
+
+    #[test]
+    fn observer_requeue_reemits_identical_tokens_from_zero() {
+        // Under KV backpressure a streamed lane restarts: the observer
+        // sees Requeued{discarded}, then the restart re-emits the same
+        // tokens from index 0 — a high-water-mark consumer forwards
+        // each index once and the deduped stream equals the
+        // completion. Overcommit geometry borrowed from the
+        // backpressure tests above.
+        use crate::serve::model::LatentAttnLm;
+        use std::collections::BTreeMap;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 33);
+        let tight = latent.build_float(2, 8);
+        let mut sched = Scheduler::new(&tight, 4, 1);
+        for id in 0..6 {
+            sched.submit(GenRequest::greedy(id, vec![id as u32, 7, 11], 4));
+        }
+        struct Watch { emitted: usize, forwarded: Vec<u32>, requeues: usize }
+        let mut watch: BTreeMap<usize, Watch> = BTreeMap::new();
+        let mut done = Vec::new();
+        while sched.pending() > 0 {
+            sched.step_observed(&mut done, &mut |ev| match ev {
+                StreamEvent::Token { id, token, index } => {
+                    let w = watch.entry(id).or_insert(
+                        Watch { emitted: 0, forwarded: Vec::new(),
+                                requeues: 0 });
+                    assert!(index <= w.emitted,
+                            "restart may only replay or extend");
+                    if index >= w.emitted {
+                        w.forwarded.push(token);
+                        w.emitted = index + 1;
+                    } else {
+                        // Replayed token must be bitwise identical to
+                        // what was already forwarded at this index.
+                        assert_eq!(w.forwarded[index], token,
+                                   "requeue replay diverged");
+                    }
+                }
+                StreamEvent::Requeued { id, discarded } => {
+                    if let Some(w) = watch.get_mut(&id) {
+                        // A bounced attempt's token count never
+                        // exceeds the high-water mark (a re-bounce
+                        // mid-replay discards fewer).
+                        assert!(discarded <= w.emitted,
+                                "attempt emitted past the high-water mark");
+                        w.requeues += 1;
+                    }
+                }
+            });
+        }
+        assert_eq!(done.len(), 6);
+        assert!(sched.stats().requeued > 0,
+                "workload must exercise backpressure");
+        let total_requeues: usize =
+            watch.values().map(|w| w.requeues).sum();
+        assert!(total_requeues <= sched.stats().requeued,
+                "observer saw more requeues than the stats counted");
+        for c in &done {
+            assert_eq!(watch[&c.id].forwarded, c.tokens,
+                       "deduped stream must equal the completion");
+        }
+    }
+
+    #[test]
+    fn server_side_stats_fields_default_to_empty() {
+        // The HTTP-layer counters ride on ServeStats but are only
+        // written by the server's admission path — direct scheduler
+        // use must leave them zeroed so serve-bench numbers stay
+        // comparable across schema 4 -> 5.
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 2, 1);
+        sched.submit(GenRequest::greedy(0, vec![1], 2));
+        let _ = sched.run();
+        let st = sched.stats();
+        assert_eq!(st.queue_depth_max, 0);
+        assert_eq!(st.rejected_429, 0);
+        assert_eq!(st.rejected_413, 0);
+        assert!(st.tenants.is_empty());
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! The serving API surface: JSON generate-request parsing, admission
+//! control, error→status mapping, and the `/stats` document. Pure
+//! functions over byte buffers and snapshots — everything here
+//! unit-tests without a socket or a model.
+
+use crate::serve::Sampling;
+use crate::util::json::Json;
+
+/// A parsed, not-yet-validated `POST /generate` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateBody {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Fairness key; requests without one share the `"default"` lane.
+    pub tenant: String,
+    pub sampling: Sampling,
+}
+
+/// What the admission layer checks a [`GenerateBody`] against: the
+/// shard's vocab and the per-lane KV context its pool was sized for.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionLimits {
+    pub vocab: usize,
+    /// Per-lane token capacity (`--kv-context`): a request needs
+    /// `prompt + max_new_tokens` of it. Scheduler admission panics past
+    /// this by design (sizing bug server-side); the front end's job is
+    /// to turn it into `413` client-side.
+    pub max_context: usize,
+}
+
+/// Request-level refusals, each carrying its HTTP status. `QueueFull`
+/// is the tentpole's backpressure-as-protocol story: the bounded
+/// admission queue turns KV pressure into `429 Retry-After` instead of
+/// an unbounded silent requeue pile.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// 400 — malformed JSON, wrong types, out-of-vocab tokens.
+    BadRequest(String),
+    /// 413 — `prompt + max_new_tokens` exceeds the per-lane KV context.
+    ContextTooLarge { need: usize, cap: usize },
+    /// 429 — the shard's bounded admission queue is full.
+    QueueFull { retry_after_secs: u32 },
+    /// 404 — unknown path.
+    NotFound,
+    /// 405 — known path, wrong method.
+    MethodNotAllowed,
+    /// 503 — server is draining for shutdown.
+    ShuttingDown,
+}
+
+impl ApiError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ApiError::BadRequest(_) => 400,
+            ApiError::ContextTooLarge { .. } => 413,
+            ApiError::QueueFull { .. } => 429,
+            ApiError::NotFound => 404,
+            ApiError::MethodNotAllowed => 405,
+            ApiError::ShuttingDown => 503,
+        }
+    }
+
+    /// Extra response headers the status mandates (`Retry-After` on
+    /// 429/503).
+    pub fn extra_headers(&self) -> Vec<(String, String)> {
+        match self {
+            ApiError::QueueFull { retry_after_secs } => {
+                vec![("retry-after".into(), retry_after_secs.to_string())]
+            }
+            ApiError::ShuttingDown => {
+                vec![("retry-after".into(), "1".into())]
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// JSON error body.
+    pub fn body(&self) -> String {
+        let (kind, detail) = match self {
+            ApiError::BadRequest(m) => ("bad_request", m.clone()),
+            ApiError::ContextTooLarge { need, cap } => (
+                "context_too_large",
+                format!("request needs {need} context tokens, \
+                         per-lane capacity is {cap}")),
+            ApiError::QueueFull { retry_after_secs } => (
+                "queue_full",
+                format!("admission queue full; retry after \
+                         {retry_after_secs}s")),
+            ApiError::NotFound => ("not_found", "unknown path".into()),
+            ApiError::MethodNotAllowed =>
+                ("method_not_allowed", "wrong method for path".into()),
+            ApiError::ShuttingDown =>
+                ("shutting_down", "server is draining".into()),
+        };
+        Json::obj(vec![
+            ("error", Json::str(kind)),
+            ("detail", Json::str(detail)),
+        ]).to_string()
+    }
+}
+
+/// Parse a `POST /generate` JSON body:
+///
+/// ```json
+/// {"prompt": [1, 2, 3], "max_new_tokens": 8, "tenant": "alice",
+///  "top_k": 40, "temperature": 0.8, "seed": 7}
+/// ```
+///
+/// `prompt` is required and non-empty; everything else defaults
+/// (`max_new_tokens` 16, tenant `"default"`, greedy sampling unless
+/// `top_k` is present).
+pub fn parse_generate(body: &[u8]) -> Result<GenerateBody, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ApiError::BadRequest("body is not utf-8".into()))?;
+    let doc = Json::parse(text)
+        .map_err(|e| ApiError::BadRequest(format!("bad json: {e}")))?;
+    let prompt_json = doc.opt("prompt")
+        .ok_or_else(|| ApiError::BadRequest("missing 'prompt'".into()))?;
+    let mut prompt = Vec::new();
+    for v in prompt_json.as_arr()
+        .map_err(|_| ApiError::BadRequest("'prompt' must be an array".into()))?
+    {
+        let x = v.as_f64().map_err(|_| ApiError::BadRequest(
+            "'prompt' entries must be numbers".into()))?;
+        if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+            return Err(ApiError::BadRequest(format!(
+                "'prompt' entry {x} is not a token id")));
+        }
+        prompt.push(x as u32);
+    }
+    if prompt.is_empty() {
+        return Err(ApiError::BadRequest("'prompt' must be non-empty".into()));
+    }
+    let field_usize = |name: &str, default: usize| -> Result<usize, ApiError> {
+        match doc.opt(name) {
+            None => Ok(default),
+            Some(v) => {
+                let x = v.as_f64().map_err(|_| ApiError::BadRequest(
+                    format!("'{name}' must be a number")))?;
+                if x < 0.0 || x.fract() != 0.0 {
+                    return Err(ApiError::BadRequest(format!(
+                        "'{name}' must be a non-negative integer")));
+                }
+                Ok(x as usize)
+            }
+        }
+    };
+    let max_new_tokens = field_usize("max_new_tokens", 16)?;
+    if max_new_tokens == 0 {
+        return Err(ApiError::BadRequest(
+            "'max_new_tokens' must be >= 1".into()));
+    }
+    let tenant = match doc.opt("tenant") {
+        None => "default".to_string(),
+        Some(v) => {
+            let s = v.as_str().map_err(|_| ApiError::BadRequest(
+                "'tenant' must be a string".into()))?;
+            if s.is_empty() {
+                return Err(ApiError::BadRequest(
+                    "'tenant' must be non-empty".into()));
+            }
+            s.to_string()
+        }
+    };
+    let sampling = match doc.opt("top_k") {
+        None => Sampling::Greedy,
+        Some(_) => {
+            let k = field_usize("top_k", 0)?;
+            if k == 0 {
+                return Err(ApiError::BadRequest("'top_k' must be >= 1".into()));
+            }
+            let temperature = match doc.opt("temperature") {
+                None => 1.0f32,
+                Some(v) => v.as_f64().map_err(|_| ApiError::BadRequest(
+                    "'temperature' must be a number".into()))? as f32,
+            };
+            let seed = field_usize("seed", 0)? as u64;
+            Sampling::TopK { k, temperature, seed }
+        }
+    };
+    Ok(GenerateBody { prompt, max_new_tokens, tenant, sampling })
+}
+
+/// Admission control: out-of-vocab token ids → 400, and the max-context
+/// check that turns the scheduler's sizing panic into a `413` — a
+/// request needs `prompt + max_new_tokens` tokens of per-lane context.
+pub fn check_admission(body: &GenerateBody, limits: &AdmissionLimits)
+                       -> Result<(), ApiError> {
+    if let Some(&t) = body.prompt.iter().find(|&&t| t as usize >= limits.vocab) {
+        return Err(ApiError::BadRequest(format!(
+            "token id {t} out of vocab {}", limits.vocab)));
+    }
+    let need = body.prompt.len() + body.max_new_tokens;
+    if need > limits.max_context {
+        return Err(ApiError::ContextTooLarge { need, cap: limits.max_context });
+    }
+    Ok(())
+}
+
+/// One `{"index":I,"token":T}` ndjson stream line.
+pub fn token_line(index: usize, token: u32) -> String {
+    let mut s = Json::obj(vec![
+        ("index", Json::num(index as f64)),
+        ("token", Json::num(token as f64)),
+    ]).to_string();
+    s.push('\n');
+    s
+}
+
+/// The `{"done":true,...}` ndjson trailer closing a stream.
+pub fn done_line(tokens: usize, prompt_len: usize, lane_steps: usize,
+                 ttft_steps: usize) -> String {
+    let mut s = Json::obj(vec![
+        ("done", Json::Bool(true)),
+        ("tokens", Json::num(tokens as f64)),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("lane_steps", Json::num(lane_steps as f64)),
+        ("ttft_steps", Json::num(ttft_steps as f64)),
+    ]).to_string();
+    s.push('\n');
+    s
+}
+
+/// Point-in-time view of one shard, as published by its worker and
+/// admission lock — the unit `/stats` aggregates and the value
+/// [`crate::server::Server::shutdown`] returns per shard.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    /// Requests waiting in the bounded admission queue right now.
+    pub queue_depth: usize,
+    /// The queue's cap (`--queue-cap`); depth == cap is when 429 fires.
+    pub queue_cap: usize,
+    /// Deepest the queue has been.
+    pub queue_depth_max: usize,
+    pub rejected_429: usize,
+    pub rejected_413: usize,
+    /// Completions delivered (streams closed with a done trailer).
+    pub served: usize,
+    /// Lanes live in the shard's scheduler at snapshot time.
+    pub live_lanes: usize,
+    /// KV pages held by the shard's model (0 for decay models).
+    pub kv_pages: usize,
+    /// Per-tenant counters, tenant-sorted.
+    pub tenants: Vec<crate::serve::scheduler::TenantStats>,
+    /// The shard scheduler's own counters.
+    pub sched: crate::serve::ServeStats,
+}
+
+/// Render the `/stats` JSON document from per-shard snapshots.
+pub fn stats_json(shards: &[ShardSnapshot]) -> String {
+    let mut tenant_totals: std::collections::BTreeMap<String, (usize, usize, usize)> =
+        std::collections::BTreeMap::new();
+    for s in shards {
+        for t in &s.tenants {
+            let e = tenant_totals.entry(t.tenant.clone()).or_default();
+            e.0 += t.served;
+            e.1 += t.queued;
+            e.2 += t.rejected;
+        }
+    }
+    let shard_docs = shards.iter().map(|s| Json::obj(vec![
+        ("shard", Json::num(s.shard as f64)),
+        ("queue_depth", Json::num(s.queue_depth as f64)),
+        ("queue_cap", Json::num(s.queue_cap as f64)),
+        ("queue_depth_max", Json::num(s.queue_depth_max as f64)),
+        ("rejected_429", Json::num(s.rejected_429 as f64)),
+        ("rejected_413", Json::num(s.rejected_413 as f64)),
+        ("served", Json::num(s.served as f64)),
+        ("live_lanes", Json::num(s.live_lanes as f64)),
+        ("kv_pages", Json::num(s.kv_pages as f64)),
+        ("generated_tokens", Json::num(s.sched.generated_tokens as f64)),
+        ("prefill_tokens", Json::num(s.sched.prefill_tokens as f64)),
+        ("requeued", Json::num(s.sched.requeued as f64)),
+        ("prefix_hits", Json::num(s.sched.prefix_hits as f64)),
+    ]));
+    let tenant_docs = tenant_totals.iter().map(|(name, (served, queued,
+                                                        rejected))| {
+        Json::obj(vec![
+            ("tenant", Json::str(name.as_str())),
+            ("served", Json::num(*served as f64)),
+            ("queued", Json::num(*queued as f64)),
+            ("rejected", Json::num(*rejected as f64)),
+        ])
+    });
+    let total = |f: &dyn Fn(&ShardSnapshot) -> usize| -> f64 {
+        shards.iter().map(|s| f(s)).sum::<usize>() as f64
+    };
+    Json::obj(vec![
+        ("shards", Json::arr(shard_docs)),
+        ("tenants", Json::arr(tenant_docs)),
+        ("queue_depth", Json::num(total(&|s| s.queue_depth))),
+        ("queue_depth_max", Json::num(total(&|s| s.queue_depth_max))),
+        ("rejected_429", Json::num(total(&|s| s.rejected_429))),
+        ("rejected_413", Json::num(total(&|s| s.rejected_413))),
+        ("served", Json::num(total(&|s| s.served))),
+        ("kv_pages", Json::num(total(&|s| s.kv_pages))),
+    ]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> AdmissionLimits {
+        AdmissionLimits { vocab: 256, max_context: 32 }
+    }
+
+    #[test]
+    fn parses_full_and_minimal_bodies() {
+        let b = parse_generate(
+            br#"{"prompt":[1,2,3],"max_new_tokens":8,"tenant":"alice",
+                "top_k":40,"temperature":0.5,"seed":7}"#).unwrap();
+        assert_eq!(b.prompt, vec![1, 2, 3]);
+        assert_eq!(b.max_new_tokens, 8);
+        assert_eq!(b.tenant, "alice");
+        assert_eq!(b.sampling,
+                   Sampling::TopK { k: 40, temperature: 0.5, seed: 7 });
+
+        let b = parse_generate(br#"{"prompt":[9]}"#).unwrap();
+        assert_eq!(b.prompt, vec![9]);
+        assert_eq!(b.max_new_tokens, 16);
+        assert_eq!(b.tenant, "default");
+        assert_eq!(b.sampling, Sampling::Greedy);
+    }
+
+    #[test]
+    fn malformed_bodies_are_400() {
+        for bad in [
+            &b"not json"[..],
+            br#"{"max_new_tokens":4}"#,          // missing prompt
+            br#"{"prompt":[]}"#,                 // empty prompt
+            br#"{"prompt":"abc"}"#,              // wrong type
+            br#"{"prompt":[1.5]}"#,              // fractional token id
+            br#"{"prompt":[-1]}"#,               // negative token id
+            br#"{"prompt":[1],"max_new_tokens":0}"#,
+            br#"{"prompt":[1],"tenant":""}"#,
+            br#"{"prompt":[1],"top_k":0}"#,
+            b"\xff\xfe",                         // not utf-8
+        ] {
+            let e = parse_generate(bad).unwrap_err();
+            assert_eq!(e.status(), 400, "{bad:?} must be a 400: {e:?}");
+        }
+    }
+
+    #[test]
+    fn admission_maps_oversize_to_413_and_oov_to_400() {
+        let ok = GenerateBody {
+            prompt: vec![1, 2], max_new_tokens: 30,
+            tenant: "t".into(), sampling: Sampling::Greedy,
+        };
+        assert!(check_admission(&ok, &limits()).is_ok());
+
+        let over = GenerateBody { max_new_tokens: 31, ..ok.clone() };
+        let e = check_admission(&over, &limits()).unwrap_err();
+        assert_eq!(e.status(), 413);
+        assert_eq!(e, ApiError::ContextTooLarge { need: 33, cap: 32 });
+
+        let oov = GenerateBody { prompt: vec![1, 256], ..ok };
+        assert_eq!(check_admission(&oov, &limits()).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn queue_full_carries_retry_after() {
+        let e = ApiError::QueueFull { retry_after_secs: 2 };
+        assert_eq!(e.status(), 429);
+        assert_eq!(e.extra_headers(),
+                   vec![("retry-after".to_string(), "2".to_string())]);
+        assert!(e.body().contains("queue_full"));
+        // Every error body is parseable JSON with an "error" key.
+        for e in [ApiError::BadRequest("x".into()),
+                  ApiError::ContextTooLarge { need: 9, cap: 4 },
+                  ApiError::QueueFull { retry_after_secs: 1 },
+                  ApiError::NotFound, ApiError::MethodNotAllowed,
+                  ApiError::ShuttingDown] {
+            let doc = Json::parse(&e.body()).unwrap();
+            assert!(doc.get("error").unwrap().as_str().is_ok());
+        }
+    }
+
+    #[test]
+    fn stream_lines_are_ndjson() {
+        let t = token_line(3, 99);
+        assert!(t.ends_with('\n'));
+        let doc = Json::parse(t.trim()).unwrap();
+        assert_eq!(doc.get("index").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.get("token").unwrap().as_usize().unwrap(), 99);
+        let d = done_line(4, 2, 6, 2);
+        let doc = Json::parse(d.trim()).unwrap();
+        assert!(doc.get("done").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("tokens").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(doc.get("ttft_steps").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn stats_json_aggregates_shards_and_tenants() {
+        use crate::serve::scheduler::TenantStats;
+        let shards = vec![
+            ShardSnapshot {
+                shard: 0, queue_depth: 1, queue_cap: 4, queue_depth_max: 3,
+                rejected_429: 2, rejected_413: 1, served: 5, live_lanes: 2,
+                kv_pages: 7,
+                tenants: vec![TenantStats {
+                    tenant: "a".into(), served: 5, queued: 1, rejected: 3 }],
+                sched: Default::default(),
+            },
+            ShardSnapshot {
+                shard: 1, queue_cap: 4, served: 2,
+                tenants: vec![
+                    TenantStats { tenant: "a".into(), served: 1,
+                                  ..Default::default() },
+                    TenantStats { tenant: "b".into(), served: 1,
+                                  ..Default::default() }],
+                ..Default::default()
+            },
+        ];
+        let doc = Json::parse(&stats_json(&shards)).unwrap();
+        assert_eq!(doc.get("rejected_429").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(doc.get("rejected_413").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("queue_depth_max").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.get("served").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(doc.get("kv_pages").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(doc.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        let tenants = doc.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2, "tenant 'a' merges across shards");
+        assert_eq!(tenants[0].get("tenant").unwrap().as_str().unwrap(), "a");
+        assert_eq!(tenants[0].get("served").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(tenants[0].get("rejected").unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -1,0 +1,470 @@
+//! Std-only HTTP/1.1 plumbing: request parsing, response writing,
+//! chunked transfer encoding — and the matching loopback client the
+//! integration harness drives real sockets with.
+//!
+//! Scope is deliberately the subset serving needs (matching the repo's
+//! offline-vendoring pattern: no hyper, no tokio, no serde): one
+//! request per connection (`Connection: close`), `Content-Length`
+//! bodies in, fixed or chunked bodies out. Every parser is a pure
+//! function over byte buffers so the whole layer unit-tests without a
+//! socket; the only I/O here is `read_request`'s buffered fill and the
+//! writers' `Write` calls.
+
+use std::io::{BufRead, Read, Write};
+
+/// Request head larger than this is refused (431-class garbage guard).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Request body larger than this is refused before buffering it.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A parsed HTTP/1.1 request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    /// Path as sent (query strings are not split off; the serving API
+    /// does not use them).
+    pub path: String,
+    /// Header `(name, value)` pairs, names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name` (ASCII case-insensitive lookup; names are
+    /// stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Protocol-level failure while reading a request. `Io` is the
+/// connection dying (nothing to respond to); the other two map to
+/// status codes.
+#[derive(Debug)]
+pub enum HttpError {
+    Io(std::io::Error),
+    /// Malformed request line / headers — respond 400.
+    BadRequest(String),
+    /// Head or declared body over the hard limits — respond 413.
+    TooLarge(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "io: {e}"),
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::TooLarge(m) => write!(f, "too large: {m}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+/// Read and parse one request from `r`. The head is read through the
+/// `BufRead` buffer line by line (never past the body), then exactly
+/// `Content-Length` body bytes are read. Requests with
+/// `Transfer-Encoding` bodies are refused — the serving API takes
+/// small JSON documents, not streams.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, HttpError> {
+    let mut head = Vec::new();
+    let mut line = Vec::new();
+    // Request line + headers, terminated by an empty line.
+    loop {
+        line.clear();
+        let n = r.read_until(b'\n', &mut line)?;
+        if n == 0 {
+            if head.is_empty() {
+                // Peer closed without sending anything (health probes
+                // do this); report as a clean EOF-ish error.
+                return Err(HttpError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed before request line")));
+            }
+            return Err(HttpError::BadRequest("truncated head".into()));
+        }
+        head.extend_from_slice(&line);
+        if head.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::TooLarge(format!(
+                "request head exceeds {MAX_HEAD_BYTES} bytes")));
+        }
+        if line == b"\r\n" || line == b"\n" {
+            break;
+        }
+    }
+    let head = std::str::from_utf8(&head)
+        .map_err(|_| HttpError::BadRequest("head is not utf-8".into()))?;
+    let mut lines = head.split_terminator('\n')
+        .map(|l| l.strip_suffix('\r').unwrap_or(l));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(),
+                                         parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err(HttpError::BadRequest(format!(
+            "malformed request line '{request_line}'"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest(format!(
+            "unsupported version '{version}'")));
+    }
+    let mut headers = Vec::new();
+    for l in lines {
+        if l.is_empty() {
+            break;
+        }
+        let Some((name, value)) = l.split_once(':') else {
+            return Err(HttpError::BadRequest(format!(
+                "malformed header line '{l}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(),
+                      value.trim().to_string()));
+    }
+    let req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::BadRequest(
+            "request bodies must use content-length".into()));
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v.parse::<usize>().map_err(|_| HttpError::BadRequest(
+            format!("bad content-length '{v}'")))?,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(HttpError::TooLarge(format!(
+            "declared body of {len} bytes exceeds {MAX_BODY_BYTES}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Request { body, ..req })
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (status + headers + body).
+/// Always closes the exchange (`Connection: close` — one request per
+/// connection keeps the server loop stateless).
+pub fn write_response<W: Write>(w: &mut W, status: u16,
+                                extra_headers: &[(&str, &str)],
+                                content_type: &str, body: &[u8])
+                                -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_text(status))?;
+    write!(w, "content-type: {content_type}\r\n")?;
+    write!(w, "content-length: {}\r\n", body.len())?;
+    write!(w, "connection: close\r\n")?;
+    for (n, v) in extra_headers {
+        write!(w, "{n}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the head of a chunked streaming response; follow with a
+/// [`ChunkedWriter`] over the same stream.
+pub fn write_chunked_head<W: Write>(w: &mut W, status: u16,
+                                    content_type: &str)
+                                    -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_text(status))?;
+    write!(w, "content-type: {content_type}\r\n")?;
+    write!(w, "transfer-encoding: chunked\r\n")?;
+    write!(w, "connection: close\r\n\r\n")?;
+    w.flush()
+}
+
+/// Chunked transfer encoder: each [`ChunkedWriter::chunk`] flushes one
+/// `size-hex CRLF data CRLF` frame (so a streamed token is on the wire
+/// the moment it is sampled), [`ChunkedWriter::finish`] writes the
+/// zero-length terminator.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+    finished: bool,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn new(w: W) -> ChunkedWriter<W> {
+        ChunkedWriter { w, finished: false }
+    }
+
+    /// Emit one chunk. Empty payloads are skipped — an empty chunk is
+    /// the stream terminator in the wire format, which only
+    /// [`ChunkedWriter::finish`] may write.
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        debug_assert!(!self.finished, "chunk() after finish()");
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream (idempotent).
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Decode a complete chunked-encoded body back into its payload bytes
+/// — the consumer side of [`ChunkedWriter`], used by the loopback
+/// client and the encoder's own round-trip tests.
+pub fn decode_chunked(mut b: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    loop {
+        let nl = b.iter().position(|&c| c == b'\n')
+            .ok_or("missing chunk-size line")?;
+        let size_line = std::str::from_utf8(&b[..nl])
+            .map_err(|_| "chunk size not utf-8")?
+            .trim();
+        // Chunk extensions (";...") are legal; we never emit them.
+        let size_hex = size_line.split(';').next().unwrap_or("");
+        let size = usize::from_str_radix(size_hex, 16)
+            .map_err(|_| format!("bad chunk size '{size_line}'"))?;
+        b = &b[nl + 1..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if b.len() < size {
+            return Err(format!("chunk of {size} bytes truncated"));
+        }
+        out.extend_from_slice(&b[..size]);
+        b = &b[size..];
+        // Trailing CRLF after each chunk.
+        b = b.strip_prefix(b"\r\n").or_else(|| b.strip_prefix(b"\n"))
+            .ok_or("missing chunk terminator")?;
+    }
+}
+
+/// A parsed response on the client side of the loopback harness.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    /// Header `(name, value)` pairs, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Decoded payload (chunked bodies are de-chunked).
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Parse the raw bytes of a full `Connection: close` response (as read
+/// until EOF): status line, headers, body (chunked decoded when the
+/// response says so).
+pub fn parse_response(raw: &[u8]) -> Result<ClientResponse, String> {
+    let sep = raw.windows(4).position(|w| w == b"\r\n\r\n")
+        .map(|p| (p, p + 4))
+        .or_else(|| raw.windows(2).position(|w| w == b"\n\n")
+                     .map(|p| (p, p + 2)))
+        .ok_or("no header/body separator")?;
+    let head = std::str::from_utf8(&raw[..sep.0])
+        .map_err(|_| "response head not utf-8")?;
+    let mut lines = head.lines();
+    let status_line = lines.next().ok_or("empty response")?;
+    let status: u16 = status_line.split_whitespace().nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line '{status_line}'"))?;
+    let mut headers = Vec::new();
+    for l in lines {
+        if let Some((n, v)) = l.split_once(':') {
+            headers.push((n.trim().to_ascii_lowercase(),
+                          v.trim().to_string()));
+        }
+    }
+    let body_raw = &raw[sep.1..];
+    let chunked = headers.iter().any(|(n, v)| {
+        n == "transfer-encoding" && v.to_ascii_lowercase().contains("chunked")
+    });
+    let body = if chunked {
+        decode_chunked(body_raw)?
+    } else {
+        body_raw.to_vec()
+    };
+    Ok(ClientResponse { status, headers, body })
+}
+
+/// Minimal loopback client: one request, read to EOF, parse. The
+/// integration harness and the ci.sh smoke drive the server over real
+/// sockets with exactly this.
+pub fn client_roundtrip(addr: &std::net::SocketAddr, method: &str,
+                        path: &str, body: &[u8])
+                        -> std::io::Result<ClientResponse> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    send_request_head(&mut stream, method, path, body.len())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    parse_response(&raw).map_err(|e| std::io::Error::new(
+        std::io::ErrorKind::InvalidData, e))
+}
+
+/// Write a request head (+ promise of `body_len` bytes) — split out so
+/// streaming-aware test clients can read the response incrementally.
+pub fn send_request_head<W: Write>(w: &mut W, method: &str, path: &str,
+                                   body_len: usize) -> std::io::Result<()> {
+    write!(w, "{method} {path} HTTP/1.1\r\n")?;
+    write!(w, "host: loopback\r\n")?;
+    write!(w, "content-type: application/json\r\n")?;
+    write!(w, "content-length: {body_len}\r\n")?;
+    write!(w, "connection: close\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut BufReader::new(raw))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Type: \
+              application/json\r\nContent-Length: 9\r\n\r\n{\"a\": 1}\
+              trailing-junk-ignored").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("Content-Type"), Some("application/json"));
+        assert_eq!(req.body, b"{\"a\": 1}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse(b"GET /stats HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/stats");
+        assert!(req.body.is_empty());
+        // Bare-LF line endings are tolerated too.
+        let req = parse(b"GET /healthz HTTP/1.1\nhost: y\n\n").unwrap();
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("y"));
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        assert!(matches!(parse(b"NOT-HTTP\r\n\r\n"),
+                         Err(HttpError::BadRequest(_))));
+        assert!(matches!(parse(b"GET /x SPDY/3\r\n\r\n"),
+                         Err(HttpError::BadRequest(_))));
+        assert!(matches!(parse(b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n"),
+                         Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\ncontent-length: ten\r\n\r\n"),
+            Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
+            Err(HttpError::BadRequest(_))));
+    }
+
+    #[test]
+    fn rejects_oversized_head_and_body() {
+        let huge = format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+                           MAX_BODY_BYTES + 1);
+        assert!(matches!(parse(huge.as_bytes()),
+                         Err(HttpError::TooLarge(_))));
+        let mut head = b"GET /x HTTP/1.1\r\n".to_vec();
+        while head.len() <= MAX_HEAD_BYTES {
+            head.extend_from_slice(b"x-pad: aaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        head.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&head), Err(HttpError::TooLarge(_))));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nshort"),
+            Err(HttpError::Io(_))));
+    }
+
+    #[test]
+    fn chunked_roundtrip() {
+        let mut wire = Vec::new();
+        let mut cw = ChunkedWriter::new(&mut wire);
+        cw.chunk(b"{\"token\":1}\n").unwrap();
+        cw.chunk(b"").unwrap(); // skipped, not a terminator
+        cw.chunk(b"{\"token\":22}\n").unwrap();
+        cw.finish().unwrap();
+        cw.finish().unwrap(); // idempotent
+        let body = decode_chunked(&wire).unwrap();
+        assert_eq!(body, b"{\"token\":1}\n{\"token\":22}\n");
+        assert!(decode_chunked(b"zz\r\n").is_err());
+        assert!(decode_chunked(b"5\r\nab").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_fixed_and_chunked() {
+        let mut raw = Vec::new();
+        write_response(&mut raw, 429, &[("retry-after", "1")],
+                       "application/json", b"{\"error\":\"full\"}").unwrap();
+        let resp = parse_response(&raw).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("Retry-After"), Some("1"));
+        assert_eq!(resp.body, b"{\"error\":\"full\"}");
+
+        let mut raw = Vec::new();
+        write_chunked_head(&mut raw, 200, "application/x-ndjson").unwrap();
+        let mut cw = ChunkedWriter::new(&mut raw);
+        cw.chunk(b"{\"index\":0,\"token\":7}\n").unwrap();
+        cw.chunk(b"{\"done\":true}\n").unwrap();
+        cw.finish().unwrap();
+        let resp = parse_response(&raw).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body_str(),
+                   "{\"index\":0,\"token\":7}\n{\"done\":true}\n");
+    }
+
+    #[test]
+    fn status_texts_cover_the_served_codes() {
+        for code in [200, 400, 404, 405, 413, 429, 500, 503] {
+            assert_ne!(status_text(code), "Unknown");
+        }
+    }
+}

@@ -1,0 +1,529 @@
+//! Std-only HTTP/1.1 serving front end: the network face of the
+//! [`crate::serve`] engine, turning the ROADMAP's "continuous-batching
+//! scheduler" into a system that serves traffic — with backpressure as
+//! *protocol*, not as internal state.
+//!
+//! - [`http`] — the wire layer: request parsing (bounded head/body),
+//!   response writing, chunked transfer encoding, and the loopback
+//!   client the integration harness uses. No dependencies, no async
+//!   runtime: thread-per-connection with `Connection: close`, which is
+//!   exactly as much server as a CPU-bound batch-8 decode engine can
+//!   feed.
+//! - [`api`] — the JSON surface: `POST /generate` bodies, admission
+//!   control (out-of-vocab → 400, `prompt + max_new_tokens` over the
+//!   per-lane KV context → 413), error→status mapping (429 carries
+//!   `Retry-After`), ndjson stream lines, the `/stats` document.
+//! - [`shard`] — per-shard tenant-fair bounded admission queues
+//!   ([`shard::ShardHandle`]) and the worker loop
+//!   ([`shard::run_shard`]) that owns a shard's model +
+//!   [`crate::serve::Scheduler`] and streams each sampled token
+//!   through the requester's channel the moment
+//!   [`crate::serve::scheduler::StreamEvent::Token`] fires.
+//!
+//! Sharding: [`Server::start`] builds `shards` identical models (same
+//! latent seed → bitwise-identical weights, so routing never changes a
+//! stream) each with its own scheduler, worker thread group, and
+//! *shard-local* prefix cache; [`shard::shard_for_prompt`] routes by
+//! FNV hash of the first KV page of prompt tokens, so repeated system
+//! prompts always hit the shard whose cache already holds their pages.
+//!
+//! Endpoints: `POST /generate` (chunked ndjson token stream),
+//! `GET /stats`, `GET /healthz`, `POST /shutdown`. Streaming format
+//! and status codes are documented in the README's "Serving over
+//! HTTP" section; `tests/server_e2e.rs` is the acceptance harness
+//! (bitwise stream equality vs a direct [`crate::serve::Scheduler`],
+//! deterministic 429/413, stats consistency, zero leaked KV pages
+//! after drain).
+
+pub mod api;
+pub mod http;
+pub mod shard;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::model::{FamilySpec, LatentAttnLm, LatentLm, LmDims,
+                          QuantMethod};
+use crate::serve::DecodeModel;
+use crate::Result;
+
+pub use api::{AdmissionLimits, ApiError, GenerateBody, ShardSnapshot};
+pub use shard::{run_shard, shard_for_prompt, ShardConfig, ShardHandle,
+                StreamItem};
+
+/// Everything `spectra serve` configures. One config builds the whole
+/// server: `shards` schedulers over `shards` identical synthetic
+/// models (seeded by `seed`, so every shard decodes bitwise the same).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// TCP port on 127.0.0.1 (0 = ephemeral; read it back from
+    /// [`Server::addr`]).
+    pub port: u16,
+    /// Scheduler shards (worker thread groups).
+    pub shards: usize,
+    /// Lanes (max batch) per shard.
+    pub lanes: usize,
+    /// Kernel pool threads per shard (0 = auto).
+    pub threads: usize,
+    /// Prefill chunk per shard scheduler.
+    pub prefill_chunk: usize,
+    /// Bounded admission queue cap per shard — depth `cap` is where
+    /// 429 starts.
+    pub queue_cap: usize,
+    /// Per-lane KV context tokens: pool capacity for attention models
+    /// and the 413 admission bound for every family.
+    pub kv_context: usize,
+    pub family: FamilySpec,
+    /// Paged-KV attention models (`AttnLm`) vs decay-state models
+    /// (`SpectraLm`).
+    pub attn: bool,
+    /// Attention heads (ignored when `attn` is false).
+    pub heads: usize,
+    pub dims: LmDims,
+    /// Ternary mixed-precision group size.
+    pub mp: usize,
+    /// Latent weight seed (also the GPTQ calibration seed).
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    /// Small synthetic geometry, 2 shards × 2 lanes — the e2e-test
+    /// shape. `spectra serve` overrides from flags.
+    fn default() -> ServerConfig {
+        ServerConfig {
+            port: 0,
+            shards: 2,
+            lanes: 2,
+            threads: 1,
+            prefill_chunk: 4,
+            queue_cap: 8,
+            kv_context: 64,
+            family: FamilySpec::Float,
+            attn: true,
+            heads: 4,
+            dims: LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 },
+            mp: 1,
+            seed: 11,
+        }
+    }
+}
+
+/// Build one shard's model. Matches on the concrete builders (not
+/// [`LatentAttnLm::build`]) because a worker thread needs the `Send`
+/// bound in its box, and every concrete model is plain data +
+/// `Mutex`-guarded KV state.
+fn build_model(cfg: &ServerConfig) -> Result<Box<dyn DecodeModel + Send>> {
+    Ok(if cfg.attn {
+        let latent = LatentAttnLm::synthetic(cfg.dims.clone(), cfg.heads,
+                                             cfg.mp, cfg.seed);
+        match cfg.family {
+            FamilySpec::Float =>
+                Box::new(latent.build_float(cfg.lanes, cfg.kv_context)),
+            FamilySpec::Ternary =>
+                Box::new(latent.build_ternary(cfg.lanes, cfg.kv_context)),
+            FamilySpec::Quant { bits, group, method: QuantMethod::Rtn } =>
+                Box::new(latent.build_quant_rtn(bits, group, cfg.lanes,
+                                                cfg.kv_context)),
+            FamilySpec::Quant { bits, group, method: QuantMethod::Gptq } =>
+                Box::new(latent.build_quant_gptq(bits, group, cfg.seed,
+                                                 cfg.lanes,
+                                                 cfg.kv_context)?),
+        }
+    } else {
+        let latent = LatentLm::synthetic(cfg.dims.clone(), cfg.mp, cfg.seed);
+        match cfg.family {
+            FamilySpec::Float => Box::new(latent.build_float()),
+            FamilySpec::Ternary => Box::new(latent.build_ternary()),
+            FamilySpec::Quant { bits, group, method: QuantMethod::Rtn } =>
+                Box::new(latent.build_quant_rtn(bits, group)),
+            FamilySpec::Quant { bits, group, method: QuantMethod::Gptq } =>
+                Box::new(latent.build_quant_gptq(bits, group, cfg.seed)?),
+        }
+    })
+}
+
+/// Shared state a connection handler routes against.
+struct Router {
+    shards: Vec<Arc<ShardHandle>>,
+    limits: AdmissionLimits,
+    /// Set by `POST /shutdown`; [`Server::shutdown_requested`] exposes
+    /// it so the CLI loop knows when to begin the drain.
+    shutdown_flag: Arc<AtomicBool>,
+}
+
+/// A running server: accept loop + `shards` worker threads, stopped by
+/// [`Server::shutdown`] (drain) — dropping a `Server` without calling
+/// it leaves threads running, so the CLI and tests always shut down
+/// explicitly.
+pub struct Server {
+    addr: SocketAddr,
+    shards: Vec<Arc<ShardHandle>>,
+    shutdown_flag: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<usize>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Build the shard models, bind `127.0.0.1:port`, spawn one worker
+    /// thread per shard and the accept loop. Returns once the socket
+    /// is listening (the address is immediately connectable).
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let shards_n = cfg.shards.max(1);
+        let mut models = Vec::with_capacity(shards_n);
+        for _ in 0..shards_n {
+            models.push(build_model(&cfg)?);
+        }
+        let limits = AdmissionLimits {
+            vocab: cfg.dims.vocab,
+            max_context: cfg.kv_context,
+        };
+        let shard_cfg = ShardConfig {
+            lanes: cfg.lanes,
+            threads: cfg.threads,
+            prefill_chunk: cfg.prefill_chunk,
+        };
+        let shards: Vec<Arc<ShardHandle>> = (0..shards_n)
+            .map(|_| Arc::new(ShardHandle::new(cfg.queue_cap)))
+            .collect();
+        let workers = models.into_iter().zip(&shards).map(|(m, h)| {
+            let h = h.clone();
+            std::thread::spawn(move || run_shard(m, &h, shard_cfg))
+        }).collect();
+
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .map_err(|e| anyhow::anyhow!("bind 127.0.0.1:{}: {e}",
+                                         cfg.port))?;
+        let addr = listener.local_addr()
+            .map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
+        listener.set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+
+        let shutdown_flag = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let router = Arc::new(Router {
+            shards: shards.clone(),
+            limits,
+            shutdown_flag: shutdown_flag.clone(),
+        });
+        let accept = {
+            let stop = shutdown_flag.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || accept_loop(listener, router, stop,
+                                                   conns))
+        };
+        Ok(Server {
+            addr,
+            shards,
+            shutdown_flag,
+            accept: Some(accept),
+            workers,
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once `POST /shutdown` has been received (or
+    /// [`Server::shutdown`] begun) — the CLI's cue to drain.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_flag.load(Ordering::SeqCst)
+    }
+
+    /// Live `/stats` snapshots, one per shard.
+    pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        self.shards.iter().enumerate()
+            .map(|(i, h)| h.snapshot(i))
+            .collect()
+    }
+
+    /// Graceful shutdown: stop accepting, refuse new admissions (503),
+    /// let every queued and live request run to completion with its
+    /// stream closed properly, release prefix-cache pins, join all
+    /// threads. Returns the final per-shard snapshots with `kv_pages`
+    /// set to the post-drain page count — 0 everywhere unless pages
+    /// leaked.
+    pub fn shutdown(mut self) -> Vec<ShardSnapshot> {
+        self.shutdown_flag.store(true, Ordering::SeqCst);
+        for h in &self.shards {
+            h.request_shutdown();
+        }
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // Workers drain (serving every parked request), then handlers
+        // observe their Done items and finish writing.
+        let finals: Vec<usize> = self.workers.drain(..)
+            .map(|w| w.join().unwrap_or(usize::MAX))
+            .collect();
+        let conns = std::mem::take(&mut *lock_ignore_poison(&self.conns));
+        for c in conns {
+            let _ = c.join();
+        }
+        self.shards.iter().enumerate().map(|(i, h)| {
+            let mut snap = h.snapshot(i);
+            snap.kv_pages = finals[i];
+            snap
+        }).collect()
+    }
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn accept_loop(listener: TcpListener, router: Arc<Router>,
+               stop: Arc<AtomicBool>,
+               conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let router = router.clone();
+                let h = std::thread::spawn(move || {
+                    handle_connection(stream, &router);
+                });
+                let mut g = lock_ignore_poison(&conns);
+                // Reap finished handlers so a long-lived server does
+                // not accumulate handles.
+                g.retain(|c| !c.is_finished());
+                g.push(h);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+fn respond_error(stream: &mut TcpStream, err: &ApiError) {
+    let headers = err.extra_headers();
+    let header_refs: Vec<(&str, &str)> = headers.iter()
+        .map(|(n, v)| (n.as_str(), v.as_str()))
+        .collect();
+    let _ = http::write_response(stream, err.status(), &header_refs,
+                                 "application/json",
+                                 err.body().as_bytes());
+}
+
+fn handle_connection(mut stream: TcpStream, router: &Router) {
+    let _ = stream.set_nodelay(true);
+    // A client must deliver its request promptly; streaming out has no
+    // deadline (`write_timeout` bounds each chunk write, not the
+    // stream).
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let req = {
+        let mut reader = std::io::BufReader::new(
+            match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => return,
+            });
+        match http::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(http::HttpError::Io(_)) => return,
+            Err(http::HttpError::BadRequest(m)) => {
+                respond_error(&mut stream, &ApiError::BadRequest(m));
+                return;
+            }
+            Err(http::HttpError::TooLarge(m)) => {
+                let _ = http::write_response(
+                    &mut stream, 413, &[], "application/json",
+                    api::ApiError::BadRequest(m).body().as_bytes());
+                return;
+            }
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/generate") => handle_generate(stream, router, &req.body),
+        ("GET", "/stats") => {
+            let snaps: Vec<ShardSnapshot> = router.shards.iter().enumerate()
+                .map(|(i, h)| h.snapshot(i))
+                .collect();
+            let _ = http::write_response(&mut stream, 200, &[],
+                                         "application/json",
+                                         api::stats_json(&snaps).as_bytes());
+        }
+        ("GET", "/healthz") => {
+            let _ = http::write_response(&mut stream, 200, &[],
+                                         "application/json",
+                                         b"{\"ok\":true}");
+        }
+        ("POST", "/shutdown") => {
+            router.shutdown_flag.store(true, Ordering::SeqCst);
+            let _ = http::write_response(&mut stream, 200, &[],
+                                         "application/json",
+                                         b"{\"shutting_down\":true}");
+        }
+        ("POST", _) | ("GET", _) | ("HEAD", _) => {
+            let known = matches!(req.path.as_str(),
+                                 "/generate" | "/stats" | "/healthz"
+                                 | "/shutdown");
+            let err = if known { ApiError::MethodNotAllowed }
+                      else { ApiError::NotFound };
+            respond_error(&mut stream, &err);
+        }
+        _ => respond_error(&mut stream, &ApiError::MethodNotAllowed),
+    }
+}
+
+/// `POST /generate`: parse → admission-check → route by prefix hash →
+/// park in the shard's fair queue → relay [`StreamItem`]s as chunked
+/// ndjson until the done trailer.
+fn handle_generate(mut stream: TcpStream, router: &Router, body: &[u8]) {
+    let parsed = match api::parse_generate(body) {
+        Ok(p) => p,
+        Err(e) => return respond_error(&mut stream, &e),
+    };
+    let shard_idx = shard_for_prompt(&parsed.prompt, router.shards.len());
+    let shard = &router.shards[shard_idx];
+    if let Err(e) = api::check_admission(&parsed, &router.limits) {
+        if matches!(e, ApiError::ContextTooLarge { .. }) {
+            shard.note_rejected_413(&parsed.tenant);
+        }
+        return respond_error(&mut stream, &e);
+    }
+    let (tx, rx) = mpsc::channel();
+    if let Err(e) = shard.try_admit(parsed, tx) {
+        return respond_error(&mut stream, &e);
+    }
+    if http::write_chunked_head(&mut stream, 200,
+                                "application/x-ndjson").is_err() {
+        // Client gone before the first byte; the worker's sends into
+        // the dropped receiver fail harmlessly and the lane drains.
+        return;
+    }
+    let mut out = http::ChunkedWriter::new(stream);
+    // A parked request decodes only once a lane frees up; under a full
+    // server that wait is real, so the relay timeout is generous — it
+    // exists to unwedge a dead worker, not to pace clients.
+    let deadline = Duration::from_secs(120);
+    loop {
+        match rx.recv_timeout(deadline) {
+            Ok(StreamItem::Token { token, index }) => {
+                if out.chunk(api::token_line(index, token)
+                             .as_bytes()).is_err() {
+                    return; // client hung up; drop rx, lane drains
+                }
+            }
+            Ok(StreamItem::Done(c)) => {
+                let _ = out.chunk(api::done_line(
+                    c.tokens.len(), c.prompt_len, c.lane_steps,
+                    c.ttft_steps).as_bytes());
+                let _ = out.finish();
+                return;
+            }
+            Err(_) => {
+                // Worker died or stalled past the deadline: close the
+                // stream without a done trailer so the client can tell
+                // the difference.
+                let _ = out.finish();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::Scheduler;
+    use crate::util::json::Json;
+
+    /// One loopback smoke over real sockets: healthz, a greedy
+    /// generate stream (checked against a direct [`Scheduler`] run on
+    /// an identical model), stats, graceful shutdown with zero leaked
+    /// pages. The full four-family matrix + 429/413 live in
+    /// `tests/server_e2e.rs`.
+    #[test]
+    fn loopback_generate_stats_shutdown() {
+        let cfg = ServerConfig { shards: 2, lanes: 2,
+                                 ..ServerConfig::default() };
+        let server = Server::start(cfg.clone()).unwrap();
+        let addr = server.addr();
+
+        let ok = http::client_roundtrip(&addr, "GET", "/healthz", b"")
+            .unwrap();
+        assert_eq!(ok.status, 200);
+
+        let prompt = vec![3u32, 9, 27];
+        let resp = http::client_roundtrip(
+            &addr, "POST", "/generate",
+            br#"{"prompt":[3,9,27],"max_new_tokens":4,"tenant":"t"}"#)
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let mut streamed = Vec::new();
+        let mut saw_done = false;
+        for line in resp.body_str().lines() {
+            let doc = Json::parse(line).unwrap();
+            if doc.opt("done").is_some() {
+                saw_done = true;
+                assert_eq!(doc.get("tokens").unwrap().as_usize().unwrap(),
+                           streamed.len());
+            } else {
+                assert_eq!(doc.get("index").unwrap().as_usize().unwrap(),
+                           streamed.len());
+                streamed.push(doc.get("token").unwrap()
+                              .as_usize().unwrap() as u32);
+            }
+        }
+        assert!(saw_done, "stream must close with a done trailer");
+
+        // Reference: identical model (same cfg seed), direct scheduler.
+        let model = build_model(&cfg).unwrap();
+        let mut sched = Scheduler::new(&*model, 1, 1);
+        sched.submit(crate::serve::GenRequest::greedy(0, prompt, 4));
+        let direct = sched.run().remove(0).tokens;
+        assert_eq!(streamed, direct,
+                   "HTTP stream must be bitwise-equal to direct decode");
+
+        let stats = http::client_roundtrip(&addr, "GET", "/stats", b"")
+            .unwrap();
+        let doc = Json::parse(&stats.body_str()).unwrap();
+        assert_eq!(doc.get("served").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("shards").unwrap().as_arr().unwrap().len(), 2);
+
+        // Unknown path / wrong method.
+        assert_eq!(http::client_roundtrip(&addr, "GET", "/nope", b"")
+                   .unwrap().status, 404);
+        assert_eq!(http::client_roundtrip(&addr, "GET", "/generate", b"")
+                   .unwrap().status, 405);
+        assert_eq!(http::client_roundtrip(&addr, "POST", "/generate",
+                                          b"not json").unwrap().status, 400);
+
+        let finals = server.shutdown();
+        assert_eq!(finals.len(), 2);
+        for s in &finals {
+            assert_eq!(s.kv_pages, 0, "shard {} leaked pages", s.shard);
+        }
+        assert_eq!(finals.iter().map(|s| s.served).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn post_shutdown_sets_the_drain_flag() {
+        let server = Server::start(ServerConfig {
+            shards: 1, ..ServerConfig::default() }).unwrap();
+        assert!(!server.shutdown_requested());
+        let resp = http::client_roundtrip(&server.addr(), "POST",
+                                          "/shutdown", b"").unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(server.shutdown_requested());
+        // After drain begins, new work is refused with 503.
+        let finals = server.shutdown();
+        assert_eq!(finals[0].kv_pages, 0);
+    }
+}

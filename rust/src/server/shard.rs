@@ -1,0 +1,533 @@
+//! Shard plumbing: the tenant-fair bounded admission queue in front of
+//! each scheduler, the worker loop that drains it through
+//! [`Scheduler::step_observed`] while streaming tokens back over
+//! channels, and the prefix-hash shard picker.
+//!
+//! One shard = one [`ShardHandle`] (shared with connection handlers) +
+//! one worker thread owning a `Box<dyn DecodeModel + Send>` and its
+//! [`Scheduler`]. Handlers never touch the scheduler; they enqueue a
+//! [`Pending`] under the handle's lock and read [`StreamItem`]s off
+//! their channel. The worker feeds the scheduler one lane's worth at a
+//! time from the fair queue — the scheduler's internal queue is plain
+//! FIFO, so fairness only holds if requests wait *here*, in the
+//! per-tenant queues, until a lane is actually free.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::serve::scheduler::{StreamEvent, TenantStats};
+use crate::serve::{Completion, DecodeModel, GenRequest, Scheduler,
+                   ServeStats, KV_PAGE_TOKENS};
+use crate::server::api::{ApiError, GenerateBody, ShardSnapshot};
+
+/// What a shard worker sends back to the connection handler that
+/// admitted a request.
+#[derive(Debug)]
+pub enum StreamItem {
+    /// One sampled token at generated-stream position `index`. Requeue
+    /// replays are already deduped (high-water mark per request), so a
+    /// handler forwards these verbatim.
+    Token { token: u32, index: usize },
+    /// The request finished; closes the stream.
+    Done(Completion),
+}
+
+/// A request parked in the admission queue: its parsed body plus the
+/// channel its tokens flow back through.
+pub struct Pending {
+    pub body: GenerateBody,
+    pub sink: mpsc::Sender<StreamItem>,
+}
+
+struct TenantQueue {
+    tenant: String,
+    queue: VecDeque<Pending>,
+    served: usize,
+    rejected: usize,
+}
+
+/// Admission state behind the [`ShardHandle`] lock.
+struct Admission {
+    tenants: Vec<TenantQueue>,
+    /// Round-robin cursor: the tenant index [`Admission::pop_fair`]
+    /// scans from next.
+    cursor: usize,
+    /// Total parked requests across tenants (the bounded quantity).
+    depth: usize,
+    cap: usize,
+    queue_depth_max: usize,
+    rejected_429: usize,
+    rejected_413: usize,
+    served: usize,
+    shutdown: bool,
+    /// Worker-published view for `/stats`: the scheduler's counters
+    /// plus live-lane and KV-page occupancy (handlers cannot read the
+    /// scheduler directly — it lives on the worker thread).
+    sched_stats: ServeStats,
+    live_lanes: usize,
+    kv_pages: usize,
+}
+
+impl Admission {
+    /// Pop the next request round-robin across tenants: scan from the
+    /// cursor for the first non-empty tenant queue, advance the cursor
+    /// past it. Three tenants with queues A:3 B:2 C:1 drain
+    /// A,B,C,A,B,A — no tenant's backlog starves another's first
+    /// request.
+    fn pop_fair(&mut self) -> Option<Pending> {
+        let n = self.tenants.len();
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            if let Some(p) = self.tenants[i].queue.pop_front() {
+                self.cursor = (i + 1) % n;
+                self.depth -= 1;
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    fn tenant_mut(&mut self, tenant: &str) -> &mut TenantQueue {
+        if let Some(i) = self.tenants.iter().position(|t| t.tenant == tenant) {
+            return &mut self.tenants[i];
+        }
+        self.tenants.push(TenantQueue {
+            tenant: tenant.to_string(),
+            queue: VecDeque::new(),
+            served: 0,
+            rejected: 0,
+        });
+        self.tenants.last_mut().expect("just pushed")
+    }
+}
+
+/// The handler-facing half of a shard: bounded tenant-fair admission +
+/// the worker's published stats. Shared as `Arc<ShardHandle>` between
+/// the accept loop's connection handlers and the shard's worker
+/// thread.
+pub struct ShardHandle {
+    inner: Mutex<Admission>,
+    /// Signalled on admission and on shutdown; the worker parks here
+    /// when idle.
+    work: Condvar,
+}
+
+impl ShardHandle {
+    pub fn new(queue_cap: usize) -> ShardHandle {
+        ShardHandle {
+            inner: Mutex::new(Admission {
+                tenants: Vec::new(),
+                cursor: 0,
+                depth: 0,
+                cap: queue_cap.max(1),
+                queue_depth_max: 0,
+                rejected_429: 0,
+                rejected_413: 0,
+                served: 0,
+                shutdown: false,
+                sched_stats: ServeStats::default(),
+                live_lanes: 0,
+                kv_pages: 0,
+            }),
+            work: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Admission> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Park `body` in its tenant's queue, or refuse: `503` while
+    /// draining, `429 Retry-After` when the shard already holds
+    /// `queue_cap` parked requests (the tentpole's
+    /// backpressure-as-protocol boundary — beyond this point load
+    /// becomes the *client's* signal, not a silent requeue pile).
+    pub fn try_admit(&self, body: GenerateBody,
+                     sink: mpsc::Sender<StreamItem>)
+                     -> Result<(), ApiError> {
+        let mut g = self.lock();
+        if g.shutdown {
+            return Err(ApiError::ShuttingDown);
+        }
+        if g.depth >= g.cap {
+            g.rejected_429 += 1;
+            let tenant = body.tenant.clone();
+            g.tenant_mut(&tenant).rejected += 1;
+            return Err(ApiError::QueueFull { retry_after_secs: 1 });
+        }
+        g.depth += 1;
+        g.queue_depth_max = g.queue_depth_max.max(g.depth);
+        let tenant = body.tenant.clone();
+        g.tenant_mut(&tenant).queue.push_back(Pending { body, sink });
+        drop(g);
+        self.work.notify_all();
+        Ok(())
+    }
+
+    /// Record a context-too-large refusal (the `413` happens in the
+    /// handler *before* admission; the counter lives here so `/stats`
+    /// sees it per shard and per tenant).
+    pub fn note_rejected_413(&self, tenant: &str) {
+        let mut g = self.lock();
+        g.rejected_413 += 1;
+        g.tenant_mut(tenant).rejected += 1;
+    }
+
+    /// Begin draining: no new admissions (503), worker finishes queued
+    /// + live work and exits.
+    pub fn request_shutdown(&self) {
+        self.lock().shutdown = true;
+        self.work.notify_all();
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.lock().shutdown
+    }
+
+    /// Point-in-time `/stats` view. The embedded [`ServeStats`] is the
+    /// worker's last published scheduler counters with the server-side
+    /// fields (queue depth, 429/413, tenants) overlaid — the "complete"
+    /// stats the schema-5 fields describe.
+    pub fn snapshot(&self, shard: usize) -> ShardSnapshot {
+        let g = self.lock();
+        let tenants: Vec<TenantStats> = g.tenants.iter().map(|t| TenantStats {
+            tenant: t.tenant.clone(),
+            served: t.served,
+            queued: t.queue.len(),
+            rejected: t.rejected,
+        }).collect();
+        let mut sched = g.sched_stats.clone();
+        sched.queue_depth_max = g.queue_depth_max;
+        sched.rejected_429 = g.rejected_429;
+        sched.rejected_413 = g.rejected_413;
+        sched.tenants = tenants.clone();
+        ShardSnapshot {
+            shard,
+            queue_depth: g.depth,
+            queue_cap: g.cap,
+            queue_depth_max: g.queue_depth_max,
+            rejected_429: g.rejected_429,
+            rejected_413: g.rejected_413,
+            served: g.served,
+            live_lanes: g.live_lanes,
+            kv_pages: g.kv_pages,
+            tenants,
+            sched,
+        }
+    }
+
+    // ---- worker side ----
+
+    fn try_pop(&self) -> Option<Pending> {
+        self.lock().pop_fair()
+    }
+
+    /// Park until admission or shutdown (bounded wait so a worker
+    /// never wedges on a missed wakeup).
+    fn wait_for_work(&self, timeout: Duration) {
+        let g = self.lock();
+        if g.depth == 0 && !g.shutdown {
+            let _ = self.work.wait_timeout(g, timeout);
+        }
+    }
+
+    fn note_served(&self, tenant: &str) {
+        let mut g = self.lock();
+        g.served += 1;
+        g.tenant_mut(tenant).served += 1;
+    }
+
+    fn publish(&self, stats: &ServeStats, live_lanes: usize,
+               kv_pages: usize) {
+        let mut g = self.lock();
+        g.sched_stats = stats.clone();
+        g.live_lanes = live_lanes;
+        g.kv_pages = kv_pages;
+    }
+}
+
+/// Per-request worker bookkeeping: the reply channel plus the
+/// streaming high-water mark (tokens with `index < emitted` were
+/// already sent — a requeued lane's deterministic replay is filtered
+/// against it, so clients see each position exactly once).
+struct SinkEntry {
+    sink: mpsc::Sender<StreamItem>,
+    emitted: usize,
+    tenant: String,
+}
+
+/// Configuration one shard worker runs with.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    /// Scheduler lanes (max batch).
+    pub lanes: usize,
+    /// Kernel pool threads per shard (0 = auto).
+    pub threads: usize,
+    /// Prefill chunk (1 = classic one-token prefill).
+    pub prefill_chunk: usize,
+}
+
+/// The shard worker loop: owns the model and its [`Scheduler`], feeds
+/// it from the fair queue one free lane at a time, streams every
+/// sampled token through the per-request channel the moment
+/// [`StreamEvent::Token`] fires, and publishes stats after every step.
+/// Returns the model's final KV-page count (after dropping prefix-cache
+/// pins) — the leak check graceful shutdown asserts on.
+///
+/// On shutdown the loop *drains*: already-parked and live requests run
+/// to completion (their streams close with a done trailer); only fresh
+/// admissions are refused (503, by [`ShardHandle::try_admit`]). A
+/// client that disconnects mid-stream only makes its channel sends
+/// fail — the lane still decodes to completion and retires normally,
+/// so its KV pages always come back.
+pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
+                 cfg: ShardConfig) -> usize {
+    let model: &dyn DecodeModel = &*model;
+    let lanes = cfg.lanes.max(1);
+    let mut sched = Scheduler::with_prefill_chunk(
+        model, lanes, cfg.threads, cfg.prefill_chunk);
+    let mut sinks: HashMap<usize, SinkEntry> = HashMap::new();
+    let mut next_id = 0usize;
+    let mut done: Vec<Completion> = Vec::new();
+    loop {
+        // Feed while a lane is free. Admitting more than `lanes` would
+        // move waiting into the scheduler's FIFO queue, where tenant
+        // fairness no longer applies.
+        while sched.pending() < lanes {
+            let Some(p) = handle.try_pop() else { break };
+            let id = next_id;
+            next_id += 1;
+            sinks.insert(id, SinkEntry {
+                sink: p.sink,
+                emitted: 0,
+                tenant: p.body.tenant.clone(),
+            });
+            sched.submit(GenRequest {
+                id,
+                prompt: p.body.prompt,
+                max_new_tokens: p.body.max_new_tokens,
+                sampling: p.body.sampling,
+            });
+        }
+        if sched.pending() == 0 {
+            if handle.shutdown_requested() {
+                break;
+            }
+            handle.publish(sched.stats(), 0, model.kv_pages_in_use());
+            handle.wait_for_work(Duration::from_millis(5));
+            continue;
+        }
+        done.clear();
+        sched.step_observed(&mut done, &mut |ev| {
+            if let StreamEvent::Token { id, token, index } = ev {
+                if let Some(e) = sinks.get_mut(&id) {
+                    if index >= e.emitted {
+                        // Receiver gone = client hung up; keep decoding
+                        // (the lane retires normally) but stop caring.
+                        let _ = e.sink.send(StreamItem::Token { token, index });
+                        e.emitted = index + 1;
+                    }
+                }
+            }
+            // Requeued: nothing to do — `emitted` already holds the
+            // high-water mark the replay is deduped against.
+        });
+        for c in done.drain(..) {
+            if let Some(e) = sinks.remove(&c.id) {
+                handle.note_served(&e.tenant);
+                let _ = e.sink.send(StreamItem::Done(c));
+            }
+        }
+        handle.publish(sched.stats(), sched.live_lanes(),
+                       model.kv_pages_in_use());
+    }
+    // Drained. Drop prefix-cache pins so every page returns to the
+    // pool, then report what is still held (0 unless something leaked).
+    model.release_cached_pages();
+    let final_pages = model.kv_pages_in_use();
+    handle.publish(sched.stats(), 0, final_pages);
+    final_pages
+}
+
+/// Route a prompt to a shard by FNV-1a over its first page of tokens
+/// (same page-granular window the prefix cache keys on), so repeated
+/// system prompts always land on the shard whose shard-local
+/// [`crate::serve::model::AttnLm`] prefix cache already holds their KV
+/// pages.
+pub fn shard_for_prompt(prompt: &[u32], shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in prompt.iter().take(KV_PAGE_TOKENS) {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    (h % shards as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::{LatentLm, LmDims};
+    use crate::serve::Sampling;
+
+    fn body(tenant: &str, prompt: Vec<u32>, max_new: usize) -> GenerateBody {
+        GenerateBody {
+            prompt,
+            max_new_tokens: max_new,
+            tenant: tenant.to_string(),
+            sampling: Sampling::Greedy,
+        }
+    }
+
+    #[test]
+    fn pop_fair_round_robins_tenants() {
+        let h = ShardHandle::new(16);
+        for (tenant, tag) in [("a", 0u32), ("a", 1), ("a", 2),
+                              ("b", 3), ("b", 4), ("c", 5)] {
+            let (tx, _rx) = mpsc::channel();
+            // _rx dropped: sends fail silently, irrelevant here.
+            h.try_admit(body(tenant, vec![tag], 1), tx).unwrap();
+        }
+        let order: Vec<String> = std::iter::from_fn(|| h.try_pop())
+            .map(|p| p.body.tenant)
+            .collect();
+        assert_eq!(order, ["a", "b", "c", "a", "b", "a"],
+                   "a backlogged tenant must not starve the others");
+        assert_eq!(h.snapshot(0).queue_depth, 0);
+    }
+
+    #[test]
+    fn full_queue_is_429_with_counters() {
+        let h = ShardHandle::new(2);
+        for i in 0..2 {
+            let (tx, _rx) = mpsc::channel();
+            h.try_admit(body("t", vec![i], 1), tx).unwrap();
+        }
+        let (tx, _rx) = mpsc::channel();
+        let e = h.try_admit(body("t", vec![9], 1), tx).unwrap_err();
+        assert_eq!(e, ApiError::QueueFull { retry_after_secs: 1 });
+        h.note_rejected_413("t");
+        let s = h.snapshot(3);
+        assert_eq!(s.shard, 3);
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.queue_cap, 2);
+        assert_eq!(s.queue_depth_max, 2);
+        assert_eq!(s.rejected_429, 1);
+        assert_eq!(s.rejected_413, 1);
+        assert_eq!(s.tenants.len(), 1);
+        assert_eq!(s.tenants[0].rejected, 2);
+        assert_eq!(s.tenants[0].queued, 2);
+        // The overlaid ServeStats carries the same server-side fields.
+        assert_eq!(s.sched.rejected_429, 1);
+        assert_eq!(s.sched.rejected_413, 1);
+        assert_eq!(s.sched.queue_depth_max, 2);
+        assert_eq!(s.sched.tenants, s.tenants);
+    }
+
+    #[test]
+    fn shutdown_refuses_with_503() {
+        let h = ShardHandle::new(4);
+        h.request_shutdown();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(h.try_admit(body("t", vec![1], 1), tx).unwrap_err(),
+                   ApiError::ShuttingDown);
+        assert!(h.shutdown_requested());
+    }
+
+    #[test]
+    fn shard_picker_is_deterministic_prefix_keyed_and_in_range() {
+        let long_a: Vec<u32> = (0..40).collect();
+        // Same first KV_PAGE_TOKENS tokens, different tail: same shard
+        // (that is the point — the prefix cache is page-granular).
+        let mut long_b = long_a.clone();
+        long_b[KV_PAGE_TOKENS + 2] = 999;
+        for shards in [1, 2, 3, 8] {
+            let s = shard_for_prompt(&long_a, shards);
+            assert!(s < shards);
+            assert_eq!(s, shard_for_prompt(&long_a, shards));
+            assert_eq!(s, shard_for_prompt(&long_b, shards),
+                       "routing must key on the first page only");
+        }
+        // Distinct prefixes spread: not all of 32 prompts on one shard.
+        let hits: std::collections::BTreeSet<usize> = (0..32u32)
+            .map(|i| shard_for_prompt(&[i, i + 1, i + 2], 4))
+            .collect();
+        assert!(hits.len() > 1, "picker must actually spread traffic");
+    }
+
+    #[test]
+    fn worker_streams_match_direct_scheduler_bitwise() {
+        let dims = LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 };
+        let latent = LatentLm::synthetic(dims, 1, 21);
+        let reqs: Vec<Vec<u32>> =
+            (0..5u32).map(|i| vec![i, i + 7, i + 11]).collect();
+
+        // Reference: the same prompts through a Scheduler directly.
+        let direct = latent.build_float();
+        let mut sched = Scheduler::new(&direct, 2, 1);
+        for (id, p) in reqs.iter().enumerate() {
+            sched.submit(GenRequest::greedy(id, p.clone(), 4));
+        }
+        let mut expect: HashMap<Vec<u32>, Vec<u32>> = HashMap::new();
+        for c in sched.run() {
+            expect.insert(reqs[c.id].clone(), c.tokens);
+        }
+
+        // Server path: worker thread + fair queue + channels.
+        let h = std::sync::Arc::new(ShardHandle::new(16));
+        let model: Box<dyn DecodeModel + Send> =
+            Box::new(latent.build_float());
+        let worker = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                run_shard(model, &h,
+                          ShardConfig { lanes: 2, threads: 1,
+                                        prefill_chunk: 1 })
+            })
+        };
+        let mut rxs = Vec::new();
+        for (i, p) in reqs.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let tenant = if i % 2 == 0 { "even" } else { "odd" };
+            h.try_admit(body(tenant, p.clone(), 4), tx).unwrap();
+            rxs.push((p.clone(), rx));
+        }
+        for (prompt, rx) in rxs {
+            let mut streamed = Vec::new();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                    StreamItem::Token { token, index } => {
+                        assert_eq!(index, streamed.len(),
+                                   "tokens must stream in order, deduped");
+                        streamed.push(token);
+                    }
+                    StreamItem::Done(c) => {
+                        assert_eq!(c.tokens, streamed,
+                                   "stream and completion must agree");
+                        break;
+                    }
+                }
+            }
+            assert_eq!(streamed, expect[&prompt],
+                       "server stream must be bitwise-equal to direct \
+                        scheduler output");
+        }
+        h.request_shutdown();
+        let leaked = worker.join().unwrap();
+        assert_eq!(leaked, 0, "decay model holds no KV pages");
+        let s = h.snapshot(0);
+        assert_eq!(s.served, 5);
+        assert_eq!(s.queue_depth, 0);
+        let by_name = |n: &str| s.tenants.iter()
+            .find(|t| t.tenant == n).unwrap().served;
+        assert_eq!(by_name("even"), 3);
+        assert_eq!(by_name("odd"), 2);
+    }
+}
