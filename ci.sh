@@ -92,12 +92,13 @@ fi
 # cache again undersized (--kv-context 12), so prefix pins, CoW
 # divergence, KV backpressure and the evict-pins-before-requeue path
 # all run together — pre-fix, pinned pages under pressure tripped the
-# scheduler's stall/sizing panics. The schema-5 JSON must re-parse and
+# scheduler's stall/sizing panics. The schema-6 JSON must re-parse and
 # actually record prefix reuse: a run that silently never hits the
 # prefix cache fails this step. The server-side counters
-# (queue_depth_max / rejected_429 / rejected_413) must be present and
-# zero on this socketless path — the HTTP smoke below is where they
-# move.
+# (queue_depth_max / rejected_429 / rejected_413, and the robustness
+# trio cancelled / deadline_expired / worker_restarts) must be present
+# and zero on this socketless path — the HTTP smokes below are where
+# they move.
 echo "== shared-prefix + copy-on-write serve smoke =="
 cargo run --release --quiet -- serve-bench \
     --family float,ternary --attn --heads 4 \
@@ -110,16 +111,17 @@ if command -v python3 >/dev/null 2>&1; then
     python3 - runs/BENCH_serve_prefix_smoke.json <<'PYEOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == 5, f"schema {doc['schema']} != 5"
+assert doc["schema"] == 6, f"schema {doc['schema']} != 6"
 assert doc["shared_prefix_tokens"] == 20, doc["shared_prefix_tokens"]
 hits = sum(f["prefix_hits"] for f in doc["families"])
 reused = sum(f["prefix_tokens_reused"] for f in doc["families"])
 assert hits > 0, "no serve-bench run ever hit the prefix cache"
 assert reused >= hits, f"{hits} hits reused only {reused} tokens"
 for fam in doc["families"]:
-    for key in ("queue_depth_max", "rejected_429", "rejected_413"):
+    for key in ("queue_depth_max", "rejected_429", "rejected_413",
+                "cancelled", "deadline_expired", "worker_restarts"):
         assert fam[key] == 0, f"{fam['family']}: {key} != 0 off-HTTP"
-print(f"runs/BENCH_serve_prefix_smoke.json: schema 5, "
+print(f"runs/BENCH_serve_prefix_smoke.json: schema 6, "
       f"{hits} prefix hits, {reused} tokens reused")
 PYEOF
 fi
@@ -210,6 +212,144 @@ try:
     assert "0 kv pages leaked" in out, out
     print(f"spectra serve smoke: {statuses.count(200)}x200 + "
           f"{statuses.count(429)}x429, /stats parse clean, shutdown clean")
+finally:
+    if proc.poll() is None:
+        proc.kill()
+PYEOF
+fi
+
+# Chaos smoke: `spectra serve` under deliberate abuse — clients that
+# hang up mid-stream (RST on close, so the relay's chunk write fails
+# and cancels the lane) on BOTH shards, plus one fault-plan panic
+# injected into shard 0's worker (--fault-panic-step). The server must
+# keep answering: /stats shows cancelled > 0 and worker_restarts >= 1,
+# a fresh request completes on each shard afterwards (shard 1 never
+# died; shard 0 was rebuilt by its supervisor), and POST /shutdown
+# still drains with zero leaked KV pages — `spectra serve` exits
+# non-zero on a leak, so the exit code is the leak check.
+echo "== chaos smoke (mid-stream disconnects + injected worker panic) =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json, re, socket, struct, subprocess, time
+
+proc = subprocess.Popen(
+    ["target/release/spectra", "serve",
+     "--port", "0", "--shards", "2", "--lanes", "2", "--threads", "1",
+     "--queue-cap", "8", "--kv-context", "420", "--prefill-chunk", "4",
+     "--attn", "--heads", "4", "--family", "ternary",
+     "--vocab", "64", "--hidden", "32", "--glu", "48", "--layers", "2",
+     "--mp", "1", "--fault-panic-step", "3"],
+    stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+try:
+    port = None
+    for _ in range(50):
+        line = proc.stdout.readline()
+        m = re.search(r"listening on 127\.0\.0\.1:(\d+)", line)
+        if m:
+            port = int(m.group(1))
+            break
+    assert port, "spectra serve never reported its address"
+
+    def shard_of(prompt, shards):
+        # Mirror of shard_for_prompt: FNV-1a over the first KV page
+        # (16 tokens) of little-endian u32s.
+        h = 0xcbf29ce484222325
+        for t in prompt[:16]:
+            for b in t.to_bytes(4, "little"):
+                h ^= b
+                h = (h * 0x100000001b3) % (1 << 64)
+        return h % shards
+
+    # One deterministic prompt per shard (distinct first tokens).
+    prompt_on = {}
+    for i in range(1, 200):
+        prompt_on.setdefault(shard_of([i, 9], 2), [i, 9])
+        if len(prompt_on) == 2:
+            break
+    assert set(prompt_on) == {0, 1}, prompt_on
+
+    def gen_body(prompt, max_new):
+        return (f'{{"prompt":{list(prompt)},"max_new_tokens":{max_new},'
+                f'"tenant":"chaos"}}').encode()
+
+    def disconnect_mid_stream(prompt):
+        # Start a long stream, read the head + first chunk (so the
+        # request provably holds a lane), then close with SO_LINGER 0:
+        # the RST makes the server's next chunk write fail, which is
+        # exactly what the relay's cancel path keys on.
+        s = socket.create_connection(("127.0.0.1", port), timeout=60)
+        body = gen_body(prompt, 400)
+        s.sendall((f"POST /generate HTTP/1.1\r\nHost: chaos\r\n"
+                   f"Connection: close\r\nContent-Length: {len(body)}"
+                   f"\r\n\r\n").encode() + body)
+        f = s.makefile("rb")
+        status = int(f.readline().split()[1])
+        assert status == 200, f"disconnect client not admitted: {status}"
+        while f.readline() not in (b"\r\n", b""):
+            pass  # headers
+        assert f.readline().strip(), "first chunk size line"
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                     struct.pack("ii", 1, 0))
+        s.close()
+
+    # Two hang-ups per shard. Shard 0's worker also panics after its
+    # third step (fault plan) — in-flight lanes there die with the
+    # incarnation; shard 1's cancels exercise the clean relay path.
+    for shard in (0, 1):
+        for _ in range(2):
+            disconnect_mid_stream(prompt_on[shard])
+
+    def stats():
+        s = socket.create_connection(("127.0.0.1", port), timeout=60)
+        s.sendall(b"GET /stats HTTP/1.1\r\nHost: chaos\r\n"
+                  b"Connection: close\r\nContent-Length: 0\r\n\r\n")
+        raw = s.makefile("rb").read()
+        s.close()
+        return json.loads(raw.split(b"\r\n\r\n", 1)[1])
+
+    deadline = time.time() + 60
+    doc = None
+    while time.time() < deadline:
+        doc = stats()
+        if doc["cancelled"] >= 1 and doc["worker_restarts"] >= 1:
+            break
+        time.sleep(0.2)
+    assert doc["cancelled"] >= 1, f"no cancels recorded: {doc}"
+    assert doc["worker_restarts"] >= 1, f"no worker restart: {doc}"
+
+    def complete_request(prompt):
+        # A fresh request must stream to a done trailer (retry briefly:
+        # lanes may still be winding down from the chaos above).
+        for _ in range(50):
+            s = socket.create_connection(("127.0.0.1", port), timeout=60)
+            body = gen_body(prompt, 4)
+            s.sendall((f"POST /generate HTTP/1.1\r\nHost: chaos\r\n"
+                       f"Connection: close\r\nContent-Length: {len(body)}"
+                       f"\r\n\r\n").encode() + body)
+            f = s.makefile("rb")
+            status = int(f.readline().split()[1])
+            payload = f.read()
+            s.close()
+            if status == 200 and b'"done"' in payload and \
+               b'"finish_reason"' in payload:
+                return
+            time.sleep(0.2)
+        raise AssertionError(f"no completed stream on prompt {prompt}")
+
+    complete_request(prompt_on[1])  # the shard that never died
+    complete_request(prompt_on[0])  # the shard the supervisor rebuilt
+
+    s = socket.create_connection(("127.0.0.1", port), timeout=60)
+    s.sendall(b"POST /shutdown HTTP/1.1\r\nHost: chaos\r\n"
+              b"Connection: close\r\nContent-Length: 0\r\n\r\n")
+    assert int(s.makefile("rb").readline().split()[1]) == 200
+    s.close()
+    out, _ = proc.communicate(timeout=300)
+    assert proc.returncode == 0, f"serve exited {proc.returncode}:\n{out}"
+    assert "0 kv pages leaked" in out, out
+    print(f"chaos smoke: cancelled={doc['cancelled']} "
+          f"worker_restarts={doc['worker_restarts']}, both shards "
+          f"answering, shutdown clean")
 finally:
     if proc.poll() is None:
         proc.kill()

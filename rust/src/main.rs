@@ -77,6 +77,9 @@ commands:
                 [--family float] [--attn] [--heads 4] [--group 128]
                 [--vocab 512] [--hidden 256] [--glu 704] [--layers 4]
                 [--mp 2] [--seed 0]
+                [--read-timeout-ms 10000] [--write-timeout-ms 30000]
+                [--relay-timeout-ms 120000] [--queue-deadline-ms 0]
+                [--decode-deadline-ms 0] [--fault-panic-step 0]
                 endpoints: POST /generate (JSON {\"prompt\":[ids],
                 \"max_new_tokens\":N, \"tenant\":\"x\", \"top_k\":K,
                 \"temperature\":T, \"seed\":S}; streams ndjson token
@@ -86,7 +89,20 @@ commands:
                 each shard has a --queue-cap bounded tenant-fair
                 admission queue (429 + Retry-After when full; 413 when
                 prompt+max_new_tokens exceeds --kv-context; see the
-                README's \"Serving over HTTP\" section)
+                README's \"Serving over HTTP\" and \"Robustness\"
+                sections). Robustness knobs: --queue-deadline-ms
+                expires requests parked longer than N ms with an
+                in-band deadline_expired error line (0 = wait forever),
+                --decode-deadline-ms truncates streams decoding longer
+                than N ms with finish_reason deadline_expired (0 =
+                decode to budget), --relay-timeout-ms bounds stream
+                silence before the relay gives up (relay_timeout error
+                line; worker crashes are reported separately as
+                worker_restarted), --read/--write-timeout-ms set the
+                socket timeouts, and --fault-panic-step N injects one
+                worker panic on shard 0 after its Nth scheduler step
+                (chaos testing: the supervisor restarts the worker and
+                /stats counts worker_restarts)
   bench-report  paper-style tables from a suite run
                 --results runs/suite/suite_results.json --experiment all
   help          print this text (also: bare `spectra` or --help)
@@ -291,9 +307,9 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// can undersize the cache to exercise the backpressure path (requeues
 /// reported per family; pinned prefixes are evicted before any lane
 /// requeues). `--json <path>` additionally writes the machine-readable
-/// sweep (BENCH_serve.json, schema 5 — see docs/BENCH_SCHEMA.md; the
-/// schema-5 server-side fields are zero on this socketless path) and
-/// re-parses the file so a malformed write fails loudly.
+/// sweep (BENCH_serve.json, schema 6 — see docs/BENCH_SCHEMA.md; the
+/// server-side and robustness fields are zero on this socketless path)
+/// and re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     use spectra::serve::{bench_requests_shared, DecodeModel, FamilySpec,
                          LatentAttnLm, LatentLm, LmDims, Scheduler};
@@ -497,19 +513,24 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("prefix_tokens_reused",
                  Json::num(r.prefix_reused as f64)),
                 ("cow_copies", Json::num(r.cow_copies as f64)),
-                // Schema-5 server-side counters: serve-bench drives the
-                // scheduler directly (no HTTP admission layer), so the
-                // queue-depth and rejection counters are structurally
-                // zero here — `spectra serve`'s /stats is where they
-                // move. Kept in the schema so one parser reads both.
+                // Server-side counters (schema 5) and robustness
+                // counters (schema 6): serve-bench drives the
+                // scheduler directly — no HTTP admission layer, no
+                // client disconnects, no supervised workers — so all
+                // of these are structurally zero here; `spectra
+                // serve`'s /stats is where they move. Kept in the
+                // schema so one parser reads both.
                 ("queue_depth_max", Json::num(0.0)),
                 ("rejected_429", Json::num(0.0)),
                 ("rejected_413", Json::num(0.0)),
+                ("cancelled", Json::num(0.0)),
+                ("deadline_expired", Json::num(0.0)),
+                ("worker_restarts", Json::num(0.0)),
             ]))
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(5.0)),
+            ("schema", Json::num(6.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
@@ -677,7 +698,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// against. Exits non-zero if any shard still holds KV pages after the
 /// drain — a leak is a bug, not a statistic.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use spectra::serve::{FamilySpec, LmDims};
+    use spectra::serve::{FamilySpec, FaultPlan, LmDims};
     use spectra::server::{Server, ServerConfig};
 
     let dims = LmDims {
@@ -719,6 +740,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dims,
         mp,
         seed: args.get_u64("seed", 0),
+        read_timeout_ms: args.get_u64("read-timeout-ms", 10_000).max(1),
+        write_timeout_ms: args.get_u64("write-timeout-ms", 30_000).max(1),
+        relay_timeout_ms: args.get_u64("relay-timeout-ms", 120_000).max(1),
+        queue_deadline_ms: args.get_u64("queue-deadline-ms", 0),
+        decode_deadline_ms: args.get_u64("decode-deadline-ms", 0),
+        fault_plan: FaultPlan {
+            panic_after_step: match args.get_usize("fault-panic-step", 0) {
+                0 => None,
+                n => Some(n),
+            },
+            ..FaultPlan::default()
+        },
     };
     let shards = cfg.shards;
     let lanes = cfg.lanes;
@@ -752,19 +785,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let finals = server.shutdown();
     let mut leaked = 0usize;
     for s in &finals {
-        println!("shard {}: served {} | 429 {} | 413 {} | queue depth max \
-                  {} | generated {} tok | requeued {} | prefix hits {} | \
-                  kv pages after drain {}",
+        println!("shard {}: served {} | 429 {} | 413 {} | cancelled {} | \
+                  deadline expired {} | worker restarts {} | queue depth \
+                  max {} | generated {} tok | requeued {} | prefix hits \
+                  {} | kv pages after drain {}",
                  s.shard, s.served, s.rejected_429, s.rejected_413,
+                 s.cancelled, s.deadline_expired, s.worker_restarts,
                  s.queue_depth_max, s.sched.generated_tokens,
                  s.sched.requeued, s.sched.prefix_hits, s.kv_pages);
         for t in &s.tenants {
             println!("  tenant {:<12} served {} queued {} rejected {}",
                      t.tenant, t.served, t.queued, t.rejected);
         }
-        leaked += s.kv_pages;
+        leaked = leaked.saturating_add(s.kv_pages);
     }
     if leaked > 0 {
+        // usize::MAX marks a shard whose worker failed permanently
+        // (restart budget exhausted) rather than a literal page count.
         anyhow::bail!("{leaked} kv page(s) leaked across shards after drain");
     }
     println!("spectra serve: shutdown clean, 0 kv pages leaked");

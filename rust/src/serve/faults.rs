@@ -1,0 +1,119 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production failure modes — KV-pool exhaustion, worker panics,
+//! clients hanging up mid-stream — are timing-dependent by nature,
+//! which makes their tests flaky by nature unless the faults are
+//! *scripted*. A [`FaultPlan`] is that script: a declarative list of
+//! faults keyed to deterministic coordinates (scheduler step numbers,
+//! admission ordinals, token indices) instead of wall-clock time, so a
+//! chaos test reproduces the identical failure sequence on every run
+//! and at every machine speed.
+//!
+//! Three layers consume the plan:
+//!
+//! - the [`Scheduler`](crate::serve::Scheduler) treats every live lane
+//!   as KV-refused on the steps in
+//!   [`FaultPlan::out_of_pages_steps`] (the model is not invoked at
+//!   all that step, so the forcing works identically for all four
+//!   storage families and for decay models with no KV cache);
+//! - the shard worker ([`crate::server`]) drops a request's stream
+//!   sink at the scripted token index of [`FaultPlan::disconnect_at`]
+//!   — indistinguishable from the client hanging up — and panics
+//!   after the step in [`FaultPlan::panic_after_step`] to exercise
+//!   the supervisor's catch_unwind/rebuild path;
+//! - the paged KV cache can separately force real `OutOfPages`
+//!   refusals via
+//!   [`KvCache::inject_refusals`](crate::serve::KvCache::inject_refusals)
+//!   (plumbed through
+//!   [`AttnLm::inject_kv_refusals`](crate::serve::AttnLm::inject_kv_refusals)),
+//!   which exercises the genuine refusal path rather than the
+//!   scheduler-level synthesis.
+//!
+//! The empty plan is the default and injects nothing: every consumer
+//! checks `is_empty()` first, so the fault hooks cost nothing on the
+//! healthy path.
+
+/// A deterministic fault script, threaded into the scheduler and the
+/// shard worker. All coordinates are deterministic counters, never
+/// wall clock. The default (all fields empty) injects nothing.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Scheduler steps (1-based: the Nth call that actually runs
+    /// lanes) on which *every* live lane is treated as refused by KV
+    /// admission — the full-pool backpressure path (release pages,
+    /// requeue, deferred readmission) without needing a cache small
+    /// enough to actually fill.
+    pub out_of_pages_steps: Vec<usize>,
+    /// Panic the shard worker after it completes this scheduler step
+    /// (1-based, counted by the worker). The supervisor's
+    /// catch_unwind / rebuild / restart-counting path is the consumer.
+    /// Consumed by the first worker incarnation only, so the rebuilt
+    /// worker does not re-panic in a loop.
+    pub panic_after_step: Option<usize>,
+    /// `(request ordinal, token index)` pairs: the shard worker drops
+    /// request `ordinal`'s stream sink (the admission ticket, 0-based
+    /// in admission order) once the stream has delivered `token
+    /// index` — exactly what a mid-stream client hangup looks like
+    /// from the worker's side, minus the socket timing.
+    pub disconnect_at: Vec<(usize, usize)>,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing (the healthy-path default).
+    pub fn is_empty(&self) -> bool {
+        self.out_of_pages_steps.is_empty()
+            && self.panic_after_step.is_none()
+            && self.disconnect_at.is_empty()
+    }
+
+    /// Should scheduler step `step` (1-based) treat every live lane as
+    /// KV-refused?
+    pub fn forces_out_of_pages(&self, step: usize) -> bool {
+        self.out_of_pages_steps.contains(&step)
+    }
+
+    /// Should the worker panic after completing step `step` (1-based)?
+    pub fn panics_after(&self, step: usize) -> bool {
+        self.panic_after_step == Some(step)
+    }
+
+    /// The scripted disconnect index for request `ordinal`, if any:
+    /// the stream is cut once token `index` has been delivered.
+    pub fn disconnect_index(&self, ordinal: usize) -> Option<usize> {
+        self.disconnect_at.iter()
+            .find(|&&(o, _)| o == ordinal)
+            .map(|&(_, idx)| idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_empty_and_injects_nothing() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(!p.forces_out_of_pages(1));
+        assert!(!p.panics_after(1));
+        assert_eq!(p.disconnect_index(0), None);
+    }
+
+    #[test]
+    fn coordinates_match_exactly() {
+        let p = FaultPlan {
+            out_of_pages_steps: vec![3, 5],
+            panic_after_step: Some(7),
+            disconnect_at: vec![(0, 2), (4, 0)],
+        };
+        assert!(!p.is_empty());
+        assert!(p.forces_out_of_pages(3));
+        assert!(p.forces_out_of_pages(5));
+        assert!(!p.forces_out_of_pages(4));
+        assert!(p.panics_after(7));
+        assert!(!p.panics_after(6));
+        assert_eq!(p.disconnect_index(0), Some(2));
+        assert_eq!(p.disconnect_index(4), Some(0));
+        assert_eq!(p.disconnect_index(1), None);
+    }
+}

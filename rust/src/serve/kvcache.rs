@@ -140,6 +140,10 @@ pub struct KvCache {
     free_seq_ids: Vec<usize>,
     /// Copy-on-write page copies performed since construction.
     cow_copies: usize,
+    /// Fault injection ([`KvCache::inject_refusals`]): the next this
+    /// many claims refuse with [`OutOfPages`] regardless of free
+    /// pages. 0 (the default) on the healthy path.
+    forced_refusals: usize,
 }
 
 impl KvCache {
@@ -156,7 +160,8 @@ impl KvCache {
                   refcounts: vec![0; cfg.n_pages],
                   seqs: Vec::new(),
                   free_seq_ids: Vec::new(),
-                  cow_copies: 0 }
+                  cow_copies: 0,
+                  forced_refusals: 0 }
     }
 
     /// A cache sized for `lanes` concurrent sequences of up to
@@ -275,6 +280,13 @@ impl KvCache {
         let len = self.seqs[seq].len;
         debug_assert!(self.seqs[seq].live,
                       "begin_tokens on retired seq {seq}");
+        // Fault injection: a scripted refusal takes the *exact* real
+        // refusal exit — before any mutation, so the all-or-nothing
+        // contract holds for injected faults too.
+        if self.forced_refusals > 0 {
+            self.forced_refusals -= 1;
+            return Err(OutOfPages { seq, len });
+        }
         // Is position `len` inside a shared page? Only possible when
         // the last mapped page is partially filled (len not
         // page-aligned); full shared pages are never written again.
@@ -397,6 +409,16 @@ impl KvCache {
     /// Live (allocated, not yet freed) sequences.
     pub fn live_seqs(&self) -> usize {
         self.seqs.iter().filter(|s| s.live).count()
+    }
+
+    /// Fault injection: force the next `n` claims
+    /// ([`KvCache::begin_token`] / [`KvCache::begin_tokens`]) to
+    /// refuse with [`OutOfPages`] even though free pages exist. Unlike
+    /// the scheduler-level forcing this drives the *real* refusal
+    /// path through the model's claim code; chaos tests use it to
+    /// prove injected and genuine exhaustion are handled identically.
+    pub fn inject_refusals(&mut self, n: usize) {
+        self.forced_refusals += n;
     }
 }
 
@@ -756,6 +778,25 @@ mod tests {
         assert_eq!(c.free_page_count(), 0);
         c.free_seq(s);
         assert_eq!(c.free_page_count(), 4);
+    }
+
+    #[test]
+    fn injected_refusals_take_the_real_out_of_pages_exit() {
+        // Forced refusals refuse without mutating anything (the
+        // all-or-nothing contract), decrement one per claim, and the
+        // cache behaves normally once the script is spent.
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        c.begin_token(s).unwrap();
+        c.inject_refusals(2);
+        for _ in 0..2 {
+            let err = c.begin_token(s).unwrap_err();
+            assert_eq!(err, OutOfPages { seq: s, len: 1 });
+            assert_eq!(c.seq_len(s), 1, "injected refusal mutated the seq");
+        }
+        assert_eq!(c.begin_token(s).unwrap(), 1,
+                   "spent fault script must stop refusing");
+        assert_eq!(c.pages_in_use(), 1);
     }
 
     #[test]

@@ -64,17 +64,19 @@
 //! `deploy::decode_tokens_per_sec_bits` gives the analytic roofline
 //! keyed by each model's [`model::DecodeModel::effective_bits_per_param`].
 
+pub mod faults;
 pub mod kvcache;
 pub mod model;
 pub mod scheduler;
 
+pub use faults::FaultPlan;
 pub use kvcache::{KvCache, KvCacheConfig, OutOfPages, KV_PAGE_TOKENS};
 pub use model::{AttnBlock, AttnLm, DecodeModel, DenseLm, FamilySpec,
                 LatentAttnBlock, LatentAttnLm, LatentBlock, LatentLm,
                 LmDims, QuantLm, QuantMethod, SpectraBlock, SpectraLm,
                 TernaryLm};
-pub use scheduler::{Completion, GenRequest, Sampling, Scheduler, ServeStats,
-                    StreamEvent, TenantStats};
+pub use scheduler::{Completion, FinishReason, GenRequest, Sampling,
+                    Scheduler, ServeStats, StreamEvent, TenantStats};
 
 /// Deterministic corpus-shaped bench/demo traffic: prompt strings from
 /// [`crate::eval::serve_prompts`] (the eval task generator's contexts,

@@ -1116,6 +1116,15 @@ impl<L: LinearFormat> AttnLm<L> {
         self.lock_cache().cache.cow_copies()
     }
 
+    /// Fault injection: force the next `n` KV page claims to refuse
+    /// with `OutOfPages` ([`KvCache::inject_refusals`]), driving the
+    /// model's *real* refusal/rejection path — chaos tests use it to
+    /// prove injected and genuine pool exhaustion behave identically
+    /// (per-lane rejection, release, requeue; never a panic).
+    pub fn inject_kv_refusals(&self, n: usize) {
+        self.lock_cache().cache.inject_refusals(n);
+    }
+
     /// Every linear in the model (per block: q, k, v, o, gate, up,
     /// down; then the head).
     pub fn linears(&self) -> Vec<&L> {

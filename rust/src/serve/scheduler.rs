@@ -60,6 +60,7 @@
 use std::collections::VecDeque;
 
 use crate::runtime::{DecodeScratch, SplitMix64, WorkerPool};
+use crate::serve::faults::FaultPlan;
 use crate::serve::model::DecodeModel;
 
 /// Per-lane sampling policy.
@@ -94,6 +95,36 @@ impl GenRequest {
     }
 }
 
+/// Why a request's stream ended — carried on every [`Completion`] and
+/// surfaced verbatim in the HTTP done trailer's `finish_reason` field,
+/// so clients can tell a budget-complete stream from a truncated or
+/// failed one without parsing error prose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The request generated its full `max_new_tokens` budget — the
+    /// normal completion.
+    Length,
+    /// The decode wall-clock deadline fired ([`Scheduler::expire`]):
+    /// the stream was truncated; the tokens delivered so far stand.
+    DeadlineExpired,
+    /// The request's context alone exceeds the model's whole KV page
+    /// pool — a sizing error no amount of requeueing can fix. The
+    /// request fails (partial tokens, if any, are in the completion);
+    /// the process no longer panics for it.
+    KvOverflow,
+}
+
+impl FinishReason {
+    /// Wire label used in the ndjson done trailer.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::DeadlineExpired => "deadline_expired",
+            FinishReason::KvOverflow => "kv_overflow",
+        }
+    }
+}
+
 /// A finished request: the generated continuation (prompt excluded).
 #[derive(Debug, Clone)]
 pub struct Completion {
@@ -107,6 +138,9 @@ pub struct Completion {
     /// prefill pays `prompt_len` steps; a prefill chunk >= prompt_len
     /// pays 1.
     pub ttft_steps: usize,
+    /// Why the stream ended ([`FinishReason::Length`] for the normal
+    /// budget-complete case).
+    pub finish_reason: FinishReason,
 }
 
 /// An incremental streaming event emitted by
@@ -206,6 +240,56 @@ pub struct ServeStats {
     /// Per-tenant served/queued/rejected counters (admission
     /// fairness telemetry). Server-side; empty off the HTTP path.
     pub tenants: Vec<TenantStats>,
+    /// Requests aborted mid-flight ([`Scheduler::cancel`]) — queued or
+    /// live lanes whose client went away. A cancelled lane's
+    /// delivered-work counters are rolled back (nobody received the
+    /// stream), its pages are released, and no completion is produced.
+    pub cancelled: usize,
+    /// Requests whose deadline fired ([`Scheduler::expire`] — parked
+    /// past the queue-admission deadline, or decoding past the
+    /// wall-clock cap). Unlike cancellation the truncated stream *was*
+    /// delivered, so delivered-work counters stand.
+    pub deadline_expired: usize,
+    /// Shard-worker panics survived by the supervisor (the worker's
+    /// model+scheduler stack was rebuilt and the shard kept serving).
+    /// Server-side counter, 0 off the HTTP path.
+    pub worker_restarts: usize,
+}
+
+impl ServeStats {
+    /// Fold `other` into `self`: additive counters sum, peak counters
+    /// take the max, tenant rows merge by name. This is how the shard
+    /// supervisor accumulates stats across worker restarts — a rebuilt
+    /// worker starts a fresh `ServeStats`, and `/stats` must never go
+    /// backwards.
+    pub fn absorb(&mut self, other: &ServeStats) {
+        self.batch_steps += other.batch_steps;
+        self.lane_steps += other.lane_steps;
+        self.prefill_tokens += other.prefill_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.peak_occupancy = self.peak_occupancy.max(other.peak_occupancy);
+        self.ttft_steps += other.ttft_steps;
+        self.requeued += other.requeued;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_tokens_reused += other.prefix_tokens_reused;
+        self.cow_copies += other.cow_copies;
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        self.rejected_429 += other.rejected_429;
+        self.rejected_413 += other.rejected_413;
+        self.cancelled += other.cancelled;
+        self.deadline_expired += other.deadline_expired;
+        self.worker_restarts += other.worker_restarts;
+        for t in &other.tenants {
+            match self.tenants.iter_mut().find(|m| m.tenant == t.tenant) {
+                Some(m) => {
+                    m.served += t.served;
+                    m.queued += t.queued;
+                    m.rejected += t.rejected;
+                }
+                None => self.tenants.push(t.clone()),
+            }
+        }
+    }
 }
 
 struct Lane {
@@ -303,6 +387,9 @@ pub struct Scheduler<'m, M: DecodeModel + ?Sized> {
     /// Consecutive steps in which no lane ran (every live lane was
     /// rejected) — the wedge detector behind the sizing panic.
     stalled_steps: usize,
+    /// Deterministic fault script ([`crate::serve::faults`]); the
+    /// default empty plan injects nothing.
+    faults: FaultPlan,
     stats: ServeStats,
 }
 
@@ -326,6 +413,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             prefill_chunk: 1,
             defer_admission: false,
             stalled_steps: 0,
+            faults: FaultPlan::default(),
             stats: ServeStats::default(),
         }
     }
@@ -383,6 +471,84 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
 
     pub fn stats(&self) -> &ServeStats {
         &self.stats
+    }
+
+    /// Install a deterministic fault script ([`FaultPlan`]). Steps
+    /// already taken are unaffected; the default empty plan injects
+    /// nothing.
+    pub fn set_fault_plan(&mut self, faults: FaultPlan) {
+        self.faults = faults;
+    }
+
+    /// Abort request `id` — queued or live — because its consumer went
+    /// away (client hangup). A queued request is simply removed; a
+    /// live lane releases its model-side resources (KV pages, via the
+    /// same [`DecodeModel::retire_state`] hook lane retirement uses)
+    /// and its delivered-work stats are rolled back exactly like an
+    /// abandoned requeue attempt — nobody received the stream, so
+    /// throughput numbers must not count it. No [`Completion`] is
+    /// produced. Returns whether the request was found.
+    ///
+    /// Cancelling between steps is immediate: the lane's pages are
+    /// free before the next [`Scheduler::step_observed`] call admits
+    /// or runs anything.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        if let Some(qi) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(qi);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        for slot in &mut self.lanes {
+            if slot.as_ref().is_some_and(|l| l.req.id == id) {
+                let mut lane = slot.take().unwrap();
+                self.model.retire_state(&mut lane.state);
+                rollback_delivered(&mut self.stats, &lane);
+                self.free_states.push(lane.state);
+                self.stats.cancelled += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Expire request `id` on a deadline: the stream ends *now*, with
+    /// whatever tokens it has, marked [`FinishReason::DeadlineExpired`].
+    /// Unlike [`Scheduler::cancel`] the consumer is still there and
+    /// received the truncated stream, so delivered-work stats stand
+    /// (a lane expired mid-prefill leaves its partial prefill counted
+    /// — the kernel work was done and the deadline, not backpressure,
+    /// abandoned it). A queued request expires to an empty-token
+    /// completion. Returns `None` when `id` is not present.
+    pub fn expire(&mut self, id: usize) -> Option<Completion> {
+        if let Some(qi) = self.queue.iter().position(|r| r.id == id) {
+            let req = self.queue.remove(qi).expect("position was in range");
+            self.stats.deadline_expired += 1;
+            return Some(Completion {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                lane_steps: 0,
+                ttft_steps: 0,
+                finish_reason: FinishReason::DeadlineExpired,
+            });
+        }
+        for slot in &mut self.lanes {
+            if slot.as_ref().is_some_and(|l| l.req.id == id) {
+                let mut lane = slot.take().unwrap();
+                self.model.retire_state(&mut lane.state);
+                self.free_states.push(lane.state);
+                self.stats.deadline_expired += 1;
+                return Some(Completion {
+                    id: lane.req.id,
+                    prompt_len: lane.req.prompt.len(),
+                    tokens: lane.generated,
+                    lane_steps: lane.steps,
+                    ttft_steps: lane.ttft_steps,
+                    finish_reason: FinishReason::DeadlineExpired,
+                });
+            }
+        }
+        None
     }
 
     /// Fill empty lanes from the queue, at most `cap` this call (the
@@ -497,13 +663,28 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         if self.span_buf.is_empty() {
             return;
         }
-        let mut state_refs: Vec<&mut [f32]> = self.lanes.iter_mut()
-            .filter_map(|s| s.as_mut().map(|l| l.state.as_mut_slice()))
-            .collect();
-        self.model.step_spans_into(&mut state_refs, &self.token_buf,
-                                   &self.span_buf, &self.pool,
-                                   &mut self.scratch);
-        drop(state_refs);
+        // Deterministic fault injection: on a scripted step
+        // ([`FaultPlan::out_of_pages_steps`]) every live lane is
+        // treated as KV-refused and the model is not invoked at all.
+        // Skipping the kernels makes the forcing family-blind (decay
+        // models have no cache to overflow, yet still exercise the
+        // full requeue path) and cannot perturb later steps: a
+        // refused lane restarts from scratch anyway.
+        let forced = self.faults
+            .forces_out_of_pages(self.stats.batch_steps + 1);
+        if forced {
+            self.scratch.rejected.clear();
+            self.scratch.rejected.extend(0..self.span_buf.len());
+            self.scratch.cow_copies = 0;
+            self.scratch.logits.reset2(0, self.model.dims().vocab);
+        } else {
+            let mut state_refs: Vec<&mut [f32]> = self.lanes.iter_mut()
+                .filter_map(|s| s.as_mut().map(|l| l.state.as_mut_slice()))
+                .collect();
+            self.model.step_spans_into(&mut state_refs, &self.token_buf,
+                                       &self.span_buf, &self.pool,
+                                       &mut self.scratch);
+        }
 
         let live = self.span_buf.len();
         let ran = live - self.scratch.rejected.len();
@@ -514,18 +695,20 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         // guards below would fire spuriously on a recoverable state
         // (pages held by evictable pins, not by any lane). An eviction
         // is forward progress — freed pages are what the requeued
-        // lanes restart into.
-        let evicted = ran < live && self.model.release_cached_pages();
-        if ran == 0 && !evicted {
-            if live == 1 {
-                // Requeueing cannot help a lane refused while no other
-                // lane holds pages and nothing is pinned: its context
-                // alone exceeds the whole pool.
-                panic!("serve: kv cache smaller than a single request's \
-                        context (claim refused with every other lane \
-                        idle) — size the cache for at least prompt + \
-                        max_new_tokens tokens per lane");
-            }
+        // lanes restart into. A forced (injected) refusal evicts
+        // nothing: the pool is not actually under pressure.
+        let evicted = !forced && ran < live
+            && self.model.release_cached_pages();
+        // A lane refused while it is the only live lane and nothing is
+        // pinned cannot be helped by requeueing: its context alone
+        // exceeds the whole pool. This used to panic the process; it
+        // now fails *that request* with [`FinishReason::KvOverflow`]
+        // in the retire loop below (direct `Scheduler` users keep
+        // their process; the HTTP path already 413s these upstream).
+        let overflow = ran == 0 && !evicted && !forced && live == 1;
+        if ran > 0 || evicted || forced || overflow {
+            self.stalled_steps = 0;
+        } else {
             self.stalled_steps += 1;
             // After an all-rejected step every lane releases its pages,
             // so the next admission claims from a free pool — repeated
@@ -537,8 +720,6 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                         max_new_tokens tokens per lane",
                        self.stalled_steps);
             }
-        } else {
-            self.stalled_steps = 0;
         }
         self.stats.batch_steps += 1;
         self.stats.lane_steps += ran;
@@ -565,46 +746,33 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             si += 1;
             if rejected {
                 // KV backpressure: release this lane's model-side
-                // resources and put the request back at the head of the
-                // queue. Decoding is deterministic, so the restarted
-                // request reproduces the same stream from scratch —
-                // requeues cost latency, never correctness.
+                // resources. Normally the request goes back to the
+                // head of the queue (decoding is deterministic, so the
+                // restart reproduces the same stream from scratch —
+                // requeues cost latency, never correctness); the
+                // `overflow` case instead error-completes the request,
+                // because requeueing a context that exceeds the whole
+                // pool would livelock.
                 let mut lane = slot.take().unwrap();
                 self.model.retire_state(&mut lane.state);
+                if overflow {
+                    rollback_delivered(&mut self.stats, &lane);
+                    self.free_states.push(lane.state);
+                    done.push(Completion {
+                        id: lane.req.id,
+                        prompt_len: lane.req.prompt.len(),
+                        tokens: lane.generated,
+                        lane_steps: lane.steps,
+                        ttft_steps: lane.ttft_steps,
+                        finish_reason: FinishReason::KvOverflow,
+                    });
+                    continue;
+                }
                 self.free_states.push(lane.state);
                 self.stats.requeued += 1;
                 obs(StreamEvent::Requeued { id: lane.req.id,
                                             discarded: lane.generated.len() });
-                // Roll the abandoned attempt back out of the delivered-
-                // work counters: the restart will re-earn them, and
-                // token/prefill/TTFT totals must never double-count
-                // discarded work (throughput reporting divides these by
-                // wall clock). batch_steps/lane_steps/cow_copies stay —
-                // they measure kernel work actually executed. Checked
-                // subtraction: accounting drift here would otherwise
-                // wrap silently and poison every later benchmark
-                // number.
-                self.stats.generated_tokens = self.stats.generated_tokens
-                    .checked_sub(lane.generated.len())
-                    .expect("requeue rollback underflowed generated_tokens");
-                let fed = lane.pos.checked_sub(lane.prefix_reused)
-                    .expect("lane.pos fell below its reused prefix");
-                self.stats.prefill_tokens = self.stats.prefill_tokens
-                    .checked_sub(fed)
-                    .expect("requeue rollback underflowed prefill_tokens");
-                self.stats.ttft_steps = self.stats.ttft_steps
-                    .checked_sub(lane.ttft_steps)
-                    .expect("requeue rollback underflowed ttft_steps");
-                if lane.prefix_reused > 0 {
-                    self.stats.prefix_tokens_reused =
-                        self.stats.prefix_tokens_reused
-                        .checked_sub(lane.prefix_reused)
-                        .expect("requeue rollback underflowed \
-                                 prefix_tokens_reused");
-                    self.stats.prefix_hits = self.stats.prefix_hits
-                        .checked_sub(1)
-                        .expect("requeue rollback underflowed prefix_hits");
-                }
+                rollback_delivered(&mut self.stats, &lane);
                 requeue.push(lane.req);
                 continue;
             }
@@ -645,6 +813,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                         tokens: lane.generated,
                         lane_steps: lane.steps,
                         ttft_steps: lane.ttft_steps,
+                        finish_reason: FinishReason::Length,
                     });
                 }
             }
@@ -681,6 +850,36 @@ impl<M: DecodeModel + ?Sized> Drop for Scheduler<'_, M> {
                 model.retire_state(&mut lane.state);
             }
         }
+    }
+}
+
+/// Roll an abandoned lane's delivered-work counters back out of
+/// `stats`: the work was discarded (requeue restart will re-earn it;
+/// a cancel/overflow never delivers it), and token/prefill/TTFT
+/// totals must never count work nobody received (throughput reporting
+/// divides these by wall clock). `batch_steps`/`lane_steps`/
+/// `cow_copies` stay — they measure kernel work actually executed.
+/// Checked subtraction: accounting drift here would otherwise wrap
+/// silently and poison every later benchmark number.
+fn rollback_delivered(stats: &mut ServeStats, lane: &Lane) {
+    stats.generated_tokens = stats.generated_tokens
+        .checked_sub(lane.generated.len())
+        .expect("rollback underflowed generated_tokens");
+    let fed = lane.pos.checked_sub(lane.prefix_reused)
+        .expect("lane.pos fell below its reused prefix");
+    stats.prefill_tokens = stats.prefill_tokens
+        .checked_sub(fed)
+        .expect("rollback underflowed prefill_tokens");
+    stats.ttft_steps = stats.ttft_steps
+        .checked_sub(lane.ttft_steps)
+        .expect("rollback underflowed ttft_steps");
+    if lane.prefix_reused > 0 {
+        stats.prefix_tokens_reused = stats.prefix_tokens_reused
+            .checked_sub(lane.prefix_reused)
+            .expect("rollback underflowed prefix_tokens_reused");
+        stats.prefix_hits = stats.prefix_hits
+            .checked_sub(1)
+            .expect("rollback underflowed prefix_hits");
     }
 }
 
@@ -1154,7 +1353,129 @@ mod tests {
         assert_eq!(st.queue_depth_max, 0);
         assert_eq!(st.rejected_429, 0);
         assert_eq!(st.rejected_413, 0);
+        assert_eq!(st.cancelled, 0);
+        assert_eq!(st.deadline_expired, 0);
+        assert_eq!(st.worker_restarts, 0);
         assert!(st.tenants.is_empty());
+    }
+
+    #[test]
+    fn cancel_aborts_queued_and_live_lanes_and_frees_pages() {
+        // Cancellation is the client-hangup path: a live lane's pages
+        // come back immediately, its delivered-work stats roll back
+        // (nobody received the stream), and no completion appears.
+        use crate::serve::model::LatentAttnLm;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 21);
+        let lm = latent.build_float(3, 8);
+        let mut sched = Scheduler::new(&lm, 2, 1);
+        for id in 0..3 {
+            sched.submit(GenRequest::greedy(id, vec![id as u32, 5], 6));
+        }
+        sched.step(); // ids 0 and 1 live, id 2 still queued
+        assert!(lm.kv_pages_in_use() > 0);
+        assert!(sched.cancel(2), "queued request must cancel");
+        assert!(sched.cancel(0), "live lane must cancel");
+        assert!(!sched.cancel(9), "unknown id must report not-found");
+        assert_eq!(sched.stats().cancelled, 2);
+        let done = sched.run();
+        assert_eq!(done.len(), 1, "cancelled requests yield no completion");
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].finish_reason, FinishReason::Length);
+        assert_eq!(lm.kv_pages_in_use(), 0, "cancelled lane leaked pages");
+        // Only the delivered stream is counted.
+        assert_eq!(sched.stats().generated_tokens, 6);
+        assert_eq!(sched.stats().prefill_tokens, 2);
+    }
+
+    #[test]
+    fn expire_truncates_live_streams_and_empties_queued_ones() {
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 1, 1);
+        sched.submit(GenRequest::greedy(0, vec![1, 2], 9));
+        sched.submit(GenRequest::greedy(1, vec![3], 9));
+        for _ in 0..4 {
+            sched.step(); // 2 prefill-ish steps + sampling: 3 tokens out
+        }
+        let c = sched.expire(0).expect("live lane must expire");
+        assert_eq!(c.finish_reason, FinishReason::DeadlineExpired);
+        assert_eq!(c.tokens.len(), 3, "truncated stream keeps its tokens");
+        // Expiry delivers the truncated stream, so stats stand.
+        assert_eq!(sched.stats().generated_tokens, 3);
+        let q = sched.expire(1).expect("queued request must expire");
+        assert_eq!(q.finish_reason, FinishReason::DeadlineExpired);
+        assert!(q.tokens.is_empty());
+        assert_eq!(sched.stats().deadline_expired, 2);
+        assert!(sched.expire(7).is_none());
+        assert_eq!(sched.pending(), 0);
+    }
+
+    #[test]
+    fn forced_out_of_pages_bounces_lanes_without_changing_streams() {
+        // The scheduler-level fault: scripted steps treat every live
+        // lane as KV-refused without invoking the model — works on a
+        // decay model (no cache at all), exercises the real requeue
+        // path, and must never change delivered streams or totals.
+        let lm = small_model();
+        let run = |plan: Option<FaultPlan>| {
+            let mut sched = Scheduler::new(&lm, 3, 1);
+            if let Some(p) = plan {
+                sched.set_fault_plan(p);
+            }
+            for id in 0..5 {
+                sched.submit(GenRequest::greedy(id, vec![id as u32, 9], 4));
+            }
+            let done = sched.run();
+            let streams: Vec<Vec<u32>> =
+                done.into_iter().map(|c| c.tokens).collect();
+            (streams, sched.stats().clone())
+        };
+        let (want, clean) = run(None);
+        assert_eq!(clean.requeued, 0);
+        let plan = FaultPlan { out_of_pages_steps: vec![2, 4],
+                               ..FaultPlan::default() };
+        let (got, faulted) = run(Some(plan));
+        assert_eq!(got, want, "forced refusals must never change streams");
+        assert!(faulted.requeued >= 3, "step 2 must bounce every live lane");
+        assert_eq!(faulted.generated_tokens, clean.generated_tokens,
+                   "bounced work must be rolled back");
+        assert_eq!(faulted.prefill_tokens, clean.prefill_tokens,
+                   "bounced prefill must be rolled back");
+    }
+
+    #[test]
+    fn absorb_sums_counters_maxes_peaks_and_merges_tenants() {
+        let mut a = ServeStats {
+            generated_tokens: 5,
+            peak_occupancy: 3,
+            queue_depth_max: 2,
+            cancelled: 1,
+            ..ServeStats::default()
+        };
+        a.tenants.push(TenantStats { tenant: "t".into(), served: 1,
+                                     queued: 0, rejected: 2 });
+        let mut b = ServeStats {
+            generated_tokens: 7,
+            peak_occupancy: 2,
+            queue_depth_max: 4,
+            worker_restarts: 1,
+            deadline_expired: 3,
+            ..ServeStats::default()
+        };
+        b.tenants.push(TenantStats { tenant: "t".into(), served: 2,
+                                     queued: 1, rejected: 0 });
+        b.tenants.push(TenantStats { tenant: "u".into(), served: 1,
+                                     queued: 0, rejected: 0 });
+        a.absorb(&b);
+        assert_eq!(a.generated_tokens, 12);
+        assert_eq!(a.peak_occupancy, 3, "peaks take the max");
+        assert_eq!(a.queue_depth_max, 4, "peaks take the max");
+        assert_eq!(a.cancelled, 1);
+        assert_eq!(a.deadline_expired, 3);
+        assert_eq!(a.worker_restarts, 1);
+        assert_eq!(a.tenants.len(), 2, "tenant rows merge by name");
+        let t = a.tenants.iter().find(|t| t.tenant == "t").unwrap();
+        assert_eq!((t.served, t.queued, t.rejected), (3, 1, 2));
     }
 
     #[test]

@@ -208,14 +208,33 @@ pub fn token_line(index: usize, token: u32) -> String {
 }
 
 /// The `{"done":true,...}` ndjson trailer closing a stream.
+/// `finish_reason` says *why* the stream ended — `"length"` (token
+/// budget), `"deadline_expired"` (decode wall-clock cap), or
+/// `"kv_overflow"` (request larger than the whole KV pool) — so a
+/// truncated stream is never mistaken for a complete one.
 pub fn done_line(tokens: usize, prompt_len: usize, lane_steps: usize,
-                 ttft_steps: usize) -> String {
+                 ttft_steps: usize, finish_reason: &str) -> String {
     let mut s = Json::obj(vec![
         ("done", Json::Bool(true)),
         ("tokens", Json::num(tokens as f64)),
         ("prompt_len", Json::num(prompt_len as f64)),
         ("lane_steps", Json::num(lane_steps as f64)),
         ("ttft_steps", Json::num(ttft_steps as f64)),
+        ("finish_reason", Json::str(finish_reason)),
+    ]).to_string();
+    s.push('\n');
+    s
+}
+
+/// A mid-stream failure line: the stream cannot complete (queue
+/// deadline expired, worker restarted under the request, relay
+/// timeout), and since the HTTP status line already went out as `200`
+/// when streaming began, the error travels in-band as the final ndjson
+/// line before the stream closes.
+pub fn error_line(kind: &str, detail: &str) -> String {
+    let mut s = Json::obj(vec![
+        ("error", Json::str(kind)),
+        ("detail", Json::str(detail)),
     ]).to_string();
     s.push('\n');
     s
@@ -241,6 +260,15 @@ pub struct ShardSnapshot {
     pub live_lanes: usize,
     /// KV pages held by the shard's model (0 for decay models).
     pub kv_pages: usize,
+    /// Requests cancelled before completing (client hung up, relay
+    /// write failed) — parked and live cancels combined.
+    pub cancelled: usize,
+    /// Requests that hit a deadline: expired out of the admission
+    /// queue or truncated mid-decode.
+    pub deadline_expired: usize,
+    /// Times this shard's worker panicked and was rebuilt by its
+    /// supervisor.
+    pub worker_restarts: usize,
     /// Per-tenant counters, tenant-sorted.
     pub tenants: Vec<crate::serve::scheduler::TenantStats>,
     /// The shard scheduler's own counters.
@@ -269,6 +297,9 @@ pub fn stats_json(shards: &[ShardSnapshot]) -> String {
         ("served", Json::num(s.served as f64)),
         ("live_lanes", Json::num(s.live_lanes as f64)),
         ("kv_pages", Json::num(s.kv_pages as f64)),
+        ("cancelled", Json::num(s.cancelled as f64)),
+        ("deadline_expired", Json::num(s.deadline_expired as f64)),
+        ("worker_restarts", Json::num(s.worker_restarts as f64)),
         ("generated_tokens", Json::num(s.sched.generated_tokens as f64)),
         ("prefill_tokens", Json::num(s.sched.prefill_tokens as f64)),
         ("requeued", Json::num(s.sched.requeued as f64)),
@@ -295,6 +326,9 @@ pub fn stats_json(shards: &[ShardSnapshot]) -> String {
         ("rejected_413", Json::num(total(&|s| s.rejected_413))),
         ("served", Json::num(total(&|s| s.served))),
         ("kv_pages", Json::num(total(&|s| s.kv_pages))),
+        ("cancelled", Json::num(total(&|s| s.cancelled))),
+        ("deadline_expired", Json::num(total(&|s| s.deadline_expired))),
+        ("worker_restarts", Json::num(total(&|s| s.worker_restarts))),
     ]).to_string()
 }
 
@@ -385,11 +419,20 @@ mod tests {
         let doc = Json::parse(t.trim()).unwrap();
         assert_eq!(doc.get("index").unwrap().as_usize().unwrap(), 3);
         assert_eq!(doc.get("token").unwrap().as_usize().unwrap(), 99);
-        let d = done_line(4, 2, 6, 2);
+        let d = done_line(4, 2, 6, 2, "length");
         let doc = Json::parse(d.trim()).unwrap();
         assert!(doc.get("done").unwrap().as_bool().unwrap());
         assert_eq!(doc.get("tokens").unwrap().as_usize().unwrap(), 4);
         assert_eq!(doc.get("ttft_steps").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(doc.get("finish_reason").unwrap().as_str().unwrap(),
+                   "length");
+        let e = error_line("deadline_expired", "queue wait exceeded");
+        assert!(e.ends_with('\n'));
+        let doc = Json::parse(e.trim()).unwrap();
+        assert_eq!(doc.get("error").unwrap().as_str().unwrap(),
+                   "deadline_expired");
+        assert_eq!(doc.get("detail").unwrap().as_str().unwrap(),
+                   "queue wait exceeded");
     }
 
     #[test]
@@ -399,7 +442,8 @@ mod tests {
             ShardSnapshot {
                 shard: 0, queue_depth: 1, queue_cap: 4, queue_depth_max: 3,
                 rejected_429: 2, rejected_413: 1, served: 5, live_lanes: 2,
-                kv_pages: 7,
+                kv_pages: 7, cancelled: 2, deadline_expired: 1,
+                worker_restarts: 1,
                 tenants: vec![TenantStats {
                     tenant: "a".into(), served: 5, queued: 1, rejected: 3 }],
                 sched: Default::default(),
@@ -420,7 +464,16 @@ mod tests {
         assert_eq!(doc.get("queue_depth_max").unwrap().as_usize().unwrap(), 3);
         assert_eq!(doc.get("served").unwrap().as_usize().unwrap(), 7);
         assert_eq!(doc.get("kv_pages").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(doc.get("cancelled").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(doc.get("deadline_expired").unwrap()
+                       .as_usize().unwrap(), 1);
+        assert_eq!(doc.get("worker_restarts").unwrap()
+                       .as_usize().unwrap(), 1);
         assert_eq!(doc.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        let shard0 = &doc.get("shards").unwrap().as_arr().unwrap()[0];
+        assert_eq!(shard0.get("cancelled").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(shard0.get("worker_restarts").unwrap()
+                         .as_usize().unwrap(), 1);
         let tenants = doc.get("tenants").unwrap().as_arr().unwrap();
         assert_eq!(tenants.len(), 2, "tenant 'a' merges across shards");
         assert_eq!(tenants[0].get("tenant").unwrap().as_str().unwrap(), "a");

@@ -46,12 +46,12 @@ use std::time::Duration;
 
 use crate::serve::model::{FamilySpec, LatentAttnLm, LatentLm, LmDims,
                           QuantMethod};
-use crate::serve::DecodeModel;
+use crate::serve::{DecodeModel, FaultPlan};
 use crate::Result;
 
 pub use api::{AdmissionLimits, ApiError, GenerateBody, ShardSnapshot};
-pub use shard::{run_shard, shard_for_prompt, ShardConfig, ShardHandle,
-                StreamItem};
+pub use shard::{run_shard, run_shard_supervised, shard_for_prompt,
+                ShardConfig, ShardHandle, StreamItem};
 
 /// Everything `spectra serve` configures. One config builds the whole
 /// server: `shards` schedulers over `shards` identical synthetic
@@ -86,6 +86,29 @@ pub struct ServerConfig {
     pub mp: usize,
     /// Latent weight seed (also the GPTQ calibration seed).
     pub seed: u64,
+    /// Socket read timeout: a client must deliver its request head +
+    /// body within this.
+    pub read_timeout_ms: u64,
+    /// Socket write timeout per chunk write (bounds one write, not the
+    /// whole stream).
+    pub write_timeout_ms: u64,
+    /// Relay silence budget: with no stream item for this long the
+    /// relay gives up with an in-band `relay_timeout` error line. This
+    /// unwedges a stalled worker; worker *death* is detected
+    /// separately (channel disconnect → `worker_restarted`), and slow
+    /// queues are bounded by `queue_deadline_ms` — three causes, three
+    /// distinct client-visible outcomes.
+    pub relay_timeout_ms: u64,
+    /// Queue-admission deadline: a request parked longer than this
+    /// expires with a `deadline_expired` error line (0 = wait forever).
+    pub queue_deadline_ms: u64,
+    /// Decode wall-clock cap per request: past it the stream is
+    /// truncated with `finish_reason = "deadline_expired"` (0 = decode
+    /// to budget).
+    pub decode_deadline_ms: u64,
+    /// Deterministic fault injection, applied to shard 0 only so the
+    /// other shards double as the blast-radius control group.
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for ServerConfig {
@@ -106,8 +129,20 @@ impl Default for ServerConfig {
             dims: LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 },
             mp: 1,
             seed: 11,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 30_000,
+            relay_timeout_ms: 120_000,
+            queue_deadline_ms: 0,
+            decode_deadline_ms: 0,
+            fault_plan: FaultPlan::default(),
         }
     }
+}
+
+/// `0` means "off" for the deadline knobs; everything else is a
+/// duration in milliseconds.
+fn ms_opt(ms: u64) -> Option<Duration> {
+    (ms > 0).then(|| Duration::from_millis(ms))
 }
 
 /// Build one shard's model. Matches on the concrete builders (not
@@ -151,6 +186,9 @@ struct Router {
     /// Set by `POST /shutdown`; [`Server::shutdown_requested`] exposes
     /// it so the CLI loop knows when to begin the drain.
     shutdown_flag: Arc<AtomicBool>,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    relay_timeout: Duration,
 }
 
 /// A running server: accept loop + `shards` worker threads, stopped by
@@ -172,10 +210,11 @@ impl Server {
     /// is listening (the address is immediately connectable).
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let shards_n = cfg.shards.max(1);
-        let mut models = Vec::with_capacity(shards_n);
-        for _ in 0..shards_n {
-            models.push(build_model(&cfg)?);
-        }
+        // Validate the model config (e.g. GPTQ calibration failures)
+        // once, here, where an error can still be returned; the
+        // supervised workers below rebuild on demand and may therefore
+        // expect success.
+        drop(build_model(&cfg)?);
         let limits = AdmissionLimits {
             vocab: cfg.dims.vocab,
             max_context: cfg.kv_context,
@@ -184,13 +223,28 @@ impl Server {
             lanes: cfg.lanes,
             threads: cfg.threads,
             prefill_chunk: cfg.prefill_chunk,
+            queue_deadline: ms_opt(cfg.queue_deadline_ms),
+            decode_deadline: ms_opt(cfg.decode_deadline_ms),
+            faults: FaultPlan::default(),
         };
         let shards: Vec<Arc<ShardHandle>> = (0..shards_n)
             .map(|_| Arc::new(ShardHandle::new(cfg.queue_cap)))
             .collect();
-        let workers = models.into_iter().zip(&shards).map(|(m, h)| {
+        let workers = shards.iter().enumerate().map(|(i, h)| {
             let h = h.clone();
-            std::thread::spawn(move || run_shard(m, &h, shard_cfg))
+            let model_cfg = cfg.clone();
+            let mut scfg = shard_cfg.clone();
+            // Faults hit shard 0 only: the other shards double as the
+            // chaos tests' blast-radius control group.
+            if i == 0 {
+                scfg.faults = cfg.fault_plan.clone();
+            }
+            std::thread::spawn(move || {
+                run_shard_supervised(
+                    || build_model(&model_cfg)
+                        .expect("model config was validated at startup"),
+                    &h, &scfg)
+            })
         }).collect();
 
         let listener = TcpListener::bind(("127.0.0.1", cfg.port))
@@ -208,6 +262,9 @@ impl Server {
             shards: shards.clone(),
             limits,
             shutdown_flag: shutdown_flag.clone(),
+            read_timeout: Duration::from_millis(cfg.read_timeout_ms.max(1)),
+            write_timeout: Duration::from_millis(cfg.write_timeout_ms.max(1)),
+            relay_timeout: Duration::from_millis(cfg.relay_timeout_ms.max(1)),
         });
         let accept = {
             let stop = shutdown_flag.clone();
@@ -324,9 +381,10 @@ fn handle_connection(mut stream: TcpStream, router: &Router) {
     let _ = stream.set_nodelay(true);
     // A client must deliver its request promptly; streaming out has no
     // deadline (`write_timeout` bounds each chunk write, not the
-    // stream).
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    // stream). Both knobs come from `ServerConfig` (`--read-timeout-ms`
+    // / `--write-timeout-ms`).
+    let _ = stream.set_read_timeout(Some(router.read_timeout));
+    let _ = stream.set_write_timeout(Some(router.write_timeout));
     let req = {
         let mut reader = std::io::BufReader::new(
             match stream.try_clone() {
@@ -398,39 +456,76 @@ fn handle_generate(mut stream: TcpStream, router: &Router, body: &[u8]) {
         return respond_error(&mut stream, &e);
     }
     let (tx, rx) = mpsc::channel();
-    if let Err(e) = shard.try_admit(parsed, tx) {
-        return respond_error(&mut stream, &e);
-    }
+    let ticket = match shard.try_admit(parsed, tx) {
+        Ok(t) => t,
+        Err(e) => return respond_error(&mut stream, &e),
+    };
     if http::write_chunked_head(&mut stream, 200,
                                 "application/x-ndjson").is_err() {
-        // Client gone before the first byte; the worker's sends into
-        // the dropped receiver fail harmlessly and the lane drains.
+        // Client gone before the first byte: cancel so the request
+        // never occupies a lane (or leaves one, pages freed, within a
+        // step if it already went live).
+        shard.cancel(ticket);
         return;
     }
     let mut out = http::ChunkedWriter::new(stream);
     // A parked request decodes only once a lane frees up; under a full
     // server that wait is real, so the relay timeout is generous — it
-    // exists to unwedge a dead worker, not to pace clients.
-    let deadline = Duration::from_secs(120);
+    // exists to unwedge a *stalled* worker. Worker death is a channel
+    // disconnect (distinct arm below), and slow queues are the queue
+    // deadline's job; each failure mode gets its own error line.
     loop {
-        match rx.recv_timeout(deadline) {
+        match rx.recv_timeout(router.relay_timeout) {
             Ok(StreamItem::Token { token, index }) => {
                 if out.chunk(api::token_line(index, token)
                              .as_bytes()).is_err() {
-                    return; // client hung up; drop rx, lane drains
+                    // Client hung up mid-stream: cancel the lane so
+                    // its KV pages return within one scheduler step
+                    // instead of decoding to completion for nobody.
+                    shard.cancel(ticket);
+                    return;
                 }
             }
             Ok(StreamItem::Done(c)) => {
                 let _ = out.chunk(api::done_line(
                     c.tokens.len(), c.prompt_len, c.lane_steps,
-                    c.ttft_steps).as_bytes());
+                    c.ttft_steps, c.finish_reason.as_str()).as_bytes());
                 let _ = out.finish();
                 return;
             }
-            Err(_) => {
-                // Worker died or stalled past the deadline: close the
-                // stream without a done trailer so the client can tell
-                // the difference.
+            Ok(StreamItem::Error { kind, detail }) => {
+                // In-band failure from the shard (queue-deadline
+                // expiry, supervisor giving up): one error line, then
+                // close.
+                let _ = out.chunk(api::error_line(kind, &detail)
+                                  .as_bytes());
+                let _ = out.finish();
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // No stream progress at all within the relay budget:
+                // the worker is wedged (or the queue deadline is off
+                // and the backlog truly is this deep). Tell the client
+                // which timeout fired and release the request.
+                let _ = out.chunk(api::error_line(
+                    "relay_timeout",
+                    "no stream progress within the relay timeout")
+                    .as_bytes());
+                let _ = out.finish();
+                shard.cancel(ticket);
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // The worker dropped our sender without a done
+                // trailer: it panicked mid-request and its supervisor
+                // is rebuilding the shard. Fail fast — the old
+                // behavior conflated this with a slow queue and sat
+                // out the full relay timeout.
+                let _ = out.chunk(api::error_line(
+                    "worker_restarted",
+                    "shard worker crashed mid-request and was \
+                     restarted; retry")
+                    .as_bytes());
                 let _ = out.finish();
                 return;
             }

@@ -11,17 +11,53 @@
 //! time from the fair queue — the scheduler's internal queue is plain
 //! FIFO, so fairness only holds if requests wait *here*, in the
 //! per-tenant queues, until a lane is actually free.
+//!
+//! Request lifecycle robustness rides the same plumbing:
+//!
+//! - **Cancellation**: [`ShardHandle::try_admit`] returns a *ticket*
+//!   (also the scheduler request id); [`ShardHandle::cancel`] aborts
+//!   the ticket whether it is still parked (removed from its tenant
+//!   queue) or live (queued to the worker, which calls
+//!   [`Scheduler::cancel`] before its next step — KV pages come back
+//!   within one step of the disconnect). The worker also
+//!   *self*-cancels a lane the moment a token send fails: a dropped
+//!   receiver is a hung-up client, and decoding for nobody burns the
+//!   exact compute and cache the paper's bit savings pay for.
+//! - **Deadlines**: a parked request past the shard's queue-admission
+//!   deadline leaves the queue with a [`StreamItem::Error`] line;
+//!   a live request past the decode wall-clock cap is truncated via
+//!   [`Scheduler::expire`] and closes with an explicit
+//!   `finish_reason`.
+//! - **Crash isolation**: [`run_shard_supervised`] wraps the worker
+//!   loop in `catch_unwind`; a panic drops the scheduler (lanes retire
+//!   and pages free on unwind) and the in-flight sinks (relays see a
+//!   disconnect promptly instead of hanging to the relay timeout),
+//!   then the model+scheduler stack is rebuilt and parked requests —
+//!   which live *here*, in the handle — are served by the next
+//!   incarnation. Stats accumulate across restarts
+//!   ([`ServeStats::absorb`] into a base the snapshot overlays), so
+//!   `/stats` never goes backwards.
+//! - **Fault injection**: a [`FaultPlan`] in [`ShardConfig`] scripts
+//!   forced KV refusals (scheduler), worker panics, and mid-stream
+//!   client disconnects at deterministic coordinates.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::serve::scheduler::{StreamEvent, TenantStats};
-use crate::serve::{Completion, DecodeModel, GenRequest, Scheduler,
-                   ServeStats, KV_PAGE_TOKENS};
+use crate::serve::{Completion, DecodeModel, FaultPlan, GenRequest,
+                   Scheduler, ServeStats, KV_PAGE_TOKENS};
 use crate::server::api::{ApiError, GenerateBody, ShardSnapshot};
+
+/// Consecutive worker panics after which the supervisor stops
+/// rebuilding a shard (fails its parked requests and refuses new ones
+/// instead of burning CPU in a panic loop). Injected fault-plan panics
+/// never get near this: they are consumed by the first incarnation.
+pub const MAX_WORKER_RESTARTS: usize = 8;
 
 /// What a shard worker sends back to the connection handler that
 /// admitted a request.
@@ -31,15 +67,27 @@ pub enum StreamItem {
     /// replays are already deduped (high-water mark per request), so a
     /// handler forwards these verbatim.
     Token { token: u32, index: usize },
-    /// The request finished; closes the stream.
+    /// The request finished; closes the stream. The completion's
+    /// `finish_reason` says how (budget-complete, deadline-truncated,
+    /// kv-overflow).
     Done(Completion),
+    /// The request failed or expired before producing a completion;
+    /// the relay writes one error line and closes the stream.
+    Error { kind: &'static str, detail: String },
 }
 
 /// A request parked in the admission queue: its parsed body plus the
-/// channel its tokens flow back through.
+/// channel its tokens flow back through, its admission ticket, and
+/// its queue-admission deadline (if the shard has one).
 pub struct Pending {
     pub body: GenerateBody,
     pub sink: mpsc::Sender<StreamItem>,
+    /// Admission ticket — also the scheduler request id once the
+    /// worker feeds it, so [`ShardHandle::cancel`] addresses parked
+    /// and live requests with one number.
+    pub ticket: usize,
+    /// Expire out of the queue at this instant if still parked.
+    pub deadline: Option<Instant>,
 }
 
 struct TenantQueue {
@@ -69,6 +117,29 @@ struct Admission {
     sched_stats: ServeStats,
     live_lanes: usize,
     kv_pages: usize,
+    /// Next admission ticket. Handle-global (survives worker restarts)
+    /// so a ticket uniquely names a request for the shard's lifetime.
+    next_ticket: usize,
+    /// Tickets the relay side cancelled that were not parked (i.e.
+    /// already fed to the scheduler); the worker drains these before
+    /// each step and aborts the matching lanes.
+    cancels: Vec<usize>,
+    /// Requests cancelled while still parked (live-lane cancels are
+    /// counted by the scheduler itself).
+    cancelled_parked: usize,
+    /// Requests expired out of the admission queue (live-lane expiries
+    /// are counted by the scheduler itself).
+    deadline_expired_parked: usize,
+    /// Stamp on every admission: park no longer than this before
+    /// expiring with an error line. Installed by the worker from its
+    /// [`ShardConfig`].
+    queue_deadline: Option<Duration>,
+    /// Scheduler counters accumulated from worker incarnations that
+    /// have since panicked; [`ShardHandle::snapshot`] overlays the
+    /// current incarnation's published stats on top, so `/stats`
+    /// counters never reset across a crash-restart.
+    sched_base: ServeStats,
+    worker_restarts: usize,
 }
 
 impl Admission {
@@ -131,6 +202,13 @@ impl ShardHandle {
                 sched_stats: ServeStats::default(),
                 live_lanes: 0,
                 kv_pages: 0,
+                next_ticket: 0,
+                cancels: Vec::new(),
+                cancelled_parked: 0,
+                deadline_expired_parked: 0,
+                queue_deadline: None,
+                sched_base: ServeStats::default(),
+                worker_restarts: 0,
             }),
             work: Condvar::new(),
         }
@@ -145,9 +223,13 @@ impl ShardHandle {
     /// `queue_cap` parked requests (the tentpole's
     /// backpressure-as-protocol boundary — beyond this point load
     /// becomes the *client's* signal, not a silent requeue pile).
+    ///
+    /// Returns the admission *ticket*: the id the worker submits to
+    /// the scheduler, and the number [`ShardHandle::cancel`] takes to
+    /// abort the request if the client hangs up.
     pub fn try_admit(&self, body: GenerateBody,
                      sink: mpsc::Sender<StreamItem>)
-                     -> Result<(), ApiError> {
+                     -> Result<usize, ApiError> {
         let mut g = self.lock();
         if g.shutdown {
             return Err(ApiError::ShuttingDown);
@@ -160,11 +242,117 @@ impl ShardHandle {
         }
         g.depth += 1;
         g.queue_depth_max = g.queue_depth_max.max(g.depth);
+        let ticket = g.next_ticket;
+        g.next_ticket += 1;
+        let deadline = g.queue_deadline.map(|d| Instant::now() + d);
         let tenant = body.tenant.clone();
-        g.tenant_mut(&tenant).queue.push_back(Pending { body, sink });
+        g.tenant_mut(&tenant).queue
+            .push_back(Pending { body, sink, ticket, deadline });
         drop(g);
         self.work.notify_all();
-        Ok(())
+        Ok(ticket)
+    }
+
+    /// Abort `ticket` wherever it is. Parked: removed from its tenant
+    /// queue here, immediately. Live (or already finished): queued for
+    /// the worker, which calls [`Scheduler::cancel`] before its next
+    /// step — the lane's KV pages are released within one step, and a
+    /// stale ticket (request already completed) is a no-op there.
+    pub fn cancel(&self, ticket: usize) {
+        let mut g = self.lock();
+        let mut parked = None;
+        'scan: for (ti, t) in g.tenants.iter().enumerate() {
+            if let Some(qi) = t.queue.iter()
+                .position(|p| p.ticket == ticket) {
+                parked = Some((ti, qi));
+                break 'scan;
+            }
+        }
+        match parked {
+            Some((ti, qi)) => {
+                g.tenants[ti].queue.remove(qi);
+                g.depth -= 1;
+                g.cancelled_parked += 1;
+            }
+            None => {
+                g.cancels.push(ticket);
+                drop(g);
+                // Wake an idle worker so a stale ticket doesn't linger.
+                self.work.notify_all();
+            }
+        }
+    }
+
+    /// Sweep parked requests past their queue-admission deadline: each
+    /// leaves its tenant queue and gets one `deadline_expired` error
+    /// line down its sink. Returns how many expired. Called by the
+    /// worker every loop; free when no deadline is configured.
+    fn expire_parked(&self) -> usize {
+        let mut g = self.lock();
+        if g.queue_deadline.is_none() {
+            return 0;
+        }
+        let now = Instant::now();
+        let mut expired = 0;
+        for ti in 0..g.tenants.len() {
+            let mut qi = 0;
+            while qi < g.tenants[ti].queue.len() {
+                let due = g.tenants[ti].queue[qi].deadline
+                    .is_some_and(|d| d <= now);
+                if !due {
+                    qi += 1;
+                    continue;
+                }
+                let p = g.tenants[ti].queue.remove(qi)
+                    .expect("index checked against queue length");
+                g.depth -= 1;
+                g.deadline_expired_parked += 1;
+                expired += 1;
+                let _ = p.sink.send(StreamItem::Error {
+                    kind: "deadline_expired",
+                    detail: "expired in the admission queue before a \
+                             lane was free".to_string(),
+                });
+            }
+        }
+        expired
+    }
+
+    /// Record a worker panic: fold the dead incarnation's published
+    /// scheduler counters into the across-restart base (so the next
+    /// incarnation's fresh counters overlay correctly) and zero the
+    /// live occupancy — the panicked worker's model, lanes, and KV
+    /// pool are gone.
+    fn note_worker_panic(&self) {
+        let mut g = self.lock();
+        let current = std::mem::take(&mut g.sched_stats);
+        g.sched_base.absorb(&current);
+        g.worker_restarts += 1;
+        g.live_lanes = 0;
+        g.kv_pages = 0;
+    }
+
+    /// Fail every parked request with an error line (the supervisor's
+    /// last resort when a shard exceeds [`MAX_WORKER_RESTARTS`]).
+    fn fail_parked(&self, kind: &'static str, detail: &str) {
+        let mut g = self.lock();
+        for ti in 0..g.tenants.len() {
+            while let Some(p) = g.tenants[ti].queue.pop_front() {
+                g.depth -= 1;
+                let _ = p.sink.send(StreamItem::Error {
+                    kind,
+                    detail: detail.to_string(),
+                });
+            }
+        }
+    }
+
+    /// Install the queue-admission deadline future admissions are
+    /// stamped with. The worker calls this from its [`ShardConfig`] at
+    /// startup; requests admitted in the instant before it runs simply
+    /// park without a deadline.
+    fn set_queue_deadline(&self, deadline: Option<Duration>) {
+        self.lock().queue_deadline = deadline;
     }
 
     /// Record a context-too-large refusal (the `413` happens in the
@@ -188,9 +376,11 @@ impl ShardHandle {
     }
 
     /// Point-in-time `/stats` view. The embedded [`ServeStats`] is the
-    /// worker's last published scheduler counters with the server-side
-    /// fields (queue depth, 429/413, tenants) overlaid — the "complete"
-    /// stats the schema-5 fields describe.
+    /// across-restart base with the current worker incarnation's
+    /// published counters absorbed on top, then the server-side fields
+    /// (queue depth, 429/413, parked cancels/expiries, restarts,
+    /// tenants) overlaid — the "complete" stats the schema fields
+    /// describe.
     pub fn snapshot(&self, shard: usize) -> ShardSnapshot {
         let g = self.lock();
         let tenants: Vec<TenantStats> = g.tenants.iter().map(|t| TenantStats {
@@ -199,10 +389,14 @@ impl ShardHandle {
             queued: t.queue.len(),
             rejected: t.rejected,
         }).collect();
-        let mut sched = g.sched_stats.clone();
+        let mut sched = g.sched_base.clone();
+        sched.absorb(&g.sched_stats);
         sched.queue_depth_max = g.queue_depth_max;
         sched.rejected_429 = g.rejected_429;
         sched.rejected_413 = g.rejected_413;
+        sched.cancelled += g.cancelled_parked;
+        sched.deadline_expired += g.deadline_expired_parked;
+        sched.worker_restarts = g.worker_restarts;
         sched.tenants = tenants.clone();
         ShardSnapshot {
             shard,
@@ -214,6 +408,9 @@ impl ShardHandle {
             served: g.served,
             live_lanes: g.live_lanes,
             kv_pages: g.kv_pages,
+            cancelled: sched.cancelled,
+            deadline_expired: sched.deadline_expired,
+            worker_restarts: g.worker_restarts,
             tenants,
             sched,
         }
@@ -223,6 +420,13 @@ impl ShardHandle {
 
     fn try_pop(&self) -> Option<Pending> {
         self.lock().pop_fair()
+    }
+
+    /// Drain the relay-side cancel queue (tickets that were live when
+    /// [`ShardHandle::cancel`] ran). Cheap when empty: taking an empty
+    /// `Vec` does not allocate.
+    fn take_cancels(&self) -> Vec<usize> {
+        std::mem::take(&mut self.lock().cancels)
     }
 
     /// Park until admission or shutdown (bounded wait so a worker
@@ -257,10 +461,17 @@ struct SinkEntry {
     sink: mpsc::Sender<StreamItem>,
     emitted: usize,
     tenant: String,
+    /// Decode wall-clock cap: truncate the stream via
+    /// [`Scheduler::expire`] once past this instant (stamped when the
+    /// worker feeds the request, `None` when the shard has no cap).
+    deadline: Option<Instant>,
+    /// Scripted client disconnect (fault plan): cancel the lane once
+    /// this generated-token index has been delivered.
+    disconnect_at: Option<usize>,
 }
 
 /// Configuration one shard worker runs with.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ShardConfig {
     /// Scheduler lanes (max batch).
     pub lanes: usize,
@@ -268,6 +479,28 @@ pub struct ShardConfig {
     pub threads: usize,
     /// Prefill chunk (1 = classic one-token prefill).
     pub prefill_chunk: usize,
+    /// Max time a request may wait parked in the admission queue
+    /// before expiring with an error line (`None` = wait forever).
+    pub queue_deadline: Option<Duration>,
+    /// Max decode wall-clock per request: past it the stream is
+    /// truncated with `finish_reason = "deadline_expired"` (`None` =
+    /// decode to budget).
+    pub decode_deadline: Option<Duration>,
+    /// Deterministic fault injection (empty = no faults).
+    pub faults: FaultPlan,
+}
+
+impl Default for ShardConfig {
+    fn default() -> ShardConfig {
+        ShardConfig {
+            lanes: 1,
+            threads: 1,
+            prefill_chunk: 1,
+            queue_deadline: None,
+            decode_deadline: None,
+            faults: FaultPlan::default(),
+        }
+    }
 }
 
 /// The shard worker loop: owns the model and its [`Scheduler`], feeds
@@ -279,34 +512,54 @@ pub struct ShardConfig {
 ///
 /// On shutdown the loop *drains*: already-parked and live requests run
 /// to completion (their streams close with a done trailer); only fresh
-/// admissions are refused (503, by [`ShardHandle::try_admit`]). A
-/// client that disconnects mid-stream only makes its channel sends
-/// fail — the lane still decodes to completion and retires normally,
-/// so its KV pages always come back.
+/// admissions are refused (503, by [`ShardHandle::try_admit`]).
+///
+/// A client that disconnects mid-stream makes its channel sends fail;
+/// the worker cancels that lane right after the step that observed the
+/// failure, so its KV pages are back in the pool within one scheduler
+/// step. Relay-side cancels ([`ShardHandle::cancel`]) and scripted
+/// fault-plan disconnects take the same path. Decode deadlines are
+/// checked after every step; an expired lane is truncated through
+/// [`Scheduler::expire`] and its stream closes with an explicit
+/// `finish_reason` rather than an ambiguous timeout.
 pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
-                 cfg: ShardConfig) -> usize {
+                 cfg: &ShardConfig) -> usize {
     let model: &dyn DecodeModel = &*model;
     let lanes = cfg.lanes.max(1);
     let mut sched = Scheduler::with_prefill_chunk(
         model, lanes, cfg.threads, cfg.prefill_chunk);
+    sched.set_fault_plan(cfg.faults.clone());
+    handle.set_queue_deadline(cfg.queue_deadline);
     let mut sinks: HashMap<usize, SinkEntry> = HashMap::new();
-    let mut next_id = 0usize;
     let mut done: Vec<Completion> = Vec::new();
+    let mut to_cancel: Vec<usize> = Vec::new();
+    let mut worker_steps = 0usize;
     loop {
+        // Relay-driven cancels first: a hung-up client's lane must not
+        // hold pages into the next step. A stale ticket (request
+        // already finished) makes `Scheduler::cancel` a no-op.
+        for ticket in handle.take_cancels() {
+            if sched.cancel(ticket) {
+                sinks.remove(&ticket);
+            }
+        }
+        // Parked requests past their admission deadline leave with an
+        // error line instead of eventually wasting a lane.
+        handle.expire_parked();
         // Feed while a lane is free. Admitting more than `lanes` would
         // move waiting into the scheduler's FIFO queue, where tenant
         // fairness no longer applies.
         while sched.pending() < lanes {
             let Some(p) = handle.try_pop() else { break };
-            let id = next_id;
-            next_id += 1;
-            sinks.insert(id, SinkEntry {
+            sinks.insert(p.ticket, SinkEntry {
                 sink: p.sink,
                 emitted: 0,
                 tenant: p.body.tenant.clone(),
+                deadline: cfg.decode_deadline.map(|d| Instant::now() + d),
+                disconnect_at: cfg.faults.disconnect_index(p.ticket),
             });
             sched.submit(GenRequest {
-                id,
+                id: p.ticket,
                 prompt: p.body.prompt,
                 max_new_tokens: p.body.max_new_tokens,
                 sampling: p.body.sampling,
@@ -325,24 +578,60 @@ pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
             if let StreamEvent::Token { id, token, index } = ev {
                 if let Some(e) = sinks.get_mut(&id) {
                     if index >= e.emitted {
-                        // Receiver gone = client hung up; keep decoding
-                        // (the lane retires normally) but stop caring.
-                        let _ = e.sink.send(StreamItem::Token { token, index });
+                        let sent = e.sink
+                            .send(StreamItem::Token { token, index });
                         e.emitted = index + 1;
+                        // Receiver gone = client hung up. Decoding for
+                        // nobody burns the exact compute and KV pages
+                        // the bit savings pay for, so mark the lane
+                        // for cancellation; it is aborted right after
+                        // this step. Scripted fault-plan disconnects
+                        // cut at a deterministic token index the same
+                        // way.
+                        let scripted = e.disconnect_at
+                            .is_some_and(|cut| index >= cut);
+                        if sent.is_err() || scripted {
+                            to_cancel.push(id);
+                        }
                     }
                 }
             }
             // Requeued: nothing to do — `emitted` already holds the
             // high-water mark the replay is deduped against.
         });
+        worker_steps += 1;
+        for id in to_cancel.drain(..) {
+            // False = the lane finished on this very step; the done
+            // drain below owns it.
+            if sched.cancel(id) {
+                sinks.remove(&id);
+            }
+        }
         for c in done.drain(..) {
             if let Some(e) = sinks.remove(&c.id) {
                 handle.note_served(&e.tenant);
                 let _ = e.sink.send(StreamItem::Done(c));
             }
         }
+        if cfg.decode_deadline.is_some() {
+            let now = Instant::now();
+            to_cancel.extend(sinks.iter()
+                .filter(|(_, e)| e.deadline.is_some_and(|d| d <= now))
+                .map(|(&id, _)| id));
+            for id in to_cancel.drain(..) {
+                let Some(c) = sched.expire(id) else { continue };
+                if let Some(e) = sinks.remove(&id) {
+                    handle.note_served(&e.tenant);
+                    let _ = e.sink.send(StreamItem::Done(c));
+                }
+            }
+        }
         handle.publish(sched.stats(), sched.live_lanes(),
                        model.kv_pages_in_use());
+        if cfg.faults.panics_after(worker_steps) {
+            panic!("injected shard-worker panic (fault plan, after step \
+                    {worker_steps})");
+        }
     }
     // Drained. Drop prefix-cache pins so every page returns to the
     // pool, then report what is still held (0 unless something leaked).
@@ -350,6 +639,52 @@ pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
     let final_pages = model.kv_pages_in_use();
     handle.publish(sched.stats(), 0, final_pages);
     final_pages
+}
+
+/// Crash-isolated shard worker: run [`run_shard`] under
+/// `catch_unwind`, and on a panic rebuild the model+scheduler stack
+/// and keep serving. Unwinding drops the dead incarnation's scheduler
+/// (lanes retire, its KV pool frees with the model) and its in-flight
+/// sinks (relays observe a disconnect promptly instead of hanging to
+/// the relay timeout); parked requests live in the handle and are
+/// served by the next incarnation. Fault-plan faults are consumed by
+/// the first incarnation only — an injected panic cannot re-fire after
+/// the restart it was scripted to cause.
+///
+/// After [`MAX_WORKER_RESTARTS`] panics the supervisor gives up:
+/// parked requests fail with `worker_failed` error lines, the shard
+/// stops admitting (shutdown), and `usize::MAX` is returned so the
+/// caller's leak check reports the shard as failed rather than clean.
+pub fn run_shard_supervised<F>(build: F, handle: &ShardHandle,
+                               cfg: &ShardConfig) -> usize
+where
+    F: Fn() -> Box<dyn DecodeModel + Send>,
+{
+    let mut cfg = cfg.clone();
+    loop {
+        let model = build();
+        // The handle's Mutex ignores poisoning (`lock()` above) and
+        // every update under it is single-field-coherent, so resuming
+        // after an unwind observed mid-update state is safe.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_shard(model, handle, &cfg)
+        }));
+        match result {
+            Ok(final_pages) => return final_pages,
+            Err(_) => {
+                handle.note_worker_panic();
+                // One incarnation, one shot at each scripted fault.
+                cfg.faults = FaultPlan::default();
+                if handle.lock().worker_restarts >= MAX_WORKER_RESTARTS {
+                    handle.request_shutdown();
+                    handle.fail_parked(
+                        "worker_failed",
+                        "shard worker exceeded its restart budget");
+                    return usize::MAX;
+                }
+            }
+        }
+    }
 }
 
 /// Route a prompt to a shard by FNV-1a over its first page of tokens
@@ -488,8 +823,9 @@ mod tests {
             let h = h.clone();
             std::thread::spawn(move || {
                 run_shard(model, &h,
-                          ShardConfig { lanes: 2, threads: 1,
-                                        prefill_chunk: 1 })
+                          &ShardConfig { lanes: 2, threads: 1,
+                                         prefill_chunk: 1,
+                                         ..ShardConfig::default() })
             })
         };
         let mut rxs = Vec::new();
@@ -502,7 +838,10 @@ mod tests {
         for (prompt, rx) in rxs {
             let mut streamed = Vec::new();
             loop {
-                match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                let item = rx.recv_timeout(Duration::from_secs(30))
+                    .unwrap_or_else(|e| panic!(
+                        "worker stream stalled: no item within 30s ({e})"));
+                match item {
                     StreamItem::Token { token, index } => {
                         assert_eq!(index, streamed.len(),
                                    "tokens must stream in order, deduped");
@@ -512,6 +851,9 @@ mod tests {
                         assert_eq!(c.tokens, streamed,
                                    "stream and completion must agree");
                         break;
+                    }
+                    StreamItem::Error { kind, detail } => {
+                        panic!("unexpected stream error {kind}: {detail}");
                     }
                 }
             }
@@ -529,5 +871,173 @@ mod tests {
             .find(|t| t.tenant == n).unwrap().served;
         assert_eq!(by_name("even"), 3);
         assert_eq!(by_name("odd"), 2);
+    }
+
+    #[test]
+    fn parked_cancel_removes_the_request_and_counts_it() {
+        let h = ShardHandle::new(8);
+        let (tx, _rx) = mpsc::channel();
+        let t0 = h.try_admit(body("t", vec![1], 1), tx).unwrap();
+        let (tx, _rx2) = mpsc::channel();
+        let t1 = h.try_admit(body("t", vec![2], 1), tx).unwrap();
+        assert_eq!((t0, t1), (0, 1), "tickets are sequential per shard");
+        h.cancel(t0);
+        let s = h.snapshot(0);
+        assert_eq!(s.queue_depth, 1, "cancelled request left the queue");
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.sched.cancelled, 1,
+                   "overlaid ServeStats carries the parked cancel");
+        let survivor = h.try_pop().expect("one request still parked");
+        assert_eq!(survivor.ticket, t1);
+        // Cancelling an unknown (live or stale) ticket queues it for
+        // the worker instead of touching the parked queues.
+        h.cancel(77);
+        assert_eq!(h.take_cancels(), vec![77]);
+    }
+
+    #[test]
+    fn parked_requests_past_their_deadline_expire_with_an_error() {
+        let h = ShardHandle::new(8);
+        h.set_queue_deadline(Some(Duration::from_millis(0)));
+        let (tx, rx) = mpsc::channel();
+        h.try_admit(body("t", vec![1], 1), tx).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(h.expire_parked(), 1);
+        match rx.try_recv().expect("expiry must send an error line") {
+            StreamItem::Error { kind, .. } => {
+                assert_eq!(kind, "deadline_expired");
+            }
+            other => panic!("want an error line, got {other:?}"),
+        }
+        let s = h.snapshot(0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.sched.deadline_expired, 1);
+        // Nothing to expire when the queue is empty.
+        assert_eq!(h.expire_parked(), 0);
+    }
+
+    #[test]
+    fn decode_deadline_truncates_streams_with_an_explicit_reason() {
+        let dims = LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 };
+        let latent = LatentLm::synthetic(dims, 1, 23);
+        let h = std::sync::Arc::new(ShardHandle::new(8));
+        let model: Box<dyn DecodeModel + Send> =
+            Box::new(latent.build_float());
+        let worker = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                run_shard(model, &h, &ShardConfig {
+                    lanes: 2,
+                    threads: 1,
+                    prefill_chunk: 4,
+                    decode_deadline: Some(Duration::from_millis(0)),
+                    ..ShardConfig::default()
+                })
+            })
+        };
+        let (tx, rx) = mpsc::channel();
+        h.try_admit(body("t", vec![1, 2], 50), tx).unwrap();
+        let mut streamed = 0usize;
+        loop {
+            let item = rx.recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!(
+                    "deadline stream stalled: no item within 30s ({e})"));
+            match item {
+                StreamItem::Token { .. } => streamed += 1,
+                StreamItem::Done(c) => {
+                    assert_eq!(c.finish_reason,
+                               crate::serve::FinishReason::DeadlineExpired,
+                               "a zero decode budget must truncate");
+                    assert!(c.tokens.len() < 50,
+                            "stream must stop long before the token \
+                             budget");
+                    assert_eq!(c.tokens.len(), streamed);
+                    break;
+                }
+                StreamItem::Error { kind, detail } => {
+                    panic!("unexpected stream error {kind}: {detail}");
+                }
+            }
+        }
+        h.request_shutdown();
+        assert_eq!(worker.join().unwrap(), 0,
+                   "expired lane must leave no KV pages behind");
+        let s = h.snapshot(0);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.served, 1, "a truncated stream was still delivered");
+    }
+
+    #[test]
+    fn supervisor_survives_injected_panics_and_serves_parked_requests() {
+        let dims = LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 };
+        let latent = LatentLm::synthetic(dims, 1, 22);
+        let h = std::sync::Arc::new(ShardHandle::new(16));
+        let cfg = ShardConfig {
+            lanes: 1,
+            threads: 1,
+            prefill_chunk: 1,
+            faults: FaultPlan {
+                panic_after_step: Some(1),
+                ..FaultPlan::default()
+            },
+            ..ShardConfig::default()
+        };
+        // Admit before the worker starts: with one lane, A goes live
+        // (and dies with incarnation one), B stays parked in the
+        // handle and must survive the crash.
+        let (tx_a, rx_a) = mpsc::channel();
+        h.try_admit(body("t", vec![1], 5), tx_a).unwrap();
+        let (tx_b, rx_b) = mpsc::channel();
+        h.try_admit(body("t", vec![2], 3), tx_b).unwrap();
+        let worker = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                run_shard_supervised(
+                    || Box::new(latent.build_float())
+                        as Box<dyn DecodeModel + Send>,
+                    &h, &cfg)
+            })
+        };
+        // B completes under the rebuilt incarnation.
+        let mut b_tokens = Vec::new();
+        loop {
+            let item = rx_b.recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!(
+                    "survivor stream stalled: no item within 30s ({e})"));
+            match item {
+                StreamItem::Token { token, .. } => b_tokens.push(token),
+                StreamItem::Done(c) => {
+                    assert_eq!(c.tokens, b_tokens);
+                    assert_eq!(c.tokens.len(), 3,
+                               "survivor must decode its full budget");
+                    break;
+                }
+                StreamItem::Error { kind, detail } => {
+                    panic!("survivor hit stream error {kind}: {detail}");
+                }
+            }
+        }
+        // A's stream ended in a disconnect (sender dropped in the
+        // unwind), never a Done — the relay layer maps that to a
+        // worker_restarted error line.
+        let mut a_done = false;
+        while let Ok(item) = rx_a.recv_timeout(Duration::from_secs(5)) {
+            if matches!(item, StreamItem::Done(_)) {
+                a_done = true;
+            }
+        }
+        assert!(!a_done, "the lane that died mid-panic must not \
+                          complete");
+        h.request_shutdown();
+        assert_eq!(worker.join().unwrap(), 0,
+                   "rebuilt shard must drain with zero pages held");
+        let s = h.snapshot(0);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.sched.worker_restarts, 1);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.queue_depth, 0);
+        assert!(s.sched.generated_tokens >= 3,
+                "stats must accumulate across the restart");
     }
 }

@@ -16,8 +16,8 @@
 //! the flipped polarity — every request completes, with the exact
 //! streams an uncontended cache produces.
 
-use spectra::serve::{FamilySpec, GenRequest, LatentAttnLm, LatentLm,
-                     LmDims, QuantMethod, Scheduler};
+use spectra::serve::{FamilySpec, FinishReason, GenRequest, LatentAttnLm,
+                     LatentLm, LmDims, QuantMethod, Scheduler};
 
 fn dims() -> LmDims {
     LmDims { vocab: 96, hidden: 32, glu: 48, layers: 2 }
@@ -196,15 +196,53 @@ fn gptq_attn_overcommit_also_completes() {
 }
 
 #[test]
-#[should_panic(expected = "kv cache smaller than a single request")]
-fn single_request_larger_than_the_whole_cache_panics_loudly() {
+fn single_request_larger_than_the_whole_cache_error_completes() {
     // Backpressure cannot fix a sizing error: one request whose
-    // context alone exceeds the entire page pool must fail loudly
-    // (queueing it again would livelock), with a message that names
-    // the fix.
+    // context alone exceeds the entire page pool cannot make progress
+    // (queueing it again would livelock). It used to panic the whole
+    // scheduler; now it fails *that request* — an empty completion
+    // with finish_reason kv_overflow, pages released, stats rolled
+    // back — and the server keeps serving everyone else.
     let latent = LatentAttnLm::synthetic(dims(), 4, 1, 0xB02);
     let model = latent.build(FamilySpec::Float, 1, 16).unwrap();
     let mut sched = Scheduler::new(model.as_ref(), 1, 1);
     sched.submit(GenRequest::greedy(0, vec![1; 20], 8)); // needs > 16 slots
-    sched.run();
+    let done = sched.run();
+    assert_eq!(done.len(), 1, "the oversized request still completes");
+    assert_eq!(done[0].id, 0);
+    assert_eq!(done[0].finish_reason, FinishReason::KvOverflow);
+    assert!(done[0].tokens.is_empty(),
+            "an unservable request yields no tokens");
+    assert_eq!(model.kv_pages_in_use(), 0,
+               "the refused request must release every page");
+    assert_eq!(sched.stats().prefill_tokens, 0,
+               "prefill_tokens counts completed prompts only");
+}
+
+#[test]
+fn kv_overflow_leaves_other_lanes_unharmed() {
+    // The error-completion is per-request: an oversized request shares
+    // the scheduler with a servable one, and the survivor's stream is
+    // bitwise what it would have been alone.
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 0xB03);
+    let clean = latent.build(FamilySpec::Float, 2, 16).unwrap();
+    let mut sched = Scheduler::new(clean.as_ref(), 2, 1);
+    sched.submit(GenRequest::greedy(0, vec![2, 3], 4));
+    let alone: Vec<u32> = sched.run().remove(0).tokens;
+
+    let model = latent.build(FamilySpec::Float, 2, 16).unwrap();
+    let mut sched = Scheduler::new(model.as_ref(), 2, 1);
+    sched.submit(GenRequest::greedy(0, vec![2, 3], 4));
+    // 40 + 8 context tokens exceed even the whole 2-lane x 16-token
+    // pool, so this lane can never be served, only error-completed.
+    sched.submit(GenRequest::greedy(1, vec![1; 40], 8));
+    let done = sched.run();
+    assert_eq!(done.len(), 2);
+    let by_id = |id: usize| done.iter().find(|c| c.id == id).unwrap();
+    assert_eq!(by_id(1).finish_reason, FinishReason::KvOverflow);
+    assert_eq!(by_id(0).finish_reason, FinishReason::Length);
+    assert_eq!(by_id(0).tokens, alone,
+               "the survivor's stream must be unchanged by the \
+                overflowing neighbor");
+    assert_eq!(model.kv_pages_in_use(), 0);
 }

@@ -62,6 +62,7 @@ fn config(family: FamilySpec) -> ServerConfig {
         dims: dims(),
         mp: 1,
         seed: 77,
+        ..ServerConfig::default()
     }
 }
 
@@ -108,6 +109,8 @@ fn parse_stream(body: &str) -> (Vec<u32>, Json) {
     }
     let done = done.expect("stream must end with a done trailer");
     assert_eq!(done.get("tokens").unwrap().as_usize().unwrap(), tokens.len());
+    assert!(done.get("finish_reason").unwrap().as_str().is_ok(),
+            "the done trailer must say why the stream ended");
     (tokens, done)
 }
 
@@ -191,6 +194,12 @@ fn streams_are_bitwise_equal_to_direct_scheduler_for_all_families() {
         assert_eq!(doc.get("served").unwrap().as_usize().unwrap(), 6);
         assert_eq!(doc.get("rejected_429").unwrap().as_usize().unwrap(), 0);
         assert_eq!(doc.get("rejected_413").unwrap().as_usize().unwrap(), 0);
+        // Robustness counters exist (schema 6) and are zero on a
+        // healthy, fault-free run.
+        for k in ["cancelled", "deadline_expired", "worker_restarts"] {
+            assert_eq!(doc.get(k).unwrap().as_usize().unwrap(), 0,
+                       "family {family:?}: {k} must be 0 without faults");
+        }
         let tenants = doc.get("tenants").unwrap().as_arr().unwrap();
         let served_of = |name: &str| tenants.iter()
             .find(|t| t.get("tenant").unwrap().as_str().unwrap() == name)
