@@ -92,13 +92,14 @@ fi
 # cache again undersized (--kv-context 12), so prefix pins, CoW
 # divergence, KV backpressure and the evict-pins-before-requeue path
 # all run together — pre-fix, pinned pages under pressure tripped the
-# scheduler's stall/sizing panics. The schema-6 JSON must re-parse and
+# scheduler's stall/sizing panics. The schema-7 JSON must re-parse and
 # actually record prefix reuse: a run that silently never hits the
 # prefix cache fails this step. The server-side counters
 # (queue_depth_max / rejected_429 / rejected_413, and the robustness
 # trio cancelled / deadline_expired / worker_restarts) must be present
 # and zero on this socketless path — the HTTP smokes below are where
-# they move.
+# they move — and so must the schema-7 speculative counters, which
+# only move under --speculative (the dedicated smoke below).
 echo "== shared-prefix + copy-on-write serve smoke =="
 cargo run --release --quiet -- serve-bench \
     --family float,ternary --attn --heads 4 \
@@ -111,8 +112,9 @@ if command -v python3 >/dev/null 2>&1; then
     python3 - runs/BENCH_serve_prefix_smoke.json <<'PYEOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == 6, f"schema {doc['schema']} != 6"
+assert doc["schema"] == 7, f"schema {doc['schema']} != 7"
 assert doc["shared_prefix_tokens"] == 20, doc["shared_prefix_tokens"]
+assert doc["speculative"] == 0 and doc["spec_k"] == 0, doc
 hits = sum(f["prefix_hits"] for f in doc["families"])
 reused = sum(f["prefix_tokens_reused"] for f in doc["families"])
 assert hits > 0, "no serve-bench run ever hit the prefix cache"
@@ -121,8 +123,51 @@ for fam in doc["families"]:
     for key in ("queue_depth_max", "rejected_429", "rejected_413",
                 "cancelled", "deadline_expired", "worker_restarts"):
         assert fam[key] == 0, f"{fam['family']}: {key} != 0 off-HTTP"
-print(f"runs/BENCH_serve_prefix_smoke.json: schema 6, "
+    for key in ("spec_proposed", "spec_accepted", "spec_verify_steps",
+                "accepted_per_step"):
+        assert fam[key] == 0, \
+            f"{fam['family']}: {key} != 0 without --speculative"
+print(f"runs/BENCH_serve_prefix_smoke.json: schema 7, "
       f"{hits} prefix hits, {reused} tokens reused")
+PYEOF
+fi
+
+# Speculative decoding smoke: TriLM drafts for a float, a 4-bit GPTQ,
+# and a ternary target through the draft-verify lane (--speculative).
+# Catches propose/verify/rollback runtime panics across families and
+# checks the schema-7 speculative counters actually move: proposals
+# and acceptances must be nonzero, accepted/step must sit in [0, k],
+# and the ternary target — drafted by a bitwise-identical ternary
+# model — must accept *every* proposal (the identical-draft invariant,
+# end to end at the CLI).
+echo "== speculative decoding serve smoke (--speculative) =="
+cargo run --release --quiet -- serve-bench \
+    --family float,quant4,ternary --attn --heads 4 \
+    --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
+    --requests 4 --max-tokens 4 --batches 1,2 --threads 1 \
+    --speculative --draft-family ternary --spec-k 3 \
+    --json runs/BENCH_serve_spec_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 - runs/BENCH_serve_spec_smoke.json <<'PYEOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == 7, f"schema {doc['schema']} != 7"
+assert doc["speculative"] == 1, doc
+assert doc["draft_family"] == "ternary", doc["draft_family"]
+assert doc["spec_k"] == 3, doc["spec_k"]
+proposed = sum(f["spec_proposed"] for f in doc["families"])
+accepted = sum(f["spec_accepted"] for f in doc["families"])
+assert proposed > 0, "no serve-bench run ever proposed a draft token"
+assert 0 < accepted <= proposed, f"{accepted} accepted of {proposed}"
+for fam in doc["families"]:
+    assert fam["spec_verify_steps"] > 0, f"{fam['family']}: no verify"
+    assert 0.0 <= fam["accepted_per_step"] <= doc["spec_k"], \
+        f"{fam['family']}: accepted/step {fam['accepted_per_step']}"
+tern = next(f for f in doc["families"] if f["family"] == "TriLM")
+assert tern["spec_accepted"] == tern["spec_proposed"], \
+    "a bitwise-identical ternary draft must be fully accepted"
+print(f"runs/BENCH_serve_spec_smoke.json: schema 7, "
+      f"{accepted}/{proposed} draft tokens accepted")
 PYEOF
 fi
 

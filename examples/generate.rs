@@ -18,17 +18,25 @@
 //! (chunked prefill — fewer steps to first token; the generated text
 //! is bitwise identical at any chunk size).
 //!
+//! `--speculative` (needs `--attn`) adds a second, cheap draft model
+//! built from the *same* weights in the `--draft-family` storage
+//! format (TriLM by default): the draft proposes `--spec-k` tokens
+//! per round and the target verifies them in one chunked pass. The
+//! generated text is bitwise identical to plain decode — the readout
+//! shows how many draft tokens the target accepted.
+//!
 //!     cargo run --release --example generate -- \
 //!         --checkpoint runs/main/930k_ternary.spt --prompt "one day" \
 //!         --family ternary --batch 4 --threads 2 --max-tokens 24 \
-//!         [--attn] [--heads 4] [--group 128] [--prefill-chunk 8]
+//!         [--attn] [--heads 4] [--group 128] [--prefill-chunk 8] \
+//!         [--speculative] [--draft-family ternary] [--spec-k 3]
 
 use std::path::PathBuf;
 
 use spectra::checkpoint::Checkpoint;
 use spectra::data::Dataset;
 use spectra::serve::{DecodeModel, FamilySpec, GenRequest, LatentAttnLm,
-                     LatentLm, LmDims, Scheduler};
+                     LatentLm, LmDims, Scheduler, SpecConfig};
 use spectra::util::args::Args;
 use spectra::Result;
 
@@ -44,6 +52,18 @@ fn main() -> Result<()> {
     let spec = FamilySpec::parse(&args.get("family", "ternary"), group)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown family (float | quant<bits> | gptq<bits> | ternary)"))?;
+    let speculative = args.has("speculative");
+    let spec_k = args.get_usize("spec-k", 3).max(1);
+    let draft_spec =
+        FamilySpec::parse(&args.get("draft-family", "ternary"), group)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown draft family (float | quant<bits> | gptq<bits> \
+                 | ternary)"))?;
+    if speculative && !attn {
+        anyhow::bail!("--speculative needs --attn: draft-verify rollback \
+                       requires the paged-KV attention model (a decay \
+                       carry cannot be rewound)");
+    }
     let ck_path = PathBuf::from(
         args.get("checkpoint", "runs/main/930k_ternary.spt"));
 
@@ -56,30 +76,41 @@ fn main() -> Result<()> {
     // state model for the paged KV-cache attention model, cache sized
     // for `batch` lanes at prompt+completion context.
     type Decode = Box<dyn Fn(&[u32]) -> String>;
+    type Built = (Box<dyn DecodeModel>, Option<Box<dyn DecodeModel>>);
+    // `--speculative` realizes the same latent weights twice: once in
+    // the target family, once in the draft family.
     let build = |encoded: &[Vec<u32>],
                  mk_decay: &dyn Fn() -> Result<LatentLm>,
                  mk_attn: &dyn Fn() -> Result<LatentAttnLm>|
-                -> Result<Box<dyn DecodeModel>> {
+                -> Result<Built> {
         let max_context = encoded.iter().map(|t| t.len()).max().unwrap_or(1)
             + max_tokens + 1;
         if attn {
-            mk_attn()?.build(spec, batch.max(1), max_context)
+            let latent = mk_attn()?;
+            let lm = latent.build(spec, batch.max(1), max_context)?;
+            let draft = if speculative {
+                Some(latent.build(draft_spec, batch.max(1), max_context)?)
+            } else {
+                None
+            };
+            Ok((lm, draft))
         } else {
-            mk_decay()?.build(spec)
+            Ok((mk_decay()?.build(spec)?, None))
         }
     };
-    let (lm, encoded, decode): (Box<dyn DecodeModel>, Vec<Vec<u32>>, Decode) =
+    let ((lm, draft), encoded, decode): (Built, Vec<Vec<u32>>, Decode) =
         match Checkpoint::load(&ck_path) {
             Ok(ck) => {
                 let data =
                     Dataset::build(&PathBuf::from("runs/data"), 400_000, 0)?;
                 let encoded: Vec<Vec<u32>> =
                     prompts.iter().map(|p| data.bpe.encode(p)).collect();
-                let lm = build(&encoded,
-                               &|| LatentLm::from_checkpoint(&ck),
-                               &|| LatentAttnLm::from_checkpoint(&ck, heads))?;
+                let built = build(
+                    &encoded,
+                    &|| LatentLm::from_checkpoint(&ck),
+                    &|| LatentAttnLm::from_checkpoint(&ck, heads))?;
                 let bpe = data.bpe;
-                (lm, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
+                (built, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
             }
             Err(e) => {
                 eprintln!("no checkpoint ({e}); serving synthetic latent \
@@ -97,11 +128,12 @@ fn main() -> Result<()> {
                 let encoded: Vec<Vec<u32>> = prompts.iter()
                     .map(|p| p.bytes().map(|b| b as u32 % 512).collect())
                     .collect();
-                let lm = build(&encoded,
-                               &|| Ok(LatentLm::synthetic(dims.clone(), 1, 0)),
-                               &|| Ok(LatentAttnLm::synthetic(dims.clone(),
-                                                              heads, 1, 0)))?;
-                (lm, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
+                let built = build(
+                    &encoded,
+                    &|| Ok(LatentLm::synthetic(dims.clone(), 1, 0)),
+                    &|| Ok(LatentAttnLm::synthetic(dims.clone(),
+                                                   heads, 1, 0)))?;
+                (built, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
             }
         };
 
@@ -115,6 +147,13 @@ fn main() -> Result<()> {
 
     let mut sched = Scheduler::with_prefill_chunk(lm.as_ref(), batch,
                                                   threads, prefill_chunk);
+    if let Some(d) = draft.as_deref() {
+        println!("speculative: {} draft ({:.2} bits/param) proposes \
+                  {spec_k} tokens per verify round",
+                 draft_spec.label(), d.effective_bits_per_param());
+        sched.set_speculative(d, SpecConfig { draft_family: draft_spec,
+                                              k: spec_k });
+    }
     let mut n_req = 0usize;
     for (id, toks) in encoded.into_iter().enumerate() {
         sched.submit(GenRequest::greedy(id, toks, max_tokens));
@@ -132,6 +171,13 @@ fn main() -> Result<()> {
              stats.ttft_steps as f64 / n_req.max(1) as f64,
              stats.generated_tokens as f64
                  / t0.elapsed().as_secs_f64().max(1e-9));
+    if draft.is_some() {
+        println!("speculative: {}/{} draft tokens accepted — {:.2} per \
+                  verify round over {} rounds (the text is bitwise \
+                  identical to plain decode)\n",
+                 stats.spec_accepted, stats.spec_proposed,
+                 stats.accepted_per_step(), stats.spec_verify_steps);
+    }
     for c in done {
         println!("PROMPT: {}\nOUTPUT: {}\n", prompts[c.id], decode(&c.tokens));
     }

@@ -254,6 +254,51 @@ pub fn e2e_request_latency_s(params: f64, linear_bits: f64,
     prefill_s + new_tokens as f64 / lane_tps
 }
 
+/// Speculative-decoding roofline: expected decode speedup over plain
+/// target decode for a draft-verify lane, keyed by the bits/param of
+/// *both* families — the `spectra serve-bench --speculative` analytic
+/// companion, fed with the harness's measured `accepted_per_step`.
+///
+/// Per verify round a lane pays `k` draft steps plus one chunked
+/// verify pass and emits `accepted_per_step + 1` tokens (the accepted
+/// prefix plus the correction/bonus sample — every round emits at
+/// least one). Each step is the batched decode roofline
+/// ([`decode_tokens_per_sec_bits`]'s `t_step`); the verify pass
+/// streams the target weights *once* but computes `k + 1` positions
+/// per lane:
+///
+///   t_draft  = max(W_draft / BW,  batch * 2P / FLOPS)
+///   t_verify = max(W_target / BW, batch * (k+1) * 2P / FLOPS)
+///   speedup  = (accepted/step + 1) * t_target / (k*t_draft + t_verify)
+///
+/// While bandwidth-bound `t_verify == t_target` (chunked verification
+/// is free — the §2.1 memory wall working *for* speculation), so the
+/// speedup approaches `(accepted/step + 1) / (1 + k * W_draft /
+/// W_target)`: a TriLM draft under a float target costs ~1/10th of a
+/// target step, which is what makes the paper's ternary family the
+/// natural `draft_family`. Low acceptance makes this < 1 — speculation
+/// is not free, it is a bet on the draft agreeing with the target.
+pub fn speculative_speedup_bits(params: f64, target_bits: f64,
+                                draft_bits: f64, hw: &Accelerator,
+                                batch: f64, k: f64,
+                                accepted_per_step: f64) -> f64 {
+    assert!(batch >= 1.0, "batch must be >= 1");
+    assert!(k >= 1.0, "speculative k must be >= 1");
+    assert!((0.0..=k).contains(&accepted_per_step),
+            "accepted/step must lie in [0, k]");
+    let step = |bits: f64, positions: f64| {
+        let weight_bytes = size_gb_at_bits(params, bits) * 1e9;
+        let t_bw = weight_bytes / (hw.bw_gbs * 1e9);
+        let t_compute = batch * positions * 2.0 * params
+            / (hw.tflops_fp16 * 1e12);
+        t_bw.max(t_compute)
+    };
+    let t_target = step(target_bits, 1.0);
+    let t_draft = step(draft_bits, 1.0);
+    let t_verify = step(target_bits, k + 1.0);
+    (accepted_per_step + 1.0) * t_target / (k * t_draft + t_verify)
+}
+
 /// Decode speedup over FP16 at a given batch size for an arbitrary
 /// linear-weight bit rate.
 pub fn batched_speedup_vs_fp16_bits(params: f64, linear_bits: f64,
@@ -577,6 +622,51 @@ mod tests {
     #[should_panic(expected = "reuse must leave")]
     fn prefix_ttft_rejects_full_reuse() {
         prefix_ttft_steps(16, 16, 4);
+    }
+
+    #[test]
+    fn speculative_roofline_rewards_acceptance_and_cheap_drafts() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let tern = 3f64.log2();
+        // Monotone increasing in accepted/step: every extra accepted
+        // token is a target step the lane did not pay for.
+        let mut last = 0.0;
+        for aps in [0.0, 0.5, 1.0, 2.0, 3.0] {
+            let s = speculative_speedup_bits(7e9, 16.0, tern, hw, 8.0,
+                                             3.0, aps);
+            assert!(s > last, "aps {aps}: {s} <= {last}");
+            last = s;
+        }
+        // A TriLM draft under a float target wins at good acceptance —
+        // the paper's bits-per-param advantage as a latency win.
+        let s = speculative_speedup_bits(7e9, 16.0, tern, hw, 8.0,
+                                         3.0, 2.5);
+        assert!(s > 1.5, "ternary-draft speedup {s}");
+        // ...and never exceeds the emit bound of k + 1 tokens/round.
+        let max = speculative_speedup_bits(7e9, 16.0, tern, hw, 1.0,
+                                           3.0, 3.0);
+        assert!(max <= 4.0 + 1e-9, "round emits at most k+1: {max}");
+        // A draft as expensive as its target with nothing accepted is
+        // pure overhead: k wasted full-price steps per emitted token.
+        let loss = speculative_speedup_bits(7e9, 16.0, 16.0, hw, 8.0,
+                                            3.0, 0.0);
+        assert!(loss < 0.5, "same-cost draft at zero acceptance: {loss}");
+        // While bandwidth-bound the chunked verify pass is free
+        // (weights stream once), so the k=1 closed form holds:
+        // (aps+1) / (1 + W_draft/W_target).
+        let wd = size_gb_at_bits(7e9, tern);
+        let wt = size_gb_at_bits(7e9, 16.0);
+        let got = speculative_speedup_bits(7e9, 16.0, tern, hw, 1.0,
+                                           1.0, 1.0);
+        let want = 2.0 / (1.0 + wd / wt);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    #[should_panic(expected = "accepted/step must lie in [0, k]")]
+    fn speculative_roofline_rejects_impossible_acceptance() {
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        speculative_speedup_bits(7e9, 16.0, 2.0, hw, 1.0, 2.0, 2.5);
     }
 
     #[test]

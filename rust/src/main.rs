@@ -56,6 +56,7 @@ commands:
                 --layers 4 --mp 2 [--attn] [--heads 4] [--seed 0]
                 [--prefill-chunk 1] [--prompt-tokens 16]
                 [--shared-prefix-tokens 0] [--kv-context N]
+                [--speculative] [--draft-family ternary] [--spec-k 3]
                 [--json BENCH_serve.json]
                 --attn serves the paged KV-cache attention model (adds
                 kv_bytes_per_token to the table and JSON; see
@@ -70,13 +71,21 @@ commands:
                 and JSON), and --kv-context caps the attention cache's
                 per-lane context (sizes below prompt+max-tokens
                 exercise KV backpressure: refused lanes requeue —
-                pinned prefixes are evicted first — never panic)
+                pinned prefixes are evicted first — never panic).
+                --speculative (needs --attn) adds a --draft-family
+                draft model (default ternary) proposing --spec-k
+                tokens per decode round; the target verifies them in
+                one chunked pass and rolls rejections back out of the
+                KV cache — streams stay bitwise identical to plain
+                decode, and spec_proposed / spec_accepted /
+                accepted_per_step land in the table and JSON (schema 7)
   serve         std-only HTTP/1.1 serving front end over the serve engine
                 [--port 8080] [--shards 2] [--lanes 8] [--threads 0]
                 [--queue-cap 32] [--kv-context 256] [--prefill-chunk 8]
                 [--family float] [--attn] [--heads 4] [--group 128]
                 [--vocab 512] [--hidden 256] [--glu 704] [--layers 4]
                 [--mp 2] [--seed 0]
+                [--speculative] [--draft-family ternary] [--spec-k 3]
                 [--read-timeout-ms 10000] [--write-timeout-ms 30000]
                 [--relay-timeout-ms 120000] [--queue-deadline-ms 0]
                 [--decode-deadline-ms 0] [--fault-panic-step 0]
@@ -102,7 +111,11 @@ commands:
                 socket timeouts, and --fault-panic-step N injects one
                 worker panic on shard 0 after its Nth scheduler step
                 (chaos testing: the supervisor restarts the worker and
-                /stats counts worker_restarts)
+                /stats counts worker_restarts). --speculative (needs
+                --attn) gives every shard a --draft-family draft model
+                proposing --spec-k tokens per round — streams stay
+                bitwise identical and /stats gains spec_proposed /
+                spec_accepted / accepted_per_step
   bench-report  paper-style tables from a suite run
                 --results runs/suite/suite_results.json --experiment all
   help          print this text (also: bare `spectra` or --help)
@@ -306,13 +319,20 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// reused tokens and CoW copies reported per family); `--kv-context`
 /// can undersize the cache to exercise the backpressure path (requeues
 /// reported per family; pinned prefixes are evicted before any lane
-/// requeues). `--json <path>` additionally writes the machine-readable
-/// sweep (BENCH_serve.json, schema 6 — see docs/BENCH_SCHEMA.md; the
+/// requeues); `--speculative` (with `--attn`) installs a draft model —
+/// `--draft-family` (TriLM by default) realized from the same latent
+/// weights — that proposes `--spec-k` tokens per decode round for the
+/// target to verify in one chunked pass (streams stay bitwise identical
+/// to plain decode; proposed/accepted counters and accepted-per-step
+/// land in the table, the JSON, and the speculative roofline). `--json
+/// <path>` additionally writes the machine-readable sweep
+/// (BENCH_serve.json, schema 7 — see docs/BENCH_SCHEMA.md; the
 /// server-side and robustness fields are zero on this socketless path)
 /// and re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     use spectra::serve::{bench_requests_shared, DecodeModel, FamilySpec,
-                         LatentAttnLm, LatentLm, LmDims, Scheduler};
+                         LatentAttnLm, LatentLm, LmDims, Scheduler,
+                         SpecConfig};
 
     let dims = LmDims {
         vocab: args.get_usize("vocab", 512),
@@ -353,21 +373,48 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let prompt_tokens = args.get_usize("prompt-tokens", 16).max(1);
     let shared_prefix = args.get_usize("shared-prefix-tokens", 0)
         .min(prompt_tokens.saturating_sub(1));
+    let speculative = args.has("speculative");
+    let spec_k = args.get_usize("spec-k", 3).max(1);
+    let draft_name = args.get("draft-family", "ternary");
+    let draft_family = FamilySpec::parse(&draft_name, group)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown --draft-family '{draft_name}' (float | quant<bits> | \
+             gptq<bits> | ternary)"))?;
+    if speculative && !attn {
+        anyhow::bail!("--speculative needs --attn: verify rolls rejected \
+                       tokens back out of the paged KV cache, and a decay \
+                       carry cannot be rewound");
+    }
+    if speculative && shared_prefix > 0 {
+        anyhow::bail!("--speculative disables the prefix cache (the draft \
+                       has no mapping for reused pages) — drop \
+                       --shared-prefix-tokens");
+    }
     // Default cache sizing: full prompt + completion per lane, +1
-    // headroom so the page pool never runs exactly dry. --kv-context
-    // overrides it downward to exercise KV backpressure (refused lanes
-    // requeue; the run still completes).
+    // headroom so the page pool never runs exactly dry; a speculative
+    // verify claims up to 1+k tokens past the committed context before
+    // rolling the rejected tail back, so it budgets k more.
+    // --kv-context overrides it downward to exercise KV backpressure
+    // (refused lanes requeue; the run still completes).
+    let spec_headroom = if speculative { spec_k } else { 0 };
     let max_context = args.get_usize("kv-context",
-                                     prompt_tokens + max_new + 1);
+                                     prompt_tokens + max_new + 1
+                                         + spec_headroom);
 
     println!("serve-bench: vocab {} hidden {} glu {} layers {} | \
               {n_req} requests x {prompt_tokens} prompt ({shared_prefix} \
               shared) + {max_new} new \
-              tokens | prefill chunk {prefill_chunk} | group {group}{}",
+              tokens | prefill chunk {prefill_chunk} | group {group}{}{}",
              dims.vocab, dims.hidden, dims.glu, dims.layers,
              if attn {
                  format!(" | attn ({heads} heads, paged kv cache, \
                           {max_context}-token context/lane)")
+             } else {
+                 String::new()
+             },
+             if speculative {
+                 format!(" | speculative ({} draft, k={spec_k})",
+                         draft_family.label())
              } else {
                  String::new()
              });
@@ -394,6 +441,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         prefix_hits: usize,
         prefix_reused: usize,
         cow_copies: usize,
+        spec_proposed: usize,
+        spec_accepted: usize,
+        spec_verify_steps: usize,
     }
     struct FamRow {
         label: String,
@@ -408,11 +458,26 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         prefix_hits: usize,
         prefix_reused: usize,
         cow_copies: usize,
+        spec_proposed: usize,
+        spec_accepted: usize,
+        spec_verify_steps: usize,
     }
-    let run_once = |model: &dyn DecodeModel, batch: usize, threads: usize|
-                   -> RunPoint {
+    impl FamRow {
+        fn accepted_per_step(&self) -> f64 {
+            if self.spec_verify_steps == 0 {
+                0.0
+            } else {
+                self.spec_accepted as f64 / self.spec_verify_steps as f64
+            }
+        }
+    }
+    let run_once = |model: &dyn DecodeModel, draft: Option<&dyn DecodeModel>,
+                    batch: usize, threads: usize| -> RunPoint {
         let mut sched = Scheduler::with_prefill_chunk(model, batch, threads,
                                                       prefill_chunk);
+        if let Some(d) = draft {
+            sched.set_speculative(d, SpecConfig { draft_family, k: spec_k });
+        }
         for r in bench_requests_shared(dims.vocab, n_req, max_new, seed,
                                        prompt_tokens, shared_prefix) {
             sched.submit(r);
@@ -430,6 +495,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             prefix_hits: st.prefix_hits,
             prefix_reused: st.prefix_tokens_reused,
             cow_copies: st.cow_copies,
+            spec_proposed: st.spec_proposed,
+            spec_accepted: st.spec_accepted,
+            spec_verify_steps: st.spec_verify_steps,
         }
     };
 
@@ -439,10 +507,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // BENCH_serve.json tracks).
     let mut rows: Vec<FamRow> = Vec::new();
     let mut float_tps = None;
+    // One draft model shared across the family sweep: the same latent
+    // weights realized in the draft family (TriLM by default — the
+    // paper's bits-per-param winner proposing for every target).
+    let draft_model: Option<Box<dyn DecodeModel>> = if speculative {
+        Some(build(draft_family)?)
+    } else {
+        None
+    };
+    let draft_bits = draft_model.as_ref()
+        .map(|d| d.effective_bits_per_param());
     for spec in &families {
         let model = build(*spec)?;
-        let b1 = run_once(model.as_ref(), 1, fam_threads);
-        let bx = run_once(model.as_ref(), fam_batch, fam_threads);
+        let draft = draft_model.as_deref();
+        let b1 = run_once(model.as_ref(), draft, 1, fam_threads);
+        let bx = run_once(model.as_ref(), draft, fam_batch, fam_threads);
         if matches!(spec, FamilySpec::Float) {
             float_tps = Some(bx.tps);
         }
@@ -459,6 +538,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             prefix_hits: bx.prefix_hits + b1.prefix_hits,
             prefix_reused: bx.prefix_reused + b1.prefix_reused,
             cow_copies: bx.cow_copies + b1.cow_copies,
+            spec_proposed: bx.spec_proposed + b1.spec_proposed,
+            spec_accepted: bx.spec_accepted + b1.spec_accepted,
+            spec_verify_steps: bx.spec_verify_steps + b1.spec_verify_steps,
         });
     }
     println!("\ncross-family @ {fam_threads} threads (identical latent \
@@ -490,6 +572,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                   token(s) mapped instead of prefilled, {total_cow} \
                   copy-on-write page cop{} at divergence",
                  if total_cow == 1 { "y" } else { "ies" });
+    }
+    if speculative {
+        println!("\nspeculative ({} draft, k={spec_k}): accepted draft \
+                  tokens per verify step (streams stay bitwise identical \
+                  to plain decode)", draft_family.label());
+        for r in &rows {
+            println!("  {:<22} proposed {:>6}  accepted {:>6}  \
+                      accepted/step {:>5.2}",
+                     r.label, r.spec_proposed, r.spec_accepted,
+                     r.accepted_per_step());
+        }
     }
 
     // Machine-readable trajectory point: --json <path> writes the
@@ -526,11 +619,18 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("cancelled", Json::num(0.0)),
                 ("deadline_expired", Json::num(0.0)),
                 ("worker_restarts", Json::num(0.0)),
+                // Speculative counters (schema 7): structurally zero
+                // unless --speculative installed a draft model.
+                ("spec_proposed", Json::num(r.spec_proposed as f64)),
+                ("spec_accepted", Json::num(r.spec_accepted as f64)),
+                ("spec_verify_steps",
+                 Json::num(r.spec_verify_steps as f64)),
+                ("accepted_per_step", Json::num(r.accepted_per_step())),
             ]))
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(6.0)),
+            ("schema", Json::num(7.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
@@ -553,6 +653,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ("group", Json::num(group as f64)),
             ("mp", Json::num(mp as f64)),
             ("seed", Json::num(seed as f64)),
+            ("speculative", Json::num(if speculative { 1.0 } else { 0.0 })),
+            ("draft_family", Json::str(if speculative {
+                draft_name.as_str()
+            } else {
+                ""
+            })),
+            ("spec_k", Json::num(if speculative {
+                spec_k as f64
+            } else {
+                0.0
+            })),
             ("families", Json::Arr(fam_json)),
         ]);
         let path = PathBuf::from(path);
@@ -575,7 +686,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if families.contains(&FamilySpec::Ternary) {
         let tlm = build(FamilySpec::Ternary)?;
         let tlm = tlm.as_ref();
-        let scalar_tps = run_once(tlm, 1, 1).tps;
+        let scalar_tps = run_once(tlm, None, 1, 1).tps;
         println!("\n{:<10} {:>7} {:>14} {:>12} {:>10}",
                  "kernel", "batch", "threads", "tokens/s", "vs scalar");
         println!("{:<10} {:>7} {:>14} {:>12.0} {:>10}",
@@ -586,7 +697,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 if batch == 1 && threads == 1 {
                     continue;
                 }
-                let tps = run_once(tlm, batch, threads).tps;
+                let tps = run_once(tlm, None, batch, threads).tps;
                 if batch == 8 {
                     best_b8 = best_b8.max(tps);
                 }
@@ -608,7 +719,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                               kv_bytes_per_token_fp16,
                               prefill_speedup_vs_one_token,
                               prefill_tokens_per_sec_bits,
-                              saturation_batch_bits};
+                              saturation_batch_bits,
+                              speculative_speedup_bits};
         println!("\nroofline @7B on {} (speedup vs fp16 by measured \
                   bits/param):", hw.name);
         for r in &rows {
@@ -661,6 +773,28 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                          at(1024.0) / fp16_at(1024.0),
                          at(8192.0) / fp16_at(8192.0),
                          at(32768.0) / fp16_at(32768.0));
+            }
+        }
+        if let Some(db) = draft_bits {
+            // The speculative roofline: each verify round buys
+            // accepted/step + 1 tokens for k draft steps plus one
+            // chunked (k+1)-token target pass — keyed by the measured
+            // bits/param of both families and the acceptance rate the
+            // sweep just measured. Ternary's bits-per-param win (the
+            // paper's Table 4/Fig 2 story) is exactly what makes its
+            // draft steps nearly free against a float target.
+            println!("\nspeculative roofline @7B on {} ({} draft at \
+                      {db:.2} bits/param, k={spec_k}, measured \
+                      accepted/step):",
+                     hw.name, draft_family.label());
+            for r in &rows {
+                let aps = r.accepted_per_step();
+                println!("  {:<22} accepted/step {:>5.2} -> expected \
+                          {:>5.2}x vs plain decode",
+                         r.label, aps,
+                         speculative_speedup_bits(
+                             7e9, r.bits, db, hw, fam_batch as f64,
+                             spec_k as f64, aps));
             }
         }
     }
@@ -726,6 +860,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!(
             "unknown family '{family_name}' (float | quant<bits> | \
              gptq<bits> | ternary)"))?;
+    let speculative = args.has("speculative");
+    let draft_name = args.get("draft-family", "ternary");
+    let draft_family = FamilySpec::parse(&draft_name, group)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown draft family '{draft_name}' (float | quant<bits> | \
+             gptq<bits> | ternary)"))?;
+    let spec_k = args.get_usize("spec-k", 3).max(1);
+    if speculative && !attn {
+        anyhow::bail!("--speculative needs --attn: draft-verify rollback \
+                       requires the paged-KV attention model");
+    }
     let cfg = ServerConfig {
         port: args.get_usize("port", 8080) as u16,
         shards: args.get_usize("shards", 2).max(1),
@@ -752,15 +897,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
             ..FaultPlan::default()
         },
+        speculative,
+        draft_family,
+        spec_k,
     };
     let shards = cfg.shards;
     let lanes = cfg.lanes;
     let server = Server::start(cfg.clone())?;
     println!("spectra serve: listening on {} ({} shard(s) x {} lane(s), \
-              family {}, {}, queue cap {}, kv context {}/lane)",
+              family {}, {}, queue cap {}, kv context {}/lane{})",
              server.addr(), shards, lanes, family.label(),
              if attn { "paged-kv attention" } else { "decay state" },
-             cfg.queue_cap, cfg.kv_context);
+             cfg.queue_cap, cfg.kv_context,
+             if speculative {
+                 format!(", speculative {} draft k={spec_k}",
+                         draft_family.label())
+             } else {
+                 String::new()
+             });
     // The analytic floor the measured traffic compares against: what
     // one admitted request costs end to end at this batch depth, at
     // paper scale on real hardware.

@@ -361,6 +361,20 @@ pub struct DecodeScratch {
     /// default span driver iterates sub-steps (sequential-state
     /// models).
     pub sample_logits: HostTensor,
+    /// (total span rows, vocab) per-*position* logits of the whole
+    /// flattened span batch, filled only when [`Self::want_span_logits`]
+    /// is set. Rows are lane-major and position-contiguous per accepted
+    /// lane (lane 0's span, then lane 1's, ...), matching the span
+    /// forward's row layout; rejected lanes contribute no rows.
+    /// Speculative verification reads every proposal position's logits
+    /// from here while `logits` keeps its usual final-row-per-lane
+    /// contract.
+    pub span_logits: HostTensor,
+    /// Ask the next `step_spans_into` call to fill [`Self::span_logits`]
+    /// (draft-verify lanes need logits at every span position, not just
+    /// the last). Off by default: prefill chunks keep paying the head
+    /// for one row per lane.
+    pub want_span_logits: bool,
 }
 
 impl DecodeScratch {
@@ -387,6 +401,8 @@ impl DecodeScratch {
             span_tokens: Vec::new(),
             head_in: empty(),
             sample_logits: empty(),
+            span_logits: empty(),
+            want_span_logits: false,
         }
     }
 }

@@ -330,6 +330,46 @@ impl KvCache {
         Ok(len)
     }
 
+    /// Roll a live sequence back to `new_len` committed tokens,
+    /// returning every page that held only rejected positions to the
+    /// free list. The speculative-decoding rollback primitive: a
+    /// draft-verify lane claims its whole proposal span up front
+    /// ([`KvCache::begin_tokens`]) and truncates the rejected suffix
+    /// here, so mis-speculated slots never linger in the pool.
+    ///
+    /// Refcount-aware like [`KvCache::free_seq`]: dropped pages lose
+    /// one holder and return to the free list only at zero, so a
+    /// shared prefix donor (or any sibling mapped via
+    /// [`KvCache::share_prefix`]) is never invalidated by a sharer's
+    /// rollback. A kept partial last page stays in the table with its
+    /// sharing state intact — if it is still shared, the sequence's
+    /// next claim copy-on-writes exactly as it would have without the
+    /// truncation. Truncating to 0 releases the whole page table like
+    /// `free_seq` but keeps the sequence live (and growable); `new_len
+    /// > len` is a caller bug and panics. Returns the number of pages
+    /// actually freed.
+    pub fn truncate_seq(&mut self, seq: usize, new_len: usize) -> usize {
+        let s = &mut self.seqs[seq];
+        assert!(s.live, "truncate_seq({seq}) on a sequence that is not live");
+        assert!(new_len <= s.len,
+                "truncate_seq({seq}) to {new_len} tokens on a {}-token \
+                 sequence — rollback cannot extend",
+                s.len);
+        let keep = new_len.div_ceil(self.cfg.page_tokens);
+        let mut freed = 0usize;
+        for page in s.pages.drain(keep..) {
+            let rc = self.refcounts[page].checked_sub(1)
+                .expect("truncate_seq on a page with refcount 0");
+            self.refcounts[page] = rc;
+            if rc == 0 {
+                self.free_pages.push(page);
+                freed += 1;
+            }
+        }
+        s.len = new_len;
+        freed
+    }
+
     /// Committed length of `seq` in tokens.
     pub fn seq_len(&self, seq: usize) -> usize {
         self.seqs[seq].len
@@ -808,5 +848,117 @@ mod tests {
         let dst = c.alloc_seq();
         c.begin_token(dst).unwrap();
         c.share_prefix(src, dst, 3);
+    }
+
+    #[test]
+    fn truncate_returns_exactly_the_rejected_pages() {
+        // 8 tokens over 3-token pages = pages [0..3), [3..6), [6..8).
+        // Rolling back to 4 rejects positions 4..8: only the last page
+        // is wholly rejected; the middle page keeps position 3.
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        c.begin_tokens(s, 8).unwrap();
+        fill(&mut c, s, 0, 8, 1.0);
+        assert_eq!(c.pages_in_use(), 3);
+        assert_eq!(c.truncate_seq(s, 4), 1);
+        assert_eq!(c.seq_len(s), 4);
+        assert_eq!(c.pages_in_use(), 2);
+        for pos in 0..4 {
+            assert_eq!(c.kv(s, 0, pos).0[0], pos as f32 + 1.0,
+                       "surviving slot {pos} must be untouched");
+        }
+        // Regrowth reclaims the freed page and renumbers from 4.
+        assert_eq!(c.begin_tokens(s, 3).unwrap(), 4);
+        assert_eq!(c.pages_in_use(), 3);
+        // Page-boundary math: 7 -> 6 frees exactly the page holding
+        // position 6, and a no-op truncate frees nothing.
+        assert_eq!(c.truncate_seq(s, 6), 1);
+        assert_eq!(c.truncate_seq(s, 6), 0, "no-op truncate frees nothing");
+        assert_eq!(c.seq_len(s), 6);
+    }
+
+    #[test]
+    fn shared_prefix_donor_survives_a_sharers_truncation() {
+        // dst shares src's 5-token prefix, CoW-diverges, then rolls all
+        // the way back to 2 tokens: its private copy and growth page
+        // return to the free list, while the shared page 0 keeps both
+        // holders and src's data is never invalidated.
+        let mut c = tiny(6);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 5).unwrap();
+        fill(&mut c, src, 0, 5, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 5);
+        assert_eq!(c.begin_tokens(dst, 3).unwrap(), 5);
+        assert_eq!(c.cow_copies(), 1);
+        assert_eq!(c.pages_in_use(), 4);
+        assert_eq!(c.truncate_seq(dst, 2), 2,
+                   "private copy + growth page rejected; shared page kept");
+        assert_eq!(c.pages_in_use(), 2);
+        assert_eq!(c.page_refcount(src, 0), 2,
+                   "shared page keeps both holders");
+        assert_eq!(c.page_refcount(src, 4), 1,
+                   "src owns its tail exclusively again");
+        for pos in 0..5 {
+            assert_eq!(c.kv(src, 0, pos).0[0], pos as f32 + 1.0,
+                       "donor slot {pos} must survive the rollback");
+        }
+        // CoW safety after rollback: dst's kept last page is still
+        // shared and partial, so its next claim copies before writing.
+        assert_eq!(c.begin_tokens(dst, 1).unwrap(), 2);
+        assert_eq!(c.cow_copies(), 2,
+                   "regrowth into the kept shared page must CoW");
+        fill(&mut c, dst, 2, 3, -1.0);
+        assert_eq!(c.kv(src, 0, 2).0[0], 3.0,
+                   "post-rollback divergence must stay private");
+    }
+
+    #[test]
+    fn truncate_to_zero_frees_like_free_seq_but_keeps_the_seq_live() {
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        c.begin_tokens(s, 7).unwrap();
+        c.free_seq(s);
+        assert_eq!(c.pages_in_use(), 0);
+        let s2 = c.alloc_seq();
+        c.begin_tokens(s2, 7).unwrap();
+        assert_eq!(c.truncate_seq(s2, 0), 3,
+                   "truncate-to-zero returns the whole page table");
+        assert_eq!(c.pages_in_use(), 0, "page-wise identical to free_seq");
+        assert_eq!(c.seq_len(s2), 0);
+        // ...but unlike free_seq the sequence stays live and growable.
+        assert_eq!(c.live_seqs(), 1);
+        assert_eq!(c.begin_tokens(s2, 4).unwrap(), 0);
+        assert_eq!(c.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn cow_pages_freed_by_truncation_are_reclaimable() {
+        // Pool of 3: src holds pages 0,1 (4 tokens); dst shares and its
+        // claim CoW-copies page 1 into the last free page. The pool is
+        // now exhausted — until dst's rollback drops the copy, at which
+        // point a third lane can claim it immediately.
+        let mut c = tiny(3);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 4).unwrap();
+        fill(&mut c, src, 0, 4, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 4);
+        assert_eq!(c.begin_tokens(dst, 1).unwrap(), 4);
+        assert_eq!(c.cow_copies(), 1);
+        assert_eq!(c.free_page_count(), 0);
+        let other = c.alloc_seq();
+        assert!(c.begin_tokens(other, 1).is_err(), "pool must be exhausted");
+        assert_eq!(c.truncate_seq(dst, 3), 1,
+                   "rollback below the copy frees the CoW page itself");
+        assert_eq!(c.free_page_count(), 1);
+        assert_eq!(c.begin_tokens(other, 3).unwrap(), 0,
+                   "freed CoW page is immediately claimable");
+        assert_eq!(c.free_page_count(), 0);
+        assert_eq!(c.page_refcount(dst, 0), 2, "page 0 still shared");
+        for pos in 0..4 {
+            assert_eq!(c.kv(src, 0, pos).0[0], pos as f32 + 1.0,
+                       "src never loses a slot to the sharer's rollback");
+        }
     }
 }

@@ -30,6 +30,15 @@
 //!   [`scheduler::Scheduler::step_observed`] adds an incremental
 //!   per-token observer ([`scheduler::StreamEvent`]) — the hook the
 //!   HTTP front end ([`crate::server`]) streams tokens through.
+//!   Draft-verify speculative decoding
+//!   ([`scheduler::Scheduler::set_speculative`] +
+//!   [`scheduler::SpecConfig`]) rides the same span step: a cheap
+//!   draft model (TriLM by default — the paper's bits-per-param win
+//!   turned into a latency win) proposes k tokens per decode round,
+//!   the target verifies them in one chunked pass and rolls the
+//!   rejected tail back out of both KV caches
+//!   ([`kvcache::KvCache::truncate_seq`]), bitwise-losslessly
+//!   (`tests/speculative.rs`).
 //! - [`kvcache`] + [`model::AttnLm`] — the paged KV-cache attention
 //!   path: real pre-norm multi-head attention whose per-lane context
 //!   lives in fixed-size token pages ([`kvcache::KvCache`], free-list
@@ -76,7 +85,8 @@ pub use model::{AttnBlock, AttnLm, DecodeModel, DenseLm, FamilySpec,
                 LmDims, QuantLm, QuantMethod, SpectraBlock, SpectraLm,
                 TernaryLm};
 pub use scheduler::{Completion, FinishReason, GenRequest, Sampling,
-                    Scheduler, ServeStats, StreamEvent, TenantStats};
+                    Scheduler, ServeStats, SpecConfig, StreamEvent,
+                    TenantStats};
 
 /// Deterministic corpus-shaped bench/demo traffic: prompt strings from
 /// [`crate::eval::serve_prompts`] (the eval task generator's contexts,

@@ -154,10 +154,25 @@ pub trait DecodeModel {
             // Decode steady state: a span step of all-1 spans *is* a
             // plain batched step — no staging, no extra copies.
             self.step_batch_into(states, tokens, pool, scratch);
+            if scratch.want_span_logits {
+                // One row per lane: the span view of an all-1 step is
+                // the batched logits themselves, copied so the
+                // `span_logits` contract holds on every exit.
+                let n = states.len();
+                scratch.span_logits.reset2(n, self.dims().vocab);
+                for i in 0..n {
+                    let (dst, src) = (&mut scratch.span_logits,
+                                      &scratch.logits);
+                    dst.row_mut(i).copy_from_slice(src.row(i));
+                }
+            }
             return;
         }
         let n = spans.len();
         scratch.sample_logits.reset2(n, self.dims().vocab);
+        if scratch.want_span_logits {
+            scratch.span_logits.reset2(tokens.len(), self.dims().vocab);
+        }
         let mut offs = Vec::with_capacity(n);
         let mut off = 0usize;
         for &s in spans {
@@ -184,6 +199,15 @@ pub trait DecodeModel {
             self.step_batch_into(&mut refs, &sub_tokens, pool, scratch);
             drop(refs);
             for (row, &i) in participants.iter().enumerate() {
+                if scratch.want_span_logits {
+                    // Sub-step j produced position j's logits for every
+                    // participant: stage them at the lane's flat span
+                    // offset so verification sees all positions, not
+                    // just the final one.
+                    let (dst, src) =
+                        (&mut scratch.span_logits, &scratch.logits);
+                    dst.row_mut(offs[i] + j).copy_from_slice(src.row(row));
+                }
                 if spans[i] == j + 1 {
                     let (dst, src) =
                         (&mut scratch.sample_logits, &scratch.logits);
@@ -202,6 +226,31 @@ pub trait DecodeModel {
     /// default is a no-op.
     fn retire_state(&self, state: &mut [f32]) {
         let _ = state;
+    }
+
+    /// Whether [`DecodeModel::rollback_state`] can rewind this model's
+    /// per-lane state to an earlier committed length. True only for
+    /// models whose lane state is positional (the paged-KV [`AttnLm`]:
+    /// rolling back is a page-table truncation); a decay-state carry
+    /// mixes every past token into one vector and cannot be rewound.
+    /// Speculative decoding requires this of both the draft and the
+    /// target — [`crate::serve::Scheduler::set_speculative`] asserts it.
+    fn supports_rollback(&self) -> bool {
+        false
+    }
+
+    /// Rewind the lane bound to `state` to `new_len` committed tokens,
+    /// releasing whatever per-lane resource the rejected suffix held
+    /// (KV pages, via [`KvCache::truncate_seq`] — refcount-aware, so a
+    /// shared prefix donor is never invalidated). The speculative
+    /// scheduler calls this after each verify round to drop the
+    /// mis-speculated tail from both the target and the draft cache.
+    /// Calling it on a model that does not
+    /// [`DecodeModel::supports_rollback`] is a scheduler bug.
+    fn rollback_state(&self, state: &mut [f32], new_len: usize) {
+        let _ = (state, new_len);
+        panic!("rollback_state on a model without rollback support \
+                (family {})", self.family_label());
     }
 
     /// Try to serve a prefix of `prompt` from a model-side prefix cache
@@ -1262,6 +1311,9 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             // Every lane refused this step: no forward runs, the
             // scheduler requeues them all.
             scratch.logits.reset2(0, self.dims.vocab);
+            if scratch.want_span_logits {
+                scratch.span_logits.reset2(0, self.dims.vocab);
+            }
             return;
         }
         gather_embed_into(&self.embed, &scratch.span_tokens, &mut scratch.x);
@@ -1340,6 +1392,19 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
         }
         self.head.matmul_batch_into(&scratch.head_in, pool,
                                     &mut scratch.out_t, &mut scratch.logits);
+        if scratch.want_span_logits {
+            // Verification needs logits at *every* span position (each
+            // draft token is checked against the target's distribution
+            // at its own position), so the head also runs over the full
+            // flattened span batch. Rows stay lane-major and
+            // position-contiguous, mirroring `span_tokens`; the final
+            // row of each lane's stretch is bitwise the lane's
+            // `scratch.logits` row (same kernel, batch-invariant
+            // accumulation), which the speculative harness exploits.
+            self.head.matmul_batch_into(&scratch.norm, pool,
+                                        &mut scratch.out_t,
+                                        &mut scratch.span_logits);
+        }
     }
 
     fn retire_state(&self, state: &mut [f32]) {
@@ -1347,6 +1412,20 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             let seq = state[0] as usize - 1;
             self.lock_cache().cache.free_seq(seq);
             state[0] = 0.0;
+        }
+    }
+
+    fn supports_rollback(&self) -> bool {
+        true
+    }
+
+    fn rollback_state(&self, state: &mut [f32], new_len: usize) {
+        if state[0] != 0.0 {
+            let seq = state[0] as usize - 1;
+            self.lock_cache().cache.truncate_seq(seq, new_len);
+        } else {
+            debug_assert_eq!(new_len, 0,
+                             "rollback of an unbound lane must be to 0");
         }
     }
 

@@ -61,7 +61,7 @@ use std::collections::VecDeque;
 
 use crate::runtime::{DecodeScratch, SplitMix64, WorkerPool};
 use crate::serve::faults::FaultPlan;
-use crate::serve::model::DecodeModel;
+use crate::serve::model::{DecodeModel, FamilySpec};
 
 /// Per-lane sampling policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -72,6 +72,35 @@ pub enum Sampling {
     /// stream seeded by `seed` (deterministic per request, independent
     /// of batch composition).
     TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+/// Speculative decoding configuration
+/// ([`Scheduler::set_speculative`]): a cheap draft model proposes `k`
+/// greedy tokens per decode round and the target verifies the whole
+/// proposal in one chunked [`DecodeModel::step_spans_into`] pass,
+/// accepting the longest prefix the lane's own sampling rule agrees
+/// with. The paper's thesis as a latency win: TriLM matches FloatLM
+/// quality at a fraction of the bits, which makes it the natural
+/// `draft_family` for a float or quant target — every accepted token
+/// skips one full-price target step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecConfig {
+    /// Storage family of the draft model (TriLM by default at the CLI;
+    /// telemetry — the scheduler drives whatever draft it was handed).
+    pub draft_family: FamilySpec,
+    /// Draft tokens proposed per verify round (>= 1). Higher k
+    /// amortizes more target steps when acceptance is high and wastes
+    /// more verify compute when it is low —
+    /// [`crate::deploy::speculative_speedup_bits`] is the analytic
+    /// trade-off.
+    pub k: usize,
+}
+
+/// The scheduler's installed speculative state: the draft model
+/// reference plus its [`SpecConfig`].
+struct Spec<'m> {
+    draft: &'m dyn DecodeModel,
+    cfg: SpecConfig,
 }
 
 /// One generation request.
@@ -254,6 +283,20 @@ pub struct ServeStats {
     /// model+scheduler stack was rebuilt and the shard kept serving).
     /// Server-side counter, 0 off the HTTP path.
     pub worker_restarts: usize,
+    /// Draft tokens proposed to the target for verification
+    /// (speculative decoding; 0 off that path). Delivered-work
+    /// counter: a requeued/cancelled lane's proposals are rolled back
+    /// with the rest of its stream.
+    pub spec_proposed: usize,
+    /// Proposed tokens the target accepted *and emitted* — each one is
+    /// a full-price target decode step the lane skipped. Delivered-work
+    /// counter, rolled back like `spec_proposed`.
+    pub spec_accepted: usize,
+    /// Verify rounds executed (one per speculative decode-phase lane
+    /// per step, including rounds the draft sat out with zero
+    /// proposals). Like `batch_steps` this measures work actually
+    /// executed and is never rolled back.
+    pub spec_verify_steps: usize,
 }
 
 impl ServeStats {
@@ -279,6 +322,9 @@ impl ServeStats {
         self.cancelled += other.cancelled;
         self.deadline_expired += other.deadline_expired;
         self.worker_restarts += other.worker_restarts;
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
+        self.spec_verify_steps += other.spec_verify_steps;
         for t in &other.tenants {
             match self.tenants.iter_mut().find(|m| m.tenant == t.tenant) {
                 Some(m) => {
@@ -288,6 +334,19 @@ impl ServeStats {
                 }
                 None => self.tenants.push(t.clone()),
             }
+        }
+    }
+
+    /// Mean draft tokens accepted per executed verify round — the
+    /// realized-speedup knob of the speculative roofline
+    /// ([`crate::deploy::speculative_speedup_bits`]): each accepted
+    /// token is a target step the lane did not pay for. In `[0, k]`;
+    /// `0.0` when speculation never ran.
+    pub fn accepted_per_step(&self) -> f64 {
+        if self.spec_verify_steps == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_verify_steps as f64
         }
     }
 }
@@ -308,6 +367,30 @@ struct Lane {
     /// miss) — the slice of `pos` that was mapped, not fed, so requeue
     /// rollback can split the two.
     prefix_reused: usize,
+    /// Draft-model lane state (speculative decoding). `None` off the
+    /// speculative path; allocated at admission when a draft is
+    /// installed, retired alongside `state` on every exit path.
+    draft_state: Option<Vec<f32>>,
+    /// Tokens of this lane's committed stream the draft cache holds —
+    /// always a prefix of the target-committed context. The proposal
+    /// round's pending catch-up feeds the gap (healthy-path lag is 0
+    /// or 1; a refused draft claim just grows it for a round).
+    draft_valid: usize,
+    /// Draft tokens proposed for this lane (delivered work: rolled
+    /// back with the lane on requeue/cancel).
+    spec_proposed: usize,
+    /// Proposed tokens the target accepted and emitted (delivered
+    /// work, rolled back like `spec_proposed`).
+    spec_accepted: usize,
+    /// This verify round's draft proposals (cleared every round).
+    proposals: Vec<u32>,
+    /// Absolute next draft feed position during a proposal round;
+    /// after the round, the draft cache's committed length.
+    spec_fed: usize,
+    /// The draft refused a page claim this round: the lane verifies
+    /// whatever proposals it already has (possibly a plain one-token
+    /// step) and the draft catches up on a later round.
+    spec_refused: bool,
 }
 
 impl Lane {
@@ -328,6 +411,13 @@ impl Lane {
             steps: 0,
             ttft_steps: 0,
             prefix_reused: 0,
+            draft_state: None,
+            draft_valid: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+            proposals: Vec::new(),
+            spec_fed: 0,
+            spec_refused: false,
             req,
         }
     }
@@ -390,6 +480,13 @@ pub struct Scheduler<'m, M: DecodeModel + ?Sized> {
     /// Deterministic fault script ([`crate::serve::faults`]); the
     /// default empty plan injects nothing.
     faults: FaultPlan,
+    /// Speculative decoding: the draft model plus [`SpecConfig`]
+    /// ([`Scheduler::set_speculative`]); `None` = plain decode.
+    spec: Option<Spec<'m>>,
+    /// Recycled draft-state buffers (the draft's hidden width may
+    /// differ from the target's, so these never mix with
+    /// `free_states`).
+    free_draft_states: Vec<Vec<f32>>,
     stats: ServeStats,
 }
 
@@ -414,6 +511,8 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             defer_admission: false,
             stalled_steps: 0,
             faults: FaultPlan::default(),
+            spec: None,
+            free_draft_states: Vec::new(),
             stats: ServeStats::default(),
         }
     }
@@ -480,6 +579,50 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         self.faults = faults;
     }
 
+    /// Turn on draft-verify speculative decoding: each decode round,
+    /// `draft` proposes up to `cfg.k` greedy tokens per lane and the
+    /// target verifies the whole proposal in one chunked span pass,
+    /// accepting the longest prefix the lane's own sampling rule
+    /// agrees with and rolling the rejected tail back out of both KV
+    /// caches ([`DecodeModel::rollback_state`]).
+    ///
+    /// Losslessness: every emitted token — accepted draft token,
+    /// correction, or bonus — is sampled from the *target's* logits at
+    /// its own stream position with the lane's own RNG in stream
+    /// order, so greedy and seeded top-k streams are bitwise identical
+    /// to non-speculative decode (`tests/speculative.rs` proves this
+    /// for all four target families); speculation only changes how
+    /// many tokens one step emits. Prefix-cache reuse is disabled
+    /// while a draft is installed (the draft has no mapping for reused
+    /// pages; composing the two is a ROADMAP follow-on).
+    ///
+    /// Panics if `cfg.k == 0` or either model cannot roll back
+    /// rejected tokens (only positional-state models can — serve with
+    /// `--attn`; a decay carry cannot be rewound).
+    pub fn set_speculative(&mut self, draft: &'m dyn DecodeModel,
+                           cfg: SpecConfig) {
+        assert!(cfg.k >= 1, "speculative k must be >= 1");
+        assert!(self.model.supports_rollback(),
+                "speculative target (family {}) cannot roll back \
+                 rejected tokens — speculation needs the paged-KV \
+                 attention model",
+                self.model.family_label());
+        assert!(draft.supports_rollback(),
+                "speculative draft (family {}) cannot roll back \
+                 rejected tokens — speculation needs the paged-KV \
+                 attention model",
+                draft.family_label());
+        assert!(self.lanes.iter().all(|l| l.is_none()),
+                "set_speculative must run before any lane is admitted \
+                 (live lanes have no draft state to verify against)");
+        self.spec = Some(Spec { draft, cfg });
+    }
+
+    /// The installed speculative configuration, if any.
+    pub fn speculative(&self) -> Option<&SpecConfig> {
+        self.spec.as_ref().map(|s| &s.cfg)
+    }
+
     /// Abort request `id` — queued or live — because its consumer went
     /// away (client hangup). A queued request is simply removed; a
     /// live lane releases its model-side resources (KV pages, via the
@@ -498,10 +641,12 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             self.stats.cancelled += 1;
             return true;
         }
+        let draft = self.spec.as_ref().map(|s| s.draft);
         for slot in &mut self.lanes {
             if slot.as_ref().is_some_and(|l| l.req.id == id) {
                 let mut lane = slot.take().unwrap();
                 self.model.retire_state(&mut lane.state);
+                retire_draft(draft, &mut lane, &mut self.free_draft_states);
                 rollback_delivered(&mut self.stats, &lane);
                 self.free_states.push(lane.state);
                 self.stats.cancelled += 1;
@@ -532,10 +677,12 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 finish_reason: FinishReason::DeadlineExpired,
             });
         }
+        let draft = self.spec.as_ref().map(|s| s.draft);
         for slot in &mut self.lanes {
             if slot.as_ref().is_some_and(|l| l.req.id == id) {
                 let mut lane = slot.take().unwrap();
                 self.model.retire_state(&mut lane.state);
+                retire_draft(draft, &mut lane, &mut self.free_draft_states);
                 self.free_states.push(lane.state);
                 self.stats.deadline_expired += 1;
                 return Some(Completion {
@@ -575,6 +722,27 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                     None => vec![0.0; hidden],
                 };
                 let mut lane = Lane::new(req, state);
+                if let Some(spec) = &self.spec {
+                    // Speculative lane: wire in a zeroed draft-state
+                    // buffer (recycled like the target's). Prefix
+                    // reuse is skipped below — mapped pages exist only
+                    // in the target's cache, and a draft with no
+                    // mirror of that context would mis-propose from
+                    // position zero.
+                    let dh = spec.draft.dims().hidden;
+                    let ds = match self.free_draft_states.pop() {
+                        Some(mut s) => {
+                            debug_assert_eq!(s.len(), dh);
+                            s.fill(0.0);
+                            s
+                        }
+                        None => vec![0.0; dh],
+                    };
+                    lane.draft_state = Some(ds);
+                    *slot = Some(lane);
+                    admitted += 1;
+                    continue;
+                }
                 // Prefix cache: a hit maps the cached pages into the
                 // fresh lane (consuming no free pages, so it cannot be
                 // refused) and prefill starts at the first unshared
@@ -649,13 +817,28 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         } else if live_before == 0 {
             self.admit(1);
         }
+        // Speculative draft phase: decode-phase lanes run the cheap
+        // draft model for up to k greedy proposals each (batched
+        // one-token draft steps across lanes). Off the speculative
+        // path this is a no-op and every `proposals` list stays empty,
+        // so the staging below degenerates to the classic spans.
+        if self.spec.is_some() {
+            self.propose();
+        }
         self.token_buf.clear();
         self.span_buf.clear();
         for s in self.lanes.iter() {
             if let Some(lane) = s {
-                let span = lane.span_len(self.prefill_chunk);
+                let mut span = lane.span_len(self.prefill_chunk);
                 for j in 0..span {
                     self.token_buf.push(lane.token_at(lane.pos + j));
+                }
+                if lane.pos >= lane.req.prompt.len() {
+                    // Speculative verify span: the pending input plus
+                    // this round's draft proposals, checked by the
+                    // target in one chunked pass.
+                    self.token_buf.extend_from_slice(&lane.proposals);
+                    span += lane.proposals.len();
                 }
                 self.span_buf.push(span);
             }
@@ -672,6 +855,11 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         // refused lane restarts from scratch anyway.
         let forced = self.faults
             .forces_out_of_pages(self.stats.batch_steps + 1);
+        // Verification needs the target's logits at *every* span
+        // position (the draft calls in `propose`/the mirror pass
+        // switch this back off — only the verify pass pays the
+        // full-span head).
+        self.scratch.want_span_logits = self.spec.is_some();
         if forced {
             self.scratch.rejected.clear();
             self.scratch.rejected.extend(0..self.span_buf.len());
@@ -727,8 +915,15 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         self.stats.peak_occupancy = self.stats.peak_occupancy.max(ran);
 
         let logits = &self.scratch.logits;
+        let span_logits = &self.scratch.span_logits;
+        let draft = self.spec.as_ref().map(|s| s.draft);
         let mut requeue: Vec<GenRequest> = Vec::new();
+        // Prefill chunks the target accepted this step, to mirror into
+        // the draft cache after the loop (slot indices, ascending;
+        // always empty off the speculative path).
+        let mut mirror: Vec<usize> = Vec::new();
         let mut ai = 0usize; // logits row: ordinal among lanes that ran
+        let mut flat = 0usize; // span_logits row: flattened span cursor
         let mut si = 0usize; // live-lane ordinal (indexes span_buf)
         // `rejected` is sorted ascending (the model contract) and `si`
         // walks live lanes in order, so one cursor replaces a per-lane
@@ -736,7 +931,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         debug_assert!(self.scratch.rejected.windows(2).all(|w| w[0] < w[1]),
                       "model rejected list must be sorted ascending");
         let mut rj = 0usize; // cursor into scratch.rejected
-        for slot in &mut self.lanes {
+        for (li, slot) in self.lanes.iter_mut().enumerate() {
             let Some(lane) = slot.as_mut() else { continue };
             let span = self.span_buf[si];
             let rejected = self.scratch.rejected.get(rj) == Some(&si);
@@ -746,15 +941,17 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             si += 1;
             if rejected {
                 // KV backpressure: release this lane's model-side
-                // resources. Normally the request goes back to the
-                // head of the queue (decoding is deterministic, so the
-                // restart reproduces the same stream from scratch —
-                // requeues cost latency, never correctness); the
-                // `overflow` case instead error-completes the request,
-                // because requeueing a context that exceeds the whole
-                // pool would livelock.
+                // resources (both the target's and — speculative lanes
+                // — the draft's pages come back here). Normally the
+                // request goes back to the head of the queue (decoding
+                // is deterministic, so the restart reproduces the same
+                // stream from scratch — requeues cost latency, never
+                // correctness); the `overflow` case instead
+                // error-completes the request, because requeueing a
+                // context that exceeds the whole pool would livelock.
                 let mut lane = slot.take().unwrap();
                 self.model.retire_state(&mut lane.state);
+                retire_draft(draft, &mut lane, &mut self.free_draft_states);
                 if overflow {
                     rollback_delivered(&mut self.stats, &lane);
                     self.free_states.push(lane.state);
@@ -777,35 +974,110 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 continue;
             }
             lane.steps += 1;
-            if lane.pos < lane.req.prompt.len() {
+            let was_prefill = lane.pos < lane.req.prompt.len();
+            if was_prefill {
                 lane.pos += span;
                 self.stats.prefill_tokens += span;
             }
-            // Once the final prompt token has been fed, every step's
-            // logits row produces one sampled continuation token.
-            if lane.pos == lane.req.prompt.len() {
-                let tok = sample(logits.row(ai), &lane.req.sampling,
-                                 &mut lane.rng);
-                lane.generated.push(tok);
-                self.stats.generated_tokens += 1;
-                obs(StreamEvent::Token { id: lane.req.id, token: tok,
-                                         index: lane.generated.len() - 1 });
-                if lane.generated.len() == 1 {
-                    lane.ttft_steps = lane.steps;
-                    self.stats.ttft_steps += lane.steps;
-                    // First sampled token proves the whole prompt is
-                    // committed in the model's cache: offer it to the
-                    // prefix cache so later identical/shared prompts
-                    // map these pages instead of re-running prefill.
-                    self.model.prefix_register(&mut lane.state,
-                                               &lane.req.prompt);
+            if was_prefill || draft.is_none() {
+                // Classic path: prefill advance and/or one-token
+                // decode. Once the final prompt token has been fed,
+                // every step's logits row produces one sampled
+                // continuation token.
+                if lane.pos == lane.req.prompt.len() {
+                    let tok = sample(logits.row(ai), &lane.req.sampling,
+                                     &mut lane.rng);
+                    lane.generated.push(tok);
+                    self.stats.generated_tokens += 1;
+                    obs(StreamEvent::Token { id: lane.req.id, token: tok,
+                                             index: lane.generated.len() - 1 });
+                    if lane.generated.len() == 1 {
+                        lane.ttft_steps = lane.steps;
+                        self.stats.ttft_steps += lane.steps;
+                        // First sampled token proves the whole prompt
+                        // is committed in the model's cache: offer it
+                        // to the prefix cache so later identical/
+                        // shared prompts map these pages instead of
+                        // re-running prefill. Speculative mode leaves
+                        // the cache alone — reuse is disabled there
+                        // (the draft holds no mirror of mapped pages).
+                        if draft.is_none() {
+                            self.model.prefix_register(&mut lane.state,
+                                                       &lane.req.prompt);
+                        }
+                    }
+                    if lane.generated.len() >= lane.req.max_new_tokens {
+                        let mut lane = slot.take().unwrap();
+                        // Lane retire: release model-side per-lane
+                        // resources (an AttnLm frees its KV-cache
+                        // pages here) before the state buffer is
+                        // recycled.
+                        self.model.retire_state(&mut lane.state);
+                        retire_draft(draft, &mut lane,
+                                     &mut self.free_draft_states);
+                        self.free_states.push(lane.state);
+                        done.push(Completion {
+                            id: lane.req.id,
+                            prompt_len: lane.req.prompt.len(),
+                            tokens: lane.generated,
+                            lane_steps: lane.steps,
+                            ttft_steps: lane.ttft_steps,
+                            finish_reason: FinishReason::Length,
+                        });
+                    }
                 }
+            } else {
+                // Speculative verify walk: row r of this lane's
+                // span-logits stretch is the target's distribution at
+                // its own stream position, conditioned on the pending
+                // input plus the draft's first r proposals. Sample
+                // each row under the lane's own rule, in stream order,
+                // with the lane's own RNG: a sample equal to the
+                // draft's r-th proposal IS that token (accept — the
+                // next row was conditioned on it), a mismatch is the
+                // correction token and ends the round (later rows
+                // condition on rejected context), and the final row —
+                // reachable only when every proposal matched — yields
+                // the bonus token. Every emitted token is therefore
+                // exactly what non-speculative decode would have
+                // sampled, bitwise; speculation only changes how many
+                // tokens one step emits.
+                let j = lane.proposals.len();
+                debug_assert_eq!(span, 1 + j);
+                let mut accepted = 0usize;
+                for r in 0..span {
+                    let tok = sample(span_logits.row(flat + r),
+                                     &lane.req.sampling, &mut lane.rng);
+                    lane.generated.push(tok);
+                    self.stats.generated_tokens += 1;
+                    obs(StreamEvent::Token {
+                        id: lane.req.id, token: tok,
+                        index: lane.generated.len() - 1,
+                    });
+                    let matched = r < j && tok == lane.proposals[r];
+                    if matched {
+                        accepted += 1;
+                    }
+                    if !matched
+                        || lane.generated.len() >= lane.req.max_new_tokens
+                    {
+                        break;
+                    }
+                }
+                lane.spec_proposed += j;
+                lane.spec_accepted += accepted;
+                self.stats.spec_proposed += j;
+                self.stats.spec_accepted += accepted;
+                self.stats.spec_verify_steps += 1;
                 if lane.generated.len() >= lane.req.max_new_tokens {
+                    // Budget reached mid-round: retire outright —
+                    // freeing the sequences releases committed and
+                    // rejected pages alike, no precise truncate
+                    // needed.
                     let mut lane = slot.take().unwrap();
-                    // Lane retire: release model-side per-lane resources
-                    // (an AttnLm frees its KV-cache pages here) before
-                    // the state buffer is recycled.
                     self.model.retire_state(&mut lane.state);
+                    retire_draft(draft, &mut lane,
+                                 &mut self.free_draft_states);
                     self.free_states.push(lane.state);
                     done.push(Completion {
                         id: lane.req.id,
@@ -815,15 +1087,210 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                         ttft_steps: lane.ttft_steps,
                         finish_reason: FinishReason::Length,
                     });
+                } else {
+                    // Roll the rejected tail out of both caches. The
+                    // target claimed the whole verify span up front;
+                    // its committed context is everything before the
+                    // (still unfed) last generated token. The draft
+                    // keeps its longest held prefix that is still
+                    // committed — lag 0 after a rejection, lag 1 after
+                    // a full accept (the final proposal was sampled
+                    // but never fed back) or a refused round, absorbed
+                    // by the next round's pending catch-up.
+                    let ctx = lane.pos + lane.generated.len() - 1;
+                    self.model.rollback_state(&mut lane.state, ctx);
+                    let new_valid = lane.spec_fed.min(ctx);
+                    let ds = lane.draft_state.as_mut()
+                        .expect("speculative lane has a draft state");
+                    draft.expect("verify walk implies a draft")
+                        .rollback_state(ds, new_valid);
+                    lane.draft_valid = new_valid;
+                }
+            }
+            // Surviving speculative prefill lanes mirror this step's
+            // accepted chunk into the draft cache after the loop (one
+            // batched pass), so a lane enters decode with its prompt
+            // already drafted.
+            if draft.is_some() && was_prefill {
+                if let Some(l) = slot.as_ref() {
+                    if l.draft_valid < l.pos {
+                        mirror.push(li);
+                    }
                 }
             }
             ai += 1;
+            flat += span;
         }
         self.defer_admission = !requeue.is_empty();
         // Deferred lanes go back to the *head* of the queue in their
         // original relative order — they were already in flight.
         for req in requeue.into_iter().rev() {
             self.queue.push_front(req);
+        }
+        if !mirror.is_empty() {
+            self.mirror_prefill(&mirror);
+        }
+    }
+
+    /// Speculative draft phase: run the draft model over every
+    /// decode-phase lane until each has `k` greedy proposals — clamped
+    /// to the lane's remaining budget minus one, past which a proposal
+    /// could never be emitted — or its draft claim was refused.
+    /// Batched: each loop iteration is one
+    /// one-token draft step across all still-proposing lanes. A lane's
+    /// feeds first catch the draft cache up to the lane's committed
+    /// context (`pending`: committed tokens past `draft_valid`, then
+    /// the pending input), then each sampled proposal is fed back to
+    /// condition the next — `lag + k` feeds on the healthy path, where
+    /// lag is 0 or 1.
+    fn propose(&mut self) {
+        let Some(spec) = self.spec.as_ref() else { return };
+        let draft = spec.draft;
+        let k = spec.cfg.k;
+        let mut active: Vec<usize> = Vec::new();
+        for (i, s) in self.lanes.iter_mut().enumerate() {
+            if let Some(lane) = s {
+                lane.proposals.clear();
+                lane.spec_refused = false;
+                lane.spec_fed = lane.draft_valid;
+                if lane.pos >= lane.req.prompt.len()
+                    && !lane.generated.is_empty()
+                {
+                    active.push(i);
+                }
+            }
+        }
+        // Draft calls never need per-position logits (one greedy
+        // sample per lane per step) — only the verify pass pays the
+        // full-span head.
+        self.scratch.want_span_logits = false;
+        // The draft's greedy argmax never draws from an RNG; a
+        // throwaway generator keeps that explicit (lane RNGs must
+        // advance only on emitted tokens, or bitwise losslessness
+        // breaks).
+        let mut no_rng = SplitMix64::new(0);
+        let mut tokens: Vec<u32> = Vec::new();
+        let mut spans: Vec<usize> = Vec::new();
+        loop {
+            active.retain(|&i| {
+                let l = self.lanes[i].as_ref().expect("active lane is live");
+                // Clamp by the lane's remaining budget: with r tokens
+                // left, the verify walk emits at most r, so proposals
+                // past r - 1 could never be accepted — and clamping
+                // keeps the verify span's transient KV claim inside
+                // the plain-decode bound (prompt + max_new - 1 tokens
+                // per lane; no speculative page headroom needed).
+                let k_lane = k.min(l.req.max_new_tokens
+                                   - l.generated.len() - 1);
+                !l.spec_refused && l.proposals.len() < k_lane
+            });
+            if active.is_empty() {
+                break;
+            }
+            tokens.clear();
+            spans.clear();
+            for &i in &active {
+                let l = self.lanes[i].as_ref().expect("active lane is live");
+                let ctx = l.pos + l.generated.len() - 1;
+                let p = l.spec_fed;
+                // Feed position p: a committed token during catch-up
+                // (prompt or delivered continuation — the pending
+                // input at p == ctx is just `generated.last()`), a
+                // prior proposal past it.
+                let tok = if p <= ctx {
+                    if p < l.pos {
+                        l.req.prompt[p]
+                    } else {
+                        l.generated[p - l.pos]
+                    }
+                } else {
+                    l.proposals[p - ctx - 1]
+                };
+                tokens.push(tok);
+                spans.push(1);
+            }
+            // &mut draft-state borrows of the active lanes (`active`
+            // is ascending, so one pass over the slots collects them).
+            let mut it = active.iter().copied().peekable();
+            let mut refs: Vec<&mut [f32]> = Vec::with_capacity(active.len());
+            for (i, s) in self.lanes.iter_mut().enumerate() {
+                if it.peek() == Some(&i) {
+                    it.next();
+                    let lane = s.as_mut().expect("active lane is live");
+                    refs.push(lane.draft_state.as_mut()
+                        .expect("speculative lane has a draft state")
+                        .as_mut_slice());
+                }
+            }
+            draft.step_spans_into(&mut refs, &tokens, &spans, &self.pool,
+                                  &mut self.scratch);
+            drop(refs);
+            // Refused ordinals end those lanes' rounds (they verify
+            // what they have); accepted rows advance the feed cursor
+            // and — once at or past the pending input — sample one
+            // greedy proposal each.
+            let mut rj = 0usize;
+            let mut row = 0usize;
+            for (ord, &i) in active.iter().enumerate() {
+                let lane = self.lanes[i].as_mut().expect("active lane");
+                if self.scratch.rejected.get(rj) == Some(&ord) {
+                    rj += 1;
+                    lane.spec_refused = true;
+                    continue;
+                }
+                let ctx = lane.pos + lane.generated.len() - 1;
+                let fed_pos = lane.spec_fed;
+                lane.spec_fed += 1;
+                if fed_pos >= ctx {
+                    let tok = sample(self.scratch.logits.row(row),
+                                     &Sampling::Greedy, &mut no_rng);
+                    lane.proposals.push(tok);
+                }
+                row += 1;
+            }
+        }
+    }
+
+    /// Mirror this step's accepted prefill chunks into the draft cache
+    /// in one batched pass (logits discarded). Feeds each lane from
+    /// `draft_valid` — not from the chunk start — so a previously
+    /// refused mirror is caught up instead of leaving a hole. A mirror
+    /// refused here just leaves `draft_valid` behind; the proposal
+    /// round's pending catch-up absorbs the gap.
+    fn mirror_prefill(&mut self, mirror: &[usize]) {
+        let Some(spec) = self.spec.as_ref() else { return };
+        let draft = spec.draft;
+        self.scratch.want_span_logits = false;
+        self.token_buf.clear();
+        self.span_buf.clear();
+        for &li in mirror {
+            let l = self.lanes[li].as_ref().expect("mirrored lane is live");
+            let to = l.pos.min(l.req.prompt.len());
+            self.token_buf.extend_from_slice(&l.req.prompt[l.draft_valid..to]);
+            self.span_buf.push(to - l.draft_valid);
+        }
+        let mut it = mirror.iter().copied().peekable();
+        let mut refs: Vec<&mut [f32]> = Vec::with_capacity(mirror.len());
+        for (i, s) in self.lanes.iter_mut().enumerate() {
+            if it.peek() == Some(&i) {
+                it.next();
+                let lane = s.as_mut().expect("mirrored lane is live");
+                refs.push(lane.draft_state.as_mut()
+                    .expect("speculative lane has a draft state")
+                    .as_mut_slice());
+            }
+        }
+        draft.step_spans_into(&mut refs, &self.token_buf, &self.span_buf,
+                              &self.pool, &mut self.scratch);
+        drop(refs);
+        let mut rj = 0usize;
+        for (ord, &li) in mirror.iter().enumerate() {
+            if self.scratch.rejected.get(rj) == Some(&ord) {
+                rj += 1;
+                continue;
+            }
+            let l = self.lanes[li].as_mut().expect("mirrored lane is live");
+            l.draft_valid = l.pos.min(l.req.prompt.len());
         }
     }
 
@@ -841,15 +1308,36 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
 
 impl<M: DecodeModel + ?Sized> Drop for Scheduler<'_, M> {
     /// Abandoned mid-flight lanes still release their model-side
-    /// resources (KV-cache pages): a scheduler dropped before draining
-    /// must not leak pages out of the model's pool.
+    /// resources (KV-cache pages, for the target *and* any speculative
+    /// draft): a scheduler dropped before draining must not leak pages
+    /// out of either model's pool.
     fn drop(&mut self) {
         let model = self.model;
+        let draft = self.spec.as_ref().map(|s| s.draft);
         for slot in &mut self.lanes {
             if let Some(lane) = slot.as_mut() {
                 model.retire_state(&mut lane.state);
+                if let (Some(d), Some(ds)) = (draft, lane.draft_state.as_mut())
+                {
+                    d.retire_state(ds);
+                }
             }
         }
+    }
+}
+
+/// Release a lane's draft-model resources (speculative decoding): the
+/// draft's KV sequence is freed through the same
+/// [`DecodeModel::retire_state`] hook the target uses, and the state
+/// buffer goes back to the recycle list. A no-op off the speculative
+/// path (no draft state was ever wired in).
+fn retire_draft(draft: Option<&dyn DecodeModel>, lane: &mut Lane,
+                free: &mut Vec<Vec<f32>>) {
+    if let Some(mut ds) = lane.draft_state.take() {
+        if let Some(d) = draft {
+            d.retire_state(&mut ds);
+        }
+        free.push(ds);
     }
 }
 
@@ -881,6 +1369,16 @@ fn rollback_delivered(stats: &mut ServeStats, lane: &Lane) {
             .checked_sub(1)
             .expect("rollback underflowed prefix_hits");
     }
+    // Speculative accounting is delivered-work-only too: a bounced
+    // lane's proposals/accepts are re-earned by its restart
+    // (`spec_verify_steps`, like `batch_steps`, measures executed
+    // work and stays).
+    stats.spec_proposed = stats.spec_proposed
+        .checked_sub(lane.spec_proposed)
+        .expect("rollback underflowed spec_proposed");
+    stats.spec_accepted = stats.spec_accepted
+        .checked_sub(lane.spec_accepted)
+        .expect("rollback underflowed spec_accepted");
 }
 
 fn sample(row: &[f32], sampling: &Sampling, rng: &mut SplitMix64) -> u32 {
@@ -1530,5 +2028,123 @@ mod tests {
                           &mut SplitMix64::new(1)), 2);
         assert_eq!(sample(&nan_row, &Sampling::Greedy,
                           &mut SplitMix64::new(1)), 0);
+    }
+
+    #[test]
+    fn speculative_greedy_streams_match_plain_decode() {
+        // The losslessness contract at unit scale (tests/speculative.rs
+        // runs the four-family matrix): a ternary draft proposing for a
+        // float target changes how many tokens a step emits, never
+        // which tokens — and a drained run leaves both models' page
+        // pools empty.
+        use crate::serve::model::LatentAttnLm;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 17);
+        let reqs = || -> Vec<GenRequest> {
+            (0..6).map(|id| GenRequest::greedy(
+                id, vec![id as u32, 7, 11], 5)).collect()
+        };
+        let target = latent.build_float(4, 24);
+        let mut plain = Scheduler::new(&target, 4, 1);
+        for r in reqs() {
+            plain.submit(r);
+        }
+        let mut want: Vec<Completion> = plain.run();
+        want.sort_by_key(|c| c.id);
+        let want: Vec<Vec<u32>> =
+            want.into_iter().map(|c| c.tokens).collect();
+
+        let draft = latent.build_ternary(4, 24);
+        let mut sched = Scheduler::new(&target, 4, 1);
+        sched.set_speculative(&draft, SpecConfig {
+            draft_family: FamilySpec::Ternary, k: 3 });
+        for r in reqs() {
+            sched.submit(r);
+        }
+        let mut done = sched.run();
+        done.sort_by_key(|c| c.id);
+        let got: Vec<Vec<u32>> =
+            done.into_iter().map(|c| c.tokens).collect();
+        assert_eq!(got, want, "speculation must never change streams");
+        let st = sched.stats();
+        assert!(st.spec_proposed > 0, "draft never proposed");
+        assert!(st.spec_verify_steps > 0, "target never verified");
+        assert!(st.spec_accepted <= st.spec_proposed);
+        assert_eq!(target.kv_pages_in_use(), 0,
+                   "drained speculative run leaked target pages");
+        assert_eq!(draft.kv_pages_in_use(), 0,
+                   "drained speculative run leaked draft pages");
+    }
+
+    #[test]
+    fn identical_draft_accepts_every_proposal() {
+        // A draft built from the same latent weights in the same format
+        // produces bitwise-identical greedy argmaxes, so every proposal
+        // must land: with budget = 1 + (k+1) the whole decode is one
+        // verify round per lane — accepted_per_step == k exactly. Any
+        // drift here means verify rows and draft feeds disagree about
+        // positions.
+        use crate::serve::model::LatentAttnLm;
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 29);
+        let target = latent.build_float(4, 24);
+        let draft = latent.build_float(4, 24);
+        let mut sched = Scheduler::new(&target, 4, 1);
+        sched.set_speculative(&draft, SpecConfig {
+            draft_family: FamilySpec::Float, k: 3 });
+        for id in 0..4 {
+            sched.submit(GenRequest::greedy(id, vec![id as u32, 7, 11], 5));
+        }
+        let done = sched.run();
+        assert_eq!(done.len(), 4);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 5);
+        }
+        let st = sched.stats();
+        assert_eq!(st.spec_accepted, st.spec_proposed,
+                   "an identical draft must land every proposal");
+        assert_eq!(st.spec_proposed, 4 * 3);
+        assert_eq!(st.spec_verify_steps, 4,
+                   "budget 1 + (k+1) is exactly one verify round");
+        assert!((st.accepted_per_step() - 3.0).abs() < 1e-12);
+        assert_eq!(target.kv_pages_in_use(), 0);
+        assert_eq!(draft.kv_pages_in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot roll back")]
+    fn set_speculative_rejects_a_decay_target() {
+        // The decay families carry a recurrent state that cannot be
+        // rewound to an earlier position, so speculation must refuse
+        // them up front instead of corrupting streams at the first
+        // rejected proposal.
+        use crate::serve::model::LatentAttnLm;
+        let lm = small_model();
+        let latent = LatentAttnLm::synthetic(
+            LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }, 4, 1, 3);
+        let draft = latent.build_ternary(2, 8);
+        let mut sched = Scheduler::new(&lm, 2, 1);
+        sched.set_speculative(&draft, SpecConfig {
+            draft_family: FamilySpec::Ternary, k: 2 });
+    }
+
+    #[test]
+    fn spec_counters_stay_zero_off_the_speculative_path() {
+        // Non-speculative runs must report exact zeros (the BENCH
+        // schema-7 smoke asserts this end to end), and the ratio is
+        // well-defined with no verify steps.
+        let lm = small_model();
+        let mut sched = Scheduler::new(&lm, 2, 1);
+        sched.submit(GenRequest::greedy(0, vec![1], 3));
+        let _ = sched.run();
+        let st = sched.stats();
+        assert!(sched.speculative().is_none());
+        assert_eq!(st.spec_proposed, 0);
+        assert_eq!(st.spec_accepted, 0);
+        assert_eq!(st.spec_verify_steps, 0);
+        assert_eq!(st.accepted_per_step(), 0.0);
+        let synth = ServeStats { spec_accepted: 9, spec_verify_steps: 4,
+                                 ..ServeStats::default() };
+        assert!((synth.accepted_per_step() - 2.25).abs() < 1e-12);
     }
 }

@@ -304,6 +304,10 @@ pub fn stats_json(shards: &[ShardSnapshot]) -> String {
         ("prefill_tokens", Json::num(s.sched.prefill_tokens as f64)),
         ("requeued", Json::num(s.sched.requeued as f64)),
         ("prefix_hits", Json::num(s.sched.prefix_hits as f64)),
+        ("spec_proposed", Json::num(s.sched.spec_proposed as f64)),
+        ("spec_accepted", Json::num(s.sched.spec_accepted as f64)),
+        ("spec_verify_steps", Json::num(s.sched.spec_verify_steps as f64)),
+        ("accepted_per_step", Json::num(s.sched.accepted_per_step())),
     ]));
     let tenant_docs = tenant_totals.iter().map(|(name, (served, queued,
                                                         rejected))| {
@@ -329,6 +333,8 @@ pub fn stats_json(shards: &[ShardSnapshot]) -> String {
         ("cancelled", Json::num(total(&|s| s.cancelled))),
         ("deadline_expired", Json::num(total(&|s| s.deadline_expired))),
         ("worker_restarts", Json::num(total(&|s| s.worker_restarts))),
+        ("spec_proposed", Json::num(total(&|s| s.sched.spec_proposed))),
+        ("spec_accepted", Json::num(total(&|s| s.sched.spec_accepted))),
     ]).to_string()
 }
 

@@ -27,6 +27,15 @@
 //! FNV hash of the first KV page of prompt tokens, so repeated system
 //! prompts always hit the shard whose cache already holds their pages.
 //!
+//! Speculative decoding: `--speculative` gives every shard worker a
+//! second, cheap draft model ([`ServerConfig::draft_family`], TriLM by
+//! default) realized over the same seeded latent weights; the shard's
+//! scheduler verifies the draft's proposals in chunked target passes
+//! ([`crate::serve::Scheduler::set_speculative`]). Streams stay
+//! bitwise identical to plain decode, and `/stats` gains the schema-7
+//! acceptance counters (`spec_proposed` / `spec_accepted` /
+//! `accepted_per_step`).
+//!
 //! Endpoints: `POST /generate` (chunked ndjson token stream),
 //! `GET /stats`, `GET /healthz`, `POST /shutdown`. Streaming format
 //! and status codes are documented in the README's "Serving over
@@ -46,11 +55,12 @@ use std::time::Duration;
 
 use crate::serve::model::{FamilySpec, LatentAttnLm, LatentLm, LmDims,
                           QuantMethod};
-use crate::serve::{DecodeModel, FaultPlan};
+use crate::serve::{DecodeModel, FaultPlan, SpecConfig};
 use crate::Result;
 
 pub use api::{AdmissionLimits, ApiError, GenerateBody, ShardSnapshot};
-pub use shard::{run_shard, run_shard_supervised, shard_for_prompt,
+pub use shard::{run_shard, run_shard_spec, run_shard_supervised,
+                run_shard_supervised_spec, shard_for_prompt,
                 ShardConfig, ShardHandle, StreamItem};
 
 /// Everything `spectra serve` configures. One config builds the whole
@@ -109,6 +119,17 @@ pub struct ServerConfig {
     /// Deterministic fault injection, applied to shard 0 only so the
     /// other shards double as the blast-radius control group.
     pub fault_plan: FaultPlan,
+    /// Draft-verify speculative decoding (`--speculative`): every
+    /// shard worker holds a second, cheap draft model (same latent
+    /// weights, `draft_family` storage) and the scheduler verifies its
+    /// proposals in chunked target passes. Streams stay bitwise
+    /// identical; requires `attn` (rollback needs the paged-KV model).
+    pub speculative: bool,
+    /// Storage family of the draft model (TriLM by default — the
+    /// paper's bits-per-param win as a latency win).
+    pub draft_family: FamilySpec,
+    /// Draft tokens proposed per verify round (>= 1).
+    pub spec_k: usize,
 }
 
 impl Default for ServerConfig {
@@ -135,6 +156,9 @@ impl Default for ServerConfig {
             queue_deadline_ms: 0,
             decode_deadline_ms: 0,
             fault_plan: FaultPlan::default(),
+            speculative: false,
+            draft_family: FamilySpec::Ternary,
+            spec_k: 3,
         }
     }
 }
@@ -151,21 +175,7 @@ fn ms_opt(ms: u64) -> Option<Duration> {
 /// `Mutex`-guarded KV state.
 fn build_model(cfg: &ServerConfig) -> Result<Box<dyn DecodeModel + Send>> {
     Ok(if cfg.attn {
-        let latent = LatentAttnLm::synthetic(cfg.dims.clone(), cfg.heads,
-                                             cfg.mp, cfg.seed);
-        match cfg.family {
-            FamilySpec::Float =>
-                Box::new(latent.build_float(cfg.lanes, cfg.kv_context)),
-            FamilySpec::Ternary =>
-                Box::new(latent.build_ternary(cfg.lanes, cfg.kv_context)),
-            FamilySpec::Quant { bits, group, method: QuantMethod::Rtn } =>
-                Box::new(latent.build_quant_rtn(bits, group, cfg.lanes,
-                                                cfg.kv_context)),
-            FamilySpec::Quant { bits, group, method: QuantMethod::Gptq } =>
-                Box::new(latent.build_quant_gptq(bits, group, cfg.seed,
-                                                 cfg.lanes,
-                                                 cfg.kv_context)?),
-        }
+        build_attn_model(cfg, cfg.family)?
     } else {
         let latent = LatentLm::synthetic(cfg.dims.clone(), cfg.mp, cfg.seed);
         match cfg.family {
@@ -177,6 +187,45 @@ fn build_model(cfg: &ServerConfig) -> Result<Box<dyn DecodeModel + Send>> {
                 Box::new(latent.build_quant_gptq(bits, group, cfg.seed)?),
         }
     })
+}
+
+/// Realize `family` storage over the shard's attention latent (the same
+/// seeded weights every family shares). Both the target and — under
+/// `--speculative` — the draft model come through here, so a
+/// same-family draft is bitwise-identical to its target.
+fn build_attn_model(cfg: &ServerConfig, family: FamilySpec)
+                    -> Result<Box<dyn DecodeModel + Send>> {
+    let latent = LatentAttnLm::synthetic(cfg.dims.clone(), cfg.heads,
+                                         cfg.mp, cfg.seed);
+    Ok(match family {
+        FamilySpec::Float =>
+            Box::new(latent.build_float(cfg.lanes, cfg.kv_context)),
+        FamilySpec::Ternary =>
+            Box::new(latent.build_ternary(cfg.lanes, cfg.kv_context)),
+        FamilySpec::Quant { bits, group, method: QuantMethod::Rtn } =>
+            Box::new(latent.build_quant_rtn(bits, group, cfg.lanes,
+                                            cfg.kv_context)),
+        FamilySpec::Quant { bits, group, method: QuantMethod::Gptq } =>
+            Box::new(latent.build_quant_gptq(bits, group, cfg.seed,
+                                             cfg.lanes, cfg.kv_context)?),
+    })
+}
+
+/// Build one shard's speculative draft model: the same latent weights
+/// as the target, realized in `draft_family` storage. `Ok(None)` when
+/// speculation is off; an error when the config cannot speculate at
+/// all (decay models cannot roll back rejected tokens).
+fn build_draft(cfg: &ServerConfig)
+               -> Result<Option<Box<dyn DecodeModel + Send>>> {
+    if !cfg.speculative {
+        return Ok(None);
+    }
+    if !cfg.attn {
+        anyhow::bail!("--speculative needs --attn: draft-verify rollback \
+                       requires the paged-KV attention model (a decay \
+                       carry cannot be rewound)");
+    }
+    Ok(Some(build_attn_model(cfg, cfg.draft_family)?))
 }
 
 /// Shared state a connection handler routes against.
@@ -215,6 +264,7 @@ impl Server {
         // supervised workers below rebuild on demand and may therefore
         // expect success.
         drop(build_model(&cfg)?);
+        drop(build_draft(&cfg)?);
         let limits = AdmissionLimits {
             vocab: cfg.dims.vocab,
             max_context: cfg.kv_context,
@@ -226,6 +276,10 @@ impl Server {
             queue_deadline: ms_opt(cfg.queue_deadline_ms),
             decode_deadline: ms_opt(cfg.decode_deadline_ms),
             faults: FaultPlan::default(),
+            spec: cfg.speculative.then(|| SpecConfig {
+                draft_family: cfg.draft_family,
+                k: cfg.spec_k.max(1),
+            }),
         };
         let shards: Vec<Arc<ShardHandle>> = (0..shards_n)
             .map(|_| Arc::new(ShardHandle::new(cfg.queue_cap)))
@@ -240,9 +294,13 @@ impl Server {
                 scfg.faults = cfg.fault_plan.clone();
             }
             std::thread::spawn(move || {
-                run_shard_supervised(
-                    || build_model(&model_cfg)
-                        .expect("model config was validated at startup"),
+                run_shard_supervised_spec(
+                    || (build_model(&model_cfg)
+                            .expect("model config was validated at \
+                                     startup"),
+                        build_draft(&model_cfg)
+                            .expect("draft config was validated at \
+                                     startup")),
                     &h, &scfg)
             })
         }).collect();
@@ -606,6 +664,55 @@ mod tests {
             assert_eq!(s.kv_pages, 0, "shard {} leaked pages", s.shard);
         }
         assert_eq!(finals.iter().map(|s| s.served).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn loopback_speculative_stream_is_lossless() {
+        let cfg = ServerConfig { shards: 1, lanes: 2, speculative: true,
+                                 ..ServerConfig::default() };
+        let server = Server::start(cfg.clone()).unwrap();
+        let addr = server.addr();
+
+        let prompt = vec![5u32, 12, 31];
+        let resp = http::client_roundtrip(
+            &addr, "POST", "/generate",
+            br#"{"prompt":[5,12,31],"max_new_tokens":6,"tenant":"t"}"#)
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let mut streamed = Vec::new();
+        for line in resp.body_str().lines() {
+            let doc = Json::parse(line).unwrap();
+            if doc.opt("done").is_none() {
+                streamed.push(doc.get("token").unwrap()
+                              .as_usize().unwrap() as u32);
+            }
+        }
+
+        // Reference: plain (non-speculative) decode on the identical
+        // target model — speculation must be invisible in the stream.
+        let plain = ServerConfig { speculative: false, ..cfg };
+        let model = build_model(&plain).unwrap();
+        let mut sched = Scheduler::new(&*model, 1, 1);
+        sched.submit(crate::serve::GenRequest::greedy(0, prompt, 6));
+        let direct = sched.run().remove(0).tokens;
+        assert_eq!(streamed, direct,
+                   "speculative HTTP stream must be bitwise-equal to \
+                    plain decode");
+
+        // `/stats` carries the schema-7 acceptance counters.
+        let stats = http::client_roundtrip(&addr, "GET", "/stats", b"")
+            .unwrap();
+        let doc = Json::parse(&stats.body_str()).unwrap();
+        assert!(doc.get("spec_proposed").unwrap()
+                .as_usize().unwrap() > 0,
+                "the draft must have proposed tokens");
+        assert!(doc.get("spec_accepted").unwrap().as_usize().unwrap()
+                <= doc.get("spec_proposed").unwrap()
+                    .as_usize().unwrap());
+
+        let finals = server.shutdown();
+        assert_eq!(finals[0].kv_pages, 0,
+                   "target and draft caches must both drain clean");
     }
 
     #[test]

@@ -40,6 +40,13 @@
 //! - **Fault injection**: a [`FaultPlan`] in [`ShardConfig`] scripts
 //!   forced KV refusals (scheduler), worker panics, and mid-stream
 //!   client disconnects at deterministic coordinates.
+//! - **Speculative decoding**: [`ShardConfig::spec`] plus a draft
+//!   model box ([`run_shard_spec`] / [`run_shard_supervised_spec`])
+//!   install draft-verify decoding on the shard's scheduler
+//!   ([`Scheduler::set_speculative`]). Streams stay bitwise identical
+//!   to the plain worker; `/stats` gains the schema-7 counters; KV
+//!   occupancy published to the handle sums target *and* draft pages,
+//!   so the leak check covers both caches.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -50,7 +57,7 @@ use std::time::{Duration, Instant};
 
 use crate::serve::scheduler::{StreamEvent, TenantStats};
 use crate::serve::{Completion, DecodeModel, FaultPlan, GenRequest,
-                   Scheduler, ServeStats, KV_PAGE_TOKENS};
+                   Scheduler, ServeStats, SpecConfig, KV_PAGE_TOKENS};
 use crate::server::api::{ApiError, GenerateBody, ShardSnapshot};
 
 /// Consecutive worker panics after which the supervisor stops
@@ -488,6 +495,11 @@ pub struct ShardConfig {
     pub decode_deadline: Option<Duration>,
     /// Deterministic fault injection (empty = no faults).
     pub faults: FaultPlan,
+    /// Draft-verify speculative decoding: when set (and a draft model
+    /// box is passed to [`run_shard_spec`]), the worker installs it on
+    /// its scheduler via [`Scheduler::set_speculative`]. `None` = plain
+    /// decode.
+    pub spec: Option<SpecConfig>,
 }
 
 impl Default for ShardConfig {
@@ -499,6 +511,7 @@ impl Default for ShardConfig {
             queue_deadline: None,
             decode_deadline: None,
             faults: FaultPlan::default(),
+            spec: None,
         }
     }
 }
@@ -524,11 +537,36 @@ impl Default for ShardConfig {
 /// `finish_reason` rather than an ambiguous timeout.
 pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
                  cfg: &ShardConfig) -> usize {
+    run_shard_spec(model, None, handle, cfg)
+}
+
+/// [`run_shard`] with an optional speculative draft model: when both
+/// `draft` and [`ShardConfig::spec`] are present, the worker's
+/// scheduler runs draft-verify decoding
+/// ([`Scheduler::set_speculative`]) — bitwise identical streams, fewer
+/// target steps. The published KV-page occupancy (and the returned
+/// final leak count) sums target and draft caches, and the drain path
+/// releases the draft's cached pages too.
+pub fn run_shard_spec(model: Box<dyn DecodeModel + Send>,
+                      draft: Option<Box<dyn DecodeModel + Send>>,
+                      handle: &ShardHandle, cfg: &ShardConfig) -> usize {
     let model: &dyn DecodeModel = &*model;
+    let draft: Option<&dyn DecodeModel> =
+        draft.as_deref().map(|d| d as &dyn DecodeModel);
+    let pages_in_use = || {
+        model.kv_pages_in_use()
+            + draft.map_or(0, |d| d.kv_pages_in_use())
+    };
     let lanes = cfg.lanes.max(1);
     let mut sched = Scheduler::with_prefill_chunk(
         model, lanes, cfg.threads, cfg.prefill_chunk);
     sched.set_fault_plan(cfg.faults.clone());
+    debug_assert_eq!(cfg.spec.is_some(), draft.is_some(),
+                     "a speculative config needs a draft model box and \
+                      vice versa");
+    if let (Some(spec), Some(d)) = (cfg.spec, draft) {
+        sched.set_speculative(d, spec);
+    }
     handle.set_queue_deadline(cfg.queue_deadline);
     let mut sinks: HashMap<usize, SinkEntry> = HashMap::new();
     let mut done: Vec<Completion> = Vec::new();
@@ -569,7 +607,7 @@ pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
             if handle.shutdown_requested() {
                 break;
             }
-            handle.publish(sched.stats(), 0, model.kv_pages_in_use());
+            handle.publish(sched.stats(), 0, pages_in_use());
             handle.wait_for_work(Duration::from_millis(5));
             continue;
         }
@@ -627,16 +665,21 @@ pub fn run_shard(model: Box<dyn DecodeModel + Send>, handle: &ShardHandle,
             }
         }
         handle.publish(sched.stats(), sched.live_lanes(),
-                       model.kv_pages_in_use());
+                       pages_in_use());
         if cfg.faults.panics_after(worker_steps) {
             panic!("injected shard-worker panic (fault plan, after step \
                     {worker_steps})");
         }
     }
     // Drained. Drop prefix-cache pins so every page returns to the
-    // pool, then report what is still held (0 unless something leaked).
+    // pool, then report what is still held (0 unless something leaked)
+    // — counting the draft model's cache too, so a speculative shard's
+    // leak check covers both KV pools.
     model.release_cached_pages();
-    let final_pages = model.kv_pages_in_use();
+    if let Some(d) = draft {
+        d.release_cached_pages();
+    }
+    let final_pages = pages_in_use();
     handle.publish(sched.stats(), 0, final_pages);
     final_pages
 }
@@ -660,14 +703,27 @@ pub fn run_shard_supervised<F>(build: F, handle: &ShardHandle,
 where
     F: Fn() -> Box<dyn DecodeModel + Send>,
 {
+    run_shard_supervised_spec(|| (build(), None), handle, cfg)
+}
+
+/// [`run_shard_supervised`] for speculative shards: the builder
+/// returns the target model *and* its optional draft, so every
+/// post-panic incarnation rebuilds both (a crash drops both KV pools
+/// with the dead scheduler; the rebuilt pair starts clean).
+pub fn run_shard_supervised_spec<F>(build: F, handle: &ShardHandle,
+                                    cfg: &ShardConfig) -> usize
+where
+    F: Fn() -> (Box<dyn DecodeModel + Send>,
+                Option<Box<dyn DecodeModel + Send>>),
+{
     let mut cfg = cfg.clone();
     loop {
-        let model = build();
+        let (model, draft) = build();
         // The handle's Mutex ignores poisoning (`lock()` above) and
         // every update under it is single-field-coherent, so resuming
         // after an unwind observed mid-update state is safe.
         let result = catch_unwind(AssertUnwindSafe(|| {
-            run_shard(model, handle, &cfg)
+            run_shard_spec(model, draft, handle, &cfg)
         }));
         match result {
             Ok(final_pages) => return final_pages,
@@ -1039,5 +1095,93 @@ mod tests {
         assert_eq!(s.queue_depth, 0);
         assert!(s.sched.generated_tokens >= 3,
                 "stats must accumulate across the restart");
+    }
+
+    #[test]
+    fn speculative_worker_streams_match_direct_scheduler_bitwise() {
+        use crate::serve::model::{FamilySpec, LatentAttnLm};
+        let dims = LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 };
+        let latent = LatentAttnLm::synthetic(dims, 4, 1, 25);
+        let reqs: Vec<Vec<u32>> =
+            (0..5u32).map(|i| vec![i, i + 7, i + 11]).collect();
+
+        // Reference: same prompts through a plain (non-speculative)
+        // Scheduler on the same target weights.
+        let direct = latent.build_float(2, 24);
+        let mut sched = Scheduler::new(&direct, 2, 1);
+        for (id, p) in reqs.iter().enumerate() {
+            sched.submit(GenRequest::greedy(id, p.clone(), 4));
+        }
+        let mut expect: HashMap<Vec<u32>, Vec<u32>> = HashMap::new();
+        for c in sched.run() {
+            expect.insert(reqs[c.id].clone(), c.tokens);
+        }
+        drop(sched);
+        assert_eq!(direct.kv_pages_in_use(), 0);
+
+        // Server path with a TriLM draft installed on the worker.
+        let h = std::sync::Arc::new(ShardHandle::new(16));
+        let model: Box<dyn DecodeModel + Send> =
+            Box::new(latent.build_float(2, 24));
+        let draft: Box<dyn DecodeModel + Send> =
+            Box::new(latent.build_ternary(2, 24));
+        let cfg = ShardConfig {
+            lanes: 2,
+            threads: 1,
+            prefill_chunk: 1,
+            spec: Some(SpecConfig {
+                draft_family: FamilySpec::Ternary,
+                k: 3,
+            }),
+            ..ShardConfig::default()
+        };
+        let worker = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                run_shard_spec(model, Some(draft), &h, &cfg)
+            })
+        };
+        let mut rxs = Vec::new();
+        for p in &reqs {
+            let (tx, rx) = mpsc::channel();
+            h.try_admit(body("t", p.clone(), 4), tx).unwrap();
+            rxs.push((p.clone(), rx));
+        }
+        for (prompt, rx) in rxs {
+            let mut streamed = Vec::new();
+            loop {
+                let item = rx.recv_timeout(Duration::from_secs(30))
+                    .unwrap_or_else(|e| panic!(
+                        "speculative stream stalled: no item within \
+                         30s ({e})"));
+                match item {
+                    StreamItem::Token { token, index } => {
+                        assert_eq!(index, streamed.len(),
+                                   "tokens must stream in order, deduped");
+                        streamed.push(token);
+                    }
+                    StreamItem::Done(c) => {
+                        assert_eq!(c.tokens, streamed);
+                        break;
+                    }
+                    StreamItem::Error { kind, detail } => {
+                        panic!("unexpected stream error {kind}: {detail}");
+                    }
+                }
+            }
+            assert_eq!(streamed, expect[&prompt],
+                       "speculative server stream must be bitwise-equal \
+                        to plain decode");
+        }
+        h.request_shutdown();
+        let leaked = worker.join().unwrap();
+        assert_eq!(leaked, 0,
+                   "target and draft KV caches must both drain clean");
+        let s = h.snapshot(0);
+        assert_eq!(s.served, 5);
+        assert!(s.sched.spec_proposed > 0,
+                "the draft must actually have proposed tokens");
+        assert!(s.sched.spec_accepted <= s.sched.spec_proposed);
+        assert!(s.sched.spec_verify_steps > 0);
     }
 }

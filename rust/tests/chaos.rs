@@ -27,9 +27,9 @@ use std::time::{Duration, Instant};
 
 use spectra::serve::{DecodeModel, FamilySpec, FaultPlan, FinishReason,
                      GenRequest, LatentAttnLm, LmDims, QuantMethod,
-                     Sampling, Scheduler};
-use spectra::server::{run_shard, run_shard_supervised, GenerateBody,
-                      ShardConfig, ShardHandle, StreamItem};
+                     Sampling, Scheduler, SpecConfig};
+use spectra::server::{run_shard, run_shard_spec, run_shard_supervised,
+                      GenerateBody, ShardConfig, ShardHandle, StreamItem};
 
 fn dims() -> LmDims {
     LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 }
@@ -345,4 +345,205 @@ fn queue_deadline_expires_parked_requests_under_a_busy_lane() {
     assert_eq!(s.deadline_expired, 2);
     assert_eq!(s.served, 1);
     assert_eq!(s.cancelled, 0);
+}
+
+#[test]
+fn speculative_cancel_and_expire_mid_verify_free_both_caches() {
+    // ISSUE-9 chaos bar, scheduler-level: cancel one speculative lane
+    // and deadline-expire another *between verify rounds* — while both
+    // hold committed pages in the target cache and proposal feed in
+    // the draft cache. Both models' pages must come back immediately
+    // (before the next step runs anything), the expired lane's
+    // truncated stream must be a prefix of the non-speculative control
+    // stream, and the survivors — including a request admitted into a
+    // freed lane *after* the chaos — must stay bitwise intact.
+    let seed = 0xC408;
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, seed);
+    let target = latent.build_float(4, 32);
+    let draft = latent.build_ternary(4, 32);
+    let prompts: Vec<Vec<u32>> =
+        (0..4u32).map(|i| vec![i + 1, i + 9, i + 17]).collect();
+    let max_new = 8;
+
+    // Non-speculative control: the losslessness contract says the
+    // speculative streams must match these bitwise.
+    let mut control_sched = Scheduler::new(&target, 3, 1);
+    for (id, p) in prompts.iter().enumerate() {
+        control_sched.submit(GenRequest::greedy(id, p.clone(), max_new));
+    }
+    let mut control: HashMap<usize, Vec<u32>> = HashMap::new();
+    for c in control_sched.run() {
+        control.insert(c.id, c.tokens);
+    }
+    drop(control_sched);
+    assert_eq!(target.kv_pages_in_use(), 0);
+
+    // Speculative run: 3 lanes live (ids 0..2), id 3 parked. Step
+    // until at least one verify round has executed, so the chaos lands
+    // mid-verify with real draft state in play.
+    let mut sched = Scheduler::new(&target, 3, 1);
+    sched.set_speculative(&draft,
+                          SpecConfig { draft_family: FamilySpec::Ternary,
+                                       k: 3 });
+    for (id, p) in prompts.iter().enumerate() {
+        sched.submit(GenRequest::greedy(id, p.clone(), max_new));
+    }
+    let mut done = Vec::new();
+    let mut steps = 0;
+    while sched.stats().spec_verify_steps == 0 {
+        done.extend(sched.step());
+        steps += 1;
+        assert!(steps < 10, "no verify round within 10 steps");
+    }
+    assert_eq!(sched.live_lanes(), 3,
+               "budget 8 at k=3 cannot finish in one verify round");
+    let target_before = target.kv_pages_in_use();
+    let draft_before = draft.kv_pages_in_use();
+    assert!(target_before > 0, "live lanes must hold target pages");
+    assert!(draft_before > 0, "decode-phase speculative lanes must \
+                               hold draft feed pages");
+
+    assert!(sched.cancel(0), "live speculative lane must cancel");
+    let expired = sched.expire(1).expect("live lane must expire");
+    assert_eq!(expired.finish_reason, FinishReason::DeadlineExpired);
+    assert!(!expired.tokens.is_empty(),
+            "a lane past its first verify round has delivered tokens");
+    assert_eq!(expired.tokens[..], control[&1][..expired.tokens.len()],
+               "the truncated stream is a control-stream prefix");
+    // Both caches gave the two retired lanes' pages back *now*, not at
+    // drain — one lane's worth remains in each.
+    assert!(target.kv_pages_in_use() < target_before,
+            "cancel/expire must free target pages immediately");
+    assert!(draft.kv_pages_in_use() < draft_before,
+            "cancel/expire must free draft pages immediately");
+
+    done.extend(sched.run());
+    done.sort_by_key(|c| c.id);
+    let ids: Vec<usize> = done.iter().map(|c| c.id).collect();
+    assert_eq!(ids, vec![2, 3],
+               "survivor and post-chaos admission complete; the \
+                cancelled lane yields nothing");
+    for c in &done {
+        assert_eq!(c.tokens, control[&c.id],
+                   "request {}: surviving speculative stream diverged \
+                    from the non-speculative control", c.id);
+        assert_eq!(c.finish_reason, FinishReason::Length);
+    }
+    let st = sched.stats();
+    assert_eq!(st.cancelled, 1);
+    assert_eq!(st.deadline_expired, 1);
+    assert!(st.spec_proposed > 0);
+    assert_eq!(target.kv_pages_in_use(), 0,
+               "target pages leaked after speculative chaos");
+    assert_eq!(draft.kv_pages_in_use(), 0,
+               "draft pages leaked after speculative chaos");
+}
+
+#[test]
+fn scripted_disconnect_cancels_a_speculative_lane_through_the_worker() {
+    // Server-path variant: a scripted mid-stream client disconnect
+    // lands on a speculative lane (TriLM drafting for a GPTQ target).
+    // A speculative step can deliver several tokens, so the cut client
+    // sees at least `cut + 1` tokens — always a prefix of the
+    // non-speculative control stream — the lane cancels, and the
+    // worker's combined target+draft page count drains to zero.
+    let seed = 0xC409;
+    let lanes = 2;
+    let ctx = 32;
+    let max_new = 6;
+    let gptq = FamilySpec::Quant { bits: 4, group: 128,
+                                   method: QuantMethod::Gptq };
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, seed);
+    let prompts: Vec<Vec<u32>> =
+        (0..4u32).map(|i| vec![i + 2, i + 11, i + 23]).collect();
+    let cut_ticket = 1usize;
+    let cut_index = 1usize;
+
+    let clean = build_send(&latent, gptq, lanes, ctx, seed);
+    let mut control_sched = Scheduler::new(&*clean, lanes, 1);
+    for (id, p) in prompts.iter().enumerate() {
+        control_sched.submit(GenRequest::greedy(id, p.clone(), max_new));
+    }
+    let mut expect: HashMap<usize, Vec<u32>> = HashMap::new();
+    for c in control_sched.run() {
+        expect.insert(c.id, c.tokens);
+    }
+
+    let h = Arc::new(ShardHandle::new(16));
+    let model = build_send(&latent, gptq, lanes, ctx, seed);
+    let draft: Box<dyn DecodeModel + Send> =
+        Box::new(latent.build_ternary(lanes, ctx));
+    let cfg = ShardConfig {
+        lanes,
+        threads: 1,
+        prefill_chunk: 1,
+        faults: FaultPlan {
+            disconnect_at: vec![(cut_ticket, cut_index)],
+            ..FaultPlan::default()
+        },
+        spec: Some(SpecConfig { draft_family: FamilySpec::Ternary, k: 3 }),
+        ..ShardConfig::default()
+    };
+    let worker = {
+        let h = h.clone();
+        std::thread::spawn(move || run_shard_spec(model, Some(draft),
+                                                  &h, &cfg))
+    };
+    let mut rxs = Vec::new();
+    for p in &prompts {
+        let (tx, rx) = mpsc::channel();
+        let ticket = h.try_admit(body("t", p.clone(), max_new), tx)
+            .expect("admission under cap");
+        rxs.push((ticket, rx));
+    }
+    for (ticket, rx) in rxs {
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut finished = None;
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(StreamItem::Token { token, index }) => {
+                    assert_eq!(index, streamed.len());
+                    streamed.push(token);
+                }
+                Ok(StreamItem::Done(c)) => {
+                    finished = Some(c);
+                    break;
+                }
+                Ok(StreamItem::Error { kind, detail }) => {
+                    panic!("unexpected error line {kind}: {detail}");
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(e) => panic!("stream stalled ({e})"),
+            }
+        }
+        if ticket == cut_ticket {
+            assert!(finished.is_none(),
+                    "a disconnected client must not get a done trailer");
+            assert!(streamed.len() > cut_index,
+                    "the cut lands only after the scripted token index");
+            assert!(streamed.len() <= expect[&ticket].len());
+            assert_eq!(streamed[..], expect[&ticket][..streamed.len()],
+                       "tokens before the speculative cut are the \
+                        control stream's prefix");
+        } else {
+            let c = finished.unwrap_or_else(|| panic!(
+                "survivor {ticket} ended without done"));
+            assert_eq!(c.finish_reason, FinishReason::Length);
+            assert_eq!(streamed, expect[&ticket],
+                       "survivor {ticket}: speculative stream diverged \
+                        from the non-speculative control");
+        }
+    }
+    // Both caches' pages come back from the cancel without waiting for
+    // drain: the published gauge sums target and draft pools.
+    wait_pages_free(&h, "post-speculative-disconnect");
+    h.request_shutdown();
+    assert_eq!(worker.join().unwrap(), 0,
+               "zero combined target+draft pages after drain");
+    let s = h.snapshot(0);
+    assert_eq!(s.cancelled, 1);
+    assert_eq!(s.served, prompts.len() - 1);
+    assert!(s.sched.spec_proposed > 0,
+            "the worker must actually have run speculative rounds");
+    assert!(s.sched.spec_accepted <= s.sched.spec_proposed);
 }

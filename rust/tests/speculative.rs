@@ -1,0 +1,234 @@
+//! Cross-family speculative decoding acceptance harness: TriLM drafts,
+//! any family verifies — proven bitwise-lossless.
+//!
+//! The claim under test is the tentpole's: draft-verify decoding
+//! ([`Scheduler::set_speculative`]) is an *operational* optimization,
+//! never a semantic one. The target verifies each draft proposal batch
+//! in one chunked pass and every emitted token is sampled from the
+//! target's own logits, in stream order, with the lane's own RNG — so
+//! the stream a speculative lane delivers must be bitwise identical to
+//! plain target-only decode, for every storage family the engine
+//! serves (FloatLM f32, QuantLM RTN/GPTQ, TriLM ternary), at every
+//! draft depth k, under greedy and seeded top-k sampling alike, and
+//! across KV-backpressure requeue bounces
+//! ([`FaultPlan::out_of_pages_steps`] forces those deterministically).
+//!
+//! The harness also pins the accounting contract: `spec_proposed` /
+//! `spec_accepted` count *delivered* work only (rolled back with the
+//! stream when a lane bounces), while `spec_verify_steps` counts
+//! executed verify rounds — and a forced out-of-pages refusal landing
+//! mid-verify must hand back every page of *both* KV caches.
+
+use spectra::serve::{DecodeModel, FamilySpec, FaultPlan, GenRequest,
+                     LatentAttnLm, LmDims, QuantMethod, Sampling, Scheduler,
+                     SpecConfig};
+
+fn dims() -> LmDims {
+    LmDims { vocab: 128, hidden: 64, glu: 96, layers: 3 }
+}
+
+/// The four target families of the acceptance bar. Group 128 at these
+/// dims exercises the ragged-group path; GPTQ covers the calibrated
+/// quantizer.
+fn four_targets() -> [FamilySpec; 4] {
+    [
+        FamilySpec::Float,
+        FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+        FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Gptq },
+        FamilySpec::Ternary,
+    ]
+}
+
+fn request_set() -> Vec<GenRequest> {
+    (0..12).map(|id| {
+        let prompt: Vec<u32> = (0..(1 + id % 5))
+            .map(|j| ((7 * id + 3 * j) % 128) as u32)
+            .collect();
+        GenRequest::greedy(id, prompt, 4 + id % 7)
+    }).collect()
+}
+
+/// Cache capacity: request_set() lanes commit at most prompt (5) +
+/// max_new (10) - 1 = 14 positions, and the scheduler clamps proposals
+/// by the remaining budget so a verify round's transient claim stays
+/// inside the same bound — 16 per lane is headroom, not a requirement.
+const CTX: usize = 16;
+
+/// Run `reqs` through `sched` and return the token streams sorted by
+/// request id (speculation changes retirement order, never content).
+fn run_sorted<M: DecodeModel + ?Sized>(sched: &mut Scheduler<M>,
+                                       reqs: Vec<GenRequest>) -> Vec<Vec<u32>> {
+    for r in reqs {
+        sched.submit(r);
+    }
+    let mut done = sched.run();
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+#[test]
+fn all_four_targets_are_bitwise_lossless_at_every_k() {
+    // TriLM drafts for a float, RTN-quant, GPTQ-quant, and ternary
+    // target; spec-k 1 (minimal), 3 (typical), 8 (beyond most budgets,
+    // so the budget clamp is load-bearing). Streams must be bitwise
+    // identical to plain decode in all 12 cells.
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 60);
+    let draft = latent.build_ternary(8, CTX);
+    for spec in four_targets() {
+        let target = latent.build(spec, 8, CTX).unwrap();
+        let plain = {
+            let mut sched = Scheduler::new(target.as_ref(), 4, 2);
+            run_sorted(&mut sched, request_set())
+        };
+        assert_eq!(plain.len(), 12, "{}", spec.label());
+        assert_eq!(target.kv_pages_in_use(), 0);
+        for k in [1usize, 3, 8] {
+            let mut sched = Scheduler::new(target.as_ref(), 4, 2);
+            sched.set_speculative(&draft, SpecConfig {
+                draft_family: FamilySpec::Ternary, k });
+            let got = run_sorted(&mut sched, request_set());
+            let st = sched.stats().clone();
+            assert_eq!(got, plain,
+                       "{} target, k={k}: speculative stream diverged \
+                        from plain decode", spec.label());
+            assert!(st.spec_proposed > 0,
+                    "{} target, k={k}: draft never proposed",
+                    spec.label());
+            assert!(st.spec_accepted <= st.spec_proposed);
+            assert!(st.spec_verify_steps > 0);
+            assert!(st.accepted_per_step() <= k as f64 + 1e-12,
+                    "{} target, k={k}: accepted/step {} above k",
+                    spec.label(), st.accepted_per_step());
+            assert_eq!(target.kv_pages_in_use(), 0,
+                       "{} target, k={k}: target leaked pages",
+                       spec.label());
+            assert_eq!(draft.kv_pages_in_use(), 0,
+                       "{} target, k={k}: draft leaked pages",
+                       spec.label());
+        }
+    }
+}
+
+#[test]
+fn acceptance_counters_track_delivered_work_only() {
+    // A forced all-lane KV refusal bounces every live lane mid-flight;
+    // the replayed decode is deterministic, so once everything
+    // completes the *delivered* speculative counters must equal the
+    // clean run's exactly — proposals whose stream was thrown away
+    // were rolled back with it. Executed work is a different ledger:
+    // the bounced run pays extra verify rounds re-deriving the
+    // discarded tokens.
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 61);
+    let target = latent.build_float(8, CTX);
+    let draft = latent.build_ternary(8, CTX);
+    let spec = SpecConfig { draft_family: FamilySpec::Ternary, k: 3 };
+
+    let mut clean_sched = Scheduler::new(&target, 4, 2);
+    clean_sched.set_speculative(&draft, spec);
+    let clean = run_sorted(&mut clean_sched, request_set());
+    let clean_st = clean_sched.stats().clone();
+    drop(clean_sched);
+
+    let mut sched = Scheduler::new(&target, 4, 2);
+    sched.set_speculative(&draft, spec);
+    sched.set_fault_plan(FaultPlan {
+        out_of_pages_steps: vec![4],
+        ..FaultPlan::default()
+    });
+    let bounced = run_sorted(&mut sched, request_set());
+    let st = sched.stats().clone();
+
+    assert_eq!(bounced, clean,
+               "a requeue bounce must replay identical streams");
+    assert!(st.requeued > 0, "the forced refusal must actually bounce");
+    assert_eq!(st.spec_proposed, clean_st.spec_proposed,
+               "delivered proposals must not count discarded attempts");
+    assert_eq!(st.spec_accepted, clean_st.spec_accepted,
+               "delivered acceptances must not count discarded attempts");
+    assert_eq!(st.generated_tokens, clean_st.generated_tokens,
+               "delivered tokens roll back with the bounce");
+    assert!(st.spec_verify_steps >= clean_st.spec_verify_steps,
+            "executed verify rounds include the replayed work \
+             ({} < {})", st.spec_verify_steps, clean_st.spec_verify_steps);
+    assert_eq!(target.kv_pages_in_use(), 0);
+    assert_eq!(draft.kv_pages_in_use(), 0);
+}
+
+#[test]
+fn forced_out_of_pages_mid_verify_returns_every_page_of_both_caches() {
+    // Repeated scripted refusals land while lanes hold verify-span
+    // claims in the target cache and proposal feeds in the draft cache;
+    // every bounce must hand back both, the drain must complete every
+    // request bitwise-correctly, and nothing may be left allocated.
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 62);
+    let target = latent.build_ternary(8, CTX);
+    let draft = latent.build_ternary(8, CTX);
+    let spec = SpecConfig { draft_family: FamilySpec::Ternary, k: 3 };
+
+    let plain = {
+        let mut sched = Scheduler::new(&target, 4, 2);
+        run_sorted(&mut sched, request_set())
+    };
+    let mut sched = Scheduler::new(&target, 4, 2);
+    sched.set_speculative(&draft, spec);
+    sched.set_fault_plan(FaultPlan {
+        out_of_pages_steps: vec![2, 5, 9],
+        ..FaultPlan::default()
+    });
+    let got = run_sorted(&mut sched, request_set());
+    let st = sched.stats().clone();
+    assert_eq!(got, plain,
+               "streams must survive mid-verify refusals bitwise");
+    assert!(st.requeued > 0);
+    assert_eq!(target.kv_pages_in_use(), 0,
+               "target pages leaked across forced mid-verify refusals");
+    assert_eq!(draft.kv_pages_in_use(), 0,
+               "draft pages leaked across forced mid-verify refusals");
+}
+
+#[test]
+fn seeded_top_k_is_bitwise_stable_across_batch_and_bounce() {
+    // Sampling under temperature with a per-request seed: the verify
+    // walk consumes the lane's RNG once per emitted token in stream
+    // order — exactly like plain decode — so seeded top-k speculative
+    // streams must match plain top-k decode bitwise, at batch 1/4/8,
+    // and across a requeue bounce (the restart re-seeds the RNG, so
+    // the replay re-draws the identical sample sequence).
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 63);
+    let target = latent.build_float(8, CTX);
+    let draft = latent.build_ternary(8, CTX);
+    let spec = SpecConfig { draft_family: FamilySpec::Ternary, k: 3 };
+    let reqs = || -> Vec<GenRequest> {
+        (0..10).map(|id| GenRequest::top_k(
+            id, vec![(id as u32) % 128, 9, 41], 6, 5, 0.9,
+            1000 + id as u64)).collect()
+    };
+    for r in reqs() {
+        assert!(matches!(r.sampling, Sampling::TopK { .. }));
+    }
+
+    let plain = {
+        let mut sched = Scheduler::new(&target, 4, 2);
+        run_sorted(&mut sched, reqs())
+    };
+    for max_batch in [1usize, 4, 8] {
+        let mut sched = Scheduler::new(&target, max_batch, 2);
+        sched.set_speculative(&draft, spec);
+        let got = run_sorted(&mut sched, reqs());
+        assert_eq!(got, plain,
+                   "speculative top-k diverged at batch {max_batch}");
+        assert_eq!(target.kv_pages_in_use(), 0);
+        assert_eq!(draft.kv_pages_in_use(), 0);
+    }
+    let mut sched = Scheduler::new(&target, 4, 2);
+    sched.set_speculative(&draft, spec);
+    sched.set_fault_plan(FaultPlan {
+        out_of_pages_steps: vec![3],
+        ..FaultPlan::default()
+    });
+    let got = run_sorted(&mut sched, reqs());
+    assert!(sched.stats().requeued > 0);
+    assert_eq!(got, plain,
+               "a requeue bounce must not perturb the seeded sample \
+                sequence");
+}
