@@ -112,7 +112,7 @@ if command -v python3 >/dev/null 2>&1; then
     python3 - runs/BENCH_serve_prefix_smoke.json <<'PYEOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == 7, f"schema {doc['schema']} != 7"
+assert doc["schema"] == 8, f"schema {doc['schema']} != 8"
 assert doc["shared_prefix_tokens"] == 20, doc["shared_prefix_tokens"]
 assert doc["speculative"] == 0 and doc["spec_k"] == 0, doc
 hits = sum(f["prefix_hits"] for f in doc["families"])
@@ -127,7 +127,7 @@ for fam in doc["families"]:
                 "accepted_per_step"):
         assert fam[key] == 0, \
             f"{fam['family']}: {key} != 0 without --speculative"
-print(f"runs/BENCH_serve_prefix_smoke.json: schema 7, "
+print(f"runs/BENCH_serve_prefix_smoke.json: schema 8, "
       f"{hits} prefix hits, {reused} tokens reused")
 PYEOF
 fi
@@ -151,7 +151,7 @@ if command -v python3 >/dev/null 2>&1; then
     python3 - runs/BENCH_serve_spec_smoke.json <<'PYEOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == 7, f"schema {doc['schema']} != 7"
+assert doc["schema"] == 8, f"schema {doc['schema']} != 8"
 assert doc["speculative"] == 1, doc
 assert doc["draft_family"] == "ternary", doc["draft_family"]
 assert doc["spec_k"] == 3, doc["spec_k"]
@@ -166,8 +166,44 @@ for fam in doc["families"]:
 tern = next(f for f in doc["families"] if f["family"] == "TriLM")
 assert tern["spec_accepted"] == tern["spec_proposed"], \
     "a bitwise-identical ternary draft must be fully accepted"
-print(f"runs/BENCH_serve_spec_smoke.json: schema 7, "
+print(f"runs/BENCH_serve_spec_smoke.json: schema 8, "
       f"{accepted}/{proposed} draft tokens accepted")
+PYEOF
+fi
+
+# GQA + sliding-window smoke: grouped-query attention at the extreme
+# ratio (--kv-heads 1 = multi-query) with a finite --window on the
+# undersized cache from the chunked smoke, so window page recycling,
+# GQA attend, chunked prefill, and KV backpressure all run in one
+# sweep. The schema-8 JSON must record the new geometry and the
+# per-family kv_bytes_per_token must equal the head-ratio-shrunk
+# layout (2 * layers * (hidden/heads) * kv_heads * 4), i.e. 1/4 of
+# the MHA figure at 4 heads.
+echo "== gqa + sliding-window serve smoke (--kv-heads --window) =="
+cargo run --release --quiet -- serve-bench \
+    --family float,ternary --attn --heads 4 --kv-heads 1 --window 8 \
+    --vocab 64 --hidden 32 --glu 48 --layers 2 --mp 1 \
+    --requests 6 --max-tokens 4 --batches 1,4 --threads 1 \
+    --prefill-chunk 4 --prompt-tokens 24 --kv-context 12 \
+    --json runs/BENCH_serve_gqa_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 - runs/BENCH_serve_gqa_smoke.json <<'PYEOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == 8, f"schema {doc['schema']} != 8"
+assert doc["kv_heads"] == 1, doc["kv_heads"]
+assert doc["window"] == 8, doc["window"]
+assert doc["window_interleave"] == 0, doc["window_interleave"]
+layers, hidden, heads = (doc["dims"]["layers"], doc["dims"]["hidden"],
+                         doc["heads"])
+want = 2 * layers * (hidden // heads) * doc["kv_heads"] * 4
+for fam in doc["families"]:
+    assert fam["kv_bytes_per_token"] == want, \
+        f"{fam['family']}: kv_bytes_per_token {fam['kv_bytes_per_token']} " \
+        f"!= head-ratio-shrunk {want}"
+print(f"runs/BENCH_serve_gqa_smoke.json: schema 8, kv_heads 1, "
+      f"window 8, kv_bytes_per_token {want} (vs "
+      f"{2 * layers * hidden * 4} MHA)")
 PYEOF
 fi
 
@@ -257,6 +293,93 @@ try:
     assert "0 kv pages leaked" in out, out
     print(f"spectra serve smoke: {statuses.count(200)}x200 + "
           f"{statuses.count(429)}x429, /stats parse clean, shutdown clean")
+finally:
+    if proc.poll() is None:
+        proc.kill()
+PYEOF
+fi
+
+# Windowed GQA serving smoke: `spectra serve` with multi-query
+# attention (--kv-heads 1) and a sliding window far below the decode
+# length, on a KV context sized to exactly the largest admissible
+# request (undersized in absolute terms: 42 tokens, 3 pages/lane).
+# Each stream decodes 40 tokens through a window of 8, so
+# release_before recycles out-of-window pages dozens of times while
+# requests queue behind the single lane; a refcount bug anywhere in
+# that path surfaces as the leak check failing. /stats must parse and
+# carry the schema's new spec_k_effective gauge (0 — not speculative),
+# and POST /shutdown must drain with zero leaked KV pages (`spectra
+# serve` exits non-zero on a leak, so the exit code is the leak check).
+echo "== windowed gqa serving smoke (spectra serve --kv-heads --window) =="
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'PYEOF'
+import json, re, socket, subprocess, threading
+
+proc = subprocess.Popen(
+    ["target/release/spectra", "serve",
+     "--port", "0", "--shards", "1", "--lanes", "1", "--threads", "1",
+     "--queue-cap", "4", "--kv-context", "42", "--prefill-chunk", "4",
+     "--attn", "--heads", "4", "--kv-heads", "1", "--window", "8",
+     "--family", "ternary",
+     "--vocab", "64", "--hidden", "32", "--glu", "48", "--layers", "2",
+     "--mp", "1"],
+    stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+try:
+    port = None
+    for _ in range(50):
+        line = proc.stdout.readline()
+        m = re.search(r"listening on 127\.0\.0\.1:(\d+)", line)
+        if m:
+            port = int(m.group(1))
+            break
+    assert port, "spectra serve never reported its address"
+
+    def raw(method, path, body=b""):
+        s = socket.create_connection(("127.0.0.1", port), timeout=120)
+        head = (f"{method} {path} HTTP/1.1\r\nHost: smoke\r\n"
+                f"Connection: close\r\nContent-Length: {len(body)}\r\n\r\n")
+        s.sendall(head.encode() + body)
+        f = s.makefile("rb")
+        status = int(f.readline().split()[1])
+        rest = f.read()
+        s.close()
+        payload = rest.split(b"\r\n\r\n", 1)[1] if b"\r\n\r\n" in rest \
+                  else b""
+        return status, payload
+
+    # Three concurrent 40-token decodes against one lane: one runs,
+    # two queue (cap 4, no 429s expected), every stream must close
+    # with a done trailer — the window recycles its pages mid-decode.
+    results, lock = [], threading.Lock()
+    def stream():
+        st, payload = raw("POST", "/generate",
+                          b'{"prompt":[5,9],"max_new_tokens":40,'
+                          b'"tenant":"windowed"}')
+        with lock:
+            results.append((st, payload))
+    threads = [threading.Thread(target=stream) for _ in range(3)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    for st, payload in results:
+        assert st == 200, f"stream not admitted: {st}"
+        assert b'"done"' in payload and b'"finish_reason"' in payload, \
+            "windowed stream never reached its done trailer"
+
+    st, body = raw("GET", "/stats")
+    assert st == 200
+    doc = json.loads(body)
+    assert doc["served"] == 3, doc
+    assert doc["spec_k_effective"] == 0, \
+        f"spec_k_effective must be 0 off the speculative path: {doc}"
+    assert doc["kv_pages"] >= 0, doc
+
+    st, _ = raw("POST", "/shutdown")
+    assert st == 200
+    out, _ = proc.communicate(timeout=300)
+    assert proc.returncode == 0, f"serve exited {proc.returncode}:\n{out}"
+    assert "0 kv pages leaked" in out, out
+    print("windowed gqa serve smoke: 3 streams through a window-8 "
+          "multi-query lane, /stats parse clean, shutdown clean")
 finally:
     if proc.poll() is None:
         proc.kill()

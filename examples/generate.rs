@@ -11,8 +11,16 @@
 //! `--family` flag picks the storage format the same weights are
 //! served in; `--attn` serves the paged KV-cache attention model
 //! instead of the decay-state model (checkpoints must then carry
-//! `l{i}.attn_{q,k,v,o}` tensors; `--heads` sets the head count and
-//! must divide hidden).
+//! `l{i}.attn_{q,k,v,o}` tensors — or a fused `l{i}.attn_qkv` stack;
+//! `--heads` sets the head count and must divide hidden).
+//! `--kv-heads` (default `--heads`) serves grouped-query attention:
+//! query-head groups share `kv_heads` key/value heads, shrinking KV
+//! bytes per token by `heads/kv_heads` (synthetic weights only — a
+//! checkpoint's k/v tensor shapes already fix its kv-head count);
+//! `--window W` bounds attention
+//! to the last W tokens (0 = full context — bitwise identical to the
+//! unwindowed model), with out-of-window KV pages recycled back to the
+//! pool.
 //!
 //! `--prefill-chunk` ingests up to N prompt tokens per batched step
 //! (chunked prefill — fewer steps to first token; the generated text
@@ -28,7 +36,8 @@
 //!     cargo run --release --example generate -- \
 //!         --checkpoint runs/main/930k_ternary.spt --prompt "one day" \
 //!         --family ternary --batch 4 --threads 2 --max-tokens 24 \
-//!         [--attn] [--heads 4] [--group 128] [--prefill-chunk 8] \
+//!         [--attn] [--heads 4] [--kv-heads H] [--window 0] \
+//!         [--group 128] [--prefill-chunk 8] \
 //!         [--speculative] [--draft-family ternary] [--spec-k 3]
 
 use std::path::PathBuf;
@@ -49,6 +58,14 @@ fn main() -> Result<()> {
     let prefill_chunk = args.get_usize("prefill-chunk", 8);
     let attn = args.has("attn");
     let heads = args.get_usize("heads", 4);
+    let kv_heads = args.get_usize("kv-heads", heads);
+    if attn && (kv_heads == 0 || kv_heads > heads
+                || heads % kv_heads != 0) {
+        anyhow::bail!("--kv-heads {kv_heads} must divide --heads {heads} \
+                       (each group of heads/kv_heads query heads shares \
+                       one kv head)");
+    }
+    let window = args.get_usize("window", 0);
     let spec = FamilySpec::parse(&args.get("family", "ternary"), group)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown family (float | quant<bits> | gptq<bits> | ternary)"))?;
@@ -108,7 +125,8 @@ fn main() -> Result<()> {
                 let built = build(
                     &encoded,
                     &|| LatentLm::from_checkpoint(&ck),
-                    &|| LatentAttnLm::from_checkpoint(&ck, heads))?;
+                    &|| Ok(LatentAttnLm::from_checkpoint(&ck, heads)?
+                        .with_window(window, 0)))?;
                 let bpe = data.bpe;
                 (built, encoded, Box::new(move |t: &[u32]| bpe.decode(t)))
             }
@@ -132,7 +150,9 @@ fn main() -> Result<()> {
                     &encoded,
                     &|| Ok(LatentLm::synthetic(dims.clone(), 1, 0)),
                     &|| Ok(LatentAttnLm::synthetic(dims.clone(),
-                                                   heads, 1, 0)))?;
+                                                   heads, 1, 0)
+                        .with_kv_heads(kv_heads)
+                        .with_window(window, 0)))?;
                 (built, encoded, Box::new(|t: &[u32]| format!("{t:?}")))
             }
         };

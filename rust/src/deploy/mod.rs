@@ -122,6 +122,36 @@ pub fn kv_bytes_per_token_fp16(params: f64) -> f64 {
     2.0 * layers * hidden * 2.0
 }
 
+/// [`kv_bytes_per_token_fp16`] under grouped-query attention: with
+/// `kv_heads` shared key/value heads the cache stores `kv_heads * dh`
+/// channels per layer instead of `hidden`, so the per-token tax
+/// shrinks by exactly `kv_heads / heads`. `kv_heads == heads` degrades
+/// to the MHA figure bit-for-bit. The serving engine's measured analog
+/// is `DecodeModel::kv_bytes_per_token` on a `--kv-heads` model.
+pub fn kv_bytes_per_token_fp16_gqa(params: f64, heads: usize,
+                                   kv_heads: usize) -> f64 {
+    assert!(kv_heads >= 1 && kv_heads <= heads && heads % kv_heads == 0,
+            "kv_heads must divide heads");
+    kv_bytes_per_token_fp16(params) * kv_heads as f64 / heads as f64
+}
+
+/// The context a sliding-window decode step actually reads: `window`
+/// caps it when finite (`window > 0`), and 0 means unwindowed — the
+/// identity. Feed the result to [`decode_tokens_per_sec_bits_kv`]'s
+/// `context` to get the windowed KV roofline: past the window the KV
+/// bandwidth term stops growing with context, which is the analytic
+/// shadow of the paged cache's `kv_pages_in_use` plateau. (A
+/// `window:global` interleave re-adds the global layers' full-context
+/// stream; this helper models the all-windowed bound.)
+pub fn effective_kv_context(context: f64, window: f64) -> f64 {
+    assert!(context >= 0.0 && window >= 0.0);
+    if window > 0.0 {
+        context.min(window)
+    } else {
+        context
+    }
+}
+
 /// KV-aware decode roofline: [`decode_tokens_per_sec_bits`] plus the
 /// attention bandwidth term. Per decode step the weights stream once
 /// (amortized over the batch) but *every lane* additionally streams
@@ -393,6 +423,51 @@ mod tests {
                 < one * 1e-9);
         assert!((e2e_prefill_seconds(7e9, 16.0, hw, 65, 64) - 2.0 * one)
                 .abs() < one * 1e-6);
+    }
+
+    #[test]
+    fn gqa_kv_bytes_scale_by_the_head_ratio_and_degrade_to_mha() {
+        let mha = kv_bytes_per_token_fp16(7e9);
+        // kv_heads == heads is the identity, bit for bit.
+        assert_eq!(kv_bytes_per_token_fp16_gqa(7e9, 32, 32), mha);
+        // Fewer kv heads scale linearly: 8/32 = a 4x smaller stream.
+        let gqa = kv_bytes_per_token_fp16_gqa(7e9, 32, 8);
+        assert!((gqa * 4.0 - mha).abs() < mha * 1e-12);
+        // MQA is the floor: one shared kv head.
+        let mqa = kv_bytes_per_token_fp16_gqa(7e9, 32, 1);
+        assert!((mqa * 32.0 - mha).abs() < mha * 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv_heads must divide heads")]
+    fn gqa_kv_bytes_reject_a_non_dividing_head_count() {
+        kv_bytes_per_token_fp16_gqa(7e9, 32, 5);
+    }
+
+    #[test]
+    fn windowed_context_caps_the_kv_term_and_degrades_to_identity() {
+        // window 0 = unwindowed: the identity at every context.
+        assert_eq!(effective_kv_context(8192.0, 0.0), 8192.0);
+        // A finite window caps context but never raises it.
+        assert_eq!(effective_kv_context(8192.0, 1024.0), 1024.0);
+        assert_eq!(effective_kv_context(512.0, 1024.0), 512.0);
+        // Through the roofline: past the window, decode throughput
+        // stops degrading with context (the kv_pages_in_use plateau,
+        // analytically), while the unwindowed model keeps paying.
+        let hw = hardware::by_name("H100-SXM").unwrap();
+        let kvb = kv_bytes_per_token_fp16_gqa(7e9, 32, 8);
+        let at = |ctx: f64, window: f64| decode_tokens_per_sec_bits_kv(
+            7e9, 1.58, kvb, effective_kv_context(ctx, window), hw, 8.0);
+        assert_eq!(at(8192.0, 1024.0), at(32768.0, 1024.0),
+                   "windowed decode must plateau past the window");
+        assert!(at(32768.0, 0.0) < at(32768.0, 1024.0),
+                "unwindowed decode keeps paying for context");
+        // And GQA composes: fewer kv heads, faster at equal context.
+        let mha_kvb = kv_bytes_per_token_fp16(7e9);
+        assert!(decode_tokens_per_sec_bits_kv(7e9, 1.58, mha_kvb, 8192.0,
+                                              hw, 8.0)
+                < decode_tokens_per_sec_bits_kv(7e9, 1.58, kvb, 8192.0,
+                                                hw, 8.0));
     }
 
     #[test]

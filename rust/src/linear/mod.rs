@@ -226,6 +226,136 @@ impl LinearFormat for QuantPacked {
     }
 }
 
+/// Row-stacked fusion of several same-input linears executed as one
+/// logical projection: `y = x @ [W_0; W_1; ...]^T`.
+///
+/// The attention serve model fuses q/k/v into one QKV matmul and
+/// gate/up into one matmul per block (two of the five per-block
+/// dispatches removed). Fusion is a *dispatch* optimization, never a
+/// numerical one: each part keeps its own storage object, quantized
+/// exactly as the unfused layer would be — crucial for the ternary
+/// family, whose mp-shard scales depend on the matrix they summarize
+/// (fusing q/k/v *before* ternarization would change every scale and
+/// break the bitwise fused-vs-unfused invariant). Output columns of
+/// part `i` land at `[offset_i, offset_i + out_i)` in the fused row,
+/// so splitting the fused output is pure slicing.
+#[derive(Debug, Clone)]
+pub struct FusedLinear<L: LinearFormat> {
+    parts: Vec<L>,
+}
+
+impl<L: LinearFormat> FusedLinear<L> {
+    /// Fuse `parts` (≥ 1, all sharing `in_features`) into one logical
+    /// row-stacked projection.
+    pub fn new(parts: Vec<L>) -> Self {
+        assert!(!parts.is_empty(), "fused linear needs at least one part");
+        let k = parts[0].in_features();
+        for p in &parts[1..] {
+            assert_eq!(p.in_features(), k,
+                       "fused parts must share in_features");
+        }
+        FusedLinear { parts }
+    }
+
+    /// The fused constituent layers, in row-stack order.
+    pub fn parts(&self) -> &[L] {
+        &self.parts
+    }
+
+    /// Column offset of part `i` inside a fused output row.
+    pub fn part_offset(&self, i: usize) -> usize {
+        self.parts[..i].iter().map(|p| p.out_features()).sum()
+    }
+
+    /// One fused projection on the pooled hot path: each part runs its
+    /// own allocation-free [`LinearFormat::matmul_batch_into`] into
+    /// `stage`, and the staged rows are copied into the part's column
+    /// stripe of `out` (shape `(m, Σ out_i)`). Per-element accumulation
+    /// happens entirely inside the parts' kernels, so the fused result
+    /// is bitwise identical to running the parts separately — the
+    /// property the fused-vs-unfused equivalence tests pin down.
+    pub fn matmul_batch_into_fused(&self, x: &HostTensor, pool: &WorkerPool,
+                                   out_t: &mut Vec<f32>,
+                                   stage: &mut HostTensor,
+                                   out: &mut HostTensor) {
+        let (m, _) = x.dims2();
+        let total = self.out_features();
+        out.reset2(m, total);
+        let mut off = 0usize;
+        for p in &self.parts {
+            let n = p.out_features();
+            p.matmul_batch_into(x, pool, out_t, stage);
+            debug_assert_eq!(stage.dims2(), (m, n));
+            for r in 0..m {
+                let dst = &mut out.row_mut(r)[off..off + n];
+                dst.copy_from_slice(stage.row(r));
+            }
+            off += n;
+        }
+    }
+}
+
+impl<L: LinearFormat> LinearFormat for FusedLinear<L> {
+    fn out_features(&self) -> usize {
+        self.parts.iter().map(|p| p.out_features()).sum()
+    }
+
+    fn in_features(&self) -> usize {
+        self.parts[0].in_features()
+    }
+
+    fn matmul_batch(&self, x: &HostTensor, threads: usize) -> HostTensor {
+        let (m, _) = x.dims2();
+        let total = self.out_features();
+        let mut out = HostTensor::zeros(vec![m, total]);
+        let mut off = 0usize;
+        for p in &self.parts {
+            let n = p.out_features();
+            let y = p.matmul_batch(x, threads);
+            for r in 0..m {
+                out.row_mut(r)[off..off + n].copy_from_slice(y.row(r));
+            }
+            off += n;
+        }
+        out
+    }
+
+    fn matmul_batch_into(&self, x: &HostTensor, pool: &WorkerPool,
+                         out_t: &mut Vec<f32>, out: &mut HostTensor) {
+        // Correct but per-call-allocating stage; the serve hot path
+        // uses `matmul_batch_into_fused` with a persistent stage slab.
+        let mut stage = HostTensor::zeros(vec![0, 0]);
+        self.matmul_batch_into_fused(x, pool, out_t, &mut stage, out);
+    }
+
+    fn dequant(&self) -> HostTensor {
+        let k = self.in_features();
+        let total = self.out_features();
+        let mut data = Vec::with_capacity(total * k);
+        for p in &self.parts {
+            data.extend_from_slice(&p.dequant().data);
+        }
+        HostTensor::new(vec![total, k], data)
+    }
+
+    fn effective_bits_per_param(&self) -> f64 {
+        // Params-weighted mean over the parts (each part accounts its
+        // own scale overhead, exactly as when unfused).
+        let mut bits = 0.0f64;
+        let mut params = 0.0f64;
+        for p in &self.parts {
+            let n = (p.out_features() * p.in_features()) as f64;
+            bits += p.effective_bits_per_param() * n;
+            params += n;
+        }
+        bits / params.max(1.0)
+    }
+
+    fn label(&self) -> String {
+        self.parts[0].label()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +429,78 @@ mod tests {
         let t = TernaryTensor::from_latent(&w, 2);
         let pm = PackedMatrix::from_ternary(&t);
         assert_eq!(LinearFormat::dequant(&pm).data, t.dequant().data);
+    }
+
+    #[test]
+    fn fused_matmul_is_bitwise_the_stacked_parts_in_every_format() {
+        // The fusion contract the attention refactor rides on: one
+        // fused dispatch == the unfused per-part dispatches, bitwise,
+        // for dense, ternary, and quant storage alike, and on both the
+        // allocating and the pooled staged path.
+        let pool = WorkerPool::new(3);
+        let k = 36;
+        let mk = |rows: usize, seed: u64| {
+            HostTensor::randn(vec![rows, k], 0.05, seed)
+        };
+        let dense = FusedLinear::new(vec![
+            DenseF32 { w: mk(24, 1) },
+            DenseF32 { w: mk(8, 2) },
+            DenseF32 { w: mk(8, 3) },
+        ]);
+        let tern = FusedLinear::new(vec![
+            PackedMatrix::from_ternary(&TernaryTensor::from_latent(&mk(24, 1), 1)),
+            PackedMatrix::from_ternary(&TernaryTensor::from_latent(&mk(8, 2), 1)),
+            PackedMatrix::from_ternary(&TernaryTensor::from_latent(&mk(8, 3), 1)),
+        ]);
+        let quant = FusedLinear::new(vec![
+            QuantPacked::from_quant(&QuantTensor::quantize_rtn(&mk(24, 1), 4, 32)),
+            QuantPacked::from_quant(&QuantTensor::quantize_rtn(&mk(8, 2), 4, 32)),
+            QuantPacked::from_quant(&QuantTensor::quantize_rtn(&mk(8, 3), 4, 32)),
+        ]);
+        let x = HostTensor::randn(vec![5, k], 1.0, 9);
+
+        fn check<L: LinearFormat>(f: &FusedLinear<L>, x: &HostTensor,
+                                  pool: &WorkerPool) {
+            assert_eq!(f.out_features(), 40);
+            assert_eq!(f.in_features(), x.dims2().1);
+            assert_eq!(f.part_offset(0), 0);
+            assert_eq!(f.part_offset(1), 24);
+            assert_eq!(f.part_offset(2), 32);
+            let fused = f.matmul_batch(x, pool.threads());
+            // Unfused reference: each part separately, stacked columns.
+            let mut off = 0usize;
+            for p in f.parts() {
+                let y = p.matmul_batch(x, pool.threads());
+                for r in 0..x.dims2().0 {
+                    assert_eq!(&fused.row(r)[off..off + p.out_features()],
+                               y.row(r), "{} part at {off}", f.label());
+                }
+                off += p.out_features();
+            }
+            // Pooled staged path == allocating path, bitwise.
+            let (mut out_t, mut stage) = (Vec::new(), HostTensor::zeros(vec![0, 0]));
+            let mut out = HostTensor::zeros(vec![0, 0]);
+            f.matmul_batch_into_fused(x, pool, &mut out_t, &mut stage, &mut out);
+            assert_eq!(out.shape, fused.shape);
+            assert_eq!(out.data, fused.data, "{} pooled", f.label());
+        }
+        check(&dense, &x, &pool);
+        check(&tern, &x, &pool);
+        check(&quant, &x, &pool);
+    }
+
+    #[test]
+    fn fused_bits_are_the_params_weighted_mean_of_the_parts() {
+        let w_big = HostTensor::randn(vec![32, 16], 0.05, 11);
+        let w_small = HostTensor::randn(vec![8, 16], 0.05, 12);
+        let f = FusedLinear::new(vec![DenseF32 { w: w_big },
+                                      DenseF32 { w: w_small }]);
+        assert_eq!(f.effective_bits_per_param(), 32.0);
+        assert_eq!(f.label(), "fp32");
+        // Row-stacked dequant == concatenated part dequants.
+        let d = LinearFormat::dequant(&f);
+        assert_eq!(d.shape, vec![40, 16]);
+        assert_eq!(&d.data[..32 * 16], &f.parts()[0].dequant().data[..]);
+        assert_eq!(&d.data[32 * 16..], &f.parts()[1].dequant().data[..]);
     }
 }

@@ -53,14 +53,23 @@ commands:
                 --family float,quant3,quant4,ternary --group 128
                 --requests 32 --max-tokens 32 --batches 1,2,4,8
                 --threads 1,2,4 --vocab 512 --hidden 256 --glu 704
-                --layers 4 --mp 2 [--attn] [--heads 4] [--seed 0]
+                --layers 4 --mp 2 [--attn] [--heads 4] [--kv-heads H]
+                [--window 0] [--window-interleave 0] [--seed 0]
                 [--prefill-chunk 1] [--prompt-tokens 16]
                 [--shared-prefix-tokens 0] [--kv-context N]
                 [--speculative] [--draft-family ternary] [--spec-k 3]
                 [--json BENCH_serve.json]
                 --attn serves the paged KV-cache attention model (adds
                 kv_bytes_per_token to the table and JSON; see
-                docs/BENCH_SCHEMA.md). --prefill-chunk ingests up to N
+                docs/BENCH_SCHEMA.md). --kv-heads (default --heads)
+                turns on grouped-query attention: query-head groups
+                share kv_heads key/value heads and kv_bytes_per_token
+                shrinks by heads/kv_heads. --window W bounds attention
+                to the last W tokens per layer (0 = full context);
+                --window-interleave N makes every (N+1)-th layer global
+                (Gemma3-style window:global interleave; 0 = all layers
+                windowed, which lets the paged cache recycle
+                out-of-window pages). --prefill-chunk ingests up to N
                 prompt tokens per batched step (chunked prefill;
                 streams are bitwise chunk-invariant), --prompt-tokens
                 sets the exact prompt length of the bench traffic,
@@ -78,11 +87,12 @@ commands:
                 one chunked pass and rolls rejections back out of the
                 KV cache — streams stay bitwise identical to plain
                 decode, and spec_proposed / spec_accepted /
-                accepted_per_step land in the table and JSON (schema 7)
+                accepted_per_step land in the table and JSON (schema 8)
   serve         std-only HTTP/1.1 serving front end over the serve engine
                 [--port 8080] [--shards 2] [--lanes 8] [--threads 0]
                 [--queue-cap 32] [--kv-context 256] [--prefill-chunk 8]
-                [--family float] [--attn] [--heads 4] [--group 128]
+                [--family float] [--attn] [--heads 4] [--kv-heads H]
+                [--window 0] [--window-interleave 0] [--group 128]
                 [--vocab 512] [--hidden 256] [--glu 704] [--layers 4]
                 [--mp 2] [--seed 0]
                 [--speculative] [--draft-family ternary] [--spec-k 3]
@@ -115,7 +125,13 @@ commands:
                 --attn) gives every shard a --draft-family draft model
                 proposing --spec-k tokens per round — streams stay
                 bitwise identical and /stats gains spec_proposed /
-                spec_accepted / accepted_per_step
+                spec_accepted / accepted_per_step / spec_k_effective
+                (the acceptance-adaptive proposal length). --kv-heads /
+                --window / --window-interleave (with --attn) serve the
+                grouped-query / sliding-window model: fewer kv heads
+                shrink KV bytes per token by heads/kv_heads, a finite
+                window bounds per-lane KV growth (out-of-window pages
+                are recycled when every layer is windowed)
   bench-report  paper-style tables from a suite run
                 --results runs/suite/suite_results.json --experiment all
   help          print this text (also: bare `spectra` or --help)
@@ -324,9 +340,13 @@ fn cmd_generate(args: &Args, artifacts: &PathBuf, runs: &PathBuf) -> Result<()> 
 /// weights — that proposes `--spec-k` tokens per decode round for the
 /// target to verify in one chunked pass (streams stay bitwise identical
 /// to plain decode; proposed/accepted counters and accepted-per-step
-/// land in the table, the JSON, and the speculative roofline). `--json
+/// land in the table, the JSON, and the speculative roofline);
+/// `--kv-heads` serves grouped-query attention (query-head groups
+/// share `kv_heads` key/value heads, shrinking KV bytes/token by the
+/// head ratio) and `--window`/`--window-interleave` bound attention to
+/// a sliding window with optional Gemma3-style global layers. `--json
 /// <path>` additionally writes the machine-readable sweep
-/// (BENCH_serve.json, schema 7 — see docs/BENCH_SCHEMA.md; the
+/// (BENCH_serve.json, schema 8 — see docs/BENCH_SCHEMA.md; the
 /// server-side and robustness fields are zero on this socketless path)
 /// and re-parses the file so a malformed write fails loudly.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
@@ -352,6 +372,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         anyhow::bail!("--heads {heads} must divide --hidden {} \
                        (attention head width is hidden/heads)",
                       dims.hidden);
+    }
+    let kv_heads = args.get_usize("kv-heads", heads);
+    if attn && (kv_heads == 0 || kv_heads > heads
+                || heads % kv_heads != 0) {
+        anyhow::bail!("--kv-heads {kv_heads} must divide --heads {heads} \
+                       (each group of heads/kv_heads query heads shares \
+                       one kv head)");
+    }
+    let window = args.get_usize("window", 0);
+    let window_interleave = args.get_usize("window-interleave", 0);
+    if window == 0 && window_interleave > 0 {
+        anyhow::bail!("--window-interleave needs a finite --window \
+                       (all layers already attend globally)");
     }
     let group = args.get_usize("group", 128);
     let seed = args.get_u64("seed", 0);
@@ -407,8 +440,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
               tokens | prefill chunk {prefill_chunk} | group {group}{}{}",
              dims.vocab, dims.hidden, dims.glu, dims.layers,
              if attn {
-                 format!(" | attn ({heads} heads, paged kv cache, \
-                          {max_context}-token context/lane)")
+                 format!(" | attn ({heads} heads, {kv_heads} kv heads, \
+                          {}, paged kv cache, {max_context}-token \
+                          context/lane)",
+                         if window > 0 {
+                             format!("window {window}:{window_interleave}")
+                         } else {
+                             "full context".into()
+                         })
              } else {
                  String::new()
              },
@@ -423,7 +462,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let decay_latent =
         (!attn).then(|| LatentLm::synthetic(dims.clone(), mp, seed));
     let attn_latent = attn
-        .then(|| LatentAttnLm::synthetic(dims.clone(), heads, mp, seed));
+        .then(|| LatentAttnLm::synthetic(dims.clone(), heads, mp, seed)
+            .with_kv_heads(kv_heads)
+            .with_window(window, window_interleave));
     let build = |spec: FamilySpec| -> Result<Box<dyn DecodeModel>> {
         match (&decay_latent, &attn_latent) {
             (Some(latent), _) => latent.build(spec),
@@ -630,7 +671,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema", Json::num(7.0)),
+            ("schema", Json::num(8.0)),
             ("dims", Json::obj(vec![
                 ("vocab", Json::num(dims.vocab as f64)),
                 ("hidden", Json::num(dims.hidden as f64)),
@@ -639,6 +680,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ])),
             ("attn", Json::num(if attn { 1.0 } else { 0.0 })),
             ("heads", Json::num(if attn { heads as f64 } else { 0.0 })),
+            // GQA / sliding-window geometry (schema 8): kv_heads ==
+            // heads and window 0 are the classic MHA/full-context
+            // shape, bitwise identical to schema-7 runs.
+            ("kv_heads", Json::num(if attn { kv_heads as f64 }
+                                   else { 0.0 })),
+            ("window", Json::num(if attn { window as f64 } else { 0.0 })),
+            ("window_interleave", Json::num(if attn {
+                window_interleave as f64
+            } else {
+                0.0
+            })),
             ("threads", Json::num(fam_threads as f64)),
             ("requests", Json::num(n_req as f64)),
             ("max_new_tokens", Json::num(max_new as f64)),
@@ -716,7 +768,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if let Some(hw) = spectra::deploy::hardware::by_name("H100-SXM") {
         use spectra::deploy::{batched_speedup_vs_fp16_bits,
                               decode_tokens_per_sec_bits_kv,
+                              effective_kv_context,
                               kv_bytes_per_token_fp16,
+                              kv_bytes_per_token_fp16_gqa,
                               prefill_speedup_vs_one_token,
                               prefill_tokens_per_sec_bits,
                               saturation_batch_bits,
@@ -755,17 +809,29 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             // The KV-aware roofline: the cache stream is family-blind
             // (fp16 activations at scale), so long contexts erode the
             // compression speedup — the serving story the paged cache
-            // makes measurable.
-            let kvb = kv_bytes_per_token_fp16(7e9);
-            println!("\nkv-aware roofline @7B, fp16 cache \
-                      ({kvb:.0} B/token), batch 8:");
+            // makes measurable. GQA divides the stream by the head
+            // ratio and a sliding window caps how much of the context
+            // a decode step reads at all; the fp16 baseline stays the
+            // classic MHA/full-context server, so the ratios show the
+            // combined bits + kv-geometry win.
+            let kvb = kv_bytes_per_token_fp16_gqa(7e9, heads, kv_heads);
+            let kvb_mha = kv_bytes_per_token_fp16(7e9);
+            println!("\nkv-aware roofline @7B, fp16 cache ({kvb:.0} \
+                      B/token at {kv_heads}/{heads} kv heads{}), batch 8:",
+                     if window > 0 {
+                         format!(", window {window}")
+                     } else {
+                         String::new()
+                     });
             let fp16_at = |ctx: f64| {
-                decode_tokens_per_sec_bits_kv(7e9, 16.0, kvb, ctx, hw, 8.0)
+                decode_tokens_per_sec_bits_kv(7e9, 16.0, kvb_mha, ctx,
+                                              hw, 8.0)
             };
             for r in &rows {
                 let at = |ctx: f64| {
-                    decode_tokens_per_sec_bits_kv(7e9, r.bits, kvb, ctx,
-                                                  hw, 8.0)
+                    decode_tokens_per_sec_bits_kv(
+                        7e9, r.bits, kvb,
+                        effective_kv_context(ctx, window as f64), hw, 8.0)
                 };
                 println!("  {:<22} vs fp16: {:>5.1}x @ctx 1k \
                           {:>5.1}x @ctx 8k {:>5.1}x @ctx 32k",
@@ -854,6 +920,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                        (attention head width is hidden/heads)",
                       dims.hidden);
     }
+    let kv_heads = args.get_usize("kv-heads", heads);
+    if attn && (kv_heads == 0 || kv_heads > heads
+                || heads % kv_heads != 0) {
+        anyhow::bail!("--kv-heads {kv_heads} must divide --heads {heads} \
+                       (each group of heads/kv_heads query heads shares \
+                       one kv head)");
+    }
+    let window = args.get_usize("window", 0);
+    let window_interleave = args.get_usize("window-interleave", 0);
+    if window == 0 && window_interleave > 0 {
+        anyhow::bail!("--window-interleave needs a finite --window \
+                       (all layers already attend globally)");
+    }
     let group = args.get_usize("group", 128);
     let family_name = args.get("family", "float");
     let family = FamilySpec::parse(&family_name, group)
@@ -882,6 +961,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         family,
         attn,
         heads,
+        kv_heads,
+        window,
+        window_interleave,
         dims,
         mp,
         seed: args.get_u64("seed", 0),
@@ -907,7 +989,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("spectra serve: listening on {} ({} shard(s) x {} lane(s), \
               family {}, {}, queue cap {}, kv context {}/lane{})",
              server.addr(), shards, lanes, family.label(),
-             if attn { "paged-kv attention" } else { "decay state" },
+             if attn {
+                 format!("paged-kv attention ({kv_heads}/{heads} kv \
+                          heads, {})",
+                         if window > 0 {
+                             format!("window {window}:{window_interleave}")
+                         } else {
+                             "full context".into()
+                         })
+             } else {
+                 "decay state".into()
+             },
              cfg.queue_cap, cfg.kv_context,
              if speculative {
                  format!(", speculative {} draft k={spec_k}",
@@ -919,15 +1011,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // one admitted request costs end to end at this batch depth, at
     // paper scale on real hardware.
     if let Some(hw) = spectra::deploy::hardware::by_name("H100-SXM") {
-        let kvb = spectra::deploy::kv_bytes_per_token_fp16(7e9);
+        // GQA scales the cache stream by kv_heads/heads; a finite
+        // window caps how much context a decode step reads.
+        let kvb = if attn {
+            spectra::deploy::kv_bytes_per_token_fp16_gqa(7e9, heads,
+                                                         kv_heads)
+        } else {
+            spectra::deploy::kv_bytes_per_token_fp16(7e9)
+        };
         let bits = match family {
             FamilySpec::Float => 16.0,
             FamilySpec::Quant { bits, .. } => bits as f64,
             FamilySpec::Ternary => 1.58,
         };
         let lat = spectra::deploy::e2e_request_latency_s(
-            7e9, bits, kvb, cfg.kv_context as f64, hw, lanes as f64,
-            16, 32, cfg.prefill_chunk);
+            7e9, bits, kvb,
+            spectra::deploy::effective_kv_context(cfg.kv_context as f64,
+                                                  window as f64),
+            hw, lanes as f64, 16, 32, cfg.prefill_chunk);
         println!("e2e roofline @7B on {}: 16-token prompt + 32 new tokens \
                   at batch {} ~ {:.1} ms/request ({:.1} bits/param)",
                  hw.name, lanes, lat * 1e3, bits);

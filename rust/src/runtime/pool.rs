@@ -327,6 +327,16 @@ pub struct DecodeScratch {
     /// (batch, hidden) per-lane attention mix softmax(q·k)·v — the
     /// input to the attention-out projection.
     pub attn: HostTensor,
+    /// (batch, hidden + 2·kv_dim) fused QKV projection rows — q, k, v
+    /// column stripes split by slicing (attention models only).
+    pub qkv: HostTensor,
+    /// (batch, 2·glu) fused gate/up projection rows (attention models
+    /// only; gate stripe first).
+    pub gateup: HostTensor,
+    /// Per-part staging for [`crate::linear::FusedLinear`]'s pooled
+    /// fused matmul: each part's kernel writes its (batch, part_out)
+    /// result here before the copy into the fused stripe.
+    pub fused_stage: HostTensor,
     /// Per-(lane, head) attention scores over the lane's cached
     /// positions; cleared and refilled per head, grows to the longest
     /// context served.
@@ -392,6 +402,9 @@ impl DecodeScratch {
             k: empty(),
             v: empty(),
             attn: empty(),
+            qkv: empty(),
+            gateup: empty(),
+            fused_stage: empty(),
             scores: Vec::new(),
             seqs: Vec::new(),
             rejected: Vec::new(),

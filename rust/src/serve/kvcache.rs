@@ -114,11 +114,18 @@ impl std::fmt::Display for OutOfPages {
 impl std::error::Error for OutOfPages {}
 
 /// One lane-bound sequence: a page table plus committed length.
+///
+/// `released` counts *leading logical pages* handed back by
+/// [`KvCache::release_before`] (sliding-window page recycling):
+/// `pages[i]` is the physical page of logical page `released + i`, and
+/// positions below `released * page_tokens` are gone — the attention
+/// window guarantees nothing reads them again.
 #[derive(Debug, Default)]
 struct Seq {
     live: bool,
     pages: Vec<usize>,
     len: usize,
+    released: usize,
 }
 
 /// A block-paged KV cache over one flat f32 slab (see the module docs
@@ -192,10 +199,12 @@ impl KvCache {
             debug_assert!(!self.seqs[id].live);
             self.seqs[id].live = true;
             self.seqs[id].len = 0;
+            self.seqs[id].released = 0;
             debug_assert!(self.seqs[id].pages.is_empty());
             return id;
         }
-        self.seqs.push(Seq { live: true, pages: Vec::new(), len: 0 });
+        self.seqs.push(Seq { live: true, pages: Vec::new(), len: 0,
+                             released: 0 });
         self.seqs.len() - 1
     }
 
@@ -209,7 +218,9 @@ impl KvCache {
         assert!(s.live, "free_seq({seq}) on a sequence that is not live");
         s.live = false;
         s.len = 0;
-        for page in s.pages.drain(..) {
+        s.released = 0;
+        let pages = std::mem::take(&mut s.pages);
+        for page in pages {
             let rc = self.refcounts[page].checked_sub(1)
                 .expect("free_seq on a page with refcount 0");
             self.refcounts[page] = rc;
@@ -233,6 +244,9 @@ impl KvCache {
                         n_tokens: usize) -> usize {
         assert!(src != dst, "share_prefix needs two distinct sequences");
         assert!(self.seqs[src].live, "share_prefix from retired seq {src}");
+        assert!(self.seqs[src].released == 0,
+                "share_prefix from seq {src} with front-released pages \
+                 (windowed sequences cannot donate prefixes)");
         assert!(self.seqs[dst].live, "share_prefix into retired seq {dst}");
         assert!(self.seqs[dst].len == 0 && self.seqs[dst].pages.is_empty(),
                 "share_prefix target seq {dst} must be fresh");
@@ -290,19 +304,23 @@ impl KvCache {
         // Is position `len` inside a shared page? Only possible when
         // the last mapped page is partially filled (len not
         // page-aligned); full shared pages are never written again.
+        // Page-table indices are logical-page minus `released` (leading
+        // pages handed back by `release_before` are simply gone).
+        let released = self.seqs[seq].released;
         let fill = len % self.cfg.page_tokens;
         let cow = fill != 0 && {
-            let last = self.seqs[seq].pages[len / self.cfg.page_tokens];
+            let last = self.seqs[seq].pages[len / self.cfg.page_tokens
+                                            - released];
             self.refcounts[last] > 1
         };
         let need_pages = (len + n).div_ceil(self.cfg.page_tokens)
-            .saturating_sub(self.seqs[seq].pages.len())
+            .saturating_sub(released + self.seqs[seq].pages.len())
             + usize::from(cow);
         if need_pages > self.free_pages.len() {
             return Err(OutOfPages { seq, len });
         }
         if cow {
-            let idx = len / self.cfg.page_tokens;
+            let idx = len / self.cfg.page_tokens - released;
             let old = self.seqs[seq].pages[idx];
             let page = self.free_pages.pop().expect("free count checked");
             debug_assert_eq!(self.refcounts[page], 0);
@@ -320,7 +338,7 @@ impl KvCache {
             self.cow_copies += 1;
         }
         while (len + n).div_ceil(self.cfg.page_tokens)
-            > self.seqs[seq].pages.len() {
+            > released + self.seqs[seq].pages.len() {
             let page = self.free_pages.pop().expect("free count checked");
             debug_assert_eq!(self.refcounts[page], 0);
             self.refcounts[page] = 1;
@@ -356,8 +374,22 @@ impl KvCache {
                  sequence — rollback cannot extend",
                 s.len);
         let keep = new_len.div_ceil(self.cfg.page_tokens);
+        // A rollback target below the front-released point would need
+        // pages that no longer exist; the speculative verify path can
+        // never produce one (the window release uses the span *start*,
+        // rollback targets sit at or past it). Truncate-to-zero is the
+        // one sanctioned full reset.
+        assert!(new_len == 0 || keep >= s.released,
+                "truncate_seq({seq}) to {new_len} tokens crosses {} \
+                 front-released pages", s.released);
+        let cut = if new_len == 0 { 0 } else { keep - s.released };
+        let dropped: Vec<usize> = s.pages.drain(cut..).collect();
+        if new_len == 0 {
+            s.released = 0;
+        }
+        s.len = new_len;
         let mut freed = 0usize;
-        for page in s.pages.drain(keep..) {
+        for page in dropped {
             let rc = self.refcounts[page].checked_sub(1)
                 .expect("truncate_seq on a page with refcount 0");
             self.refcounts[page] = rc;
@@ -366,8 +398,49 @@ impl KvCache {
                 freed += 1;
             }
         }
-        s.len = new_len;
         freed
+    }
+
+    /// Sliding-window page recycling: return every page holding only
+    /// positions `< pos` to the pool (refcount-aware, like
+    /// [`KvCache::truncate_seq`] at the other end). The attention model
+    /// calls this once all layers' windows have moved past `pos` —
+    /// released positions are unreadable afterwards, which is exactly
+    /// the windowed-attention guarantee. Committed length and position
+    /// numbering are unchanged: the sequence still *addresses*
+    /// positions `>= released_tokens`, it just no longer holds the
+    /// pages below them, so a long-context windowed lane plateaus at
+    /// `O(window)` pages instead of growing `O(context)`. Returns the
+    /// number of pages actually freed (a shared page drops a holder but
+    /// frees only at zero).
+    pub fn release_before(&mut self, seq: usize, pos: usize) -> usize {
+        let s = &mut self.seqs[seq];
+        assert!(s.live,
+                "release_before({seq}) on a sequence that is not live");
+        let cut = pos.min(s.len) / self.cfg.page_tokens;
+        if cut <= s.released {
+            return 0;
+        }
+        let drop_n = cut - s.released;
+        let dropped: Vec<usize> = s.pages.drain(..drop_n).collect();
+        s.released = cut;
+        let mut freed = 0usize;
+        for page in dropped {
+            let rc = self.refcounts[page].checked_sub(1)
+                .expect("release_before on a page with refcount 0");
+            self.refcounts[page] = rc;
+            if rc == 0 {
+                self.free_pages.push(page);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Leading logical pages of `seq` handed back by
+    /// [`KvCache::release_before`] (diagnostic/test visibility).
+    pub fn released_pages(&self, seq: usize) -> usize {
+        self.seqs[seq].released
     }
 
     /// Committed length of `seq` in tokens.
@@ -381,7 +454,11 @@ impl KvCache {
         let s = &self.seqs[seq];
         debug_assert!(pos < s.len, "pos {pos} >= seq len {}", s.len);
         debug_assert!(layer < self.cfg.layers);
-        let page = s.pages[pos / self.cfg.page_tokens];
+        let logical = pos / self.cfg.page_tokens;
+        debug_assert!(logical >= s.released,
+                      "pos {pos} reads below the released window \
+                       ({} pages gone)", s.released);
+        let page = s.pages[logical - s.released];
         page * self.cfg.page_stride()
             + (pos % self.cfg.page_tokens) * self.cfg.token_stride()
             + layer * 2 * self.cfg.hidden
@@ -406,7 +483,8 @@ impl KvCache {
         assert_eq!(k.len(), hidden, "k width");
         assert_eq!(v.len(), hidden, "v width");
         debug_assert_eq!(
-            self.refcounts[self.seqs[seq].pages[pos / self.cfg.page_tokens]],
+            self.refcounts[self.seqs[seq].pages[pos / self.cfg.page_tokens
+                                                - self.seqs[seq].released]],
             1, "write into a shared page: copy-on-write was skipped");
         let off = self.offset(seq, layer, pos);
         self.data[off..off + hidden].copy_from_slice(k);
@@ -438,7 +516,8 @@ impl KvCache {
     /// Current holder count of the page containing position `pos` of
     /// `seq` (test/diagnostic visibility into sharing state).
     pub fn page_refcount(&self, seq: usize, pos: usize) -> u32 {
-        self.refcounts[self.seqs[seq].pages[pos / self.cfg.page_tokens]]
+        self.refcounts[self.seqs[seq].pages[pos / self.cfg.page_tokens
+                                            - self.seqs[seq].released]]
     }
 
     /// Pages available for claims.
@@ -960,5 +1039,131 @@ mod tests {
             assert_eq!(c.kv(src, 0, pos).0[0], pos as f32 + 1.0,
                        "src never loses a slot to the sharer's rollback");
         }
+    }
+
+    #[test]
+    fn release_before_frees_whole_pages_and_keeps_the_tail_readable() {
+        // 8 tokens over 3-token pages: releasing before position 7
+        // frees pages [0..3) and [3..6); positions 6/7 stay readable
+        // at their original numbering and growth continues from 8.
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        c.begin_tokens(s, 8).unwrap();
+        fill(&mut c, s, 0, 8, 1.0);
+        assert_eq!(c.pages_in_use(), 3);
+        assert_eq!(c.release_before(s, 7), 2);
+        assert_eq!(c.released_pages(s), 2);
+        assert_eq!(c.pages_in_use(), 1);
+        assert_eq!(c.seq_len(s), 8, "release must not change the length");
+        for pos in 6..8 {
+            assert_eq!(c.kv(s, 0, pos).0[0], pos as f32 + 1.0,
+                       "in-window slot {pos} must survive the release");
+        }
+        // Position numbering is unchanged: the next claim is 8, lands
+        // on a fresh page, and reads back at its logical position.
+        assert_eq!(c.begin_token(s).unwrap(), 8);
+        fill(&mut c, s, 8, 9, -1.0);
+        assert_eq!(c.kv(s, 1, 8).0[0], -9.0);
+        assert_eq!(c.pages_in_use(), 2);
+        // Releasing at or below the already-released point is a no-op.
+        assert_eq!(c.release_before(s, 6), 0);
+        assert_eq!(c.release_before(s, 3), 0);
+        // free_seq returns everything and the id recycles clean.
+        c.free_seq(s);
+        assert_eq!(c.pages_in_use(), 0);
+        let s2 = c.alloc_seq();
+        assert_eq!(c.released_pages(s2), 0);
+        assert_eq!(c.begin_tokens(s2, 4).unwrap(), 0);
+    }
+
+    #[test]
+    fn windowed_lane_plateaus_instead_of_growing() {
+        // The recycling claim itself: a lane decoding far past its
+        // window never holds more than window-plus-one-page of pages.
+        let mut c = tiny(3); // 3 pages x 3 tokens: pool of 9 slots
+        let s = c.alloc_seq();
+        let window = 4usize;
+        for pos in 0..40 {
+            c.begin_token(s).unwrap();
+            fill(&mut c, s, pos, pos + 1, 1.0);
+            c.release_before(s, (pos + 1).saturating_sub(window));
+            assert!(c.pages_in_use() <= 3, "pos {pos} overflowed the pool");
+            // The in-window suffix always reads back intact.
+            for p in (pos + 1).saturating_sub(window)..=pos {
+                assert_eq!(c.kv(s, 0, p).0[0], p as f32 + 1.0);
+            }
+        }
+        assert_eq!(c.seq_len(s), 40);
+        c.free_seq(s);
+        assert_eq!(c.pages_in_use(), 0, "no pages leak across the churn");
+    }
+
+    #[test]
+    fn release_before_is_refcount_safe_on_shared_pages() {
+        // A sharer releasing its front drops a holder; the donor's data
+        // survives, and the page frees only when the donor lets go too.
+        let mut c = tiny(4);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 6).unwrap();
+        fill(&mut c, src, 0, 6, 1.0);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 6);
+        assert_eq!(c.pages_in_use(), 2);
+        assert_eq!(c.release_before(dst, 3), 0,
+                   "shared page drops a holder but must not free");
+        assert_eq!(c.page_refcount(src, 0), 1, "src holds page 0 alone now");
+        for pos in 0..6 {
+            assert_eq!(c.kv(src, 0, pos).0[0], pos as f32 + 1.0,
+                       "donor slot {pos} must survive the sharer's release");
+        }
+        c.free_seq(src);
+        assert_eq!(c.pages_in_use(), 1, "dst still holds the tail page");
+        c.free_seq(dst);
+        assert_eq!(c.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn truncate_interacts_safely_with_a_released_front() {
+        // Speculative rollback on a windowed lane: truncate back toward
+        // (but not past) the released point, then regrow.
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        c.begin_tokens(s, 10).unwrap();
+        fill(&mut c, s, 0, 10, 1.0);
+        assert_eq!(c.release_before(s, 6), 2); // pages 0,1 gone
+        assert_eq!(c.pages_in_use(), 2);
+        // Roll back 10 -> 8: page [9..12) is wholly rejected.
+        assert_eq!(c.truncate_seq(s, 8), 1);
+        assert_eq!(c.seq_len(s), 8);
+        assert_eq!(c.kv(s, 0, 7).0[0], 8.0);
+        // Regrowth renumbers from 8 as usual.
+        assert_eq!(c.begin_tokens(s, 2).unwrap(), 8);
+        assert_eq!(c.truncate_seq(s, 0), 2,
+                   "truncate-to-zero drops the remaining table");
+        assert_eq!(c.released_pages(s), 0,
+                   "full reset clears the released front");
+        assert_eq!(c.pages_in_use(), 0);
+        assert_eq!(c.begin_tokens(s, 3).unwrap(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "front-released")]
+    fn truncating_into_the_released_front_is_rejected() {
+        let mut c = tiny(4);
+        let s = c.alloc_seq();
+        c.begin_tokens(s, 10).unwrap();
+        c.release_before(s, 6);
+        c.truncate_seq(s, 3); // needs logical page 1, which is gone
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot donate")]
+    fn windowed_sequences_cannot_donate_prefixes() {
+        let mut c = tiny(4);
+        let src = c.alloc_seq();
+        c.begin_tokens(src, 8).unwrap();
+        c.release_before(src, 6);
+        let dst = c.alloc_seq();
+        c.share_prefix(src, dst, 8);
     }
 }

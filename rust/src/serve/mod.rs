@@ -40,13 +40,23 @@
 //!   ([`kvcache::KvCache::truncate_seq`]), bitwise-losslessly
 //!   (`tests/speculative.rs`).
 //! - [`kvcache`] + [`model::AttnLm`] — the paged KV-cache attention
-//!   path: real pre-norm multi-head attention whose per-lane context
-//!   lives in fixed-size token pages ([`kvcache::KvCache`], free-list
+//!   path: real pre-norm attention whose per-lane context lives in
+//!   fixed-size token pages ([`kvcache::KvCache`], free-list
 //!   allocated, recycled when a lane retires through
-//!   [`model::DecodeModel::retire_state`]). The QKV/attention-out
-//!   projections run through the same pooled blocked kernels as the
-//!   MLP, so all four families serve with real attention and the
-//!   KV-cache memory pressure production decoding actually has —
+//!   [`model::DecodeModel::retire_state`]). The q/k/v and gate/up
+//!   projections are row-stacked into fused matrices
+//!   ([`crate::linear::FusedLinear`] — one kernel pass per fusion in
+//!   every storage family), key/value heads may be shared across
+//!   query-head groups (grouped-query attention,
+//!   [`model::LatentAttnLm::with_kv_heads`]: `kv_bytes_per_token`
+//!   shrinks by `heads/kv_heads`), and attention can be bounded to a
+//!   sliding window with optional interleaved global layers
+//!   ([`model::LatentAttnLm::with_window`]); when every layer is
+//!   windowed, out-of-window pages are returned to the pool mid-flight
+//!   ([`kvcache::KvCache::release_before`]), so long-context lanes
+//!   plateau at the window bound instead of holding O(context). All
+//!   four families serve with real attention and the KV-cache memory
+//!   pressure production decoding actually has —
 //!   [`model::DecodeModel::kv_bytes_per_token`] reports the per-token
 //!   bandwidth tax ([`crate::deploy::decode_tokens_per_sec_bits_kv`]
 //!   is the matching analytic roofline).

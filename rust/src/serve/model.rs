@@ -50,7 +50,7 @@ use std::sync::{Mutex, MutexGuard};
 use super::kvcache::{KvCache, OutOfPages, KV_PAGE_TOKENS};
 use crate::checkpoint::Checkpoint;
 use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
-use crate::linear::{DenseF32, LinearFormat, QuantPacked};
+use crate::linear::{DenseF32, FusedLinear, LinearFormat, QuantPacked};
 use crate::quant::QuantTensor;
 use crate::runtime::{DecodeScratch, HostTensor, SplitMix64, WorkerPool};
 use crate::ternary::{matmul_dense, PackedMatrix, TernaryTensor};
@@ -865,17 +865,56 @@ fn gather_embed(embed: &HostTensor, tokens: &[u32]) -> HostTensor {
     x
 }
 
-/// Single-query multi-head attention for one lane over its own cached
-/// positions: per head, dot(q, k)/sqrt(dh) scores over positions
-/// `0..limit`, max-subtracted softmax, then the weighted sum of the
-/// cached values into `out` (fully overwritten).
+/// Per-layer window policy shared by [`AttnLm`] and the latent
+/// calibration forward: `window == 0` disables windowing everywhere;
+/// `interleave == 0` windows *every* layer (the only policy under
+/// which out-of-window pages can be recycled — the token-major page
+/// layout cannot truncate per layer); `interleave = n` keeps every
+/// (n+1)-th layer global (the Gemma3-style `window:global = n:1`
+/// interleave, e.g. `n = 5`).
+fn window_for_layer(window: usize, interleave: usize, layer: usize)
+                    -> Option<usize> {
+    if window == 0 {
+        None
+    } else if interleave > 0 && (layer + 1) % (interleave + 1) == 0 {
+        None // the global layer of each interleave period
+    } else {
+        Some(window)
+    }
+}
+
+/// First kv rows of a latent projection: `(n, cols)` sliced out of
+/// `t`'s row-major data starting at row `start` (fused checkpoint
+/// splitting and GQA head truncation both reduce to this).
+fn slice_rows(t: &HostTensor, start: usize, n: usize) -> HostTensor {
+    let (rows, cols) = t.dims2();
+    assert!(start + n <= rows, "slice_rows {start}+{n} > {rows}");
+    let mut out = HostTensor::zeros(vec![n, cols]);
+    out.data
+        .copy_from_slice(&t.data[start * cols..(start + n) * cols]);
+    out
+}
+
+/// Single-query grouped multi-head attention for one lane over its own
+/// cached positions: per query head, dot(q, k)/sqrt(dh) scores over
+/// positions `first..limit`, max-subtracted softmax, then the weighted
+/// sum of the cached values into `out` (fully overwritten).
+///
+/// Grouped-query attention: the cache rows are `kv_heads * dh` wide
+/// (`kv_heads <= heads`, `heads % kv_heads == 0`) and query head `h`
+/// reads shared kv head `h / (heads / kv_heads)`. At
+/// `kv_heads == heads` the mapping is the identity and the math is
+/// bitwise the classic multi-head form.
 ///
 /// `limit` is the number of attendable positions — `seq_len` for a
 /// one-token decode step; `start + j + 1` for the j-th position of a
 /// prefill chunk, which is what makes intra-chunk attention *causal*:
 /// a chunk position never sees the chunk positions after it, so a
 /// multi-token forward reads exactly the cache prefix the one-token
-/// path would have seen.
+/// path would have seen. `first` is the sliding-window floor
+/// (`limit - window` on windowed layers, clamped at 0): positions
+/// before it are skipped entirely, so at `first == 0` the windowed
+/// path is bitwise the unwindowed one.
 ///
 /// Determinism contract: the loops run in position order with a fixed
 /// f32 accumulation order, and only `seq`'s own slots are read — so a
@@ -883,25 +922,30 @@ fn gather_embed(embed: &HostTensor, tokens: &[u32]) -> HostTensor {
 /// chunk size, thread count, and physical page placement. `scores` is
 /// a reused per-(lane, head) buffer; it is cleared and refilled before
 /// use.
+#[allow(clippy::too_many_arguments)]
 fn attend_one(cache: &KvCache, seq: usize, layer: usize, heads: usize,
-              q: &[f32], out: &mut [f32], scores: &mut Vec<f32>,
-              limit: usize) {
+              kv_heads: usize, q: &[f32], out: &mut [f32],
+              scores: &mut Vec<f32>, first: usize, limit: usize) {
     let hidden = q.len();
     debug_assert_eq!(out.len(), hidden);
     debug_assert_eq!(hidden % heads, 0);
+    debug_assert_eq!(heads % kv_heads, 0);
     let dh = hidden / heads;
-    let len = limit;
-    debug_assert!(len >= 1, "attend before begin_token");
-    debug_assert!(len <= cache.seq_len(seq), "attend past committed slots");
+    let group = heads / kv_heads;
+    debug_assert!(limit >= 1, "attend before begin_token");
+    debug_assert!(first < limit, "empty attention window");
+    debug_assert!(limit <= cache.seq_len(seq), "attend past committed slots");
     let scale = 1.0 / (dh as f32).sqrt();
     out.fill(0.0);
     for h in 0..heads {
         let qh = &q[h * dh..(h + 1) * dh];
+        // The shared kv head this query head's group reads.
+        let kh0 = (h / group) * dh;
         scores.clear();
         let mut mx = f32::NEG_INFINITY;
-        for pos in 0..len {
+        for pos in first..limit {
             let (k, _) = cache.kv(seq, layer, pos);
-            let kh = &k[h * dh..(h + 1) * dh];
+            let kh = &k[kh0..kh0 + dh];
             let mut s = 0.0f32;
             for j in 0..dh {
                 s += qh[j] * kh[j];
@@ -920,10 +964,10 @@ fn attend_one(cache: &KvCache, seq: usize, layer: usize, heads: usize,
         // The max-score position contributes exp(0) = 1, so denom >= 1.
         let inv = 1.0 / denom;
         let oh = &mut out[h * dh..(h + 1) * dh];
-        for pos in 0..len {
-            let w = scores[pos] * inv;
+        for (i, pos) in (first..limit).enumerate() {
+            let w = scores[i] * inv;
             let (_, v) = cache.kv(seq, layer, pos);
-            let vh = &v[h * dh..(h + 1) * dh];
+            let vh = &v[kh0..kh0 + dh];
             for (o, &vv) in oh.iter_mut().zip(vh) {
                 *o += w * vv;
             }
@@ -1003,6 +1047,9 @@ fn hash_tokens(tokens: &[u32]) -> u64 {
 struct PrefixPin {
     seq: usize,
     tokens: Vec<u32>,
+    /// Logical clock value of this pin's most recent verified hit
+    /// (0 = never hit) — the LRU key of one-at-a-time eviction.
+    last_hit: u64,
 }
 
 /// The model-side prompt prefix cache: pins plus a page-boundary-keyed
@@ -1012,21 +1059,26 @@ struct PrefixPin {
 /// then extend reuse token-by-token through the pin's unaligned tail —
 /// so two identical P-token prompts share P-1 tokens, not just the
 /// aligned floor. Pins are a cache, not a reservation: under KV
-/// backpressure [`DecodeModel::release_cached_pages`] drops them all
-/// and the index rebuilds from live traffic.
+/// backpressure [`DecodeModel::release_cached_pages`] evicts them
+/// one at a time, least-recently-hit first — repeated pressure drains
+/// the whole cache, one pin per refused step, and the index rebuilds
+/// from live traffic.
 #[derive(Default)]
 struct PrefixIndex {
     pins: Vec<PrefixPin>,
     /// hash of `tokens[..boundary]` -> (pin index, boundary).
     by_hash: HashMap<u64, (usize, usize)>,
+    /// Monotonic hit clock feeding [`PrefixPin::last_hit`].
+    clock: u64,
 }
 
 impl PrefixIndex {
     /// Longest verified reuse for `prompt`: `(pin index, tokens)` with
     /// `tokens < prompt.len()` (at least one prompt token is always
     /// left to feed, so the lane's first step produces sampling
-    /// logits), or `None` on a miss.
-    fn lookup(&self, prompt: &[u32], page_tokens: usize)
+    /// logits), or `None` on a miss. A hit stamps the pin with the
+    /// advancing clock, so eviction can rank pins by recency.
+    fn lookup(&mut self, prompt: &[u32], page_tokens: usize)
               -> Option<(usize, usize)> {
         if prompt.len() < 2 {
             return None;
@@ -1046,12 +1098,20 @@ impl PrefixIndex {
                     while r < cap && pin.tokens[r] == prompt[r] {
                         r += 1;
                     }
+                    self.clock += 1;
+                    self.pins[pin_idx].last_hit = self.clock;
                     return Some((pin_idx, r));
                 }
             }
             b -= page_tokens;
         }
         None
+    }
+
+    /// Index of the eviction victim: the least-recently-hit pin
+    /// (never-hit pins carry clock 0, so they go first).
+    fn lru_pin(&self) -> Option<usize> {
+        (0..self.pins.len()).min_by_key(|&i| self.pins[i].last_hit)
     }
 }
 
@@ -1064,22 +1124,20 @@ struct KvState {
 }
 
 /// One attention + gated-MLP residual block over any linear storage
-/// format. The four attention projections are plain (hidden, hidden)
-/// [`LinearFormat`]s, so every family compresses them exactly like the
-/// MLP linears.
-pub struct AttnBlock<L> {
-    /// (hidden, hidden) query projection.
-    pub wq: L,
-    /// (hidden, hidden) key projection.
-    pub wk: L,
-    /// (hidden, hidden) value projection.
-    pub wv: L,
+/// format. The projections are *fused*: q/k/v are one row-stacked
+/// [`FusedLinear`] (parts `[q (hidden), k (kv_dim), v (kv_dim)]`
+/// rows), gate/up another (`[gate (glu), up (glu)]`), so a decode
+/// step dispatches one kernel pass per fusion instead of one per
+/// matrix. Each part is still compressed separately by its
+/// [`LinearFormat`] (scales summarize the matrix they came from), so
+/// fused logits are bitwise the unfused ones in every family.
+pub struct AttnBlock<L: LinearFormat> {
+    /// Fused (hidden + 2*kv_dim, hidden) q/k/v projection.
+    pub wqkv: FusedLinear<L>,
     /// (hidden, hidden) attention-out projection.
     pub wo: L,
-    /// (glu, hidden)
-    pub gate: L,
-    /// (glu, hidden)
-    pub up: L,
+    /// Fused (2*glu, hidden) gate/up projection.
+    pub gateup: FusedLinear<L>,
     /// (hidden, glu)
     pub down: L,
 }
@@ -1108,19 +1166,31 @@ pub struct AttnBlock<L> {
 /// scheduler thread) and never held by kernel workers.
 pub struct AttnLm<L: LinearFormat> {
     pub dims: LmDims,
-    /// Attention heads (`hidden % heads == 0`).
+    /// Attention (query) heads (`hidden % heads == 0`).
     pub heads: usize,
+    /// Shared kv heads (`kv_heads <= heads`, `heads % kv_heads == 0`);
+    /// `kv_heads == heads` is classic multi-head attention.
+    pub kv_heads: usize,
     /// (vocab, hidden) f32 input embeddings.
     pub embed: HostTensor,
     pub blocks: Vec<AttnBlock<L>>,
     /// (vocab, hidden) output head.
     pub head: L,
+    /// Sliding-window width in tokens (0 = unbounded attention).
+    window: usize,
+    /// Windowed layers per global layer (0 = every layer windowed;
+    /// see [`window_for_layer`]).
+    window_interleave: usize,
     kv: Mutex<KvState>,
 }
 
 impl<L: LinearFormat> AttnLm<L> {
     /// Build from realized parts, sizing the page pool for `lanes`
-    /// concurrent sequences of up to `max_context` tokens each.
+    /// concurrent sequences of up to `max_context` tokens each. The kv
+    /// head count is inferred from the fused projection itself (the k
+    /// part's row count over the head dim), so GQA needs no extra
+    /// constructor plumbing; windowing defaults to off — chain
+    /// [`AttnLm::with_window`] to enable it.
     pub fn new(dims: LmDims, heads: usize, embed: HostTensor,
                blocks: Vec<AttnBlock<L>>, head: L,
                lanes: usize, max_context: usize) -> AttnLm<L> {
@@ -1129,11 +1199,77 @@ impl<L: LinearFormat> AttnLm<L> {
         assert_eq!(embed.dims2(), (dims.vocab, dims.hidden),
                    "embed shape mismatch");
         assert_eq!(blocks.len(), dims.layers, "block count != layers");
-        let cache = KvCache::for_lanes(dims.layers, dims.hidden,
+        let dh = dims.hidden / heads;
+        let kv_dim = blocks.first()
+            .map(|b| b.wqkv.parts()[1].out_features())
+            .unwrap_or(dims.hidden);
+        assert!(kv_dim >= dh && kv_dim % dh == 0,
+                "k projection rows {kv_dim} must be a multiple of the \
+                 head dim {dh}");
+        let kv_heads = kv_dim / dh;
+        assert!(kv_heads <= heads && heads % kv_heads == 0,
+                "kv_heads {kv_heads} must divide heads {heads}");
+        for (l, b) in blocks.iter().enumerate() {
+            let p = b.wqkv.parts();
+            assert!(p.len() == 3 && p[0].out_features() == dims.hidden
+                        && p[1].out_features() == kv_dim
+                        && p[2].out_features() == kv_dim,
+                    "layer {l}: fused qkv parts must be \
+                     [hidden, kv_dim, kv_dim] rows");
+            let g = b.gateup.parts();
+            assert!(g.len() == 2 && g[0].out_features() == dims.glu
+                        && g[1].out_features() == dims.glu,
+                    "layer {l}: fused gate/up parts must be [glu, glu] rows");
+        }
+        // The cache stores kv_dim-wide rows: kv_bytes_per_token shrinks
+        // by the head ratio automatically.
+        let cache = KvCache::for_lanes(dims.layers, kv_dim,
                                        KV_PAGE_TOKENS, lanes, max_context);
-        AttnLm { dims, heads, embed, blocks, head,
+        AttnLm { dims, heads, kv_heads, embed, blocks, head,
+                 window: 0, window_interleave: 0,
                  kv: Mutex::new(KvState { cache,
                                           prefix: PrefixIndex::default() }) }
+    }
+
+    /// Enable sliding-window attention: `window` tokens per windowed
+    /// layer (0 = off), with every (`interleave`+1)-th layer kept
+    /// global when `interleave > 0` (Gemma3-style `window:global`
+    /// interleave; `interleave == 0` windows every layer, which is
+    /// also the only policy under which out-of-window pages are
+    /// recycled). A window covering the whole context is bitwise the
+    /// unwindowed model.
+    pub fn with_window(mut self, window: usize, interleave: usize)
+                       -> AttnLm<L> {
+        self.window = window;
+        self.window_interleave = interleave;
+        self
+    }
+
+    /// Width of one cached k (or v) row: `kv_heads * head_dim`.
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * (self.dims.hidden / self.heads)
+    }
+
+    /// Sliding-window width (0 = unbounded).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Windowed layers per global layer (0 = all windowed).
+    pub fn window_interleave(&self) -> usize {
+        self.window_interleave
+    }
+
+    /// This layer's attention window, per the configured interleave.
+    fn window_for_layer(&self, layer: usize) -> Option<usize> {
+        window_for_layer(self.window, self.window_interleave, layer)
+    }
+
+    /// Whether out-of-window pages can be returned to the pool: only
+    /// when *every* layer is windowed — the token-major interleaved
+    /// page layout cannot front-truncate a single layer's stream.
+    fn recycles_pages(&self) -> bool {
+        self.window > 0 && self.window_interleave == 0
     }
 
     fn lock_cache(&self) -> MutexGuard<'_, KvState> {
@@ -1175,12 +1311,15 @@ impl<L: LinearFormat> AttnLm<L> {
     }
 
     /// Every linear in the model (per block: q, k, v, o, gate, up,
-    /// down; then the head).
+    /// down — the fused matrices contribute their parts in stacking
+    /// order; then the head).
     pub fn linears(&self) -> Vec<&L> {
         let mut out = Vec::with_capacity(7 * self.blocks.len() + 1);
         for b in &self.blocks {
-            out.extend([&b.wq, &b.wk, &b.wv, &b.wo,
-                        &b.gate, &b.up, &b.down]);
+            out.extend(b.wqkv.parts());
+            out.push(&b.wo);
+            out.extend(b.gateup.parts());
+            out.push(&b.down);
         }
         out.push(&self.head);
         out
@@ -1195,6 +1334,9 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
     fn step_batch(&self, states: &mut [&mut [f32]], tokens: &[u32],
                   threads: usize) -> HostTensor {
         assert_eq!(states.len(), tokens.len());
+        let hidden = self.dims.hidden;
+        let glu = self.dims.glu;
+        let kv_dim = self.kv_dim();
         let mut guard = self.lock_cache();
         let cache = &mut guard.cache;
         let seqs: Vec<usize> = states.iter_mut()
@@ -1203,33 +1345,52 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
         let mut scores = Vec::new();
         for (l, blk) in self.blocks.iter().enumerate() {
             let y = rmsnorm(&x);
-            let q = blk.wq.matmul_batch(&y, threads);
-            let k = blk.wk.matmul_batch(&y, threads);
-            let v = blk.wv.matmul_batch(&y, threads);
+            // One fused pass: row bi is [q (hidden) | k (kv_dim) |
+            // v (kv_dim)], each part computed by its own kernel so the
+            // values are bitwise the unfused projections'.
+            let qkv = blk.wqkv.matmul_batch(&y, threads);
             for (bi, &seq) in seqs.iter().enumerate() {
-                cache.write_kv(seq, l, k.row(bi), v.row(bi));
+                let r = qkv.row(bi);
+                cache.write_kv(seq, l, &r[hidden..hidden + kv_dim],
+                               &r[hidden + kv_dim..]);
             }
-            let mut attn =
-                HostTensor::zeros(vec![tokens.len(), self.dims.hidden]);
+            let mut attn = HostTensor::zeros(vec![tokens.len(), hidden]);
+            let win = self.window_for_layer(l);
             for (bi, &seq) in seqs.iter().enumerate() {
-                attend_one(cache, seq, l, self.heads, q.row(bi),
-                           attn.row_mut(bi), &mut scores,
-                           cache.seq_len(seq));
+                let limit = cache.seq_len(seq);
+                let first = win.map_or(0, |w| limit.saturating_sub(w));
+                attend_one(cache, seq, l, self.heads, self.kv_heads,
+                           &qkv.row(bi)[..hidden], attn.row_mut(bi),
+                           &mut scores, first, limit);
             }
             let o = blk.wo.matmul_batch(&attn, threads);
             for (xv, &ov) in x.data.iter_mut().zip(o.data.iter()) {
                 *xv += ov;
             }
             let y2 = rmsnorm(&x);
-            let g = blk.gate.matmul_batch(&y2, threads);
-            let u = blk.up.matmul_batch(&y2, threads);
-            let mut a = g;
-            for (av, &uv) in a.data.iter_mut().zip(u.data.iter()) {
-                *av = silu(*av) * uv;
+            // One fused pass: row bi is [gate (glu) | up (glu)].
+            let gu = blk.gateup.matmul_batch(&y2, threads);
+            let mut a = HostTensor::zeros(vec![tokens.len(), glu]);
+            for bi in 0..tokens.len() {
+                let gur = gu.row(bi);
+                let ar = a.row_mut(bi);
+                for j in 0..glu {
+                    ar[j] = silu(gur[j]) * gur[glu + j];
+                }
             }
             let d = blk.down.matmul_batch(&a, threads);
             for (xv, &dv) in x.data.iter_mut().zip(d.data.iter()) {
                 *xv += dv;
+            }
+        }
+        if self.recycles_pages() {
+            // This step appended position len-1; everything the *next*
+            // step can still attend sits at >= len - window, so pages
+            // wholly before (len-1) - window return to the pool.
+            for &seq in &seqs {
+                let start = cache.seq_len(seq) - 1;
+                cache.release_before(seq,
+                                     start.saturating_sub(self.window));
             }
         }
         let y = rmsnorm(&x);
@@ -1317,34 +1478,41 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
             return;
         }
         gather_embed_into(&self.embed, &scratch.span_tokens, &mut scratch.x);
+        let hidden = self.dims.hidden;
+        let glu = self.dims.glu;
+        let kv_dim = self.kv_dim();
         for (l, blk) in self.blocks.iter().enumerate() {
             rmsnorm_into(&scratch.x, &mut scratch.norm);
-            blk.wq.matmul_batch_into(&scratch.norm, pool,
-                                     &mut scratch.out_t, &mut scratch.q);
-            blk.wk.matmul_batch_into(&scratch.norm, pool,
-                                     &mut scratch.out_t, &mut scratch.k);
-            blk.wv.matmul_batch_into(&scratch.norm, pool,
-                                     &mut scratch.out_t, &mut scratch.v);
+            // One fused qkv pass: scratch.qkv row r is [q (hidden) |
+            // k (kv_dim) | v (kv_dim)], each part staged through its
+            // own kernel (bitwise the unfused projections).
+            blk.wqkv.matmul_batch_into_fused(&scratch.norm, pool,
+                                             &mut scratch.out_t,
+                                             &mut scratch.fused_stage,
+                                             &mut scratch.qkv);
             // Commit the whole span's k/v first (position order), then
             // attend causally — position j never reads past start+j.
             let mut row = 0usize;
             for (ai, &seq) in scratch.seqs.iter().enumerate() {
                 for j in 0..scratch.spans[ai] {
+                    let r = scratch.qkv.row(row);
                     cache.write_kv_at(seq, l, scratch.starts[ai] + j,
-                                      scratch.k.row(row),
-                                      scratch.v.row(row));
+                                      &r[hidden..hidden + kv_dim],
+                                      &r[hidden + kv_dim..]);
                     row += 1;
                 }
             }
-            scratch.attn.reset2(rows, self.dims.hidden);
+            scratch.attn.reset2(rows, hidden);
+            let win = self.window_for_layer(l);
             let mut row = 0usize;
             for (ai, &seq) in scratch.seqs.iter().enumerate() {
                 for j in 0..scratch.spans[ai] {
-                    attend_one(cache, seq, l, self.heads,
-                               scratch.q.row(row),
+                    let limit = scratch.starts[ai] + j + 1;
+                    let first = win.map_or(0, |w| limit.saturating_sub(w));
+                    attend_one(cache, seq, l, self.heads, self.kv_heads,
+                               &scratch.qkv.row(row)[..hidden],
                                scratch.attn.row_mut(row),
-                               &mut scratch.scores,
-                               scratch.starts[ai] + j + 1);
+                               &mut scratch.scores, first, limit);
                     row += 1;
                 }
             }
@@ -1358,14 +1526,19 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
                 *xv += ov;
             }
             rmsnorm_into(&scratch.x, &mut scratch.norm);
-            blk.gate.matmul_batch_into(&scratch.norm, pool,
-                                       &mut scratch.out_t, &mut scratch.gate);
-            blk.up.matmul_batch_into(&scratch.norm, pool,
-                                     &mut scratch.out_t, &mut scratch.up);
-            for (av, &uv) in scratch.gate.data.iter_mut()
-                .zip(scratch.up.data.iter())
-            {
-                *av = silu(*av) * uv;
+            // One fused gate/up pass: row r is [gate (glu) | up (glu)];
+            // the GLU activation splits it into the gate buffer.
+            blk.gateup.matmul_batch_into_fused(&scratch.norm, pool,
+                                               &mut scratch.out_t,
+                                               &mut scratch.fused_stage,
+                                               &mut scratch.gateup);
+            scratch.gate.reset2(rows, glu);
+            for r in 0..rows {
+                let gu = scratch.gateup.row(r);
+                let a = scratch.gate.row_mut(r);
+                for j in 0..glu {
+                    a[j] = silu(gu[j]) * gu[glu + j];
+                }
             }
             blk.down.matmul_batch_into(&scratch.gate, pool,
                                        &mut scratch.out_t, &mut scratch.down);
@@ -1373,6 +1546,16 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
                 .zip(scratch.down.data.iter())
             {
                 *xv += dv;
+            }
+        }
+        if self.recycles_pages() {
+            // Out-of-window pages return to the pool. Keyed on the
+            // span *start*: a later speculative rollback never rewinds
+            // below the span it verified, so the released frontier
+            // stays behind every reachable truncation point.
+            for (ai, &seq) in scratch.seqs.iter().enumerate() {
+                cache.release_before(seq, scratch.starts[ai]
+                                     .saturating_sub(self.window));
             }
         }
         rmsnorm_into(&scratch.x, &mut scratch.norm);
@@ -1465,6 +1648,11 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
         }
         let src = state[0] as usize - 1;
         let g = &mut *self.lock_cache();
+        if g.cache.released_pages(src) > 0 {
+            // A windowed lane that already returned out-of-window pages
+            // no longer holds the prompt's front — nothing to donate.
+            return;
+        }
         let pt = g.cache.config().page_tokens;
         if prompt.len() <= pt {
             return;
@@ -1498,25 +1686,38 @@ impl<L: LinearFormat> DecodeModel for AttnLm<L> {
         let seq = g.cache.alloc_seq();
         g.cache.share_prefix(src, seq, prompt.len());
         let pin_idx = g.prefix.pins.len();
-        g.prefix.pins.push(PrefixPin { seq, tokens: prompt.to_vec() });
+        g.prefix.pins.push(PrefixPin { seq, tokens: prompt.to_vec(),
+                                       last_hit: 0 });
         for (b, h) in boundaries {
             g.prefix.by_hash.insert(h, (pin_idx, b));
         }
     }
 
-    /// Drop every prefix pin, returning their pages' refcounts to the
+    /// Evict exactly one prefix pin — the least-recently-hit one
+    /// (never-hit pins first) — returning its pages' refcounts to the
     /// live lanes that still map them (pages with no other holder go
-    /// back to the free list). The scheduler calls this under KV
-    /// backpressure — cached prefixes always yield to live traffic.
+    /// back to the free list). The scheduler calls this once per
+    /// KV-refused step, so *persistent* pressure drains the whole pin
+    /// cache one step at a time, while a transient spike costs only
+    /// the coldest pin instead of the entire index.
     fn release_cached_pages(&self) -> bool {
         let g = &mut *self.lock_cache();
-        if g.prefix.pins.is_empty() {
+        let Some(victim) = g.prefix.lru_pin() else {
             return false;
+        };
+        let last = g.prefix.pins.len() - 1;
+        let pin = g.prefix.pins.swap_remove(victim);
+        g.cache.free_seq(pin.seq);
+        // Drop the victim's index entries, then repoint the entries of
+        // the pin that swap_remove moved into the victim's slot.
+        g.prefix.by_hash.retain(|_, v| v.0 != victim);
+        if victim != last {
+            for v in g.prefix.by_hash.values_mut() {
+                if v.0 == last {
+                    v.0 = victim;
+                }
+            }
         }
-        for pin in g.prefix.pins.drain(..) {
-            g.cache.free_seq(pin.seq);
-        }
-        g.prefix.by_hash.clear();
         true
     }
 
@@ -1562,6 +1763,13 @@ pub struct LatentAttnBlock {
 pub struct LatentAttnLm {
     pub dims: LmDims,
     pub heads: usize,
+    /// Shared kv heads realized models attend with (defaults to
+    /// `heads`; see [`LatentAttnLm::with_kv_heads`]).
+    pub kv_heads: usize,
+    /// Sliding-window width realized models serve with (0 = off).
+    pub window: usize,
+    /// Windowed layers per global layer (0 = all layers windowed).
+    pub window_interleave: usize,
     /// (vocab, hidden) f32 embeddings (stay float in every family).
     pub embed: HostTensor,
     pub blocks: Vec<LatentAttnBlock>,
@@ -1597,12 +1805,60 @@ impl LatentAttnLm {
         }
         let head = HostTensor::randn(vec![dims.vocab, dims.hidden], 0.08,
                                      seed ^ 0xA77E1);
-        LatentAttnLm { dims, heads, embed, blocks, head, mp }
+        LatentAttnLm { dims, heads, kv_heads: heads,
+                       window: 0, window_interleave: 0,
+                       embed, blocks, head, mp }
     }
 
-    /// Latent attention weights from a trained checkpoint: `embed` plus
-    /// every `l{i}.attn_{q,k,v,o}` and `l{i}.mlp_{gate,up,down}`
-    /// linear; the head falls back to the tied embedding table.
+    /// Grouped-query attention: realized models keep only the first
+    /// `kv_heads * head_dim` rows of each latent k/v projection (the
+    /// shared heads), shrinking both the projection work and
+    /// `kv_bytes_per_token` by the head ratio. `kv_heads == heads`
+    /// restores classic multi-head attention bitwise.
+    pub fn with_kv_heads(mut self, kv_heads: usize) -> LatentAttnLm {
+        assert!(kv_heads >= 1 && kv_heads <= self.heads
+                    && self.heads % kv_heads == 0,
+                "kv_heads {kv_heads} must divide heads {}", self.heads);
+        self.kv_heads = kv_heads;
+        self
+    }
+
+    /// Sliding-window policy for realized models: `window` tokens per
+    /// windowed layer (0 = off); every (`interleave`+1)-th layer stays
+    /// global when `interleave > 0`. See [`AttnLm::with_window`].
+    pub fn with_window(mut self, window: usize, interleave: usize)
+                       -> LatentAttnLm {
+        self.window = window;
+        self.window_interleave = interleave;
+        self
+    }
+
+    /// Width of one realized kv row: `kv_heads * head_dim`.
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * (self.dims.hidden / self.heads)
+    }
+
+    /// A latent k/v projection reduced to the realized kv rows: the
+    /// first `kv_dim` rows (checkpoint-native GQA projections are
+    /// already that size and pass through untouched).
+    fn kv_proj(&self, w: &HostTensor) -> HostTensor {
+        let kd = self.kv_dim();
+        let (rows, _) = w.dims2();
+        if rows == kd {
+            w.clone()
+        } else {
+            slice_rows(w, 0, kd)
+        }
+    }
+
+    /// Latent attention weights from a trained checkpoint: `embed` plus,
+    /// per layer, either the separate `l{i}.attn_{q,k,v}` projections or
+    /// a fused row-stacked `l{i}.attn_qkv` (`hidden + 2*kv_dim` rows),
+    /// and either `l{i}.mlp_{gate,up}` or a fused `l{i}.mlp_gateup`
+    /// (`2*glu` rows), plus `attn_o` and `mlp_down`; the head falls
+    /// back to the tied embedding table. The kv head count is inferred
+    /// from the k projection's row count over the head dim, so GQA
+    /// checkpoints (`kv_dim < hidden`) load without extra flags.
     pub fn from_checkpoint(ck: &Checkpoint, heads: usize)
                            -> Result<LatentAttnLm> {
         let embed = ck.get("embed")
@@ -1613,54 +1869,103 @@ impl LatentAttnLm {
         if heads == 0 || hidden % heads != 0 {
             anyhow::bail!("heads {heads} must divide hidden {hidden}");
         }
+        let dh = hidden / heads;
         let mut blocks = Vec::new();
         let mut glu = 0usize;
+        let mut kv_heads = heads;
         for l in 0.. {
-            let Some(wq) = ck.get(&format!("l{l}.attn_q")) else { break };
+            let fused_qkv = ck.get(&format!("l{l}.attn_qkv"));
+            if fused_qkv.is_none()
+                && ck.get(&format!("l{l}.attn_q")).is_none()
+            {
+                break;
+            }
             let get = |name: &str| {
                 ck.get(&format!("l{l}.{name}")).ok_or_else(
-                    || anyhow::anyhow!("layer {l}: attn_q without {name}"))
+                    || anyhow::anyhow!(
+                        "layer {l}: attention block without {name}"))
             };
-            let wk = get("attn_k")?;
-            let wv = get("attn_v")?;
+            let (wq, wk, wv) = if let Some(qkv) = fused_qkv {
+                let (rows, cols) = qkv.dims2();
+                if cols != hidden || rows <= hidden
+                    || (rows - hidden) % 2 != 0
+                {
+                    anyhow::bail!(
+                        "layer {l}: attn_qkv is {:?}, expected \
+                         (hidden + 2*kv_dim, {hidden})", qkv.dims2());
+                }
+                let kv_dim = (rows - hidden) / 2;
+                (slice_rows(qkv, 0, hidden),
+                 slice_rows(qkv, hidden, kv_dim),
+                 slice_rows(qkv, hidden + kv_dim, kv_dim))
+            } else {
+                (get("attn_q")?.clone(), get("attn_k")?.clone(),
+                 get("attn_v")?.clone())
+            };
             let wo = get("attn_o")?;
-            let gate = get("mlp_gate")?;
-            let up = get("mlp_up")?;
+            let (gate, up) = if let Some(gu) =
+                ck.get(&format!("l{l}.mlp_gateup"))
+            {
+                let (rows, _) = gu.dims2();
+                if rows == 0 || rows % 2 != 0 {
+                    anyhow::bail!(
+                        "layer {l}: mlp_gateup is {:?}, expected \
+                         (2*glu, {hidden})", gu.dims2());
+                }
+                (slice_rows(gu, 0, rows / 2),
+                 slice_rows(gu, rows / 2, rows / 2))
+            } else {
+                (get("mlp_gate")?.clone(), get("mlp_up")?.clone())
+            };
             let down = get("mlp_down")?;
             if l == 0 {
                 glu = gate.dims2().0;
+                let kv_rows = wk.dims2().0;
+                if kv_rows == 0 || kv_rows % dh != 0 {
+                    anyhow::bail!(
+                        "layer 0: attn_k has {kv_rows} rows, expected a \
+                         multiple of the head dim {dh}");
+                }
+                kv_heads = kv_rows / dh;
+                if kv_heads > heads || heads % kv_heads != 0 {
+                    anyhow::bail!(
+                        "layer 0: attn_k implies kv_heads {kv_heads}, \
+                         which must divide heads {heads}");
+                }
             }
+            let kv_dim = kv_heads * dh;
             // Same shape-drift rejection as LatentLm::from_checkpoint:
             // mismatched tensors must fail at build time, not serve
             // truncated garbage.
-            for (name, t, want) in [("attn_q", wq, (hidden, hidden)),
-                                    ("attn_k", wk, (hidden, hidden)),
-                                    ("attn_v", wv, (hidden, hidden)),
+            for (name, t, want) in [("attn_q", &wq, (hidden, hidden)),
+                                    ("attn_k", &wk, (kv_dim, hidden)),
+                                    ("attn_v", &wv, (kv_dim, hidden)),
                                     ("attn_o", wo, (hidden, hidden)),
-                                    ("mlp_gate", gate, (glu, hidden)),
-                                    ("mlp_up", up, (glu, hidden)),
+                                    ("mlp_gate", &gate, (glu, hidden)),
+                                    ("mlp_up", &up, (glu, hidden)),
                                     ("mlp_down", down, (hidden, glu))] {
                 if t.dims2() != want {
                     anyhow::bail!(
                         "layer {l}: {name} is {:?}, expected {:?} (from \
-                         embed hidden {hidden} and l0 glu {glu})",
+                         embed hidden {hidden}, l0 glu {glu} and l0 \
+                         kv_dim {kv_dim})",
                         t.dims2(), want);
                 }
             }
             blocks.push(LatentAttnBlock {
-                wq: wq.clone(),
-                wk: wk.clone(),
-                wv: wv.clone(),
+                wq,
+                wk,
+                wv,
                 wo: wo.clone(),
-                gate: gate.clone(),
-                up: up.clone(),
+                gate,
+                up,
                 down: down.clone(),
             });
         }
         if blocks.is_empty() {
-            anyhow::bail!("checkpoint has no l0.attn_q — not an attention \
-                           LM (serve it with the decay-state LatentLm \
-                           instead)");
+            anyhow::bail!("checkpoint has no l0.attn_q or l0.attn_qkv — \
+                           not an attention LM (serve it with the \
+                           decay-state LatentLm instead)");
         }
         let head = ck.get("head").unwrap_or(&embed).clone();
         if head.dims2().1 != hidden {
@@ -1671,6 +1976,9 @@ impl LatentAttnLm {
         Ok(LatentAttnLm {
             dims: LmDims { vocab, hidden, glu, layers },
             heads,
+            kv_heads,
+            window: 0,
+            window_interleave: 0,
             embed,
             blocks,
             head,
@@ -1678,20 +1986,26 @@ impl LatentAttnLm {
         })
     }
 
+    /// Realize every block with fused q/k/v and gate/up projections:
+    /// each part is quantized *separately* through `f` (ternary/quant
+    /// scales summarize the matrix they came from, so fusing after
+    /// compression keeps fused logits bitwise the unfused ones), then
+    /// row-stacked into one [`FusedLinear`] per fusion. GQA truncation
+    /// of k/v to the shared heads happens here, before compression.
     fn realize<L: LinearFormat>(&self, lanes: usize, max_context: usize,
                                 f: impl Fn(&HostTensor) -> L) -> AttnLm<L> {
         AttnLm::new(
             self.dims.clone(), self.heads, self.embed.clone(),
             self.blocks.iter().map(|b| AttnBlock {
-                wq: f(&b.wq),
-                wk: f(&b.wk),
-                wv: f(&b.wv),
+                wqkv: FusedLinear::new(vec![f(&b.wq),
+                                            f(&self.kv_proj(&b.wk)),
+                                            f(&self.kv_proj(&b.wv))]),
                 wo: f(&b.wo),
-                gate: f(&b.gate),
-                up: f(&b.up),
+                gateup: FusedLinear::new(vec![f(&b.gate), f(&b.up)]),
                 down: f(&b.down),
             }).collect(),
             f(&self.head), lanes, max_context)
+            .with_window(self.window, self.window_interleave)
     }
 
     /// FloatLM storage: the latent f32 weights served directly.
@@ -1710,15 +2024,18 @@ impl LatentAttnLm {
         AttnLm::new(
             self.dims.clone(), self.heads, self.embed.clone(),
             self.blocks.iter().map(|b| AttnBlock {
-                wq: tern(&b.wq, self.mp),
-                wk: tern(&b.wk, self.mp),
-                wv: tern(&b.wv, self.mp),
+                wqkv: FusedLinear::new(vec![
+                    tern(&b.wq, self.mp),
+                    tern(&self.kv_proj(&b.wk), self.mp),
+                    tern(&self.kv_proj(&b.wv), self.mp),
+                ]),
                 wo: tern(&b.wo, self.mp),
-                gate: tern(&b.gate, self.mp),
-                up: tern(&b.up, self.mp),
+                gateup: FusedLinear::new(vec![tern(&b.gate, self.mp),
+                                              tern(&b.up, self.mp)]),
                 down: tern(&b.down, self.mp),
             }).collect(),
             tern(&self.head, 1), lanes, max_context)
+            .with_window(self.window, self.window_interleave)
     }
 
     /// QuantLM storage via round-to-nearest group quantization.
@@ -1731,10 +2048,16 @@ impl LatentAttnLm {
     }
 
     /// QuantLM storage via GPTQ with serve-side synthetic calibration:
-    /// the latent f32 *attention* forward (including a real paged KV
-    /// cache) is driven on seeded token traffic to accumulate every
-    /// linear's input Hessian, then each linear is quantized with
-    /// second-order error compensation.
+    /// the latent f32 *attention* forward (GQA + window policy
+    /// included, over a real paged KV cache) is driven on seeded token
+    /// traffic to accumulate every linear's input Hessian, then each
+    /// linear is quantized with second-order error compensation.
+    ///
+    /// Calibration sees the fused layout by construction: GPTQ's
+    /// Hessian is over a linear's *input*, and every row of a fused
+    /// stack shares the same input — so quantizing the q/k/v (and
+    /// gate/up) parts against their shared accumulator *is* calibrating
+    /// the row-stacked fused matrix, row block by row block.
     pub fn build_quant_gptq(&self, bits: u32, group: usize, seed: u64,
                             lanes: usize, max_context: usize)
                             -> Result<AttnLm<QuantPacked>> {
@@ -1749,18 +2072,21 @@ impl LatentAttnLm {
         let mut blocks = Vec::with_capacity(self.blocks.len());
         for (l, b) in self.blocks.iter().enumerate() {
             blocks.push(AttnBlock {
-                wq: qp(&b.wq, &acc_qkv[l])?,
-                wk: qp(&b.wk, &acc_qkv[l])?,
-                wv: qp(&b.wv, &acc_qkv[l])?,
+                wqkv: FusedLinear::new(vec![
+                    qp(&b.wq, &acc_qkv[l])?,
+                    qp(&self.kv_proj(&b.wk), &acc_qkv[l])?,
+                    qp(&self.kv_proj(&b.wv), &acc_qkv[l])?,
+                ]),
                 wo: qp(&b.wo, &acc_o[l])?,
-                gate: qp(&b.gate, &acc_mlp[l])?,
-                up: qp(&b.up, &acc_mlp[l])?,
+                gateup: FusedLinear::new(vec![qp(&b.gate, &acc_mlp[l])?,
+                                              qp(&b.up, &acc_mlp[l])?]),
                 down: qp(&b.down, &acc_g[l])?,
             });
         }
         Ok(AttnLm::new(self.dims.clone(), self.heads, self.embed.clone(),
                        blocks, qp(&self.head, &acc_head)?,
-                       lanes, max_context))
+                       lanes, max_context)
+            .with_window(self.window, self.window_interleave))
     }
 
     /// Realize any family as a boxed [`DecodeModel`], page pool sized
@@ -1811,7 +2137,15 @@ impl LatentAttnLm {
             .map(|_| HessianAccumulator::new(d.glu)).collect();
         let mut acc_head = HessianAccumulator::new(d.hidden);
         let mut rng = SplitMix64::new(seed ^ 0xA77CA1);
-        let mut cache = KvCache::for_lanes(d.layers, d.hidden,
+        // The calibration forward mirrors serving exactly: GQA-sized
+        // kv rows and the same per-layer window policy, over a real
+        // paged cache.
+        let kv_dim = self.kv_dim();
+        let wks: Vec<HostTensor> =
+            self.blocks.iter().map(|b| self.kv_proj(&b.wk)).collect();
+        let wvs: Vec<HostTensor> =
+            self.blocks.iter().map(|b| self.kv_proj(&b.wv)).collect();
+        let mut cache = KvCache::for_lanes(d.layers, kv_dim,
                                            KV_PAGE_TOKENS, CALIB_LANES,
                                            CALIB_STEPS);
         let seqs: Vec<usize> =
@@ -1831,17 +2165,21 @@ impl LatentAttnLm {
                 let y = rmsnorm(&x);
                 acc_qkv[l].add_batch(&y);
                 let q = matmul_dense(&y, &blk.wq);
-                let k = matmul_dense(&y, &blk.wk);
-                let v = matmul_dense(&y, &blk.wv);
+                let k = matmul_dense(&y, &wks[l]);
+                let v = matmul_dense(&y, &wvs[l]);
                 for (bi, &s) in seqs.iter().enumerate() {
                     cache.write_kv(s, l, k.row(bi), v.row(bi));
                 }
                 let mut attn =
                     HostTensor::zeros(vec![CALIB_LANES, d.hidden]);
+                let win = window_for_layer(self.window,
+                                           self.window_interleave, l);
                 for (bi, &s) in seqs.iter().enumerate() {
-                    attend_one(&cache, s, l, self.heads, q.row(bi),
-                               attn.row_mut(bi), &mut scores,
-                               cache.seq_len(s));
+                    let limit = cache.seq_len(s);
+                    let first = win.map_or(0, |w| limit.saturating_sub(w));
+                    attend_one(&cache, s, l, self.heads, self.kv_heads,
+                               q.row(bi), attn.row_mut(bi), &mut scores,
+                               first, limit);
                 }
                 acc_o[l].add_batch(&attn);
                 let o = matmul_dense(&attn, &blk.wo);
@@ -2379,5 +2717,232 @@ mod tests {
             assert_eq!(la.bytes, lb.bytes);
             assert_eq!(la.scales, lb.scales);
         }
+    }
+
+    #[test]
+    fn attn_gqa_matches_replicated_head_mha_reference() {
+        // GQA ground truth: a 4-head model sharing 2 kv heads must be
+        // bitwise identical to the full MHA model whose k/v projection
+        // rows are the shared rows replicated per query-head group —
+        // the only difference is that GQA stores (and projects) each
+        // shared head once.
+        let heads = 4usize;
+        let kv_heads = 2usize;
+        let dh = 32 / heads;
+        let group = heads / kv_heads;
+        let gqa = LatentAttnLm::synthetic(small_dims(), heads, 1, 33)
+            .with_kv_heads(kv_heads);
+        let mut mha = LatentAttnLm::synthetic(small_dims(), heads, 1, 33);
+        for b in &mut mha.blocks {
+            for w in [&mut b.wk, &mut b.wv] {
+                let mut rep = HostTensor::zeros(vec![32, 32]);
+                for h in 0..heads {
+                    let src = (h / group) * dh * 32;
+                    rep.data[h * dh * 32..(h + 1) * dh * 32]
+                        .copy_from_slice(&w.data[src..src + dh * 32]);
+                }
+                *w = rep;
+            }
+        }
+        let mg = gqa.build_float(1, 8);
+        let mr = mha.build_float(1, 8);
+        assert_eq!(mg.kv_heads, kv_heads);
+        assert_eq!(mg.kv_bytes_per_token() * group as f64,
+                   mr.kv_bytes_per_token(),
+                   "kv bytes must shrink by the head ratio");
+        let mut sg = vec![0.0f32; 32];
+        let mut sr = vec![0.0f32; 32];
+        for tok in [3u32, 9, 60, 4, 31] {
+            let lg = step_one(&mg, &mut sg, tok);
+            let lr = step_one(&mr, &mut sr, tok);
+            assert_eq!(lg.data, lr.data,
+                       "GQA diverged from the replicated-head reference");
+        }
+    }
+
+    #[test]
+    fn attn_window_covering_context_is_bitwise_the_unwindowed_model() {
+        // The standing invariant: window >= context must be invisible,
+        // per family; a genuinely small window must not be.
+        let latent = attn_latent(34);
+        let wide = attn_latent(34).with_window(8, 0);
+        let narrow = attn_latent(34).with_window(2, 0);
+        for spec in [FamilySpec::Float, FamilySpec::Ternary] {
+            let plain = latent.build(spec, 1, 8).unwrap();
+            let w8 = wide.build(spec, 1, 8).unwrap();
+            let w2 = narrow.build(spec, 1, 8).unwrap();
+            let (mut sp, mut s8, mut s2) =
+                (vec![0.0f32; 32], vec![0.0f32; 32], vec![0.0f32; 32]);
+            let mut w2_diverged = false;
+            for (i, tok) in [3u32, 9, 60, 4, 31, 7].iter().enumerate() {
+                let lp = step_one(plain.as_ref(), &mut sp, *tok);
+                let l8 = step_one(w8.as_ref(), &mut s8, *tok);
+                let l2 = step_one(w2.as_ref(), &mut s2, *tok);
+                assert_eq!(lp.data, l8.data,
+                           "{} step {i}: covering window changed logits",
+                           spec.label());
+                w2_diverged |= lp.data != l2.data;
+            }
+            assert!(w2_diverged,
+                    "{}: a 2-token window must actually truncate context",
+                    spec.label());
+        }
+    }
+
+    #[test]
+    fn attn_interleaved_global_layers_escape_the_window() {
+        // window:global interleave: with interleave = 1 on a 2-layer
+        // model, layer 0 is windowed and layer 1 global — the model
+        // must differ from both the unwindowed and the all-windowed
+        // policies once context exceeds the window.
+        let plain = attn_latent(35).build_float(1, 16);
+        let mixed = attn_latent(35).with_window(2, 1).build_float(1, 16);
+        let full = attn_latent(35).with_window(2, 0).build_float(1, 16);
+        let (mut sp, mut sm, mut sf) =
+            (vec![0.0f32; 32], vec![0.0f32; 32], vec![0.0f32; 32]);
+        let (mut vs_plain, mut vs_full) = (false, false);
+        for tok in [3u32, 9, 60, 4, 31, 7, 12, 50] {
+            let lp = step_one(&plain, &mut sp, tok);
+            let lm = step_one(&mixed, &mut sm, tok);
+            let lf = step_one(&full, &mut sf, tok);
+            vs_plain |= lm.data != lp.data;
+            vs_full |= lm.data != lf.data;
+        }
+        assert!(vs_plain, "interleaved window never truncated context");
+        assert!(vs_full, "global layer of the interleave was windowed too");
+        // A mixed policy cannot recycle pages (the global layers still
+        // need the full history), so pages grow like the plain model.
+        assert_eq!(mixed.kv_pages_in_use(), plain.kv_pages_in_use());
+    }
+
+    #[test]
+    fn attn_windowed_lanes_plateau_instead_of_growing() {
+        // Page recycling: with every layer windowed, out-of-window
+        // pages return to the pool and a long-running lane's footprint
+        // plateaus; the unwindowed twin keeps growing.
+        let windowed = attn_latent(36).with_window(4, 0).build_float(1, 128);
+        let plain = attn_latent(36).build_float(1, 128);
+        let mut sw = vec![0.0f32; 32];
+        let mut sp = vec![0.0f32; 32];
+        let mut plateau = 0usize;
+        for i in 0..96u32 {
+            step_one(&windowed, &mut sw, i % 64);
+            step_one(&plain, &mut sp, i % 64);
+            if i == 47 {
+                plateau = windowed.kv_pages_in_use();
+            }
+        }
+        assert_eq!(windowed.kv_pages_in_use(), plateau,
+                   "windowed lane footprint must plateau");
+        assert!(windowed.kv_pages_in_use() < plain.kv_pages_in_use(),
+                "windowed lane must hold fewer pages than unwindowed \
+                 ({} vs {})", windowed.kv_pages_in_use(),
+                plain.kv_pages_in_use());
+        // Retire still returns everything (released front pages were
+        // already freed; the rest free now).
+        windowed.retire_state(&mut sw);
+        assert_eq!(windowed.kv_pages_in_use(), 0);
+    }
+
+    #[test]
+    fn attn_fused_checkpoint_names_load_like_separate_ones() {
+        // A checkpoint may store the projections pre-fused
+        // (l{l}.attn_qkv with hidden + 2*kv_dim rows, l{l}.mlp_gateup
+        // with 2*glu rows); it must build the same model the separate
+        // names build — here with a GQA kv_dim of one head.
+        let h = |shape: Vec<usize>, seed: u64| {
+            HostTensor::randn(shape, 0.1, seed)
+        };
+        let (wq, wk, wv) = (h(vec![32, 32], 2), h(vec![8, 32], 3),
+                            h(vec![8, 32], 4));
+        let (gate, up) = (h(vec![48, 32], 6), h(vec![48, 32], 7));
+        let mut qkv = HostTensor::zeros(vec![32 + 16, 32]);
+        qkv.data[..32 * 32].copy_from_slice(&wq.data);
+        qkv.data[32 * 32..40 * 32].copy_from_slice(&wk.data);
+        qkv.data[40 * 32..].copy_from_slice(&wv.data);
+        let mut gu = HostTensor::zeros(vec![96, 32]);
+        gu.data[..48 * 32].copy_from_slice(&gate.data);
+        gu.data[48 * 32..].copy_from_slice(&up.data);
+        let embed = HostTensor::randn(vec![64, 32], 0.5, 1);
+        let common = vec![
+            ("embed".to_string(), embed.clone()),
+            ("l0.attn_o".to_string(), h(vec![32, 32], 5)),
+            ("l0.mlp_down".to_string(), h(vec![32, 48], 8)),
+        ];
+        let mut sep = common.clone();
+        sep.extend([("l0.attn_q".to_string(), wq),
+                    ("l0.attn_k".to_string(), wk),
+                    ("l0.attn_v".to_string(), wv),
+                    ("l0.mlp_gate".to_string(), gate),
+                    ("l0.mlp_up".to_string(), up)]);
+        let mut fused = common;
+        fused.extend([("l0.attn_qkv".to_string(), qkv),
+                      ("l0.mlp_gateup".to_string(), gu)]);
+        let a = LatentAttnLm::from_checkpoint(&Checkpoint::new(sep), 4)
+            .unwrap();
+        let b = LatentAttnLm::from_checkpoint(&Checkpoint::new(fused), 4)
+            .unwrap();
+        assert_eq!(a.kv_heads, 1, "kv_heads inferred from attn_k rows");
+        assert_eq!(b.kv_heads, 1);
+        let ma = a.build_float(1, 8);
+        let mb = b.build_float(1, 8);
+        assert_eq!(ma.kv_bytes_per_token(), (2 * 1 * 8 * 4) as f64,
+                   "one kv head of dh=8 across 1 layer");
+        let mut sa = vec![0.0f32; 32];
+        let mut sb = vec![0.0f32; 32];
+        for tok in [5u32, 11, 40] {
+            let la = step_one(&ma, &mut sa, tok);
+            let lb = step_one(&mb, &mut sb, tok);
+            assert_eq!(la.data, lb.data,
+                       "fused and separate checkpoint names diverge");
+        }
+    }
+
+    #[test]
+    fn attn_prefix_eviction_is_one_pin_at_a_time_lru_first() {
+        // The eviction bugfix at the model level: each
+        // release_cached_pages call drops exactly one pin — the
+        // least-recently-hit — so a transient pressure spike costs the
+        // coldest pin, not the whole cache.
+        let lm = attn_latent(37).build_float(4, 64);
+        let prompts: [&[u32]; 2] = [
+            &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17],
+            &[9, 8, 7, 6, 5, 4, 3, 2, 1, 0, 10, 20, 30, 40, 50, 60, 61],
+        ];
+        let mut states = Vec::new();
+        for prompt in prompts {
+            let mut st = vec![0.0f32; 32];
+            for &tok in prompt {
+                step_one_state(&lm, &mut st, tok);
+            }
+            lm.prefix_register(&mut st, prompt);
+            states.push(st);
+        }
+        assert_eq!(lm.kv_prefix_pins(), 2);
+        // Hit pin 0 so pin 1 becomes the LRU victim.
+        let mut fresh = vec![0.0f32; 32];
+        assert!(lm.prefix_reuse(&mut fresh, prompts[0]) > 0);
+        lm.retire_state(&mut fresh);
+        assert!(lm.release_cached_pages(), "one pin must be evicted");
+        assert_eq!(lm.kv_prefix_pins(), 1,
+                   "eviction must drop exactly one pin");
+        // The survivor is the recently-hit prompt: it still serves.
+        let mut fresh = vec![0.0f32; 32];
+        assert!(lm.prefix_reuse(&mut fresh, prompts[0]) > 0,
+                "recently-hit pin must survive the first eviction");
+        lm.retire_state(&mut fresh);
+        let mut fresh = vec![0.0f32; 32];
+        assert_eq!(lm.prefix_reuse(&mut fresh, prompts[1]), 0,
+                   "LRU pin must be the one evicted");
+        // Persistent pressure drains the rest, one call at a time.
+        assert!(lm.release_cached_pages());
+        assert!(!lm.release_cached_pages(), "no pins left to evict");
+        assert_eq!(lm.kv_prefix_pins(), 0);
+    }
+
+    /// `step_one` for tests that keep the state vector (not the logits).
+    fn step_one_state(m: &dyn DecodeModel, state: &mut Vec<f32>, tok: u32) {
+        let mut refs = [state.as_mut_slice()];
+        m.step_batch(&mut refs, &[tok], 1);
     }
 }

@@ -297,6 +297,14 @@ pub struct ServeStats {
     /// proposals). Like `batch_steps` this measures work actually
     /// executed and is never rolled back.
     pub spec_verify_steps: usize,
+    /// Current acceptance-adaptive speculative proposal length — the
+    /// value [`Scheduler::propose`] actually uses in place of the
+    /// configured [`SpecConfig`] `k`: halved when fewer than half the
+    /// proposed tokens land, nudged back up on fully-accepted rounds,
+    /// clamped to `[1, SpecConfig.k]`. A gauge, not a counter —
+    /// [`ServeStats::absorb`] takes the max so `/stats` totals report
+    /// the most aggressive shard. 0 off the speculative path.
+    pub spec_k_effective: usize,
 }
 
 impl ServeStats {
@@ -325,6 +333,8 @@ impl ServeStats {
         self.spec_proposed += other.spec_proposed;
         self.spec_accepted += other.spec_accepted;
         self.spec_verify_steps += other.spec_verify_steps;
+        self.spec_k_effective =
+            self.spec_k_effective.max(other.spec_k_effective);
         for t in &other.tenants {
             match self.tenants.iter_mut().find(|m| m.tenant == t.tenant) {
                 Some(m) => {
@@ -483,6 +493,12 @@ pub struct Scheduler<'m, M: DecodeModel + ?Sized> {
     /// Speculative decoding: the draft model plus [`SpecConfig`]
     /// ([`Scheduler::set_speculative`]); `None` = plain decode.
     spec: Option<Spec<'m>>,
+    /// Acceptance-adaptive proposal length ([`Scheduler::propose`]
+    /// drafts this many tokens per lane, not the configured
+    /// `SpecConfig.k`). Live-clamped to `[1, SpecConfig.k]` by the
+    /// controller at the end of every verify step; 0 (unused) while
+    /// `spec` is `None`.
+    spec_k_eff: usize,
     /// Recycled draft-state buffers (the draft's hidden width may
     /// differ from the target's, so these never mix with
     /// `free_states`).
@@ -512,6 +528,7 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             stalled_steps: 0,
             faults: FaultPlan::default(),
             spec: None,
+            spec_k_eff: 0,
             free_draft_states: Vec::new(),
             stats: ServeStats::default(),
         }
@@ -615,6 +632,8 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         assert!(self.lanes.iter().all(|l| l.is_none()),
                 "set_speculative must run before any lane is admitted \
                  (live lanes have no draft state to verify against)");
+        self.spec_k_eff = cfg.k;
+        self.stats.spec_k_effective = cfg.k;
         self.spec = Some(Spec { draft, cfg });
     }
 
@@ -924,6 +943,15 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
         let mut mirror: Vec<usize> = Vec::new();
         let mut ai = 0usize; // logits row: ordinal among lanes that ran
         let mut flat = 0usize; // span_logits row: flattened span cursor
+        // Step-local speculative accounting for the adaptive-k
+        // controller after the loop: verify rounds executed this step,
+        // their proposed/accepted token sums, and whether every round
+        // drafted the full effective k (budget-clamped rounds must not
+        // count as evidence either way).
+        let mut verify_rounds = 0usize;
+        let mut verify_proposed = 0usize;
+        let mut verify_accepted = 0usize;
+        let mut verify_full = true;
         let mut si = 0usize; // live-lane ordinal (indexes span_buf)
         // `rejected` is sorted ascending (the model contract) and `si`
         // walks live lanes in order, so one cursor replaces a per-lane
@@ -1069,6 +1097,10 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
                 self.stats.spec_proposed += j;
                 self.stats.spec_accepted += accepted;
                 self.stats.spec_verify_steps += 1;
+                verify_rounds += 1;
+                verify_proposed += j;
+                verify_accepted += accepted;
+                verify_full &= j == self.spec_k_eff;
                 if lane.generated.len() >= lane.req.max_new_tokens {
                     // Budget reached mid-round: retire outright —
                     // freeing the sequences releases committed and
@@ -1121,6 +1153,29 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
             ai += 1;
             flat += span;
         }
+        // Acceptance-adaptive speculative k: a draft that keeps getting
+        // rejected wastes a long verify span (and its transient KV
+        // claim) every round, so when fewer than half the proposed
+        // tokens landed this step the proposal length halves (floor 1);
+        // a step whose every round drafted the full effective k and
+        // landed every token nudges it back up, clamped to the
+        // configured `SpecConfig.k`. Pure scheduling: losslessness
+        // means streams are bitwise identical at every k, so the
+        // controller only moves the work/latency trade-off. Budget-
+        // clamped or refused rounds (`verify_full == false` with full
+        // acceptance) leave k where it is — they say nothing about the
+        // draft's quality.
+        if verify_rounds > 0 {
+            if let Some(spec) = self.spec.as_ref() {
+                if verify_full && verify_accepted == verify_proposed {
+                    self.spec_k_eff =
+                        (self.spec_k_eff + 1).min(spec.cfg.k);
+                } else if verify_accepted * 2 < verify_proposed {
+                    self.spec_k_eff = (self.spec_k_eff / 2).max(1);
+                }
+                self.stats.spec_k_effective = self.spec_k_eff;
+            }
+        }
         self.defer_admission = !requeue.is_empty();
         // Deferred lanes go back to the *head* of the queue in their
         // original relative order — they were already in flight.
@@ -1146,7 +1201,11 @@ impl<'m, M: DecodeModel + ?Sized> Scheduler<'m, M> {
     fn propose(&mut self) {
         let Some(spec) = self.spec.as_ref() else { return };
         let draft = spec.draft;
-        let k = spec.cfg.k;
+        // The *effective* k, not the configured one: the adaptive
+        // controller in `step_observed` moves this between 1 and
+        // `SpecConfig.k` based on realized acceptance.
+        let k = self.spec_k_eff;
+        debug_assert!(k >= 1, "adaptive k must stay >= 1 while drafting");
         let mut active: Vec<usize> = Vec::new();
         for (i, s) in self.lanes.iter_mut().enumerate() {
             if let Some(lane) = s {
@@ -1948,6 +2007,7 @@ mod tests {
             peak_occupancy: 3,
             queue_depth_max: 2,
             cancelled: 1,
+            spec_k_effective: 4,
             ..ServeStats::default()
         };
         a.tenants.push(TenantStats { tenant: "t".into(), served: 1,
@@ -1958,6 +2018,7 @@ mod tests {
             queue_depth_max: 4,
             worker_restarts: 1,
             deadline_expired: 3,
+            spec_k_effective: 3,
             ..ServeStats::default()
         };
         b.tenants.push(TenantStats { tenant: "t".into(), served: 2,
@@ -1968,6 +2029,7 @@ mod tests {
         assert_eq!(a.generated_tokens, 12);
         assert_eq!(a.peak_occupancy, 3, "peaks take the max");
         assert_eq!(a.queue_depth_max, 4, "peaks take the max");
+        assert_eq!(a.spec_k_effective, 4, "gauges take the max");
         assert_eq!(a.cancelled, 1);
         assert_eq!(a.deadline_expired, 3);
         assert_eq!(a.worker_restarts, 1);
@@ -2070,6 +2132,8 @@ mod tests {
         assert!(st.spec_proposed > 0, "draft never proposed");
         assert!(st.spec_verify_steps > 0, "target never verified");
         assert!(st.spec_accepted <= st.spec_proposed);
+        assert!(st.spec_k_effective >= 1 && st.spec_k_effective <= 3,
+                "adaptive k must stay clamped to [1, SpecConfig.k]");
         assert_eq!(target.kv_pages_in_use(), 0,
                    "drained speculative run leaked target pages");
         assert_eq!(draft.kv_pages_in_use(), 0,
@@ -2107,6 +2171,8 @@ mod tests {
         assert_eq!(st.spec_verify_steps, 4,
                    "budget 1 + (k+1) is exactly one verify round");
         assert!((st.accepted_per_step() - 3.0).abs() < 1e-12);
+        assert_eq!(st.spec_k_effective, 3,
+                   "full acceptance must never shrink the adaptive k");
         assert_eq!(target.kv_pages_in_use(), 0);
         assert_eq!(draft.kv_pages_in_use(), 0);
     }

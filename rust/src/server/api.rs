@@ -308,6 +308,7 @@ pub fn stats_json(shards: &[ShardSnapshot]) -> String {
         ("spec_accepted", Json::num(s.sched.spec_accepted as f64)),
         ("spec_verify_steps", Json::num(s.sched.spec_verify_steps as f64)),
         ("accepted_per_step", Json::num(s.sched.accepted_per_step())),
+        ("spec_k_effective", Json::num(s.sched.spec_k_effective as f64)),
     ]));
     let tenant_docs = tenant_totals.iter().map(|(name, (served, queued,
                                                         rejected))| {
@@ -335,6 +336,11 @@ pub fn stats_json(shards: &[ShardSnapshot]) -> String {
         ("worker_restarts", Json::num(total(&|s| s.worker_restarts))),
         ("spec_proposed", Json::num(total(&|s| s.sched.spec_proposed))),
         ("spec_accepted", Json::num(total(&|s| s.sched.spec_accepted))),
+        // A gauge, not a counter: totals report the most aggressive
+        // shard (matches `ServeStats::absorb`'s max semantics).
+        ("spec_k_effective", Json::num(
+            shards.iter().map(|s| s.sched.spec_k_effective)
+                .max().unwrap_or(0) as f64)),
     ]).to_string()
 }
 

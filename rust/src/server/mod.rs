@@ -32,9 +32,12 @@
 //! default) realized over the same seeded latent weights; the shard's
 //! scheduler verifies the draft's proposals in chunked target passes
 //! ([`crate::serve::Scheduler::set_speculative`]). Streams stay
-//! bitwise identical to plain decode, and `/stats` gains the schema-7
+//! bitwise identical to plain decode, and `/stats` carries the
 //! acceptance counters (`spec_proposed` / `spec_accepted` /
-//! `accepted_per_step`).
+//! `accepted_per_step`) plus the `spec_k_effective` gauge — the
+//! acceptance-adaptive proposal length the scheduler is currently
+//! drafting at (halved on low acceptance, nudged back up on full
+//! acceptance, clamped to the configured `--spec-k`).
 //!
 //! Endpoints: `POST /generate` (chunked ndjson token stream),
 //! `GET /stats`, `GET /healthz`, `POST /shutdown`. Streaming format
@@ -91,6 +94,20 @@ pub struct ServerConfig {
     pub attn: bool,
     /// Attention heads (ignored when `attn` is false).
     pub heads: usize,
+    /// Grouped-query attention: shared key/value heads (`<= heads`,
+    /// `heads % kv_heads == 0`). `kv_heads == heads` is classic MHA —
+    /// bitwise identical to the pre-GQA server. Ignored when `attn` is
+    /// false.
+    pub kv_heads: usize,
+    /// Sliding-window attention span in tokens (0 = full context).
+    /// Shrinking the window below the context changes streams; the
+    /// default 0 is bitwise identical to the unwindowed server.
+    pub window: usize,
+    /// With a finite `window`, every `window_interleave + 1`-th layer
+    /// attends globally (Gemma3-style `window:global` interleave; 0 =
+    /// all layers windowed, which is what lets the KV cache recycle
+    /// out-of-window pages).
+    pub window_interleave: usize,
     pub dims: LmDims,
     /// Ternary mixed-precision group size.
     pub mp: usize,
@@ -147,6 +164,9 @@ impl Default for ServerConfig {
             family: FamilySpec::Float,
             attn: true,
             heads: 4,
+            kv_heads: 4,
+            window: 0,
+            window_interleave: 0,
             dims: LmDims { vocab: 64, hidden: 32, glu: 48, layers: 2 },
             mp: 1,
             seed: 11,
@@ -196,7 +216,9 @@ fn build_model(cfg: &ServerConfig) -> Result<Box<dyn DecodeModel + Send>> {
 fn build_attn_model(cfg: &ServerConfig, family: FamilySpec)
                     -> Result<Box<dyn DecodeModel + Send>> {
     let latent = LatentAttnLm::synthetic(cfg.dims.clone(), cfg.heads,
-                                         cfg.mp, cfg.seed);
+                                         cfg.mp, cfg.seed)
+        .with_kv_heads(cfg.kv_heads)
+        .with_window(cfg.window, cfg.window_interleave);
     Ok(match family {
         FamilySpec::Float =>
             Box::new(latent.build_float(cfg.lanes, cfg.kv_context)),

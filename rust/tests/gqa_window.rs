@@ -1,0 +1,384 @@
+//! The attention-geometry refactor's bitwise acceptance bar: fused
+//! QKV/gate-up projections, grouped-query attention, and the
+//! sliding-window layer policy must change serving *economics* without
+//! ever changing a stream the old geometry could produce.
+//!
+//! Four equivalences, each held across the four storage families
+//! (FloatLM, QuantLM-RTN, QuantLM-GPTQ, TriLM), crossed with chunked
+//! prefill (chunks {1, 3, >= prompt}) and a speculative verify span:
+//!
+//! 1. **Defaults are identity** — `kv_heads == heads` and
+//!    `window >= context` (windowed or interleaved) decode bitwise
+//!    identically to the untouched builder, greedy and seeded top-k.
+//! 2. **GQA == replicated-head MHA** — a `kv_heads < heads` model
+//!    matches a classic MHA model whose k/v weights replicate each
+//!    shared head across its query group (float storage: replication
+//!    preserves rows bitwise; quantized groupings legitimately differ
+//!    across matrix shapes, and `serve/model.rs`'s unit tests pin the
+//!    per-family fused/GQA algebra).
+//! 3. **Fused and separate checkpoint names are one model** — the
+//!    `l{i}.attn_qkv` / `l{i}.mlp_gateup` stacks, the separate
+//!    `l{i}.attn_{q,k,v}` / `l{i}.mlp_{gate,up}` names, and the
+//!    synthetic latent they were sliced from all serve identical
+//!    streams in every family.
+//! 4. **Windows bound memory, not correctness** — windowed + GQA
+//!    models are batch/thread/chunk-invariant and speculative-verify-
+//!    invariant, `kv_bytes_per_token` shrinks by exactly the head
+//!    ratio, and a windowed lane's `kv_pages_in_use` plateaus at the
+//!    window bound while unwindowed (and interleaved-global) lanes
+//!    grow with context.
+
+use spectra::checkpoint::Checkpoint;
+use spectra::runtime::HostTensor;
+use spectra::serve::{DecodeModel, FamilySpec, GenRequest, LatentAttnBlock,
+                     LatentAttnLm, LmDims, QuantMethod, Scheduler,
+                     SpecConfig};
+
+fn dims() -> LmDims {
+    LmDims { vocab: 128, hidden: 64, glu: 96, layers: 3 }
+}
+
+/// Heads 4 at hidden 64: head dim 16, so kv_heads ∈ {1, 2, 4} are all
+/// legal GQA geometries.
+const HEADS: usize = 4;
+
+fn four_families() -> [FamilySpec; 4] {
+    [
+        FamilySpec::Float,
+        FamilySpec::Quant { bits: 3, group: 128, method: QuantMethod::Rtn },
+        FamilySpec::Quant { bits: 4, group: 128, method: QuantMethod::Gptq },
+        FamilySpec::Ternary,
+    ]
+}
+
+/// Mixed greedy / seeded top-k traffic: the identity claims must hold
+/// under both sampling rules, so half the requests draw from a
+/// per-request seeded stream.
+fn mixed_requests(n: usize, prompt_len: usize, max_new: usize)
+                  -> Vec<GenRequest> {
+    (0..n).map(|id| {
+        let prompt: Vec<u32> = (0..prompt_len + id % 3)
+            .map(|j| ((7 * id + 3 * j + 1) % 128) as u32)
+            .collect();
+        if id % 2 == 0 {
+            GenRequest::greedy(id, prompt, max_new + id % 4)
+        } else {
+            GenRequest::top_k(id, prompt, max_new + id % 4, 5, 0.9,
+                              1000 + id as u64)
+        }
+    }).collect()
+}
+
+fn run_streams(model: &dyn DecodeModel, reqs: &[GenRequest], batch: usize,
+               threads: usize, chunk: usize) -> Vec<Vec<u32>> {
+    let mut sched = Scheduler::with_prefill_chunk(model, batch, threads,
+                                                  chunk);
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    sched.run().into_iter().map(|c| c.tokens).collect()
+}
+
+/// Equivalence 1: the geometry knobs at their identity settings —
+/// `kv_heads == heads` set explicitly, `window >= context` windowed,
+/// `window >= context` with interleaved global layers — decode bitwise
+/// identically to the untouched builder in every family, at every
+/// (batch, threads, prefill-chunk) combination, greedy and seeded
+/// top-k alike.
+#[test]
+fn identity_geometry_is_bitwise_the_default_model_in_every_family() {
+    let reqs = mixed_requests(8, 6, 6); // prompts <= 8, lanes <= 18 tokens
+    let variants: [(&str, LatentAttnLm); 3] = [
+        ("kv_heads == heads",
+         LatentAttnLm::synthetic(dims(), HEADS, 1, 70).with_kv_heads(HEADS)),
+        ("window >= context",
+         LatentAttnLm::synthetic(dims(), HEADS, 1, 70).with_window(64, 0)),
+        ("window >= context + global interleave",
+         LatentAttnLm::synthetic(dims(), HEADS, 1, 70).with_window(64, 1)),
+    ];
+    for spec in four_families() {
+        let base = LatentAttnLm::synthetic(dims(), HEADS, 1, 70)
+            .build(spec, 8, 24).unwrap();
+        let reference = run_streams(base.as_ref(), &reqs, 1, 1, 1);
+        assert_eq!(reference.len(), 8, "{}", spec.label());
+        for (name, latent) in &variants {
+            let model = latent.build(spec, 8, 24).unwrap();
+            // Chunks {1, 3, >= prompt} crossed with batch/thread shape.
+            for (batch, threads, chunk) in [(1, 1, 1), (4, 2, 3),
+                                            (8, 2, 16)] {
+                assert_eq!(
+                    run_streams(model.as_ref(), &reqs, batch, threads,
+                                chunk),
+                    reference,
+                    "{}: '{name}' diverged from the default model at \
+                     batch={batch} threads={threads} chunk={chunk}",
+                    spec.label());
+            }
+        }
+    }
+}
+
+/// Rows `[kh*dh, (kh+1)*dh)` of the shared projection, replicated once
+/// per query head in the group — the classic-MHA weight layout whose
+/// attention is algebraically (and, in f32 storage, bitwise) the GQA
+/// model's.
+fn replicate_shared_heads(w: &HostTensor, kv_heads: usize, group: usize,
+                          dh: usize) -> HostTensor {
+    let (_, cols) = w.dims2();
+    let heads = kv_heads * group;
+    let mut data = Vec::with_capacity(heads * dh * cols);
+    for h in 0..heads {
+        let kh = h / group;
+        data.extend_from_slice(w.rows_range(kh * dh, (kh + 1) * dh));
+    }
+    HostTensor::new(vec![heads * dh, cols], data)
+}
+
+/// Equivalence 2: GQA vs a replicated-head MHA reference, end to end
+/// through the scheduler. Sharing kv heads across a query group is the
+/// same computation as giving every query head a private copy of the
+/// shared weights — float storage keeps the comparison bitwise
+/// (replication preserves each row; quantized formats group across
+/// rows, so their per-family algebra is pinned by the model-level unit
+/// tests instead).
+#[test]
+fn gqa_matches_a_replicated_head_mha_reference() {
+    let dh = dims().hidden / HEADS;
+    let reqs = mixed_requests(8, 6, 6);
+    for kv_heads in [1usize, 2] {
+        let group = HEADS / kv_heads;
+        let gqa = LatentAttnLm::synthetic(dims(), HEADS, 1, 71)
+            .with_kv_heads(kv_heads);
+        let base = LatentAttnLm::synthetic(dims(), HEADS, 1, 71);
+        let blocks: Vec<LatentAttnBlock> = base.blocks.iter().map(|b| {
+            LatentAttnBlock {
+                wq: b.wq.clone(),
+                wk: replicate_shared_heads(&b.wk, kv_heads, group, dh),
+                wv: replicate_shared_heads(&b.wv, kv_heads, group, dh),
+                wo: b.wo.clone(),
+                gate: b.gate.clone(),
+                up: b.up.clone(),
+                down: b.down.clone(),
+            }
+        }).collect();
+        let mha = LatentAttnLm {
+            dims: dims(), heads: HEADS, kv_heads: HEADS,
+            window: 0, window_interleave: 0,
+            embed: base.embed.clone(), blocks, head: base.head.clone(),
+            mp: 1,
+        };
+        let gqa_model = gqa.build_float(4, 24);
+        let mha_model = mha.build_float(4, 24);
+        assert_eq!(run_streams(&gqa_model, &reqs, 4, 2, 3),
+                   run_streams(&mha_model, &reqs, 4, 2, 3),
+                   "kv_heads={kv_heads}: GQA diverged from its \
+                    replicated-head MHA reference");
+        // The economics differ even though the streams do not: the
+        // replicated model pays full-width KV traffic.
+        assert_eq!(gqa_model.kv_bytes_per_token() * group as f64,
+                   mha_model.kv_bytes_per_token(),
+                   "kv_heads={kv_heads}: KV bytes must shrink by the \
+                    head ratio");
+    }
+}
+
+/// Equivalence 3: fused checkpoint names (`l{i}.attn_qkv`,
+/// `l{i}.mlp_gateup`), separate checkpoint names, and the synthetic
+/// latent they were sliced from all build bitwise-identical serving
+/// models in every family — including GQA shapes, where the kv head
+/// count is inferred from the k projection's rows.
+#[test]
+fn fused_and_separate_checkpoint_names_serve_identical_streams() {
+    let kv_heads = 2usize;
+    let dh = dims().hidden / HEADS;
+    let kv_dim = kv_heads * dh;
+    let latent = LatentAttnLm::synthetic(dims(), HEADS, 1, 72)
+        .with_kv_heads(kv_heads);
+
+    let first_rows = |w: &HostTensor, n: usize| -> HostTensor {
+        HostTensor::new(vec![n, w.dims2().1], w.rows_range(0, n).to_vec())
+    };
+    let cat_rows = |parts: &[&HostTensor]| -> HostTensor {
+        let cols = parts[0].dims2().1;
+        let rows: usize = parts.iter().map(|p| p.dims2().0).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        HostTensor::new(vec![rows, cols], data)
+    };
+
+    let mut separate = vec![("embed".to_string(), latent.embed.clone()),
+                            ("head".to_string(), latent.head.clone())];
+    let mut fused = separate.clone();
+    for (l, b) in latent.blocks.iter().enumerate() {
+        let k = first_rows(&b.wk, kv_dim);
+        let v = first_rows(&b.wv, kv_dim);
+        separate.push((format!("l{l}.attn_q"), b.wq.clone()));
+        separate.push((format!("l{l}.attn_k"), k.clone()));
+        separate.push((format!("l{l}.attn_v"), v.clone()));
+        fused.push((format!("l{l}.attn_qkv"), cat_rows(&[&b.wq, &k, &v])));
+        separate.push((format!("l{l}.mlp_gate"), b.gate.clone()));
+        separate.push((format!("l{l}.mlp_up"), b.up.clone()));
+        fused.push((format!("l{l}.mlp_gateup"), cat_rows(&[&b.gate,
+                                                           &b.up])));
+        for target in [&mut separate, &mut fused] {
+            target.push((format!("l{l}.attn_o"), b.wo.clone()));
+            target.push((format!("l{l}.mlp_down"), b.down.clone()));
+        }
+    }
+    let from_sep = LatentAttnLm::from_checkpoint(
+        &Checkpoint::new(separate), HEADS).unwrap();
+    let from_fused = LatentAttnLm::from_checkpoint(
+        &Checkpoint::new(fused), HEADS).unwrap();
+    for l in [&from_sep, &from_fused] {
+        assert_eq!(l.kv_heads, kv_heads,
+                   "kv head count must be inferred from the k rows");
+        assert_eq!(l.dims, dims());
+    }
+
+    let reqs = mixed_requests(8, 6, 6);
+    for spec in four_families() {
+        let reference = run_streams(
+            latent.build(spec, 4, 24).unwrap().as_ref(), &reqs, 4, 2, 3);
+        for (name, l) in [("separate", &from_sep), ("fused", &from_fused)] {
+            assert_eq!(
+                run_streams(l.build(spec, 4, 24).unwrap().as_ref(), &reqs,
+                            4, 2, 3),
+                reference,
+                "{}: the {name}-names checkpoint diverged from the \
+                 latent it was written from", spec.label());
+        }
+    }
+}
+
+/// Equivalence 4a: a GQA + sliding-window model (window *below* the
+/// prompt length, so truncation is live) is still batch-, thread-, and
+/// chunk-invariant, and a speculative verify span over the windowed
+/// cache changes schedule, never streams — for every target family,
+/// with both the all-windowed and the interleaved-global layer policy.
+#[test]
+fn windowed_gqa_is_chunk_and_speculation_invariant_in_every_family() {
+    let reqs = mixed_requests(6, 12, 8); // prompts 12..=14 > window 8
+    for interleave in [0usize, 1] {
+        let latent = || {
+            LatentAttnLm::synthetic(dims(), HEADS, 1, 73)
+                .with_kv_heads(2)
+                .with_window(8, interleave)
+        };
+        for spec in four_families() {
+            let target = latent().build(spec, 4, 40).unwrap();
+            let reference = run_streams(target.as_ref(), &reqs, 1, 1, 1);
+            for (batch, threads, chunk) in [(4, 2, 3), (4, 2, 16),
+                                            (2, 1, 1)] {
+                assert_eq!(
+                    run_streams(target.as_ref(), &reqs, batch, threads,
+                                chunk),
+                    reference,
+                    "{} interleave={interleave}: windowed streams \
+                     diverged at batch={batch} threads={threads} \
+                     chunk={chunk}", spec.label());
+            }
+            // Speculative verify spans over the windowed, grouped
+            // cache: draft from the same latent, same geometry.
+            let draft = latent().build(FamilySpec::Ternary, 4, 40).unwrap();
+            let mut sched = Scheduler::with_prefill_chunk(
+                target.as_ref(), 4, 2, 3);
+            sched.set_speculative(draft.as_ref(), SpecConfig {
+                draft_family: FamilySpec::Ternary, k: 3 });
+            for r in &reqs {
+                sched.submit(r.clone());
+            }
+            let got: Vec<Vec<u32>> =
+                sched.run().into_iter().map(|c| c.tokens).collect();
+            assert_eq!(got, reference,
+                       "{} interleave={interleave}: a speculative \
+                        verify span changed a windowed stream",
+                       spec.label());
+            let st = sched.stats();
+            assert!(st.spec_verify_steps > 0,
+                    "{}: speculation never engaged", spec.label());
+            assert!(st.spec_k_effective >= 1 && st.spec_k_effective <= 3,
+                    "{}: adaptive k {} escaped [1, spec_k]",
+                    spec.label(), st.spec_k_effective);
+            if matches!(spec, FamilySpec::Ternary) {
+                assert_eq!(st.spec_accepted, st.spec_proposed,
+                           "a bitwise-identical windowed draft must be \
+                            fully accepted");
+            }
+        }
+    }
+}
+
+/// Equivalence 4b: `kv_bytes_per_token` is exactly the head-ratio-
+/// scaled page layout — `2 * layers * kv_heads * dh * 4` bytes — in
+/// every storage family (the KV stream is family-independent).
+#[test]
+fn kv_bytes_per_token_shrinks_by_exactly_the_head_ratio() {
+    for spec in four_families() {
+        for (kv_heads, want) in [(4usize, 1536.0f64), (2, 768.0),
+                                 (1, 384.0)] {
+            let model = LatentAttnLm::synthetic(dims(), HEADS, 1, 70)
+                .with_kv_heads(kv_heads)
+                .build(spec, 1, 16)
+                .unwrap();
+            assert_eq!(model.kv_bytes_per_token(), want,
+                       "{} kv_heads={kv_heads}: expected \
+                        2*layers*kv_dim*4 = {want} KV bytes/token",
+                       spec.label());
+        }
+    }
+}
+
+/// One lane decoded to `max_new` tokens under the given window policy,
+/// returning the peak post-step `kv_pages_in_use` (and asserting the
+/// retired lane frees everything).
+fn peak_pages(window: usize, interleave: usize, max_new: usize) -> usize {
+    let latent = LatentAttnLm::synthetic(dims(), HEADS, 1, 74)
+        .with_window(window, interleave);
+    let model = latent.build_float(1, 80);
+    let mut sched = Scheduler::new(&model, 1, 2);
+    let prompt: Vec<u32> = (0..4u32).map(|j| (5 * j + 3) % 128).collect();
+    sched.submit(GenRequest::greedy(0, prompt, max_new));
+    let mut done = Vec::new();
+    let mut peak = 0usize;
+    while sched.pending() > 0 {
+        sched.step_into(&mut done);
+        peak = peak.max(model.kv_pages_in_use());
+    }
+    assert_eq!(done.len(), 1, "the lane must complete");
+    assert_eq!(model.kv_pages_in_use(), 0,
+               "a retired windowed lane must free every page");
+    peak
+}
+
+/// Equivalence 4c (the acceptance assertion): with every layer
+/// windowed, a lane's page footprint plateaus at the window bound —
+/// doubling the decode length does not move the peak — while the
+/// unwindowed model and the interleaved-global policy (whose global
+/// layers legitimately need the whole context) grow O(context).
+#[test]
+fn windowed_lanes_plateau_while_unwindowed_lanes_grow_with_context() {
+    // 4-token prompt + 60 new tokens = 64 positions = 4 pages held by
+    // the unwindowed model at retirement.
+    let full = peak_pages(0, 0, 60);
+    assert_eq!(full, 4, "unwindowed lane must hold O(context) pages");
+
+    let windowed_short = peak_pages(16, 0, 28); // 32 positions
+    let windowed_long = peak_pages(16, 0, 60);  // 64 positions
+    assert_eq!(windowed_short, windowed_long,
+               "a windowed lane's peak pages must plateau at the \
+                window bound, not grow with decode length");
+    assert!(windowed_long < full,
+            "window recycling never returned a page \
+             (peak {windowed_long} vs unwindowed {full})");
+    assert!(windowed_long <= 3,
+            "window 16 must bound a lane near ceil(window/page)+1 \
+             pages, got {windowed_long}");
+
+    // One global layer pins the whole context: recycling must stay
+    // off, because the token-major cache cannot free a page some
+    // layer still reads.
+    assert_eq!(peak_pages(16, 1, 60), full,
+               "an interleaved global layer must block page recycling");
+}

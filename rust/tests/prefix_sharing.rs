@@ -281,11 +281,69 @@ fn churn_and_requeue_leak_no_pages_and_keep_streams() {
     }
     assert!(requeued_total > 0,
             "geometry failed to exercise KV backpressure requeues");
-    if tight.kv_prefix_pins() > 0 {
+    // Eviction is one pin per release call (LRU first), so drain
+    // whatever survived the churn pin by pin.
+    while tight.kv_prefix_pins() > 0 {
         assert!(tight.release_cached_pages());
     }
     assert_eq!(tight.kv_pages_in_use(), 0, "no page may leak");
     assert_eq!(tight.kv_live_seqs(), 0);
+}
+
+/// Eviction-policy regression: releasing cached pages drops *one* pin
+/// at a time, least-recently-hit first — not the old all-or-nothing
+/// valve that emptied the cache on any backpressure step. Two pins,
+/// with the older one refreshed by a lookup hit: the first release
+/// must evict only the stale pin, the refreshed pin must keep serving
+/// hits, and repeated releases drain the cache pin by pin.
+#[test]
+fn eviction_drops_one_least_recently_hit_pin_at_a_time() {
+    let latent = LatentAttnLm::synthetic(dims(), 4, 1, 65);
+    let model = latent.build_float(8, 64); // roomy: pins never contend
+
+    let prompt = |salt: u32| -> Vec<u32> {
+        (0..24u32).map(|j| (salt + 3 * j + 11) % 128).collect()
+    };
+    // Pin A (salt 0) then pin B (salt 64): insertion order is the
+    // initial recency order.
+    for (id, salt) in [(0usize, 0u32), (1, 64)] {
+        let mut sched = Scheduler::new(&model, 1, 2);
+        sched.submit(GenRequest::greedy(id, prompt(salt), 6));
+        sched.run();
+    }
+    assert_eq!(model.kv_prefix_pins(), 2);
+
+    // Refresh A: a lookup hit stamps its pin most-recently-used, so B
+    // — registered later but never hit — is now the LRU entry.
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(GenRequest::greedy(2, prompt(0), 6));
+    sched.run();
+    assert_eq!(sched.stats().prefix_hits, 1, "A must still be pinned");
+
+    // One release evicts exactly one pin — the stale B, not the
+    // recently hit A.
+    assert!(model.release_cached_pages());
+    assert_eq!(model.kv_prefix_pins(), 1,
+               "eviction must drop one pin, not the whole cache");
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(GenRequest::greedy(3, prompt(0), 6));
+    sched.run();
+    assert_eq!(sched.stats().prefix_hits, 1,
+               "the most recently hit pin must survive the eviction");
+    let mut sched = Scheduler::new(&model, 1, 2);
+    sched.submit(GenRequest::greedy(4, prompt(64), 6));
+    sched.run();
+    assert_eq!(sched.stats().prefix_hits, 0,
+               "the least recently hit pin must be the one evicted");
+
+    // That miss re-registered B; drain the cache one pin per call.
+    assert_eq!(model.kv_prefix_pins(), 2);
+    assert!(model.release_cached_pages());
+    assert!(model.release_cached_pages());
+    assert!(!model.release_cached_pages(), "nothing left to evict");
+    assert_eq!(model.kv_prefix_pins(), 0);
+    assert_eq!(model.kv_pages_in_use(), 0, "no page may leak");
+    assert_eq!(model.kv_live_seqs(), 0);
 }
 
 /// Acceptance (e): the correctness heart. A sole live lane refused its
